@@ -1,0 +1,35 @@
+//! Quickstart — the paper's §2 usage example, two Opacus lines included.
+//!
+//!     dataset = Dataset(); model = Net(); optimizer = SGD(...)
+//!     privacy_engine = PrivacyEngine()                     # line 1
+//!     model, optimizer, data_loader = privacy_engine.make_private(...)  # line 2
+//!     # Now it's business as usual
+//!
+//! Run: cargo run --release --example quickstart
+
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+
+fn main() -> anyhow::Result<()> {
+    // dataset + model + optimizer: one loaded system (AOT artifacts)
+    let sys = Opacus::load("artifacts", "mnist")?;
+
+    // the two Opacus lines:
+    let privacy_engine = PrivacyEngine::default();
+    let mut trainer = privacy_engine.make_private(
+        sys,
+        PrivacyParams::new(/* noise_multiplier */ 1.1, /* max_grad_norm */ 1.0)
+            .with_lr(0.25)
+            .with_batches(/* logical */ 64, /* physical */ 64),
+    )?;
+
+    // now it's business as usual
+    for epoch in 0..3 {
+        let loss = trainer.train_epoch()?;
+        let eps = trainer.epsilon(1e-5)?;
+        println!("epoch {epoch}: loss = {loss:.4}   (ε, δ) = ({eps:.3}, 1e-5)");
+    }
+    let (eval_loss, acc) = trainer.evaluate()?;
+    println!("held-out: loss = {eval_loss:.4}, accuracy = {:.1}%", acc * 100.0);
+    Ok(())
+}

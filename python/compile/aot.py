@@ -1,0 +1,327 @@
+"""AOT compiler (build-time entry point): lower every step graph to HLO text.
+
+This is the only place Python touches the pipeline; after ``make
+artifacts`` the Rust coordinator is self-contained. For each artifact we
+
+  1. build the step function (dpsgd.py / microbench.py),
+  2. ``jax.jit(fn).lower(*abstract_args)``,
+  3. convert the StableHLO module to an XlaComputation and dump **HLO
+     text** (not ``.serialize()`` — xla_extension 0.5.1 rejects jax≥0.5's
+     64-bit-id protos; the text parser reassigns ids),
+  4. record the typed input/output signature in ``manifest.json``.
+
+We also emit initial flat parameters (``<task>_init.npy``) and golden
+input/output vectors for the Rust integration tests.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only REGEX]
+                              [--skip-existing] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import time
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import dpsgd, microbench, models
+
+# ---------------------------------------------------------------------------
+# build plan
+# ---------------------------------------------------------------------------
+
+E2E_BATCHES = {
+    "mnist": [16, 32, 64, 128, 256, 512],
+    "embed": [16, 32, 64, 128, 256, 512],
+    "cifar": [16, 64, 256],
+    "lstm": [16, 64, 256],
+}
+JAXSTYLE_BATCHES = {"mnist": [16, 64, 256], "embed": [16, 64, 256]}
+CANON_BATCH = 64  # accum / apply / eval batch
+
+LAYER_BATCHES = {
+    "linear": [16, 64, 256, 512],
+    "embedding": [16, 64, 128, 256, 512],
+    "conv": [16, 64, 256],
+    "layernorm": [16, 64, 256],
+    "groupnorm": [16, 64, 256],
+    "instancenorm": [16, 64, 256],
+    "mha": [16, 64, 256],
+    "rnn": [16, 64, 256],
+    "gru": [16, 64, 256],
+    "lstm": [16, 64, 256],
+}
+FIG3_VOCABS = [100, 10_000]       # 1000 is the default embedding bench
+FIG3_BATCHES = [16, 128, 512]
+
+STEP_INPUT_NAMES = {
+    "dp": ["params", "x", "y", "mask", "noise", "lr", "clip", "sigma", "denom"],
+    "jaxstyle": ["params", "x", "y", "mask", "noise", "lr", "clip", "sigma", "denom"],
+    "microbatch": ["params", "x", "y", "mask", "noise", "lr", "clip", "sigma", "denom"],
+    "nodp": ["params", "x", "y", "mask", "lr", "denom"],
+    "accum": ["params", "x", "y", "mask", "clip"],
+    "apply": ["params", "gsum", "noise", "lr", "clip", "sigma", "denom"],
+    "eval": ["params", "x", "y", "mask"],
+}
+STEP_OUTPUT_NAMES = {
+    "dp": ["params", "loss", "snorm_mean"],
+    "jaxstyle": ["params", "loss", "snorm_mean"],
+    "microbatch": ["params", "loss", "snorm_mean"],
+    "nodp": ["params", "loss"],
+    "accum": ["gsum", "loss_sum", "snorm_sum"],
+    "apply": ["params"],
+    "eval": ["loss_sum", "correct"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(avals, names):
+    out = []
+    for name, a in zip(names, avals):
+        dt = {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+        out.append({"name": name, "dtype": dt, "shape": [int(d) for d in a.shape]})
+    return out
+
+
+def _out_sig(lowered, names):
+    avals = jax.tree_util.tree_leaves(lowered.out_info)
+    return _sig(avals, names)
+
+
+class Entry:
+    def __init__(self, name, build_fn, meta):
+        self.name = name
+        self.build = build_fn     # () -> (fn, example_args)
+        self.meta = meta          # manifest fields
+
+
+def plan() -> list:
+    entries = []
+
+    # ---- end-to-end training steps -------------------------------------
+    for task in ("mnist", "cifar", "embed", "lstm"):
+        model = models.get_model(task)
+
+        def mk(task=task, kind=None, batch=None):
+            def build():
+                m = models.get_model(task)
+                fn = dpsgd.build_step(m, kind)
+                return fn, dpsgd.example_args(m, kind, batch)
+            return build
+
+        combos = []
+        for b in E2E_BATCHES[task]:
+            combos += [("dp", b), ("nodp", b)]
+        for b in JAXSTYLE_BATCHES.get(task, []):
+            combos.append(("jaxstyle", b))
+        combos.append(("microbatch", 1))
+        combos += [("accum", CANON_BATCH), ("apply", CANON_BATCH),
+                   ("eval", CANON_BATCH)]
+
+        for kind, b in combos:
+            name = f"{task}_{kind}_b{b}"
+            entries.append(Entry(
+                name, mk(task=task, kind=kind, batch=b),
+                {"kind": "train", "task": task, "variant": kind, "batch": b,
+                 "num_params": model.num_params}))
+
+    # ---- per-layer microbenchmarks --------------------------------------
+    def layer_entries(bench_fn, lname, variants, batches):
+        bench0 = bench_fn()
+        for variant in variants:
+            for b in batches:
+                name = f"layer_{lname}_{variant}_b{b}"
+
+                def build(bench_fn=bench_fn, variant=variant, b=b):
+                    bench = bench_fn()
+                    fn = microbench.build_layer_step(bench, variant)
+                    return fn, microbench.layer_example_args(bench, variant, b)
+
+                in_bytes = int(np.prod(bench0.input_shape)) * 4
+                entries.append(Entry(
+                    name, build,
+                    {"kind": "layer", "layer": lname, "variant": variant,
+                     "batch": b, "num_params": bench0.num_params,
+                     "input_shape": list(bench0.input_shape),
+                     "input_dtype": bench0.input_dtype,
+                     "sample_input_bytes": in_bytes}))
+
+    for lname in ("linear", "conv", "layernorm", "groupnorm",
+                  "instancenorm", "embedding", "mha"):
+        layer_entries(microbench.LAYERS[lname], lname, ("nodp", "dp"),
+                      LAYER_BATCHES[lname])
+    for lname in ("rnn", "gru", "lstm"):
+        # fused cell without DP = the torch.nn row of Fig. 5
+        layer_entries(microbench.LAYERS[lname], lname, ("nodp",),
+                      LAYER_BATCHES[lname])
+        # naive (custom-module) cell, without and with DP = Fig. 5 rows
+        layer_entries(microbench.LAYERS[f"{lname}_naive"], f"{lname}_naive",
+                      ("naive", "dp"), LAYER_BATCHES[lname])
+
+    # ---- Fig. 3 embedding vocab sweep ------------------------------------
+    for vocab in FIG3_VOCABS:
+        layer_entries(lambda vocab=vocab: microbench.embedding_bench(vocab),
+                      f"embedding_v{vocab}", ("nodp", "dp"), FIG3_BATCHES)
+
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# goldens — concrete i/o vectors for the Rust integration tests
+# ---------------------------------------------------------------------------
+
+def _rand_inputs(model, batch, rng):
+    if model.input_dtype == "f32":
+        x = rng.standard_normal((batch,) + model.input_shape).astype(np.float32)
+    else:
+        x = rng.integers(0, models.VOCAB,
+                         (batch,) + model.input_shape).astype(np.int32)
+    y = rng.integers(0, model.num_classes, (batch,)).astype(np.int32)
+    return x, y
+
+
+def emit_goldens(out_dir: str, task: str) -> list:
+    model = models.get_model(task)
+    rng = np.random.default_rng(123)
+    params = np.asarray(model.init_flat(jax.random.PRNGKey(7)))
+    np.save(os.path.join(out_dir, f"{task}_init.npy"), params)
+
+    goldens = []
+    # dp step golden (b16)
+    b = 16
+    x, y = _rand_inputs(model, b, rng)
+    mask = np.ones((b,), np.float32)
+    noise = rng.standard_normal((model.num_params,)).astype(np.float32)
+    lr, clip, sigma, denom = np.float32(0.05), np.float32(1.0), \
+        np.float32(1.1), np.float32(b)
+    fn = jax.jit(dpsgd.build_step(model, "dp"))
+    p2, loss, snorm = fn(params, x, y, mask, noise, lr, clip, sigma, denom)
+    files = {}
+    for nm, arr in [("params", params), ("x", x), ("y", y), ("mask", mask),
+                    ("noise", noise),
+                    ("out_params", np.asarray(p2)),
+                    ("out_loss", np.asarray(loss).reshape(1)),
+                    ("out_snorm", np.asarray(snorm).reshape(1))]:
+        f = f"golden_{task}_dp_{nm}.npy"
+        np.save(os.path.join(out_dir, f), np.asarray(arr))
+        files[nm] = f
+    goldens.append({"task": task, "step": "dp", "batch": b,
+                    "scalars": {"lr": 0.05, "clip": 1.0, "sigma": 1.1,
+                                "denom": float(b)},
+                    "files": files, "rtol": 2e-4, "atol": 1e-5})
+
+    # eval golden (canonical batch)
+    b = CANON_BATCH
+    x, y = _rand_inputs(model, b, rng)
+    mask = np.ones((b,), np.float32)
+    fn = jax.jit(dpsgd.build_step(model, "eval"))
+    loss_sum, correct = fn(params, x, y, mask)
+    files = {}
+    for nm, arr in [("x", x), ("y", y), ("mask", mask),
+                    ("out_loss_sum", np.asarray(loss_sum).reshape(1)),
+                    ("out_correct", np.asarray(correct).reshape(1))]:
+        f = f"golden_{task}_eval_{nm}.npy"
+        np.save(os.path.join(out_dir, f), np.asarray(arr))
+        files[nm] = f
+    goldens.append({"task": task, "step": "eval", "batch": b,
+                    "files": files, "rtol": 1e-4, "atol": 1e-4})
+    return goldens
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="regex over artifact names")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-goldens", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    entries = plan()
+    if args.only:
+        rx = re.compile(args.only)
+        entries = [e for e in entries if rx.search(e.name)]
+    if args.list:
+        for e in entries:
+            print(e.name)
+        print(f"{len(entries)} artifacts")
+        return
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "artifacts": [], "goldens": []}
+    for task in ("mnist", "cifar", "embed", "lstm"):
+        m = models.get_model(task)
+        manifest["models"][task] = {
+            "num_params": m.num_params,
+            "input_shape": list(m.input_shape),
+            "input_dtype": m.input_dtype,
+            "num_classes": m.num_classes,
+            "layer_kinds": m.layer_kinds,
+            "vocab": models.VOCAB if m.input_dtype == "i32" else None,
+            "init_file": f"{task}_init.npy",
+        }
+
+    t_total = time.time()
+    for i, e in enumerate(entries):
+        hlo_path = os.path.join(out_dir, f"{e.name}.hlo.txt")
+        t0 = time.time()
+        fn, ex_args = e.build()
+        lowered = jax.jit(fn).lower(*ex_args)
+        if e.meta["kind"] == "train":
+            in_names = STEP_INPUT_NAMES[e.meta["variant"]]
+            out_names = STEP_OUTPUT_NAMES[e.meta["variant"]]
+        elif e.meta["variant"] in ("nodp", "naive"):
+            in_names, out_names = ["params", "x"], ["grad", "loss"]
+        else:
+            in_names = ["params", "x", "mask", "clip"]
+            out_names = ["gsum", "loss", "snorm_mean"]
+        record = dict(e.meta)
+        record["name"] = e.name
+        record["file"] = f"{e.name}.hlo.txt"
+        record["inputs"] = _sig(ex_args, in_names)
+        record["outputs"] = _out_sig(lowered, out_names)
+        manifest["artifacts"].append(record)
+
+        if args.skip_existing and os.path.exists(hlo_path):
+            print(f"[{i+1}/{len(entries)}] {e.name}: exists, kept", flush=True)
+            continue
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        print(f"[{i+1}/{len(entries)}] {e.name}: {len(text)/1024:.0f} KiB "
+              f"in {time.time()-t0:.1f}s", flush=True)
+
+    if not args.no_goldens and not args.only:
+        for task in ("mnist", "cifar", "embed", "lstm"):
+            manifest["goldens"] += emit_goldens(out_dir, task)
+            print(f"goldens: {task}", flush=True)
+
+    if args.only is None:
+        # a filtered build must not clobber the full manifest
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts in "
+          f"{time.time()-t_total:.0f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

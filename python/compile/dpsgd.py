@@ -1,0 +1,178 @@
+"""DP-SGD step builders (L2): the compute graphs the Rust coordinator runs.
+
+Every builder returns a jittable function over concrete shapes; aot.py
+lowers them to HLO text once at build time. Hyperparameters (lr, clip
+norm C, noise multiplier σ, denominator) are *runtime scalar inputs*, so
+the L3 noise/batch schedulers never trigger re-lowering.
+
+Step signatures (all f32 unless noted):
+
+  dp_step(params[P], x[B,...], y[B]i32, mask[B], noise[P],
+          lr[], clip[], sigma[], denom[])
+      -> (params'[P], loss[], snorm_mean[])
+  jaxstyle_step — same signature; pure-jnp clip path (ablation row,
+      the paper's "JAX (DP)" analogue)
+  nodp_step(params, x, y, mask, lr, denom) -> (params', loss)
+  grad_accum(params, x, y, mask, clip) -> (gsum[P], loss_sum[], snorm_sum[])
+  apply_update(params, gsum, noise, lr, clip, sigma, denom) -> params'
+  eval_step(params, x, y, mask) -> (loss_sum[], correct[])
+
+Per-sample gradients come from ``vmap(grad(per_sample_loss))`` over the
+flat parameter vector — one batched backward pass, the vectorized
+computation the paper contrasts with micro-batching (Appendix A/B). The
+clip-and-aggregate stage routes through the L1 Pallas kernels
+(``kernels.dp_kernels``), so they lower into the same HLO module.
+
+DP-SGD semantics (Abadi et al. '16, as implemented by Opacus):
+  update = lr * (Σ_b clip_C(g_b) + σ·C·ξ) / denom,   ξ ~ N(0, I)
+where denom is the *expected* (logical) batch size under Poisson sampling.
+Masked (padding) rows contribute exactly zero: their per-sample loss is
+multiplied by mask[b], so g_b = 0 and the clip coefficient is masked too.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dp_kernels, ref
+from .models import Model
+
+
+def _per_sample_grads(model: Model, params, x, y, mask):
+    """One vectorized backward pass -> (grads [B,P], losses [B])."""
+
+    def sample_loss(p, xi, yi, mi):
+        return model.loss(p, xi, yi) * mi
+
+    def one(xi, yi, mi):
+        loss, g = jax.value_and_grad(sample_loss)(params, xi, yi, mi)
+        return g, loss
+
+    grads, losses = jax.vmap(one)(x, y, mask)
+    return grads, losses
+
+
+def _noisy_update(params, gsum, noise, lr, clip, sigma, denom):
+    return params - lr * (gsum + sigma * clip * noise) / denom
+
+
+def make_dp_step(model: Model, use_pallas: bool = True) -> Callable:
+    """The fused DP-SGD step (per-sample grads → clip → noise → update)."""
+
+    def dp_step(params, x, y, mask, noise, lr, clip, sigma, denom):
+        grads, losses = _per_sample_grads(model, params, x, y, mask)
+        if use_pallas:
+            gsum, sq = dp_kernels.clip_and_aggregate(grads, mask, clip)
+        else:
+            sq = ref.per_sample_sq_norms(grads)
+            coef = ref.clip_coefs(sq, clip, mask)
+            gsum = ref.clip_accumulate(grads, coef)
+        new_params = _noisy_update(params, gsum, noise, lr, clip, sigma, denom)
+        nmask = jnp.sum(mask)
+        loss = jnp.sum(losses) / jnp.maximum(nmask, 1.0)
+        snorm_mean = jnp.sum(jnp.sqrt(sq + 1e-12) * mask) / jnp.maximum(nmask, 1.0)
+        return new_params, loss, snorm_mean
+
+    return dp_step
+
+
+def make_nodp_step(model: Model) -> Callable:
+    """Plain SGD over the masked mean loss — the 'PyTorch without DP' row."""
+
+    def mean_loss(params, x, y, mask):
+        losses = jax.vmap(lambda xi, yi: model.loss(params, xi, yi))(x, y)
+        return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def nodp_step(params, x, y, mask, lr, denom):
+        loss, g = jax.value_and_grad(mean_loss)(params, x, y, mask)
+        return params - lr * g * (jnp.sum(mask) / denom), loss
+
+    return nodp_step
+
+
+def make_grad_accum(model: Model, use_pallas: bool = True) -> Callable:
+    """Clipped-gradient accumulation only — the virtual-step half."""
+
+    def grad_accum(params, x, y, mask, clip):
+        grads, losses = _per_sample_grads(model, params, x, y, mask)
+        if use_pallas:
+            gsum, sq = dp_kernels.clip_and_aggregate(grads, mask, clip)
+        else:
+            sq = ref.per_sample_sq_norms(grads)
+            gsum = ref.clip_accumulate(grads, ref.clip_coefs(sq, clip, mask))
+        snorm_sum = jnp.sum(jnp.sqrt(sq + 1e-12) * mask)
+        return gsum, jnp.sum(losses), snorm_sum
+
+    return grad_accum
+
+
+def make_apply_update(model: Model) -> Callable:
+    """Noise + parameter update from an accumulated clipped-gradient sum."""
+
+    def apply_update(params, gsum, noise, lr, clip, sigma, denom):
+        return _noisy_update(params, gsum, noise, lr, clip, sigma, denom)
+
+    return apply_update
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, x, y, mask):
+        def one(xi, yi):
+            logits = model.apply(params, xi)
+            return model.loss(params, xi, yi), jnp.argmax(logits).astype(jnp.int32)
+
+        losses, preds = jax.vmap(one)(x, y)
+        correct = jnp.sum((preds == y).astype(jnp.float32) * mask)
+        return jnp.sum(losses * mask), correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# example-input builders (for jax.jit(...).lower(...))
+# ---------------------------------------------------------------------------
+
+def _xy_spec(model: Model, batch: int):
+    xdt = jnp.float32 if model.input_dtype == "f32" else jnp.int32
+    x = jax.ShapeDtypeStruct((batch,) + model.input_shape, xdt)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+def example_args(model: Model, kind: str, batch: int):
+    """Abstract input signature for each step kind."""
+    f32 = jnp.float32
+    p = jax.ShapeDtypeStruct((model.num_params,), f32)
+    x, y = _xy_spec(model, batch)
+    m = jax.ShapeDtypeStruct((batch,), f32)
+    s = jax.ShapeDtypeStruct((), f32)
+    if kind in ("dp", "jaxstyle", "microbatch"):
+        return (p, x, y, m, p, s, s, s, s)
+    if kind == "nodp":
+        return (p, x, y, m, s, s)
+    if kind == "accum":
+        return (p, x, y, m, s)
+    if kind == "apply":
+        return (p, p, p, s, s, s, s)
+    if kind == "eval":
+        return (p, x, y, m)
+    raise ValueError(f"unknown step kind {kind}")
+
+
+def build_step(model: Model, kind: str) -> Callable:
+    if kind in ("dp", "microbatch"):
+        return make_dp_step(model, use_pallas=True)
+    if kind == "jaxstyle":
+        return make_dp_step(model, use_pallas=False)
+    if kind == "nodp":
+        return make_nodp_step(model)
+    if kind == "accum":
+        return make_grad_accum(model, use_pallas=True)
+    if kind == "apply":
+        return make_apply_update(model)
+    if kind == "eval":
+        return make_eval_step(model)
+    raise ValueError(f"unknown step kind {kind}")

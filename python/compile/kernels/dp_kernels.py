@@ -1,0 +1,251 @@
+"""L1 Pallas kernels — the DP-SGD hot spot.
+
+Three kernels implement the per-sample-gradient machinery the paper builds
+its speed claims on:
+
+  * ``per_sample_sq_norms``  — tiled reduction g[B,N] -> ||g_b||² [B]
+  * ``clip_accumulate``      — tiled contraction coef[B] @ g[B,N] -> [N]
+  * ``linear_gsm``           — batched outer product dy[B,r] ⊗ x[B,d]
+                               (Appendix B's einsum as a kernel)
+
+Hardware adaptation (paper: CUDA einsum on A100 → here: TPU-shaped Pallas):
+the GPU implementation leans on cuBLAS batched GEMM; on TPU the same
+insight — express per-sample work as one large contraction — maps to MXU
+tiles. ``clip_accumulate`` streams parameter tiles HBM→VMEM via BlockSpec
+with the per-sample coefficient vector resident, accumulating into the
+output block across the batch grid axis (the reduction axis is innermost,
+so each output tile stays in VMEM for the whole reduction). All kernels
+run under ``interpret=True`` — CPU PJRT cannot execute Mosaic custom
+calls — so block shapes are chosen for VMEM budgets, not CPU wallclock
+(see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-size policy (perf-iterated — full log in EXPERIMENTS.md §Perf L1):
+#   it.1  BlockSpec grid, (8, 2048) VMEM micro-tiles:   14.9 s  @ B=512/P=26k
+#   it.2  BlockSpec grid, (512, 8192) tiles:             0.27 s (grid steps
+#         copy the full operand under interpret=True)
+#   it.3  JAX-level chunking, 16 MiB tiles:              0.06 s isolated but
+#         3x step cost in-graph (column slices of the computed [B, P]
+#         gradient tensor are real copies on CPU)
+#   it.4  JAX-level chunking, 1 GiB budget (usually one  ~jnp parity
+#         whole-array tile; chunking only bounds host RAM)
+# The real-TPU schedule — (8, 2048)-tile double-buffered BlockSpec grid,
+# reduction axis innermost — is preserved compile-ready in the `*_grid`
+# variants below; the interpret path optimizes structure for the CPU
+# emulation it actually runs on.
+_TILE_F32_BUDGET = 256 * 1024 * 1024
+_BN_MIN, _BN_MAX = 2048, 1 << 20
+
+
+def _auto_blocks(b: int, n: int) -> tuple:
+    """(bb, bn): full-batch rows, VMEM-budgeted parameter tile."""
+    bb = max(1, b)
+    bn = _TILE_F32_BUDGET // bb
+    bn = max(_BN_MIN, min(_BN_MAX, bn))
+    bn = max(128, (bn // 128) * 128)  # lane-aligned
+    return bb, min(bn, max(128, ((n + 127) // 128) * 128))
+
+
+def _pad2(g: jnp.ndarray, bb: int, bn: int) -> jnp.ndarray:
+    b, n = g.shape
+    pb = (-b) % bb
+    pn = (-n) % bn
+    if pb or pn:
+        g = jnp.pad(g, ((0, pb), (0, pn)))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# per-sample squared norms
+# ---------------------------------------------------------------------------
+
+def _sq_norm_kernel(g_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = g_ref[...]
+    o_ref[...] += jnp.sum(blk * blk, axis=1)
+
+
+def per_sample_sq_norms_grid(g: jnp.ndarray, bb: int = 8, bn: int = 2048):
+    """BlockSpec-grid variant — the schedule a real TPU build uses
+    (HBM→VMEM streaming with the reduction axis innermost). Kept
+    compile-ready and correctness-tested at small sizes; NOT used on the
+    interpret hot path (grid steps copy full operands — §Perf L1)."""
+    b, _ = g.shape
+    gp = _pad2(g.astype(jnp.float32), bb, bn)
+    pb, pn = gp.shape
+    out = pl.pallas_call(
+        _sq_norm_kernel,
+        grid=(pb // bb, pn // bn),  # N (reduction) axis innermost
+        in_specs=[pl.BlockSpec((bb, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pb,), jnp.float32),
+        interpret=True,
+    )(gp)
+    return out[:b]
+
+
+def _sq_norm_tile(g: jnp.ndarray) -> jnp.ndarray:
+    """One [B, bn] tile -> [B] partial squared norms (single-cell call)."""
+    b, _ = g.shape
+    return pl.pallas_call(
+        _sq_norm_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(g)
+
+
+def _sq_norm_tile_kernel(g_ref, o_ref):
+    blk = g_ref[...]
+    o_ref[...] = jnp.sum(blk * blk, axis=1)
+
+
+def per_sample_sq_norms(g: jnp.ndarray, bb: int = 0, bn: int = 0):
+    """g: [B, N] -> [B] squared L2 norms (Pallas, interpret mode).
+
+    Tiling happens at the JAX level (slices + one single-tile pallas call
+    per chunk, partial sums added outside): the interpreter's grid loop
+    carries the FULL operand through every grid step (measured ~0.2 s per
+    step at B=512 — EXPERIMENTS.md §Perf L1), whereas XLA slices are
+    zero-copy. On real TPU the same tile schedule is expressed with the
+    BlockSpec grid (`_grid_*` variants below, compile-only).
+    """
+    b, n = g.shape
+    if bb == 0 or bn == 0:
+        bb, bn = _auto_blocks(b, n)
+    g = g.astype(jnp.float32)
+    total = jnp.zeros((b,), jnp.float32)
+    for off in range(0, n, bn):
+        total = total + _sq_norm_tile(g[:, off:min(off + bn, n)])
+    return total
+
+
+# ---------------------------------------------------------------------------
+# clip-scale-accumulate: out = coef @ g
+# ---------------------------------------------------------------------------
+
+def _clip_accum_kernel(c_ref, g_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # [BB] · [BB, BN] -> [BN]: an MXU-friendly (1,B)x(B,N) contraction.
+    o_ref[...] += jnp.dot(c_ref[...], g_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def clip_accumulate_grid(g: jnp.ndarray, coef: jnp.ndarray,
+                         bb: int = 8, bn: int = 2048):
+    """BlockSpec-grid variant of `clip_accumulate` (TPU schedule; see
+    `per_sample_sq_norms_grid`)."""
+    b, n = g.shape
+    gp = _pad2(g.astype(jnp.float32), bb, bn)
+    pb, pn = gp.shape
+    cp = jnp.pad(coef.astype(jnp.float32), (0, pb - b))
+    out = pl.pallas_call(
+        _clip_accum_kernel,
+        grid=(pn // bn, pb // bb),  # B (reduction) axis innermost
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, bn), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pn,), jnp.float32),
+        interpret=True,
+    )(cp, gp)
+    return out[:n]
+
+
+def _clip_accum_tile(coef: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """One [B, bn] tile -> [bn] contraction coef @ g (single-cell call)."""
+    _, bn = g.shape
+    return pl.pallas_call(
+        _clip_accum_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((bn,), jnp.float32),
+        interpret=True,
+    )(coef, g)
+
+
+def _clip_accum_tile_kernel(c_ref, g_ref, o_ref):
+    # [B] · [B, BN] -> [BN]: an MXU-friendly (1,B)x(B,N) contraction.
+    o_ref[...] = jnp.dot(c_ref[...], g_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def clip_accumulate(g: jnp.ndarray, coef: jnp.ndarray,
+                    bb: int = 0, bn: int = 0):
+    """g: [B, N], coef: [B] -> [N] = Σ_b coef[b]·g[b,:] (Pallas).
+
+    JAX-level tiling along the parameter axis (see `per_sample_sq_norms`
+    for the rationale); each chunk is one single-cell pallas call whose
+    tile fits the host tile budget.
+    """
+    b, n = g.shape
+    if bb == 0 or bn == 0:
+        bb, bn = _auto_blocks(b, n)
+    g = g.astype(jnp.float32)
+    coef = coef.astype(jnp.float32)
+    if n <= bn:
+        return _clip_accum_tile(coef, g)
+    pieces = [
+        _clip_accum_tile(coef, g[:, off:min(off + bn, n)])
+        for off in range(0, n, bn)
+    ]
+    return jnp.concatenate(pieces)
+
+
+# ---------------------------------------------------------------------------
+# per-sample linear-layer gradient (batched outer product)
+# ---------------------------------------------------------------------------
+
+def _linear_gsm_kernel(dy_ref, x_ref, o_ref):
+    o_ref[...] = dy_ref[...][:, :, None] * x_ref[...][:, None, :]
+
+
+def linear_gsm(dy: jnp.ndarray, x: jnp.ndarray, bb: int = 8):
+    """dy: [B, r], x: [B, d] -> [B, r, d] per-sample weight gradients."""
+    b, r = dy.shape
+    _, d = x.shape
+    pb = (-b) % bb
+    if pb:
+        dy = jnp.pad(dy, ((0, pb), (0, 0)))
+        x = jnp.pad(x, ((0, pb), (0, 0)))
+    out = pl.pallas_call(
+        _linear_gsm_kernel,
+        grid=((b + pb) // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, r, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + pb, r, d), jnp.float32),
+        interpret=True,
+    )(dy.astype(jnp.float32), x.astype(jnp.float32))
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# fused convenience: norms -> coefs -> accumulate (one call from L2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def clip_and_aggregate(g: jnp.ndarray, mask: jnp.ndarray, clip: jnp.ndarray):
+    """Full clip path over flattened per-sample grads g [B, P].
+
+    Returns (gsum [P], sq_norms [B]). This is the composition the dp_step
+    lowers into its HLO: both Pallas kernels plus the tiny coef formula.
+    """
+    sq = per_sample_sq_norms(g)
+    norms = jnp.sqrt(sq + 1e-12)
+    coef = mask * jnp.minimum(1.0, clip / norms)
+    return clip_accumulate(g, coef), sq

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+These are the semantics the kernels must match bit-for-bit (up to float
+accumulation order). They are also used directly by the ``jaxstyle`` step
+variant — the paper's "JAX (DP)" comparison row — so the ablation
+(Pallas-structured vs XLA-fused clipping) shares one definition of truth.
+"""
+
+import jax.numpy as jnp
+
+
+def per_sample_sq_norms(g: jnp.ndarray) -> jnp.ndarray:
+    """g: [B, N] per-sample flattened gradients -> [B] squared L2 norms."""
+    return jnp.sum(g * g, axis=1)
+
+
+def clip_accumulate(g: jnp.ndarray, coef: jnp.ndarray) -> jnp.ndarray:
+    """g: [B, N], coef: [B] -> [N] = sum_b coef[b] * g[b, :].
+
+    With coef[b] = mask[b] * min(1, C / ||g_b||) this is the DP-SGD
+    clip-and-aggregate step (Abadi et al. '16), i.e. the einsum of the
+    paper's Appendix B with the per-sample clip factor folded in.
+    """
+    return coef @ g
+
+
+def clip_coefs(sq_norms: jnp.ndarray, clip: jnp.ndarray,
+               mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample clip factors: mask * min(1, C / ||g||)."""
+    norms = jnp.sqrt(sq_norms + 1e-12)
+    return mask * jnp.minimum(1.0, clip / norms)
+
+
+def linear_gsm(dy: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample weight gradients of a linear layer.
+
+    dy: [B, r] highway gradients, x: [B, d] activations
+    -> [B, r, d] with out[b, i, j] = dy[b, i] * x[b, j]
+    (the paper's torch.einsum("n...i,n...j->nij", B, A)).
+    """
+    return jnp.einsum("ni,nj->nij", dy, x)

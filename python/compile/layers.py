@@ -1,0 +1,329 @@
+"""From-scratch JAX layer library (L2).
+
+Every layer is a pair of functions operating on a flat dict of named
+parameters:
+
+  * ``<layer>_spec(name, ...) -> [(param_name, shape), ...]``
+  * ``<layer>(params, name, x, ...) -> y``
+
+``apply`` functions are written for a SINGLE sample (no batch dimension);
+batching is always done with ``jax.vmap`` outside. This is what makes
+per-sample gradients (``vmap(grad(...))``) natural, mirroring Opacus's
+GradSampleModule which attaches per-sample gradient formulas per layer.
+
+Initialization mirrors PyTorch defaults (Kaiming-uniform fan-in for
+linear/conv, U(-1/sqrt(h), 1/sqrt(h)) for recurrent layers, N(0,1) for
+embeddings) so learning dynamics are comparable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Spec = List[Tuple[str, Tuple[int, ...]]]
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def _kaiming_uniform(key, shape, fan_in):
+    bound = math.sqrt(1.0 / max(1, fan_in))
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound)
+
+
+def init_params(key, spec: Spec, fan_ins: Dict[str, int]) -> Params:
+    """Initialize every parameter in ``spec``.
+
+    ``fan_ins`` maps parameter name -> fan-in used for the uniform bound;
+    names ending in ``.emb`` are drawn from N(0, 1) like torch.nn.Embedding.
+    """
+    params = {}
+    keys = jax.random.split(key, max(2, len(spec)))
+    for (name, shape), k in zip(spec, keys):
+        if name.endswith(".emb"):
+            params[name] = jax.random.normal(k, shape, jnp.float32)
+        else:
+            params[name] = _kaiming_uniform(k, shape, fan_ins[name])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# dense / linear
+# ---------------------------------------------------------------------------
+
+def dense_spec(name: str, d_in: int, d_out: int) -> Tuple[Spec, Dict[str, int]]:
+    spec = [(f"{name}.w", (d_in, d_out)), (f"{name}.b", (d_out,))]
+    fans = {f"{name}.w": d_in, f"{name}.b": d_in}
+    return spec, fans
+
+
+def dense(params: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params[f"{name}.w"] + params[f"{name}.b"]
+
+
+# ---------------------------------------------------------------------------
+# conv2d (single sample, HWC)
+# ---------------------------------------------------------------------------
+
+def conv2d_spec(name: str, c_in: int, c_out: int, k: int) -> Tuple[Spec, Dict[str, int]]:
+    spec = [(f"{name}.w", (k, k, c_in, c_out)), (f"{name}.b", (c_out,))]
+    fan = k * k * c_in
+    return spec, {f"{name}.w": fan, f"{name}.b": fan}
+
+
+def conv2d(params: Params, name: str, x: jnp.ndarray, stride: int = 1,
+           padding: str = "SAME") -> jnp.ndarray:
+    """x: [H, W, C_in] -> [H', W', C_out]."""
+    w = params[f"{name}.w"]
+    y = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return y + params[f"{name}.b"]
+
+
+def maxpool2d(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """x: [H, W, C]."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (k, k, 1), (stride, stride, 1), "VALID"
+    )
+
+
+def avgpool2d(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    s = lax.reduce_window(x, 0.0, lax.add, (k, k, 1), (stride, stride, 1), "VALID")
+    return s / float(k * k)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def embedding_spec(name: str, vocab: int, dim: int) -> Tuple[Spec, Dict[str, int]]:
+    return [(f"{name}.emb", (vocab, dim))], {f"{name}.emb": vocab}
+
+
+def embedding(params: Params, name: str, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [T] int32 -> [T, dim]."""
+    return params[f"{name}.emb"][tokens]
+
+
+# ---------------------------------------------------------------------------
+# normalization layers (all DP-compatible: per-sample statistics only).
+# BatchNorm is deliberately NOT implemented: it mixes samples across the
+# batch and is rejected by the validator (paper §2 "Model validation").
+# ---------------------------------------------------------------------------
+
+def layernorm_spec(name: str, dim: int) -> Tuple[Spec, Dict[str, int]]:
+    spec = [(f"{name}.g", (dim,)), (f"{name}.b", (dim,))]
+    return spec, {f"{name}.g": 1, f"{name}.b": 1}
+
+
+def layernorm(params: Params, name: str, x: jnp.ndarray, eps: float = 1e-5):
+    """Normalizes over the last axis of a single sample."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mu) / jnp.sqrt(var + eps)
+    return xn * params[f"{name}.g"] + params[f"{name}.b"]
+
+
+def groupnorm_spec(name: str, channels: int) -> Tuple[Spec, Dict[str, int]]:
+    spec = [(f"{name}.g", (channels,)), (f"{name}.b", (channels,))]
+    return spec, {f"{name}.g": 1, f"{name}.b": 1}
+
+
+def groupnorm(params: Params, name: str, x: jnp.ndarray, groups: int,
+              eps: float = 1e-5):
+    """x: [H, W, C]; normalizes within channel groups of one sample."""
+    h, w, c = x.shape
+    xg = x.reshape(h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(0, 1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(0, 1, 3), keepdims=True)
+    xn = ((xg - mu) / jnp.sqrt(var + eps)).reshape(h, w, c)
+    return xn * params[f"{name}.g"] + params[f"{name}.b"]
+
+
+def instancenorm_spec(name: str, channels: int) -> Tuple[Spec, Dict[str, int]]:
+    spec = [(f"{name}.g", (channels,)), (f"{name}.b", (channels,))]
+    return spec, {f"{name}.g": 1, f"{name}.b": 1}
+
+
+def instancenorm(params: Params, name: str, x: jnp.ndarray, eps: float = 1e-5):
+    """x: [H, W, C]; per-channel statistics of one sample.
+
+    track_running_stats is not representable here by construction — the
+    functional form keeps no cross-batch state, which is exactly the
+    configuration Opacus's validator demands.
+    """
+    mu = jnp.mean(x, axis=(0, 1), keepdims=True)
+    var = jnp.var(x, axis=(0, 1), keepdims=True)
+    xn = (x - mu) / jnp.sqrt(var + eps)
+    return xn * params[f"{name}.g"] + params[f"{name}.b"]
+
+
+# ---------------------------------------------------------------------------
+# multi-head attention (single sample: x [T, D])
+# ---------------------------------------------------------------------------
+
+def mha_spec(name: str, dim: int) -> Tuple[Spec, Dict[str, int]]:
+    spec, fans = [], {}
+    for p in ("q", "k", "v", "o"):
+        s, f = dense_spec(f"{name}.{p}", dim, dim)
+        spec += s
+        fans.update(f)
+    return spec, fans
+
+
+def mha(params: Params, name: str, x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    t, d = x.shape
+    hd = d // heads
+    q = dense(params, f"{name}.q", x).reshape(t, heads, hd)
+    k = dense(params, f"{name}.k", x).reshape(t, heads, hd)
+    v = dense(params, f"{name}.v", x).reshape(t, heads, hd)
+    att = jnp.einsum("qhd,khd->hqk", q, k) / math.sqrt(hd)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, d)
+    return dense(params, f"{name}.o", out)
+
+
+# ---------------------------------------------------------------------------
+# recurrent layers (single sample: x [T, D] -> hidden states [T, H])
+#
+# Two implementations are provided, mirroring the paper's Fig. 5 comparison
+# of torch.nn modules vs Opacus's custom modules:
+#   * fused=True  — one [D+H, n_gates*H] matmul per step (our optimized
+#     "custom module"), the hot-path variant;
+#   * fused=False — per-gate matmuls (the naive reference), used as the
+#     "unoptimized module" series in the Fig. 5 reproduction.
+# Both use torch-style double biases so parameter counts match torch.nn.
+# ---------------------------------------------------------------------------
+
+def _rnn_gate_spec(name: str, d: int, h: int, gates: int):
+    spec = [
+        (f"{name}.wi", (d, gates * h)),
+        (f"{name}.wh", (h, gates * h)),
+        (f"{name}.bi", (gates * h,)),
+        (f"{name}.bh", (gates * h,)),
+    ]
+    fans = {f"{name}.wi": h, f"{name}.wh": h, f"{name}.bi": h, f"{name}.bh": h}
+    return spec, fans
+
+
+def rnn_spec(name: str, d: int, h: int):
+    return _rnn_gate_spec(name, d, h, 1)
+
+
+def gru_spec(name: str, d: int, h: int):
+    return _rnn_gate_spec(name, d, h, 3)
+
+
+def lstm_spec(name: str, d: int, h: int):
+    return _rnn_gate_spec(name, d, h, 4)
+
+
+def _gates(params, name, x_t, h_t, n, fused):
+    """Returns the [n*H] pre-activation gate vector for one time step."""
+    if fused:
+        return (
+            x_t @ params[f"{name}.wi"]
+            + h_t @ params[f"{name}.wh"]
+            + params[f"{name}.bi"]
+            + params[f"{name}.bh"]
+        )
+    # naive: slice the fused weights and do per-gate matmuls (more kernels,
+    # more memory traffic — the "unoptimized custom module" baseline).
+    hsz = params[f"{name}.wh"].shape[0]
+    outs = []
+    for g in range(n):
+        wi = lax.dynamic_slice_in_dim(params[f"{name}.wi"], g * hsz, hsz, 1)
+        wh = lax.dynamic_slice_in_dim(params[f"{name}.wh"], g * hsz, hsz, 1)
+        bi = lax.dynamic_slice_in_dim(params[f"{name}.bi"], g * hsz, hsz, 0)
+        bh = lax.dynamic_slice_in_dim(params[f"{name}.bh"], g * hsz, hsz, 0)
+        outs.append(x_t @ wi + h_t @ wh + bi + bh)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def rnn(params: Params, name: str, x: jnp.ndarray, h: int, fused: bool = True):
+    """Elman RNN with tanh. x: [T, D] -> [T, H]."""
+
+    def step(h_t, x_t):
+        h_new = jnp.tanh(_gates(params, name, x_t, h_t, 1, fused))
+        return h_new, h_new
+
+    h0 = jnp.zeros((h,), x.dtype)
+    _, hs = lax.scan(step, h0, x)
+    return hs
+
+
+def gru(params: Params, name: str, x: jnp.ndarray, h: int, fused: bool = True):
+    """GRU (torch gate order r, z, n). x: [T, D] -> [T, H]."""
+    hsz = h
+
+    def step(h_t, x_t):
+        if fused:
+            gi = x_t @ params[f"{name}.wi"] + params[f"{name}.bi"]
+            gh = h_t @ params[f"{name}.wh"] + params[f"{name}.bh"]
+        else:
+            # naive variant: per-gate matmuls (more kernels, more traffic)
+            gi_parts, gh_parts = [], []
+            for g in range(3):
+                wi = lax.dynamic_slice_in_dim(params[f"{name}.wi"], g * hsz, hsz, 1)
+                wh = lax.dynamic_slice_in_dim(params[f"{name}.wh"], g * hsz, hsz, 1)
+                bi = lax.dynamic_slice_in_dim(params[f"{name}.bi"], g * hsz, hsz, 0)
+                bh = lax.dynamic_slice_in_dim(params[f"{name}.bh"], g * hsz, hsz, 0)
+                gi_parts.append(x_t @ wi + bi)
+                gh_parts.append(h_t @ wh + bh)
+            gi = jnp.concatenate(gi_parts)
+            gh = jnp.concatenate(gh_parts)
+        ir, iz, in_ = jnp.split(gi, 3)
+        hr, hz, hn = jnp.split(gh, 3)
+        r = jax.nn.sigmoid(ir + hr)
+        z = jax.nn.sigmoid(iz + hz)
+        n = jnp.tanh(in_ + r * hn)
+        h_new = (1.0 - z) * n + z * h_t
+        return h_new, h_new
+
+    h0 = jnp.zeros((hsz,), x.dtype)
+    _, hs = lax.scan(step, h0, x)
+    return hs
+
+
+def lstm(params: Params, name: str, x: jnp.ndarray, h: int, fused: bool = True):
+    """LSTM (torch gate order i, f, g, o). x: [T, D] -> [T, H]."""
+
+    def step(carry, x_t):
+        h_t, c_t = carry
+        z = _gates(params, name, x_t, h_t, 4, fused)
+        i, f, g, o = jnp.split(z, 4)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c_new = f * c_t + i * g
+        h_new = o * jnp.tanh(c_new)
+        return (h_new, c_new), h_new
+
+    h0 = jnp.zeros((h,), x.dtype)
+    (_, _), hs = lax.scan(step, (h0, h0), x)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# activations / losses
+# ---------------------------------------------------------------------------
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_xent(logits: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy for a single sample: logits [K], label scalar int."""
+    logz = jax.scipy.special.logsumexp(logits)
+    return logz - logits[label]

@@ -1,0 +1,198 @@
+"""Per-layer microbenchmark modules (L2) — the paper's §3.2 workloads.
+
+For every layer Opacus supports we build two (for recurrent layers,
+three) step graphs over a batch of inputs:
+
+  * ``nodp``  — one forward + one backward pass, gradients averaged over
+                the batch (the ``torch.nn`` row of Fig. 2/5);
+  * ``dp``    — one forward + one *per-sample* backward pass, then the
+                L1 clip-and-aggregate kernels (the ``GSM(module)`` row);
+  * ``naive`` — recurrent layers only: the unfused per-gate variant
+                without DP (the "Opacus custom module" row of Fig. 5).
+                Their ``dp`` variant also uses the unfused cell, matching
+                the paper where GradSampleModule wraps the custom module.
+
+The per-layer loss is ½‖f(x)‖² per sample, which exercises exactly one
+fwd + one bwd through the layer, the quantity Table 2/3 measures.
+
+Signatures:
+  nodp(params[P], x[B,...]) -> (grad[P], loss[])
+  dp  (params[P], x[B,...], mask[B], clip[]) -> (gsum[P], loss[], snorm_mean[])
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .kernels import dp_kernels
+
+
+class LayerBench:
+    """A single-layer workload: flat params + single-sample apply."""
+
+    def __init__(self, name: str, spec, fans, apply_fn,
+                 input_shape: Tuple[int, ...], input_dtype: str = "f32"):
+        self.name = name
+        self.spec = spec
+        self.fans = fans
+        self._apply = apply_fn
+        self.input_shape = input_shape
+        self.input_dtype = input_dtype
+        self.offsets = {}
+        off = 0
+        for pname, shape in spec:
+            self.offsets[pname] = (off, shape)
+            off += int(np.prod(shape))
+        self.num_params = off
+
+    def unpack(self, flat):
+        out = {}
+        for pname, (off, shape) in self.offsets.items():
+            n = int(np.prod(shape))
+            out[pname] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        return out
+
+    def init_flat(self, key):
+        p = L.init_params(key, self.spec, self.fans)
+        return jnp.concatenate([p[n].reshape(-1) for n, _ in self.spec])
+
+    def apply(self, flat, x):
+        return self._apply(self.unpack(flat), x)
+
+
+# ---------------------------------------------------------------------------
+# layer zoo — shapes follow the spirit of opacus/benchmarks/config.json
+# ---------------------------------------------------------------------------
+
+def linear_bench() -> LayerBench:
+    spec, fans = L.dense_spec("l", 512, 512)
+    return LayerBench("linear", spec, fans,
+                      lambda p, x: L.dense(p, "l", x), (512,))
+
+
+def conv_bench() -> LayerBench:
+    spec, fans = L.conv2d_spec("c", 3, 32, 3)
+    return LayerBench("conv", spec, fans,
+                      lambda p, x: L.conv2d(p, "c", x), (32, 32, 3))
+
+
+def layernorm_bench() -> LayerBench:
+    spec, fans = L.layernorm_spec("n", 256)
+    return LayerBench("layernorm", spec, fans,
+                      lambda p, x: L.layernorm(p, "n", x), (256,))
+
+
+def groupnorm_bench() -> LayerBench:
+    spec, fans = L.groupnorm_spec("n", 32)
+    return LayerBench("groupnorm", spec, fans,
+                      lambda p, x: L.groupnorm(p, "n", x, groups=8),
+                      (16, 16, 32))
+
+
+def instancenorm_bench() -> LayerBench:
+    spec, fans = L.instancenorm_spec("n", 32)
+    return LayerBench("instancenorm", spec, fans,
+                      lambda p, x: L.instancenorm(p, "n", x), (16, 16, 32))
+
+
+def embedding_bench(vocab: int = 1000, dim: int = 16,
+                    seq: int = 32) -> LayerBench:
+    spec, fans = L.embedding_spec("e", vocab, dim)
+    name = "embedding" if vocab == 1000 else f"embedding_v{vocab}"
+    return LayerBench(name, spec, fans,
+                      lambda p, x: L.embedding(p, "e", x), (seq,), "i32")
+
+
+def mha_bench() -> LayerBench:
+    spec, fans = L.mha_spec("a", 128)
+    return LayerBench("mha", spec, fans,
+                      lambda p, x: L.mha(p, "a", x, heads=8), (64, 128))
+
+
+def _rnn_family(kind: str, fused: bool) -> LayerBench:
+    d, h, t = 128, 128, 32
+    spec_fn = {"rnn": L.rnn_spec, "gru": L.gru_spec, "lstm": L.lstm_spec}[kind]
+    apply_raw = {"rnn": L.rnn, "gru": L.gru, "lstm": L.lstm}[kind]
+    spec, fans = spec_fn("r", d, h)
+    return LayerBench(kind, spec, fans,
+                      lambda p, x: apply_raw(p, "r", x, h, fused=fused),
+                      (t, d))
+
+
+LAYERS: Dict[str, Callable[[], LayerBench]] = {
+    "linear": linear_bench,
+    "conv": conv_bench,
+    "layernorm": layernorm_bench,
+    "groupnorm": groupnorm_bench,
+    "instancenorm": instancenorm_bench,
+    "embedding": embedding_bench,
+    "mha": mha_bench,
+    "rnn": lambda: _rnn_family("rnn", True),
+    "gru": lambda: _rnn_family("gru", True),
+    "lstm": lambda: _rnn_family("lstm", True),
+    "rnn_naive": lambda: _rnn_family("rnn", False),
+    "gru_naive": lambda: _rnn_family("gru", False),
+    "lstm_naive": lambda: _rnn_family("lstm", False),
+}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def _sample_loss(bench: LayerBench, params, xi):
+    out = bench.apply(params, xi)
+    return 0.5 * jnp.sum(out * out)
+
+
+def make_layer_nodp(bench: LayerBench) -> Callable:
+    def step(params, x):
+        def mean_loss(p):
+            losses = jax.vmap(lambda xi: _sample_loss(bench, p, xi))(x)
+            return jnp.mean(losses)
+
+        loss, g = jax.value_and_grad(mean_loss)(params)
+        return g, loss
+
+    return step
+
+
+def make_layer_dp(bench: LayerBench) -> Callable:
+    def step(params, x, mask, clip):
+        def one(xi, mi):
+            loss, g = jax.value_and_grad(
+                lambda p: _sample_loss(bench, p, xi) * mi)(params)
+            return g, loss
+
+        grads, losses = jax.vmap(one)(x, mask)
+        gsum, sq = dp_kernels.clip_and_aggregate(grads, mask, clip)
+        nm = jnp.maximum(jnp.sum(mask), 1.0)
+        snorm_mean = jnp.sum(jnp.sqrt(sq + 1e-12) * mask) / nm
+        return gsum, jnp.sum(losses) / nm, snorm_mean
+
+    return step
+
+
+def layer_example_args(bench: LayerBench, variant: str, batch: int):
+    xdt = jnp.float32 if bench.input_dtype == "f32" else jnp.int32
+    p = jax.ShapeDtypeStruct((bench.num_params,), jnp.float32)
+    x = jax.ShapeDtypeStruct((batch,) + bench.input_shape, xdt)
+    if variant in ("nodp", "naive"):
+        return (p, x)
+    m = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    return (p, x, m, s)
+
+
+def build_layer_step(bench: LayerBench, variant: str) -> Callable:
+    if variant in ("nodp", "naive"):
+        return make_layer_nodp(bench)
+    if variant == "dp":
+        return make_layer_dp(bench)
+    raise ValueError(f"unknown layer variant {variant}")

@@ -1,0 +1,195 @@
+"""The four Fast-DPSGD benchmark models (L2), on flat parameter vectors.
+
+Models operate on a SINGLE sample; batching happens via vmap in dpsgd.py.
+Parameters live in one flat f32 vector so the Rust coordinator can treat
+them as an opaque buffer (checkpoints, noise vectors, optimizer state all
+become flat-vector ops) — the analogue of Opacus's per-parameter
+grad_sample tensors, collapsed into a single address space.
+
+Param counts (paper's Table-1 models):
+  * mnist_cnn  — 26,010   (matches the paper exactly)
+  * cifar_cnn  — 550,570  (paper: 605,226; same conv-stack family, ~0.6M)
+  * imdb_embed — 160,306  (paper: 160,098)
+  * imdb_lstm  — 1,081,002 (matches the paper exactly)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+VOCAB = 10_000
+SEQ_LEN = 64  # paper used full IMDb reviews; scaled for the CPU testbed
+
+
+class Model:
+    """A flat-parameter model: spec + single-sample apply."""
+
+    def __init__(self, name: str, spec: L.Spec, fans: Dict[str, int],
+                 apply_fn: Callable, input_shape: Tuple[int, ...],
+                 input_dtype: str, num_classes: int,
+                 layer_kinds: List[str]):
+        self.name = name
+        self.spec = spec
+        self.fans = fans
+        self._apply = apply_fn
+        self.input_shape = input_shape
+        self.input_dtype = input_dtype  # "f32" | "i32"
+        self.num_classes = num_classes
+        # layer kinds, for the L3 model validator (Appendix C analogue)
+        self.layer_kinds = layer_kinds
+        self.offsets = {}
+        off = 0
+        for pname, shape in spec:
+            n = int(np.prod(shape))
+            self.offsets[pname] = (off, shape)
+            off += n
+        self.num_params = off
+
+    # -- flat <-> dict ------------------------------------------------------
+    def unpack(self, flat: jnp.ndarray) -> L.Params:
+        out = {}
+        for pname, (off, shape) in self.offsets.items():
+            n = int(np.prod(shape))
+            out[pname] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        return out
+
+    def pack(self, params: L.Params) -> jnp.ndarray:
+        return jnp.concatenate(
+            [params[pname].reshape(-1) for pname, _ in self.spec])
+
+    def init_flat(self, key) -> jnp.ndarray:
+        return self.pack(L.init_params(key, self.spec, self.fans))
+
+    # -- single-sample forward ---------------------------------------------
+    def apply(self, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        return self._apply(self.unpack(flat), x)
+
+    def loss(self, flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+        return L.softmax_xent(self.apply(flat, x), y)
+
+
+def _cat(*pieces):
+    spec, fans = [], {}
+    for s, f in pieces:
+        spec += s
+        fans.update(f)
+    return spec, fans
+
+
+# ---------------------------------------------------------------------------
+# MNIST CNN — 26,010 params (conv16@8x8/s2 → pool → conv32@4x4/s2 → pool →
+# dense 32 → dense 10), the TF-Privacy tutorial net used by Fast-DPSGD.
+# ---------------------------------------------------------------------------
+
+def mnist_cnn() -> Model:
+    spec, fans = _cat(
+        L.conv2d_spec("c1", 1, 16, 8),
+        L.conv2d_spec("c2", 16, 32, 4),
+        L.dense_spec("d1", 512, 32),
+        L.dense_spec("d2", 32, 10),
+    )
+
+    def apply(p, x):  # x: [28, 28, 1]
+        h = L.relu(L.conv2d(p, "c1", x, stride=2, padding="SAME"))   # 14x14x16
+        h = L.maxpool2d(h, 2, 1)                                     # 13x13x16
+        h = L.relu(L.conv2d(p, "c2", h, stride=2, padding="VALID"))  # 5x5x32
+        h = L.maxpool2d(h, 2, 1)                                     # 4x4x32
+        h = h.reshape(-1)                                            # 512
+        h = L.relu(L.dense(p, "d1", h))
+        return L.dense(p, "d2", h)
+
+    return Model("mnist_cnn", spec, fans, apply, (28, 28, 1), "f32", 10,
+                 ["conv2d", "conv2d", "linear", "linear"])
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-10 CNN — VGG-ish conv stack (32,32,64,64,128,128) + dense head.
+# ---------------------------------------------------------------------------
+
+def cifar_cnn() -> Model:
+    spec, fans = _cat(
+        L.conv2d_spec("c1", 3, 32, 3),
+        L.conv2d_spec("c2", 32, 32, 3),
+        L.conv2d_spec("c3", 32, 64, 3),
+        L.conv2d_spec("c4", 64, 64, 3),
+        L.conv2d_spec("c5", 64, 128, 3),
+        L.conv2d_spec("c6", 128, 128, 3),
+        L.dense_spec("d1", 2048, 128),
+        L.dense_spec("d2", 128, 10),
+    )
+
+    def apply(p, x):  # x: [32, 32, 3]
+        h = L.relu(L.conv2d(p, "c1", x))
+        h = L.relu(L.conv2d(p, "c2", h))
+        h = L.avgpool2d(h, 2, 2)                    # 16x16x32
+        h = L.relu(L.conv2d(p, "c3", h))
+        h = L.relu(L.conv2d(p, "c4", h))
+        h = L.avgpool2d(h, 2, 2)                    # 8x8x64
+        h = L.relu(L.conv2d(p, "c5", h))
+        h = L.relu(L.conv2d(p, "c6", h))
+        h = L.avgpool2d(h, 2, 2)                    # 4x4x128
+        h = h.reshape(-1)                           # 2048
+        h = L.relu(L.dense(p, "d1", h))
+        return L.dense(p, "d2", h)
+
+    return Model("cifar_cnn", spec, fans, apply, (32, 32, 3), "f32", 10,
+                 ["conv2d"] * 6 + ["linear", "linear"])
+
+
+# ---------------------------------------------------------------------------
+# IMDb embedding net — Embedding(10k,16) → mean-pool → dense 16 → dense 2.
+# ---------------------------------------------------------------------------
+
+def imdb_embed() -> Model:
+    spec, fans = _cat(
+        L.embedding_spec("emb", VOCAB, 16),
+        L.dense_spec("d1", 16, 16),
+        L.dense_spec("d2", 16, 2),
+    )
+
+    def apply(p, x):  # x: [T] int32
+        h = L.embedding(p, "emb", x)      # [T, 16]
+        h = jnp.mean(h, axis=0)           # [16]
+        h = L.relu(L.dense(p, "d1", h))
+        return L.dense(p, "d2", h)
+
+    return Model("imdb_embed", spec, fans, apply, (SEQ_LEN,), "i32", 2,
+                 ["embedding", "linear", "linear"])
+
+
+# ---------------------------------------------------------------------------
+# IMDb LSTM — Embedding(10k,100) → LSTM(100) → dense 2 (1,081,002 params).
+# ---------------------------------------------------------------------------
+
+def imdb_lstm() -> Model:
+    spec, fans = _cat(
+        L.embedding_spec("emb", VOCAB, 100),
+        L.lstm_spec("rnn", 100, 100),
+        L.dense_spec("d1", 100, 2),
+    )
+
+    def apply(p, x):  # x: [T] int32
+        h = L.embedding(p, "emb", x)          # [T, 100]
+        hs = L.lstm(p, "rnn", h, 100)         # [T, 100]
+        return L.dense(p, "d1", hs[-1])
+
+    return Model("imdb_lstm", spec, fans, apply, (SEQ_LEN,), "i32", 2,
+                 ["embedding", "lstm", "linear"])
+
+
+MODELS: Dict[str, Callable[[], Model]] = {
+    "mnist": mnist_cnn,
+    "cifar": cifar_cnn,
+    "embed": imdb_embed,
+    "lstm": imdb_lstm,
+}
+
+
+def get_model(task: str) -> Model:
+    return MODELS[task]()

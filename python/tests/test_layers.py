@@ -1,0 +1,177 @@
+"""L2 layer library: shapes, parameter counts, numerics, DP-compat rules."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+
+
+def _init(spec, fans, seed=0):
+    return L.init_params(jax.random.PRNGKey(seed), spec, fans)
+
+
+class TestDense:
+    def test_shapes_and_values(self):
+        spec, fans = L.dense_spec("d", 4, 3)
+        p = _init(spec, fans)
+        x = jnp.arange(4.0)
+        y = L.dense(p, "d", x)
+        assert y.shape == (3,)
+        np.testing.assert_allclose(y, x @ p["d.w"] + p["d.b"], rtol=1e-6)
+
+    def test_param_count(self):
+        spec, _ = L.dense_spec("d", 10, 7)
+        assert sum(int(np.prod(s)) for _, s in spec) == 10 * 7 + 7
+
+
+class TestConv2d:
+    def test_same_padding_shape(self):
+        spec, fans = L.conv2d_spec("c", 1, 16, 8)
+        p = _init(spec, fans)
+        y = L.conv2d(p, "c", jnp.ones((28, 28, 1)), stride=2, padding="SAME")
+        assert y.shape == (14, 14, 16)
+
+    def test_valid_padding_shape(self):
+        spec, fans = L.conv2d_spec("c", 16, 32, 4)
+        p = _init(spec, fans)
+        y = L.conv2d(p, "c", jnp.ones((13, 13, 16)), stride=2, padding="VALID")
+        assert y.shape == (5, 5, 32)
+
+    def test_identity_kernel(self):
+        spec, fans = L.conv2d_spec("c", 1, 1, 1)
+        p = {"c.w": jnp.ones((1, 1, 1, 1)), "c.b": jnp.zeros((1,))}
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 5, 1))
+        np.testing.assert_allclose(L.conv2d(p, "c", x), x, rtol=1e-6)
+
+
+class TestPooling:
+    def test_maxpool(self):
+        x = jnp.arange(16.0).reshape(4, 4, 1)
+        y = L.maxpool2d(x, 2, 2)
+        np.testing.assert_allclose(y[:, :, 0], [[5, 7], [13, 15]])
+
+    def test_avgpool(self):
+        x = jnp.ones((4, 4, 2))
+        y = L.avgpool2d(x, 2, 2)
+        np.testing.assert_allclose(y, jnp.ones((2, 2, 2)), rtol=1e-6)
+
+
+class TestEmbedding:
+    def test_lookup(self):
+        spec, fans = L.embedding_spec("e", 10, 4)
+        p = _init(spec, fans)
+        toks = jnp.array([3, 3, 7], jnp.int32)
+        y = L.embedding(p, "e", toks)
+        assert y.shape == (3, 4)
+        np.testing.assert_allclose(y[0], y[1])
+        np.testing.assert_allclose(y[0], p["e.emb"][3])
+
+
+class TestNorms:
+    def test_layernorm_normalizes(self):
+        spec, fans = L.layernorm_spec("n", 64)
+        p = {"n.g": jnp.ones(64), "n.b": jnp.zeros(64)}
+        x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 10 + 3
+        y = L.layernorm(p, "n", x)
+        assert abs(float(jnp.mean(y))) < 1e-4
+        assert abs(float(jnp.std(y)) - 1.0) < 1e-2
+
+    def test_instancenorm_per_channel(self):
+        p = {"n.g": jnp.ones(3), "n.b": jnp.zeros(3)}
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 3)) * 5 + 2
+        y = L.instancenorm(p, "n", x)
+        for c in range(3):
+            assert abs(float(jnp.mean(y[:, :, c]))) < 1e-4
+
+    def test_groupnorm_groups(self):
+        p = {"n.g": jnp.ones(8), "n.b": jnp.zeros(8)}
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 4, 8)) * 3
+        y = L.groupnorm(p, "n", x, groups=2)
+        g0 = y[:, :, :4]
+        assert abs(float(jnp.mean(g0))) < 1e-4
+
+    def test_no_batch_statistics(self):
+        """Per-sample invariance: normalizing one sample never depends on
+        another — THE property BatchNorm violates (paper Appendix C)."""
+        p = {"n.g": jnp.ones(16), "n.b": jnp.zeros(16)}
+        xa = jax.random.normal(jax.random.PRNGKey(3), (16,))
+        xb = jax.random.normal(jax.random.PRNGKey(4), (16,))
+        solo = L.layernorm(p, "n", xa)
+        batched = jax.vmap(lambda x: L.layernorm(p, "n", x))(
+            jnp.stack([xa, xb]))
+        np.testing.assert_allclose(solo, batched[0], rtol=1e-6)
+
+
+class TestMha:
+    def test_shape(self):
+        spec, fans = L.mha_spec("a", 32)
+        p = _init(spec, fans)
+        y = L.mha(p, "a", jnp.ones((10, 32)), heads=4)
+        assert y.shape == (10, 32)
+
+    def test_softmax_rows_sum_to_one_effect(self):
+        """With V = const, attention output is that const (rows sum to 1)."""
+        spec, fans = L.mha_spec("a", 8)
+        p = _init(spec, fans, seed=5)
+        p = dict(p)
+        p["a.v.w"] = jnp.zeros((8, 8))
+        p["a.v.b"] = jnp.ones((8,))
+        p["a.o.w"] = jnp.eye(8)
+        p["a.o.b"] = jnp.zeros((8,))
+        y = L.mha(p, "a", jax.random.normal(jax.random.PRNGKey(6), (5, 8)),
+                  heads=2)
+        np.testing.assert_allclose(y, jnp.ones((5, 8)), rtol=1e-5)
+
+
+class TestRecurrent:
+    @pytest.mark.parametrize("kind", ["rnn", "gru", "lstm"])
+    def test_shapes(self, kind):
+        spec_fn = {"rnn": L.rnn_spec, "gru": L.gru_spec, "lstm": L.lstm_spec}[kind]
+        apply_fn = {"rnn": L.rnn, "gru": L.gru, "lstm": L.lstm}[kind]
+        spec, fans = spec_fn("r", 6, 5)
+        p = _init(spec, fans)
+        y = apply_fn(p, "r", jnp.ones((7, 6)), 5)
+        assert y.shape == (7, 5)
+
+    @pytest.mark.parametrize("kind", ["rnn", "lstm"])
+    def test_fused_equals_naive(self, kind):
+        """The optimized (fused) and naive cells are the same function."""
+        spec_fn = {"rnn": L.rnn_spec, "lstm": L.lstm_spec}[kind]
+        apply_fn = {"rnn": L.rnn, "lstm": L.lstm}[kind]
+        spec, fans = spec_fn("r", 4, 3)
+        p = _init(spec, fans, seed=7)
+        x = jax.random.normal(jax.random.PRNGKey(8), (9, 4))
+        yf = apply_fn(p, "r", x, 3, fused=True)
+        yn = apply_fn(p, "r", x, 3, fused=False)
+        np.testing.assert_allclose(yf, yn, rtol=1e-5, atol=1e-6)
+
+    def test_gru_fused_equals_naive(self):
+        spec, fans = L.gru_spec("r", 4, 3)
+        p = _init(spec, fans, seed=9)
+        x = jax.random.normal(jax.random.PRNGKey(10), (6, 4))
+        np.testing.assert_allclose(L.gru(p, "r", x, 3, fused=True),
+                                   L.gru(p, "r", x, 3, fused=False),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_lstm_param_count_torch_style(self):
+        """Double biases, like torch.nn.LSTM (paper's 1,081,002 count)."""
+        spec, _ = L.lstm_spec("r", 100, 100)
+        n = sum(int(np.prod(s)) for _, s in spec)
+        assert n == 4 * (100 * 100 + 100 * 100 + 100 + 100) == 80800
+
+
+class TestLoss:
+    def test_softmax_xent_matches_manual(self):
+        logits = jnp.array([1.0, 2.0, 3.0])
+        want = -jnp.log(jnp.exp(2.0) / jnp.sum(jnp.exp(logits)))
+        np.testing.assert_allclose(L.softmax_xent(logits, jnp.int32(1)),
+                                   want, rtol=1e-6)
+
+    def test_uniform_logits(self):
+        k = 10
+        loss = L.softmax_xent(jnp.zeros(k), jnp.int32(3))
+        np.testing.assert_allclose(loss, math.log(k), rtol=1e-6)

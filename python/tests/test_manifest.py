@@ -1,0 +1,100 @@
+"""Build-plan and manifest sanity (runs against a generated artifacts/ dir
+when present; plan-level checks always run)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, models
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestPlan:
+    def test_plan_names_unique(self):
+        names = [e.name for e in aot.plan()]
+        assert len(names) == len(set(names))
+
+    def test_plan_covers_every_table1_cell(self):
+        names = {e.name for e in aot.plan()}
+        for task, batches in aot.E2E_BATCHES.items():
+            for b in batches:
+                assert f"{task}_dp_b{b}" in names
+                assert f"{task}_nodp_b{b}" in names
+            assert f"{task}_microbatch_b1" in names
+
+    def test_plan_covers_fig2_layers(self):
+        names = {e.name for e in aot.plan()}
+        for lname in ("linear", "conv", "layernorm", "groupnorm",
+                      "instancenorm", "embedding", "mha"):
+            for b in aot.LAYER_BATCHES[lname]:
+                assert f"layer_{lname}_dp_b{b}" in names
+                assert f"layer_{lname}_nodp_b{b}" in names
+
+    def test_plan_covers_fig5_custom_modules(self):
+        names = {e.name for e in aot.plan()}
+        for lname in ("rnn", "gru", "lstm"):
+            assert f"layer_{lname}_nodp_b64" in names        # torch.nn row
+            assert f"layer_{lname}_naive_naive_b64" in names  # custom row
+            assert f"layer_{lname}_naive_dp_b64" in names     # GSM row
+
+    def test_plan_covers_fig3_sweep(self):
+        names = {e.name for e in aot.plan()}
+        for v in aot.FIG3_VOCABS:
+            for b in aot.FIG3_BATCHES:
+                assert f"layer_embedding_v{v}_dp_b{b}" in names
+
+    def test_virtual_step_artifacts_present(self):
+        names = {e.name for e in aot.plan()}
+        for task in ("mnist", "cifar", "embed", "lstm"):
+            for kind in ("accum", "apply", "eval"):
+                assert f"{task}_{kind}_b{aot.CANON_BATCH}" in names
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+@needs_artifacts
+class TestGeneratedManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, manifest):
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+
+    def test_model_metadata(self, manifest):
+        for task, meta in manifest["models"].items():
+            m = models.get_model(task)
+            assert meta["num_params"] == m.num_params
+            assert tuple(meta["input_shape"]) == m.input_shape
+            assert os.path.exists(os.path.join(ART, meta["init_file"]))
+
+    def test_dp_signature(self, manifest):
+        a = next(x for x in manifest["artifacts"]
+                 if x["name"] == "mnist_dp_b16")
+        in_names = [i["name"] for i in a["inputs"]]
+        assert in_names == ["params", "x", "y", "mask", "noise",
+                            "lr", "clip", "sigma", "denom"]
+        assert a["inputs"][0]["shape"] == [26010]
+        assert a["inputs"][1]["shape"] == [16, 28, 28, 1]
+        assert a["inputs"][2]["dtype"] == "i32"
+        out_names = [o["name"] for o in a["outputs"]]
+        assert out_names == ["params", "loss", "snorm_mean"]
+
+    def test_goldens_exist(self, manifest):
+        assert len(manifest["goldens"]) == 8  # 4 tasks × (dp + eval)
+        for g in manifest["goldens"]:
+            for f in g["files"].values():
+                assert os.path.exists(os.path.join(ART, f))
+
+    def test_hlo_text_parseable_header(self, manifest):
+        a = manifest["artifacts"][0]
+        with open(os.path.join(ART, a["file"])) as f:
+            head = f.read(200)
+        assert "HloModule" in head

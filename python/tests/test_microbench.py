@@ -1,0 +1,94 @@
+"""Per-layer microbench graphs: DP and non-DP steps agree on semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import microbench as mb
+
+ALL_LAYERS = ["linear", "conv", "layernorm", "groupnorm", "instancenorm",
+              "embedding", "mha", "rnn", "gru", "lstm"]
+
+
+def _x(bench, b, seed=0):
+    if bench.input_dtype == "f32":
+        return jax.random.normal(jax.random.PRNGKey(seed),
+                                 (b,) + bench.input_shape, jnp.float32)
+    vocab = bench.spec[0][1][0]
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (b,) + bench.input_shape, 0, vocab, jnp.int32)
+
+
+@pytest.mark.parametrize("lname", ALL_LAYERS)
+def test_nodp_grad_matches_autodiff(lname):
+    bench = mb.LAYERS[lname]()
+    p = bench.init_flat(jax.random.PRNGKey(1))
+    x = _x(bench, 4)
+    g, loss = mb.make_layer_nodp(bench)(p, x)
+    assert g.shape == (bench.num_params,)
+    assert np.isfinite(float(loss))
+
+    def mean_loss(pp):
+        return jnp.mean(jax.vmap(
+            lambda xi: 0.5 * jnp.sum(bench.apply(pp, xi) ** 2))(x))
+
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(jax.grad(mean_loss)(p)),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("lname", ["linear", "conv", "embedding", "mha", "lstm"])
+def test_dp_step_clips(lname):
+    """DP per-layer step: aggregated gradient obeys the clip bound."""
+    bench = mb.LAYERS[lname]()
+    p = bench.init_flat(jax.random.PRNGKey(2))
+    b = 4
+    x = _x(bench, b, seed=3)
+    clip = 0.01  # aggressively small: every sample will be clipped
+    gsum, loss, snorm = mb.make_layer_dp(bench)(
+        p, x, jnp.ones((b,)), jnp.float32(clip))
+    assert float(jnp.linalg.norm(gsum)) <= b * clip * (1 + 1e-3)
+    assert float(snorm) > 0.0
+
+
+@pytest.mark.parametrize("lname", ["linear", "layernorm"])
+def test_dp_unclipped_equals_sum_of_grads(lname):
+    bench = mb.LAYERS[lname]()
+    p = bench.init_flat(jax.random.PRNGKey(4))
+    b = 3
+    x = _x(bench, b, seed=5)
+    gsum, _, _ = mb.make_layer_dp(bench)(p, x, jnp.ones((b,)),
+                                         jnp.float32(1e9))
+    g_mean, _ = mb.make_layer_nodp(bench)(p, x)
+    np.testing.assert_allclose(np.asarray(gsum), np.asarray(g_mean) * b,
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_naive_rnn_same_function_as_fused():
+    fused = mb.LAYERS["lstm"]()
+    naive = mb.LAYERS["lstm_naive"]()
+    p = fused.init_flat(jax.random.PRNGKey(6))
+    x = _x(fused, 2, seed=7)
+    gf, lf = mb.make_layer_nodp(fused)(p, x)
+    gn, ln = mb.make_layer_nodp(naive)(p, x)
+    np.testing.assert_allclose(float(lf), float(ln), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gn),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_embedding_vocab_scaling():
+    small = mb.embedding_bench(100)
+    big = mb.embedding_bench(10_000)
+    assert big.num_params == 100 * small.num_params
+    assert small.name == "embedding_v100"
+    assert mb.embedding_bench(1000).name == "embedding"
+
+
+@pytest.mark.parametrize("lname", ALL_LAYERS)
+def test_layer_steps_lower(lname):
+    """Every microbench graph must be AOT-lowerable (the build contract)."""
+    bench = mb.LAYERS[lname]()
+    for variant in ("nodp", "dp"):
+        fn = mb.build_layer_step(bench, variant)
+        jax.jit(fn).lower(*mb.layer_example_args(bench, variant, 2))

@@ -1,0 +1,99 @@
+"""L2 models: param counts, pack/unpack round-trip, forward shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+
+TASKS = ["mnist", "cifar", "embed", "lstm"]
+
+PAPER_COUNTS = {
+    "mnist": 26_010,      # exact match to the paper
+    "lstm": 1_081_002,    # exact match to the paper
+}
+
+
+@pytest.fixture(scope="module", params=TASKS)
+def task(request):
+    return request.param
+
+
+def _example_input(m, key=0):
+    if m.input_dtype == "f32":
+        return jax.random.normal(jax.random.PRNGKey(key),
+                                 m.input_shape, jnp.float32)
+    return jax.random.randint(jax.random.PRNGKey(key), m.input_shape,
+                              0, models.VOCAB, jnp.int32)
+
+
+class TestParamCounts:
+    @pytest.mark.parametrize("t,count", PAPER_COUNTS.items())
+    def test_exact_paper_counts(self, t, count):
+        assert models.get_model(t).num_params == count
+
+    def test_cifar_magnitude(self):
+        n = models.get_model("cifar").num_params
+        assert 500_000 < n < 700_000  # paper: 605,226; same family
+
+    def test_embed_magnitude(self):
+        n = models.get_model("embed").num_params
+        assert 159_000 < n < 162_000  # paper: 160,098
+
+
+class TestPackUnpack:
+    def test_roundtrip(self, task):
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(1))
+        assert flat.shape == (m.num_params,)
+        repacked = m.pack(m.unpack(flat))
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(repacked))
+
+    def test_offsets_cover_vector(self, task):
+        m = models.get_model(task)
+        total = sum(int(np.prod(s)) for _, (_, s) in m.offsets.items())
+        assert total == m.num_params
+
+
+class TestForward:
+    def test_logit_shape(self, task):
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(2))
+        out = m.apply(flat, _example_input(m))
+        assert out.shape == (m.num_classes,)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_loss_finite_positive(self, task):
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(3))
+        x = _example_input(m)
+        loss = m.loss(flat, x, jnp.int32(0))
+        assert float(loss) > 0.0 and np.isfinite(float(loss))
+
+    def test_initial_loss_near_uniform(self, task):
+        """Fresh init should predict ~uniformly: loss ≈ log(num_classes)."""
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(4))
+        losses = [float(m.loss(flat, _example_input(m, k), jnp.int32(0)))
+                  for k in range(4)]
+        assert np.mean(losses) < 3.0 * np.log(m.num_classes)
+
+    def test_batched_forward_via_vmap(self, task):
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(5))
+        xs = jnp.stack([_example_input(m, k) for k in range(3)])
+        outs = jax.vmap(lambda x: m.apply(flat, x))(xs)
+        assert outs.shape == (3, m.num_classes)
+        # batching must not change per-sample results
+        solo = m.apply(flat, xs[1])
+        np.testing.assert_allclose(outs[1], solo, rtol=1e-5, atol=1e-5)
+
+
+class TestGradients:
+    def test_grad_shape_and_nonzero(self, task):
+        m = models.get_model(task)
+        flat = m.init_flat(jax.random.PRNGKey(6))
+        g = jax.grad(lambda p: m.loss(p, _example_input(m), jnp.int32(1)))(flat)
+        assert g.shape == (m.num_params,)
+        assert float(jnp.linalg.norm(g)) > 0.0

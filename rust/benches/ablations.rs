@@ -1,0 +1,149 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//!
+//!   A. Pallas clip kernels vs pure-jnp fused clip (dp vs jaxstyle)
+//!   B. Virtual steps: logical 256 as 4 x 64 physical vs native fused 256
+//!   C. Secure (ChaCha20) vs standard (xoshiro) noise generation
+//!   D. Poisson vs uniform sampling loader overhead (host side)
+//!
+//! Usage: cargo bench --bench ablations [-- --samples 256 --epochs 3]
+
+use std::time::Instant;
+
+use opacus_rs::bench::{TaskWorkload, Variant};
+use opacus_rs::data::{PoissonLoader, UniformLoader};
+use opacus_rs::rng::{chacha::ChaCha20Rng, gaussian, pcg::Xoshiro256pp};
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::runtime::step::{AccumStep, ApplyStep, HyperParams};
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::stats;
+use opacus_rs::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench"])?;
+    let samples = args.get_usize("samples", 256)?;
+    let epochs = args.get_usize("epochs", 3)?;
+    let reg = Registry::open("artifacts")?;
+
+    // ---- A: pallas-structured vs jnp-fused clip path --------------------
+    let mut t = Table::new(
+        "Ablation A: Pallas clip kernels vs XLA-fused jnp clip (mnist)",
+        Table::header_from(&["batch", "pallas dp (s)", "jnp fused dp (s)", "ratio"]),
+    );
+    for b in [16usize, 64, 256] {
+        let mut dp = TaskWorkload::load(&reg, "mnist", Variant::Dp, b, samples)?;
+        let mut js = TaskWorkload::load(&reg, "mnist", Variant::JaxStyle, b, samples)?;
+        let td = dp.median_epoch(epochs, samples)?;
+        let tj = js.median_epoch(epochs, samples)?;
+        t.add_row(vec![
+            b.to_string(),
+            format!("{td:.3}"),
+            format!("{tj:.3}"),
+            format!("{:.2}x", td / tj),
+        ]);
+    }
+    t.print();
+
+    // ---- B: virtual steps vs native fused batch -------------------------
+    let mut t = Table::new(
+        "Ablation B: logical batch 256 = 4 x 64 virtual vs native fused 256 (mnist)",
+        Table::header_from(&["mode", "per-logical-step (s)"]),
+    );
+    {
+        let accum = AccumStep::load(&reg, "mnist_accum_b64")?;
+        let apply = ApplyStep::load(&reg, "mnist_apply_b64")?;
+        let model = reg.model("mnist")?;
+        let data = opacus_rs::data::synth::for_task(
+            "mnist", 256, 42, &model.input_shape, model.vocab);
+        let params = reg.init_params("mnist")?;
+        let mut noise = vec![0f32; params.len()];
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let hp = HyperParams {
+            denom: 256.0,
+            ..Default::default()
+        };
+        let reps = epochs.max(3);
+        let times = stats::sample_runtimes(1, reps, || {
+            let mut opt = opacus_rs::trainer::DpOptimizer::new(params.len());
+            for c in 0..4 {
+                let idx: Vec<usize> = (c * 64..(c + 1) * 64).collect();
+                let batch = data.gather(&idx, 64).unwrap();
+                let out = accum
+                    .run(&params, batch.x, &batch.y, &batch.mask, hp.clip)
+                    .unwrap();
+                opt.add(&out, 64);
+            }
+            gaussian::fill_standard_normal(&mut rng, &mut noise);
+            let g = opt.take();
+            let _ = apply.run(&params, &g, &noise, hp).unwrap();
+        });
+        t.add_row(vec![
+            "virtual 4x64".into(),
+            format!("{:.3}", stats::median(&times)),
+        ]);
+
+        let mut fused = TaskWorkload::load(&reg, "mnist", Variant::Dp, 256, 256)?;
+        let tf = fused.median_epoch(reps, 256)?; // 1 step per "epoch"
+        t.add_row(vec!["native fused 256".into(), format!("{tf:.3}")]);
+    }
+    t.print();
+
+    // ---- C: secure vs standard noise generation -------------------------
+    let mut t = Table::new(
+        "Ablation C: noise generation cost per step, 1,081,002 params (LSTM)",
+        Table::header_from(&["generator", "ms / step", "GB/s"]),
+    );
+    let n = 1_081_002usize;
+    let mut buf = vec![0f32; n];
+    let mut xo = Xoshiro256pp::seed_from_u64(2);
+    let times = stats::sample_runtimes(2, 20, || {
+        gaussian::fill_standard_normal(&mut xo, &mut buf)
+    });
+    let tx = stats::median(&times);
+    t.add_row(vec![
+        "xoshiro256++ (standard)".into(),
+        format!("{:.2}", tx * 1e3),
+        format!("{:.2}", n as f64 * 4.0 / tx / 1e9),
+    ]);
+    let mut cc = ChaCha20Rng::seed_from_u64(2);
+    let times = stats::sample_runtimes(2, 20, || {
+        gaussian::fill_standard_normal(&mut cc, &mut buf)
+    });
+    let tc = stats::median(&times);
+    t.add_row(vec![
+        "ChaCha20 (secure mode)".into(),
+        format!("{:.2}", tc * 1e3),
+        format!("{:.2}", n as f64 * 4.0 / tc / 1e9),
+    ]);
+    t.print();
+    println!("secure-mode noise overhead: {:.2}x\n", tc / tx);
+
+    // ---- D: sampler overhead (host-side only) ----------------------------
+    let mut t = Table::new(
+        "Ablation D: sampler cost per epoch, n=60,000 (host side, no training)",
+        Table::header_from(&["sampler", "ms / epoch"]),
+    );
+    let n_data = 60_000;
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let uni = UniformLoader::new(n_data, 256, false);
+    let times = stats::sample_runtimes(1, 10, || {
+        let _ = uni.epoch(&mut rng);
+    });
+    t.add_row(vec![
+        "uniform shuffle".into(),
+        format!("{:.2}", stats::median(&times) * 1e3),
+    ]);
+    let poi = PoissonLoader::with_expected_batch(n_data, 256);
+    let times = stats::sample_runtimes(1, 10, || {
+        let t0 = Instant::now();
+        let _ = poi.epoch(&mut rng);
+        let _ = t0;
+    });
+    t.add_row(vec![
+        "poisson (per-element Bernoulli)".into(),
+        format!("{:.2}", stats::median(&times) * 1e3),
+    ]);
+    t.print();
+
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Accounting microbenches: cost of RDP computation, ε queries, noise
+//! calibration — plus the RDP-vs-GDP ε trajectory comparison (ablation).
+//!
+//! The paper's PrivacyEngine queries ε in real time during training; this
+//! bench verifies the accountant is never a bottleneck (µs-ms per query).
+//!
+//! Usage: cargo bench --bench accountant
+
+use opacus_rs::accounting::{
+    accountant::Accountant, calibration, gdp, rdp, CalibKind, GdpAccountant, RdpAccountant,
+};
+use opacus_rs::util::stats;
+use opacus_rs::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // ---- RDP primitive cost --------------------------------------------
+    let orders = rdp::default_orders();
+    let mut t = Table::new(
+        "RDP accountant primitives",
+        Table::header_from(&["operation", "median µs"]),
+    );
+    let times = stats::sample_runtimes(3, 50, || {
+        let _ = rdp::compute_rdp(0.004, 1.1, 1, &orders);
+    });
+    t.add_row(vec![
+        format!("compute_rdp over {} orders", orders.len()),
+        format!("{:.1}", stats::median(&times) * 1e6),
+    ]);
+
+    let r = rdp::compute_rdp(0.004, 1.1, 10_000, &orders);
+    let times = stats::sample_runtimes(3, 200, || {
+        let _ = rdp::rdp_to_epsilon(&orders, &r, 1e-5);
+    });
+    t.add_row(vec![
+        "rdp_to_epsilon".into(),
+        format!("{:.1}", stats::median(&times) * 1e6),
+    ]);
+
+    let times = stats::sample_runtimes(1, 10, || {
+        let _ =
+            calibration::get_noise_multiplier(CalibKind::Rdp, 3.0, 1e-5, 0.01, 5000).unwrap();
+    });
+    t.add_row(vec![
+        "get_noise_multiplier (bisection)".into(),
+        format!("{:.1}", stats::median(&times) * 1e6),
+    ]);
+
+    let mut acc = RdpAccountant::new();
+    acc.record(1.1, 0.004, 10_000);
+    let times = stats::sample_runtimes(3, 50, || {
+        let _ = acc.get_epsilon(1e-5);
+    });
+    t.add_row(vec![
+        "accountant.get_epsilon (live query)".into(),
+        format!("{:.1}", stats::median(&times) * 1e6),
+    ]);
+    t.print();
+
+    // ---- RDP vs GDP trajectory (ablation) --------------------------------
+    let mut t = Table::new(
+        "RDP vs GDP epsilon trajectory (q=0.004, sigma=1.1, delta=1e-5)",
+        Table::header_from(&["steps", "eps RDP", "eps GDP", "GDP/RDP"]),
+    );
+    for steps in [100u64, 1000, 5000, 20000, 50000] {
+        let rdp_eps = {
+            let mut a = RdpAccountant::new();
+            a.record(1.1, 0.004, steps);
+            a.get_epsilon(1e-5)
+        };
+        let gdp_eps = {
+            let mut a = GdpAccountant::new();
+            a.record(1.1, 0.004, steps);
+            a.get_epsilon(1e-5)
+        };
+        t.add_row(vec![
+            steps.to_string(),
+            format!("{rdp_eps:.4}"),
+            format!("{gdp_eps:.4}"),
+            format!("{:.2}", gdp_eps / rdp_eps.max(1e-12)),
+        ]);
+    }
+    t.print();
+
+    // sanity print for EXPERIMENTS.md: μ at the paper-ish setting
+    println!(
+        "mu(q=0.004, sigma=1.1, T=20000) = {:.3}",
+        gdp::compute_mu(0.004, 1.1, 20000)
+    );
+    Ok(())
+}

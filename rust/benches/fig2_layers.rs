@@ -1,0 +1,150 @@
+//! Fig. 2 + Tables 2/3/4 — per-layer runtime and peak-memory overhead of
+//! enabling DP, at various batch sizes (paper §3.2).
+//!
+//! For every supported layer:
+//!   * runtime factor  = mean fwd+bwd time, DP / non-DP      (Fig. 2 top)
+//!   * memory factor   = Eq (1)-(3) model + live-buffer accounting
+//!                       (Fig. 2 bottom; CUDA peak → substitution
+//!                       documented in DESIGN.md §2)
+//!   * raw runtimes (Table 2), raw memory (Table 3), L/C ratios (Table 4)
+//!
+//! Usage: cargo bench --bench fig2_layers [-- --iters 20 --raw]
+
+use opacus_rs::bench::LayerWorkload;
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::{fmt_factor, fmt_mb, Table};
+
+const LAYERS: [&str; 7] = [
+    "linear",
+    "conv",
+    "layernorm",
+    "groupnorm",
+    "instancenorm",
+    "embedding",
+    "mha",
+];
+// recurrent rows of Fig. 2: DP variant wraps the custom (naive) module
+const RNN_LAYERS: [&str; 3] = ["rnn", "gru", "lstm"];
+const BATCHES: [usize; 4] = [16, 64, 256, 512];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench", "raw"])?;
+    let iters = args.get_usize("iters", 10)?;
+    let warmup = args.get_usize("warmup", 3)?;
+    let raw = args.has_flag("raw");
+
+    let reg = Registry::open("artifacts")?;
+    let mut results: Vec<Json> = Vec::new();
+
+    let mut header = vec!["layer / batch".to_string()];
+    header.extend(BATCHES.iter().map(|b| b.to_string()));
+    let mut rt_table = Table::new(
+        "Fig 2 (top): runtime overhead factor of enabling DP (GSM / nn)",
+        header.clone(),
+    );
+    let mut mem_table = Table::new(
+        "Fig 2 (bottom): peak-memory overhead factor, Eq(1)-(3) model",
+        header.clone(),
+    );
+    let mut raw_rt = Table::new(
+        "Table 2: raw mean runtime (ms) nn -> GSM(DP)",
+        header.clone(),
+    );
+    let mut raw_mem = Table::new(
+        "Table 3: live-buffer memory (MB) nn -> GSM(DP)",
+        header.clone(),
+    );
+    let mut lc_table = Table::new(
+        "Table 4: L/C and (L/C)/b per layer",
+        Table::header_from(&["layer", "L (MB)", "C (KB)", "L/C", "(L/C)/b @16", "@512"]),
+    );
+
+    let all_layers: Vec<(String, String, String)> = LAYERS
+        .iter()
+        .map(|l| (l.to_string(), format!("{l}"), "nodp".to_string()))
+        .chain(RNN_LAYERS.iter().map(|l| {
+            // nn row = fused nodp; DP row = naive+GSM (paper Fig. 5 wiring)
+            (l.to_string(), format!("{l}_naive"), "nodp".to_string())
+        }))
+        .collect();
+
+    for (label, dp_layer, _) in &all_layers {
+        let mut rt_row = vec![label.clone()];
+        let mut mem_row = vec![label.clone()];
+        let mut rrt_row = vec![label.clone()];
+        let mut rmem_row = vec![label.clone()];
+        let mut lc_done = false;
+        for &b in &BATCHES {
+            let nodp = LayerWorkload::load(&reg, label, "nodp", b);
+            let dp = LayerWorkload::load(&reg, dp_layer, "dp", b);
+            match (nodp, dp) {
+                (Ok(nodp), Ok(dp)) => {
+                    let t_nodp = nodp.mean_runtime(warmup, iters)?;
+                    let t_dp = dp.mean_runtime(warmup, iters)?;
+                    let factor = t_dp / t_nodp;
+                    let mm = dp.memory_model();
+                    let mem_factor = mm.overhead();
+                    rt_row.push(fmt_factor(factor));
+                    mem_row.push(fmt_factor(mem_factor));
+                    rrt_row.push(format!(
+                        "{:.2}->{:.2}",
+                        t_nodp * 1e3,
+                        t_dp * 1e3
+                    ));
+                    rmem_row.push(format!(
+                        "{}->{}",
+                        fmt_mb(nodp.live_buffer_bytes() as f64),
+                        fmt_mb(dp.live_buffer_bytes() as f64)
+                    ));
+                    if !lc_done {
+                        let lc = mm.l_over_c();
+                        lc_table.add_row(vec![
+                            label.clone(),
+                            fmt_mb(mm.l_bytes),
+                            format!("{:.2}", mm.c_bytes / 1024.0),
+                            format!("{lc:.2}"),
+                            format!("{:.3}", lc / 16.0),
+                            format!("{:.4}", lc / 512.0),
+                        ]);
+                        lc_done = true;
+                    }
+                    results.push(Json::obj(vec![
+                        ("layer", Json::str(label)),
+                        ("batch", Json::num(b as f64)),
+                        ("nodp_ms", Json::num(t_nodp * 1e3)),
+                        ("dp_ms", Json::num(t_dp * 1e3)),
+                        ("runtime_factor", Json::num(factor)),
+                        ("mem_factor_model", Json::num(mem_factor)),
+                        ("l_over_c", Json::num(mm.l_over_c())),
+                    ]));
+                }
+                _ => {
+                    rt_row.push("-".into());
+                    mem_row.push("-".into());
+                    rrt_row.push("-".into());
+                    rmem_row.push("-".into());
+                }
+            }
+        }
+        rt_table.add_row(rt_row);
+        mem_table.add_row(mem_row);
+        raw_rt.add_row(rrt_row);
+        raw_mem.add_row(rmem_row);
+    }
+
+    rt_table.print();
+    mem_table.print();
+    if raw {
+        raw_rt.print();
+        raw_mem.print();
+    }
+    lc_table.print();
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig2_layers.json", Json::Arr(results).to_string())?;
+    println!("raw results -> results/fig2_layers.json");
+    Ok(())
+}

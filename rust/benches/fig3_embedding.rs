@@ -1,0 +1,89 @@
+//! Fig. 3 — embedding-layer DP overhead as a function of num_embeddings
+//! (i.e. L/C) and batch size, plus the Eq (3) predicted-vs-modeled
+//! comparison the paper closes §3.2.3 with.
+//!
+//! Usage: cargo bench --bench fig3_embedding [-- --iters 15]
+
+use opacus_rs::bench::LayerWorkload;
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::{fmt_factor, Table};
+
+const VOCABS: [(&str, usize); 3] = [
+    ("embedding_v100", 100),
+    ("embedding", 1000),
+    ("embedding_v10000", 10_000),
+];
+const BATCHES: [usize; 3] = [16, 128, 512];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench"])?;
+    let iters = args.get_usize("iters", 10)?;
+    let warmup = args.get_usize("warmup", 3)?;
+
+    let reg = Registry::open("artifacts")?;
+    let mut results = Vec::new();
+
+    let mut header = vec!["vocab \\ batch".to_string()];
+    header.extend(BATCHES.iter().map(|b| b.to_string()));
+    let mut rt = Table::new("Fig 3 (left): runtime overhead factor", header.clone());
+    let mut mem = Table::new(
+        "Fig 3 (right): memory overhead factor (Eq 1-3 model)",
+        header.clone(),
+    );
+    let mut regime = Table::new(
+        "Eq (3) regimes: exact factor vs asymptotic prediction",
+        Table::header_from(&["vocab", "batch", "L/C", "exact", "regime approx", "regime"]),
+    );
+
+    for (layer, vocab) in VOCABS {
+        let mut rt_row = vec![vocab.to_string()];
+        let mut mem_row = vec![vocab.to_string()];
+        for &b in &BATCHES {
+            match (
+                LayerWorkload::load(&reg, layer, "nodp", b),
+                LayerWorkload::load(&reg, layer, "dp", b),
+            ) {
+                (Ok(nodp), Ok(dp)) => {
+                    let t0 = nodp.mean_runtime(warmup, iters)?;
+                    let t1 = dp.mean_runtime(warmup, iters)?;
+                    let mm = dp.memory_model();
+                    rt_row.push(fmt_factor(t1 / t0));
+                    mem_row.push(fmt_factor(mm.overhead()));
+                    let (label, approx) = mm.overhead_regime();
+                    regime.add_row(vec![
+                        vocab.to_string(),
+                        b.to_string(),
+                        format!("{:.1}", mm.l_over_c()),
+                        format!("{:.2}", mm.overhead()),
+                        format!("{approx:.2}"),
+                        label.to_string(),
+                    ]);
+                    results.push(Json::obj(vec![
+                        ("vocab", Json::num(vocab as f64)),
+                        ("batch", Json::num(b as f64)),
+                        ("runtime_factor", Json::num(t1 / t0)),
+                        ("mem_factor_model", Json::num(mm.overhead())),
+                        ("l_over_c", Json::num(mm.l_over_c())),
+                    ]));
+                }
+                _ => {
+                    rt_row.push("-".into());
+                    mem_row.push("-".into());
+                }
+            }
+        }
+        rt.add_row(rt_row);
+        mem.add_row(mem_row);
+    }
+
+    rt.print();
+    mem.print();
+    regime.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig3_embedding.json", Json::Arr(results).to_string())?;
+    println!("raw results -> results/fig3_embedding.json");
+    Ok(())
+}

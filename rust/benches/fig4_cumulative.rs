@@ -1,0 +1,90 @@
+//! Fig. 4 — cumulative runtime over epochs, including the one-time
+//! compilation cost (the paper's first-epoch JIT overhead).
+//!
+//! In the paper, JAX (DP) and Custom TFP (XLA) pay up to 101x / 625x of a
+//! median epoch in first-epoch JIT. Our AOT architecture moves that cost
+//! to artifact *load* time (PJRT compile); this bench reports it the same
+//! way: epoch 1 = compile + train, epochs 2..E = train only.
+//!
+//! Usage: cargo bench --bench fig4_cumulative [-- --epochs 20 --samples 256
+//!        --batch 512 --tasks mnist,embed]
+
+use opacus_rs::bench::{TaskWorkload, Variant};
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench"])?;
+    let epochs = args.get_usize("epochs", 12)?;
+    let samples = args.get_usize("samples", 128)?;
+    let batch = args.get_usize("batch", 512)?;
+    let tasks: Vec<String> = args
+        .get_or("tasks", "mnist,embed")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    let mut results = Vec::new();
+    for task in &tasks {
+        // fresh registry per task so compile costs are attributed cleanly
+        let reg = Registry::open("artifacts")?;
+        let b = if reg.available(&Variant::Dp.artifact_name(task, batch)) {
+            batch
+        } else {
+            256 // cifar/lstm cap
+        };
+        let mut table = Table::new(
+            &format!(
+                "Fig 4 ({task}, batch {b}): cumulative runtime (s) over {epochs} \
+                 epochs of {samples} samples — epoch 1 includes the AOT \
+                 compile (the JIT-overhead analogue)"
+            ),
+            Table::header_from(&["epoch", "dp epoch(s)", "dp cumulative", "nodp cumulative"]),
+        );
+        let mut dp = TaskWorkload::load(&reg, task, Variant::Dp, b, samples)?;
+        let mut nodp = TaskWorkload::load(&reg, task, Variant::NoDp, b, samples)?;
+        let dp_series = dp.epoch_series(epochs, samples)?;
+        let nodp_series = nodp.epoch_series(epochs, samples)?;
+
+        let mut dp_cum = dp.compile_secs;
+        let mut nodp_cum = nodp.compile_secs;
+        let median_dp = opacus_rs::util::stats::median(&dp_series);
+        for e in 0..epochs {
+            dp_cum += dp_series[e];
+            nodp_cum += nodp_series[e];
+            let first_cost = if e == 0 {
+                dp.compile_secs + dp_series[0]
+            } else {
+                dp_series[e]
+            };
+            table.add_row(vec![
+                (e + 1).to_string(),
+                format!("{first_cost:.3}"),
+                format!("{dp_cum:.3}"),
+                format!("{nodp_cum:.3}"),
+            ]);
+            results.push(Json::obj(vec![
+                ("task", Json::str(task)),
+                ("epoch", Json::num((e + 1) as f64)),
+                ("dp_cumulative_s", Json::num(dp_cum)),
+                ("nodp_cumulative_s", Json::num(nodp_cum)),
+            ]));
+        }
+        table.print();
+        println!(
+            "compile overhead: dp {:.2}s = {:.1}x median epoch ({:.3}s); nodp {:.2}s\n",
+            dp.compile_secs,
+            dp.compile_secs / median_dp.max(1e-9),
+            median_dp,
+            nodp.compile_secs,
+        );
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig4_cumulative.json", Json::Arr(results).to_string())?;
+    println!("raw results -> results/fig4_cumulative.json");
+    Ok(())
+}

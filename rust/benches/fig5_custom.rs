@@ -1,0 +1,92 @@
+//! Fig. 5 — torch.nn module vs Opacus custom module vs GSM-wrapped
+//! module, for the layers Opacus re-implements (MHA, RNN, GRU, LSTM).
+//!
+//! Series mapping (DESIGN.md §2):
+//!   "torch.nn module"      → fused-gate cell, no DP      (layer_<l>_nodp)
+//!   "custom module, no DP" → per-gate naive cell, no DP  (layer_<l>_naive_naive)
+//!   "GSM(custom), DP"      → naive cell + per-sample clip (layer_<l>_naive_dp)
+//! MHA has a single implementation (its custom/nn series coincide, as in
+//! the paper where custom MHA ≈ nn.MHA).
+//!
+//! Usage: cargo bench --bench fig5_custom [-- --iters 15]
+
+use opacus_rs::bench::LayerWorkload;
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::{fmt_mb, Table};
+
+const BATCHES: [usize; 3] = [16, 64, 256];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench"])?;
+    let iters = args.get_usize("iters", 10)?;
+    let warmup = args.get_usize("warmup", 3)?;
+
+    let reg = Registry::open("artifacts")?;
+    let mut results = Vec::new();
+
+    let mut rt = Table::new(
+        "Fig 5 (top): mean runtime (ms) — nn / custom / GSM(custom)+DP",
+        Table::header_from(&["layer", "batch", "nn", "custom", "GSM(DP)", "custom/nn", "GSM/nn"]),
+    );
+    let mut mem = Table::new(
+        "Fig 5 (bottom): live-buffer memory (MB) — nn vs GSM(custom)+DP",
+        Table::header_from(&["layer", "batch", "nn", "GSM(DP)", "factor"]),
+    );
+
+    let rows: Vec<(&str, &str, &str, &str, &str)> = vec![
+        // (label, nn layer, nn variant, custom layer, custom variant)
+        ("mha", "mha", "nodp", "mha", "nodp"),
+        ("rnn", "rnn", "nodp", "rnn_naive", "naive"),
+        ("gru", "gru", "nodp", "gru_naive", "naive"),
+        ("lstm", "lstm", "nodp", "lstm_naive", "naive"),
+    ];
+
+    for (label, nn_layer, nn_var, cu_layer, cu_var) in rows {
+        for &b in &BATCHES {
+            let nn = LayerWorkload::load(&reg, nn_layer, nn_var, b)?;
+            let custom = LayerWorkload::load(&reg, cu_layer, cu_var, b)?;
+            let dp_layer = if label == "mha" { "mha" } else { cu_layer };
+            let gsm = LayerWorkload::load(&reg, dp_layer, "dp", b)?;
+            let t_nn = nn.mean_runtime(warmup, iters)? * 1e3;
+            let t_cu = custom.mean_runtime(warmup, iters)? * 1e3;
+            let t_gsm = gsm.mean_runtime(warmup, iters)? * 1e3;
+            rt.add_row(vec![
+                label.to_string(),
+                b.to_string(),
+                format!("{t_nn:.2}"),
+                format!("{t_cu:.2}"),
+                format!("{t_gsm:.2}"),
+                format!("{:.2}x", t_cu / t_nn),
+                format!("{:.2}x", t_gsm / t_nn),
+            ]);
+            let m_nn = nn.live_buffer_bytes() as f64;
+            let m_gsm = gsm.live_buffer_bytes() as f64;
+            mem.add_row(vec![
+                label.to_string(),
+                b.to_string(),
+                fmt_mb(m_nn),
+                fmt_mb(m_gsm),
+                format!("{:.2}x", m_gsm / m_nn),
+            ]);
+            results.push(Json::obj(vec![
+                ("layer", Json::str(label)),
+                ("batch", Json::num(b as f64)),
+                ("nn_ms", Json::num(t_nn)),
+                ("custom_ms", Json::num(t_cu)),
+                ("gsm_dp_ms", Json::num(t_gsm)),
+                ("mem_nn_mb", Json::num(m_nn / 1048576.0)),
+                ("mem_gsm_mb", Json::num(m_gsm / 1048576.0)),
+            ]));
+        }
+    }
+
+    rt.print();
+    mem.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig5_custom.json", Json::Arr(results).to_string())?;
+    println!("raw results -> results/fig5_custom.json");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Table 1 — median per-epoch runtime of DP-SGD variants vs batch size,
+//! for all four end-to-end tasks (paper §3.1).
+//!
+//! Rows (framework substitutions per DESIGN.md §2):
+//!   jax-style fused (DP)  ≙ JAX (DP)
+//!   no-DP baseline        ≙ PyTorch without DP
+//!   opacus-rs (DP)        ≙ Opacus
+//!   micro-batch (DP)      ≙ PyVacy
+//!
+//! Also prints the paper's §3.1.3 summary: per-framework mean epoch-time
+//! reduction from the smallest to the largest batch.
+//!
+//! Usage: cargo bench --bench table1 [-- --tasks mnist,embed
+//!        --samples 512 --epochs 3 --out results/table1.json]
+
+use opacus_rs::bench::{EpochTimer, TaskWorkload, Variant};
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::Table;
+
+const ALL_BATCHES: [usize; 6] = [16, 32, 64, 128, 256, 512];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench"])?; // cargo bench passes --bench
+    let samples = args.get_usize("samples", 256)?;
+    let epochs = args.get_usize("epochs", 3)?;
+    let tasks: Vec<String> = args
+        .get_or("tasks", "mnist,cifar,embed,lstm")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let out_path = args.get_or("out", "results/table1.json").to_string();
+
+    let reg = Registry::open("artifacts")?;
+    let mut all_results: Vec<Json> = Vec::new();
+
+    for task in &tasks {
+        let title = format!(
+            "Table 1 ({task}): median per-epoch runtime (s), {samples} samples/epoch, \
+             median of {epochs} epochs"
+        );
+        let mut header = vec!["framework / batch".to_string()];
+        header.extend(ALL_BATCHES.iter().map(|b| b.to_string()));
+        let mut table = Table::new(&title, header);
+
+        // per-variant cells + reduction factors for the summary paragraph
+        let mut reductions: Vec<(String, f64)> = Vec::new();
+        for variant in Variant::all() {
+            let mut row = vec![variant.row_label().to_string()];
+            let mut first: Option<f64> = None;
+            let mut last: Option<f64> = None;
+            for &b in &ALL_BATCHES {
+                let cell = match TaskWorkload::load(&reg, task, variant, b, samples.min(2048)) {
+                    Ok(mut w) => {
+                        let t = w.median_epoch(epochs, samples)?;
+                        if first.is_none() {
+                            first = Some(t);
+                        }
+                        last = Some(t);
+                        all_results.push(Json::obj(vec![
+                            ("task", Json::str(task)),
+                            ("variant", Json::str(variant.row_label())),
+                            ("batch", Json::num(b as f64)),
+                            ("median_epoch_s", Json::num(t)),
+                            ("compile_s", Json::num(w.compile_secs)),
+                        ]));
+                        Some(t)
+                    }
+                    Err(_) => None,
+                };
+                row.push(EpochTimer::cell(cell));
+            }
+            if let (Some(f), Some(l)) = (first, last) {
+                if l > 0.0 {
+                    reductions.push((variant.row_label().to_string(), f / l));
+                }
+            }
+            table.add_row(row);
+        }
+        table.print();
+
+        println!("epoch-time reduction, smallest -> largest available batch:");
+        for (label, r) in &reductions {
+            println!("  {label:<22} {r:.1}x");
+        }
+        println!();
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(&out_path, Json::Arr(all_results).to_string())?;
+    println!("raw results -> {out_path}");
+    println!(
+        "(batches 1024/2048 omitted: single-core CPU testbed — see EXPERIMENTS.md; \
+         cifar/lstm generated at 16/64/256 only)"
+    );
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Gaussian Differential Privacy (f-DP / CLT) accountant.
+//!
+//! The alternative accountant exposed through the paper's "custom privacy
+//! accountants" interface. Based on Dong, Roth & Su (2019) and the
+//! "Deep Learning with Gaussian Differential Privacy" CLT approximation
+//! (Bu et al., 2020): T compositions of Poisson-subsampled Gaussian with
+//! rate q and noise σ are ≈ μ-GDP with
+//!
+//! ```text
+//! μ = q · √T · √(e^{1/σ²} − 1)
+//! ```
+//!
+//! and the (ε, δ) trade-off of μ-GDP is
+//!
+//! ```text
+//! δ(ε) = Φ(−ε/μ + μ/2) − e^ε · Φ(−ε/μ − μ/2).
+//! ```
+//!
+//! NOTE: this is an asymptotic approximation — generally *less
+//! conservative* than RDP for small q and large T; the `opacus epsilon
+//! --compare` CLI prints both trajectories (one of the DESIGN.md
+//! ablations).
+
+use super::special::normal_cdf;
+
+/// CLT parameter μ for T steps of SGM(q, σ).
+pub fn compute_mu(q: f64, sigma: f64, steps: u64) -> f64 {
+    assert!(sigma > 0.0);
+    q * (steps as f64).sqrt() * ((1.0 / (sigma * sigma)).exp() - 1.0).sqrt()
+}
+
+/// δ achieved at privacy level ε under μ-GDP.
+pub fn delta_from_eps(eps: f64, mu: f64) -> f64 {
+    if mu <= 0.0 {
+        return 0.0;
+    }
+    let d = normal_cdf(-eps / mu + mu / 2.0) - eps.exp() * normal_cdf(-eps / mu - mu / 2.0);
+    d.clamp(0.0, 1.0)
+}
+
+/// Smallest ε with δ(ε) ≤ delta, by bisection (δ is decreasing in ε).
+pub fn eps_from_mu_delta(mu: f64, delta: f64) -> f64 {
+    assert!(delta > 0.0 && delta < 1.0);
+    if mu <= 0.0 {
+        return 0.0;
+    }
+    if delta_from_eps(0.0, mu) <= delta {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while delta_from_eps(hi, mu) > delta {
+        hi *= 2.0;
+        if hi > 1e6 {
+            return f64::INFINITY;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if delta_from_eps(mid, mu) > delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_scaling() {
+        // μ scales as √T and linearly in q
+        let m1 = compute_mu(0.01, 1.0, 100);
+        let m4 = compute_mu(0.01, 1.0, 400);
+        assert!((m4 / m1 - 2.0).abs() < 1e-12);
+        let mq = compute_mu(0.02, 1.0, 100);
+        assert!((mq / m1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_decreasing_in_eps() {
+        let mu = 1.0;
+        let mut prev = 1.0;
+        for e in [0.0, 0.5, 1.0, 2.0, 4.0] {
+            let d = delta_from_eps(e, mu);
+            assert!(d <= prev + 1e-15);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn gdp_known_point() {
+        // μ = 1, ε = 0: δ = Φ(1/2) − Φ(−1/2) = erf(1/(2√2))... compute:
+        let d = delta_from_eps(0.0, 1.0);
+        let want = normal_cdf(0.5) - normal_cdf(-0.5);
+        assert!((d - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eps_roundtrip() {
+        for &mu in &[0.3, 1.0, 2.5] {
+            for &delta in &[1e-5, 1e-3] {
+                let eps = eps_from_mu_delta(mu, delta);
+                let back = delta_from_eps(eps, mu);
+                assert!(back <= delta * (1.0 + 1e-6), "mu={mu}: {back} > {delta}");
+                // and slightly smaller ε would violate delta
+                if eps > 1e-9 {
+                    assert!(delta_from_eps(eps * 0.99, mu) > delta);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eps_monotone_in_mu() {
+        let mut prev = 0.0;
+        for &mu in &[0.1, 0.5, 1.0, 2.0, 4.0] {
+            let e = eps_from_mu_delta(mu, 1e-5);
+            assert!(e >= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn zero_steps_free() {
+        assert_eq!(compute_mu(0.01, 1.0, 0), 0.0);
+        assert_eq!(eps_from_mu_delta(0.0, 1e-5), 0.0);
+    }
+}

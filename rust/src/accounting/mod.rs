@@ -1,0 +1,16 @@
+//! Privacy accounting (paper §2, "Privacy accounting").
+//!
+//! * [`rdp`] — Rényi DP of the Sampled Gaussian Mechanism (default)
+//! * [`gdp`] — Gaussian-DP CLT accountant (alternative / ablation)
+//! * [`accountant`] — the `Accountant` trait + implementations
+//! * [`calibration`] — σ from a target (ε, δ)
+//! * [`special`] — erfc / log-erfc / log-space arithmetic substrate
+
+pub mod accountant;
+pub mod calibration;
+pub mod gdp;
+pub mod rdp;
+pub mod special;
+
+pub use accountant::{make_accountant, Accountant, GdpAccountant, RdpAccountant};
+pub use calibration::{get_noise_multiplier, CalibKind};

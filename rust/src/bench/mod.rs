@@ -1,0 +1,11 @@
+//! Benchmark harness shared by the `benches/` targets.
+//!
+//! Each paper table/figure has a bench binary (harness = false) that uses
+//! these helpers to run the workloads and print paper-shaped tables; see
+//! DESIGN.md §4 for the experiment index.
+
+pub mod harness;
+pub mod layers;
+
+pub use harness::{EpochTimer, TaskWorkload, Variant};
+pub use layers::LayerWorkload;

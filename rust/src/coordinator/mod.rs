@@ -1,0 +1,152 @@
+//! The user-facing facade — the paper's two-line `make_private` promise.
+//!
+//! ```no_run
+//! use opacus_rs::coordinator::Opacus;
+//! use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+//!
+//! let sys = Opacus::load("artifacts", "mnist").unwrap();
+//! let engine = PrivacyEngine::default();
+//! let mut trainer = engine
+//!     .make_private(sys, PrivacyParams::new(1.1, 1.0))
+//!     .unwrap();
+//! trainer.train_epochs(3).unwrap();
+//! println!("ε = {:.3}", trainer.epsilon(1e-5).unwrap());
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::data::{synth, Dataset};
+use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
+use crate::runtime::artifact::{ModelMeta, Registry};
+use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, TrainStep};
+use crate::trainer::trainer::{PrivateTrainer, TrainerSteps};
+
+/// A loaded training system: artifacts + model metadata + data.
+pub struct Opacus {
+    pub registry: Registry,
+    pub model: ModelMeta,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub init_params: Vec<f32>,
+}
+
+impl Opacus {
+    /// Load a task with default synthetic data (2048 train / 256 test).
+    pub fn load(artifacts_dir: impl AsRef<Path>, task: &str) -> Result<Opacus> {
+        Self::load_with_data(artifacts_dir, task, 2048, 256, 0)
+    }
+
+    /// Load with explicit dataset sizes and seed.
+    pub fn load_with_data(
+        artifacts_dir: impl AsRef<Path>,
+        task: &str,
+        n_train: usize,
+        n_test: usize,
+        seed: u64,
+    ) -> Result<Opacus> {
+        let registry = Registry::open(artifacts_dir)?;
+        let model = registry.model(task)?.clone();
+        let init_params = registry
+            .init_params(task)
+            .with_context(|| format!("loading init params for {task}"))?;
+        if init_params.len() != model.num_params {
+            bail!(
+                "init params length {} != model num_params {}",
+                init_params.len(),
+                model.num_params
+            );
+        }
+        // one corpus, split: train and test must share the class structure
+        let full = synth::for_task(
+            task,
+            n_train + n_test,
+            seed,
+            &model.input_shape,
+            model.vocab,
+        );
+        let (train, test) = full.split_tail(n_test)?;
+        Ok(Opacus {
+            registry,
+            model,
+            train,
+            test,
+            init_params,
+        })
+    }
+
+    /// Load the step set for the given privacy parameters.
+    fn steps_for(&self, pp: &PrivacyParams) -> Result<TrainerSteps> {
+        let task = &self.model.task;
+        let fused_name = format!("{task}_dp_b{}", pp.physical_batch);
+        let fused_dp = if self.registry.available(&fused_name) {
+            Some(TrainStep::load(&self.registry, &fused_name)?)
+        } else {
+            None
+        };
+        // accum/apply/eval are emitted at the canonical batch (64)
+        let accum_name = format!("{task}_accum_b64");
+        let accum = if self.registry.available(&accum_name) {
+            Some(AccumStep::load(&self.registry, &accum_name)?)
+        } else {
+            None
+        };
+        let apply_name = format!("{task}_apply_b64");
+        let apply = if self.registry.available(&apply_name) {
+            Some(ApplyStep::load(&self.registry, &apply_name)?)
+        } else {
+            None
+        };
+        let eval_name = format!("{task}_eval_b64");
+        let eval = if self.registry.available(&eval_name) {
+            Some(EvalStep::load(&self.registry, &eval_name)?)
+        } else {
+            None
+        };
+        Ok(TrainerSteps {
+            fused_dp,
+            accum,
+            apply,
+            eval,
+        })
+    }
+}
+
+impl PrivacyEngine {
+    /// Wrap a loaded system into its differentially private analogue:
+    /// the model becomes per-sample-gradient capable (it was AOT-compiled
+    /// that way), the optimizer clips + noises, the loader becomes a
+    /// Poisson sampler. One call — the paper's headline API.
+    pub fn make_private(self, sys: Opacus, pp: PrivacyParams) -> Result<PrivateTrainer> {
+        self.validate(&sys.model)?;
+        let steps = sys.steps_for(&pp)?;
+        PrivateTrainer::new(
+            &sys.model.task,
+            sys.init_params,
+            steps,
+            sys.train,
+            Some(sys.test),
+            self,
+            pp,
+        )
+    }
+
+    /// `make_private_with_epsilon`: calibrate σ for a target (ε, δ) over
+    /// `epochs` epochs, then wrap.
+    pub fn make_private_with_epsilon(
+        self,
+        sys: Opacus,
+        mut pp: PrivacyParams,
+        target_eps: f64,
+        delta: f64,
+        epochs: usize,
+    ) -> Result<PrivateTrainer> {
+        let n = sys.train.len();
+        let q = (pp.logical_batch as f64 / n as f64).min(1.0);
+        let steps_per_epoch = (1.0 / q).ceil() as u64;
+        let total_steps = steps_per_epoch * epochs as u64;
+        let sigma = self.calibrate_sigma(target_eps, delta, q, total_steps)?;
+        pp.noise_multiplier = sigma;
+        self.make_private(sys, pp)
+    }
+}

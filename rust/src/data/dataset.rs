@@ -1,0 +1,246 @@
+//! In-memory datasets with fixed per-sample shape and integer labels.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::HostTensor;
+
+/// Sample storage: dense f32 features or i32 token sequences.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dataset: N samples of identical shape + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Shape of one sample (no batch dim), e.g. [28, 28, 1] or [64].
+    pub sample_shape: Vec<usize>,
+    pub num_classes: usize,
+    data: SampleData,
+    labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn new_f32(
+        name: &str,
+        sample_shape: Vec<usize>,
+        num_classes: usize,
+        data: Vec<f32>,
+        labels: Vec<i32>,
+    ) -> Result<Dataset> {
+        let per = sample_shape.iter().product::<usize>();
+        if per == 0 || data.len() % per != 0 || data.len() / per != labels.len() {
+            bail!("dataset size mismatch");
+        }
+        Ok(Dataset {
+            name: name.to_string(),
+            sample_shape,
+            num_classes,
+            data: SampleData::F32(data),
+            labels,
+        })
+    }
+
+    pub fn new_i32(
+        name: &str,
+        sample_shape: Vec<usize>,
+        num_classes: usize,
+        data: Vec<i32>,
+        labels: Vec<i32>,
+    ) -> Result<Dataset> {
+        let per = sample_shape.iter().product::<usize>();
+        if per == 0 || data.len() % per != 0 || data.len() / per != labels.len() {
+            bail!("dataset size mismatch");
+        }
+        Ok(Dataset {
+            name: name.to_string(),
+            sample_shape,
+            num_classes,
+            data: SampleData::I32(data),
+            labels,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_elements(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    pub fn input_dtype(&self) -> &'static str {
+        match self.data {
+            SampleData::F32(_) => "f32",
+            SampleData::I32(_) => "i32",
+        }
+    }
+
+    /// Split off the last `n` samples as a held-out set.
+    pub fn split_tail(&self, n: usize) -> Result<(Dataset, Dataset)> {
+        if n >= self.len() {
+            bail!("split size {n} >= dataset size {}", self.len());
+        }
+        let cut = self.len() - n;
+        let per = self.sample_elements();
+        let (train, test) = match &self.data {
+            SampleData::F32(v) => {
+                let (a, b) = v.split_at(cut * per);
+                (SampleData::F32(a.to_vec()), SampleData::F32(b.to_vec()))
+            }
+            SampleData::I32(v) => {
+                let (a, b) = v.split_at(cut * per);
+                (SampleData::I32(a.to_vec()), SampleData::I32(b.to_vec()))
+            }
+        };
+        let mk = |suffix: &str, data: SampleData, labels: Vec<i32>| Dataset {
+            name: format!("{}_{suffix}", self.name),
+            sample_shape: self.sample_shape.clone(),
+            num_classes: self.num_classes,
+            data,
+            labels,
+        };
+        Ok((
+            mk("train", train, self.labels[..cut].to_vec()),
+            mk("test", test, self.labels[cut..].to_vec()),
+        ))
+    }
+
+    /// Assemble the physical batch for `indices`, padding to `phys` rows.
+    ///
+    /// Padding rows repeat sample 0 with mask = 0 (their gradient
+    /// contribution is provably zero — see dpsgd.py's masked loss).
+    pub fn gather(&self, indices: &[usize], phys: usize) -> Result<Batch> {
+        if indices.len() > phys {
+            bail!("{} indices exceed physical batch {phys}", indices.len());
+        }
+        let per = self.sample_elements();
+        let mut y = Vec::with_capacity(phys);
+        let mut mask = Vec::with_capacity(phys);
+        let mut shape = vec![phys];
+        shape.extend_from_slice(&self.sample_shape);
+
+        let x = match &self.data {
+            SampleData::F32(v) => {
+                let mut out = Vec::with_capacity(phys * per);
+                for &i in indices {
+                    out.extend_from_slice(&v[i * per..(i + 1) * per]);
+                }
+                for _ in indices.len()..phys {
+                    out.extend_from_slice(&v[..per]);
+                }
+                HostTensor::f32(shape, out)
+            }
+            SampleData::I32(v) => {
+                let mut out = Vec::with_capacity(phys * per);
+                for &i in indices {
+                    out.extend_from_slice(&v[i * per..(i + 1) * per]);
+                }
+                for _ in indices.len()..phys {
+                    out.extend_from_slice(&v[..per]);
+                }
+                HostTensor::i32(shape, out)
+            }
+        };
+        for &i in indices {
+            y.push(self.labels[i]);
+            mask.push(1.0);
+        }
+        for _ in indices.len()..phys {
+            y.push(self.labels[0]);
+            mask.push(0.0);
+        }
+        Ok(Batch {
+            x,
+            y,
+            mask,
+            logical_size: indices.len(),
+        })
+    }
+}
+
+/// A physical batch ready for a step executable.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: HostTensor,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Number of real (unmasked) samples.
+    pub logical_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new_f32(
+            "t",
+            vec![2],
+            2,
+            vec![0., 0., 1., 1., 2., 2., 3., 3.],
+            vec![0, 1, 0, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_checks_sizes() {
+        assert!(Dataset::new_f32("x", vec![3], 2, vec![0.0; 7], vec![0, 1]).is_err());
+        assert!(Dataset::new_i32("x", vec![2], 2, vec![0; 4], vec![0, 1]).is_ok());
+    }
+
+    #[test]
+    fn gather_exact() {
+        let d = tiny();
+        let b = d.gather(&[2, 0], 2).unwrap();
+        assert_eq!(b.x.as_f32().unwrap(), &[2., 2., 0., 0.]);
+        assert_eq!(b.y, vec![0, 0]);
+        assert_eq!(b.mask, vec![1.0, 1.0]);
+        assert_eq!(b.logical_size, 2);
+    }
+
+    #[test]
+    fn gather_pads_with_mask_zero() {
+        let d = tiny();
+        let b = d.gather(&[3], 4).unwrap();
+        assert_eq!(b.logical_size, 1);
+        assert_eq!(b.mask, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b.x.shape, vec![4, 2]);
+        // padding rows repeat sample 0
+        assert_eq!(&b.x.as_f32().unwrap()[2..4], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_rejects_overflow() {
+        assert!(tiny().gather(&[0, 1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn split_tail() {
+        let d = tiny();
+        let (tr, te) = d.split_tail(1).unwrap();
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 1);
+        assert_eq!(te.label(0), 1);
+        assert!(d.split_tail(4).is_err());
+    }
+
+    #[test]
+    fn i32_gather() {
+        let d = Dataset::new_i32("tok", vec![3], 2, (0..12).collect(), vec![0, 1, 0, 1])
+            .unwrap();
+        let b = d.gather(&[1], 2).unwrap();
+        assert_eq!(b.x.as_i32().unwrap(), &[3, 4, 5, 0, 1, 2]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Batch samplers: uniform (shuffle + chunk) and Poisson (the DP-SGD
+//! sampler, paper §2 "Poisson sampling").
+//!
+//! Poisson sampling includes each sample independently with probability
+//! q, so *logical* batch sizes vary step to step, while the compiled
+//! executables have a *fixed physical* batch. The loader therefore yields
+//! [`LogicalBatch`]es of indices; the trainer maps each onto one or more
+//! mask-padded physical batches — precisely the paper's "virtual steps"
+//! decoupling of physical and logical batch sizes.
+
+use crate::rng::{shuffle, Rng};
+
+/// One sampled logical batch (indices into the dataset).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogicalBatch {
+    pub indices: Vec<usize>,
+}
+
+impl LogicalBatch {
+    /// Split into physical chunks of at most `phys` indices.
+    /// An empty logical batch still yields one empty chunk (the step must
+    /// run: DP noise is added even when no sample was selected).
+    pub fn chunks(&self, phys: usize) -> Vec<&[usize]> {
+        if self.indices.is_empty() {
+            return vec![&[]];
+        }
+        self.indices.chunks(phys).collect()
+    }
+}
+
+/// Uniform loader: shuffles 0..n each epoch, emits fixed-size batches.
+/// The final partial batch is kept (mask-padded by the gatherer).
+pub struct UniformLoader {
+    n: usize,
+    batch: usize,
+    drop_last: bool,
+}
+
+impl UniformLoader {
+    pub fn new(n: usize, batch: usize, drop_last: bool) -> Self {
+        assert!(batch > 0 && n > 0);
+        UniformLoader {
+            n,
+            batch,
+            drop_last,
+        }
+    }
+
+    /// Sample one epoch of batches.
+    pub fn epoch(&self, rng: &mut dyn Rng) -> Vec<LogicalBatch> {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        shuffle(rng, &mut idx);
+        let mut out = Vec::new();
+        for chunk in idx.chunks(self.batch) {
+            if self.drop_last && chunk.len() < self.batch {
+                break;
+            }
+            out.push(LogicalBatch {
+                indices: chunk.to_vec(),
+            });
+        }
+        out
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        if self.drop_last {
+            self.n / self.batch
+        } else {
+            self.n.div_ceil(self.batch)
+        }
+    }
+
+    /// Effective sampling rate for accounting (batch / n).
+    pub fn sample_rate(&self) -> f64 {
+        self.batch as f64 / self.n as f64
+    }
+}
+
+/// Poisson loader: ⌈1/q⌉ steps per epoch; each step includes every sample
+/// independently with probability q (the sampled Gaussian mechanism's
+/// sampling assumption, required by the RDP analysis [Mironov et al.]).
+pub struct PoissonLoader {
+    n: usize,
+    q: f64,
+}
+
+impl PoissonLoader {
+    pub fn new(n: usize, sample_rate: f64) -> Self {
+        assert!(n > 0 && sample_rate > 0.0 && sample_rate <= 1.0);
+        PoissonLoader { n, q: sample_rate }
+    }
+
+    /// Convenience: rate chosen so the *expected* batch is `expected_batch`.
+    pub fn with_expected_batch(n: usize, expected_batch: usize) -> Self {
+        Self::new(n, (expected_batch as f64 / n as f64).min(1.0))
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.q
+    }
+
+    /// Expected logical batch size q·n.
+    pub fn expected_batch(&self) -> f64 {
+        self.q * self.n as f64
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        (1.0 / self.q).ceil() as usize
+    }
+
+    /// Sample one batch: Bernoulli(q) per index.
+    pub fn sample(&self, rng: &mut dyn Rng) -> LogicalBatch {
+        let mut indices = Vec::with_capacity((self.expected_batch() * 1.3) as usize + 4);
+        for i in 0..self.n {
+            if rng.bernoulli(self.q) {
+                indices.push(i);
+            }
+        }
+        LogicalBatch { indices }
+    }
+
+    /// One epoch = ⌈1/q⌉ independent samples.
+    pub fn epoch(&self, rng: &mut dyn Rng) -> Vec<LogicalBatch> {
+        (0..self.steps_per_epoch())
+            .map(|_| self.sample(rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::pcg::Xoshiro256pp;
+
+    #[test]
+    fn uniform_epoch_covers_everything_once() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let loader = UniformLoader::new(100, 16, false);
+        let batches = loader.epoch(&mut rng);
+        assert_eq!(batches.len(), 7);
+        let mut seen = vec![false; 100];
+        for b in &batches {
+            for &i in &b.indices {
+                assert!(!seen[i], "index {i} repeated");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(batches.last().unwrap().indices.len(), 4);
+    }
+
+    #[test]
+    fn uniform_drop_last() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let loader = UniformLoader::new(100, 16, true);
+        let batches = loader.epoch(&mut rng);
+        assert_eq!(batches.len(), 6);
+        assert!(batches.iter().all(|b| b.indices.len() == 16));
+        assert_eq!(loader.steps_per_epoch(), 6);
+    }
+
+    #[test]
+    fn uniform_shuffles() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let loader = UniformLoader::new(64, 64, false);
+        let b = loader.epoch(&mut rng);
+        assert_ne!(b[0].indices, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn poisson_mean_batch_size() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let loader = PoissonLoader::new(1000, 0.064);
+        let total: usize = (0..200).map(|_| loader.sample(&mut rng).indices.len()).sum();
+        let mean = total as f64 / 200.0;
+        assert!((mean - 64.0).abs() < 3.0, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_batch_sizes_vary() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let loader = PoissonLoader::with_expected_batch(1000, 64);
+        let sizes: Vec<usize> = (0..50).map(|_| loader.sample(&mut rng).indices.len()).collect();
+        let distinct: std::collections::BTreeSet<_> = sizes.iter().collect();
+        assert!(distinct.len() > 5, "Poisson sizes did not vary: {sizes:?}");
+    }
+
+    #[test]
+    fn poisson_indices_sorted_unique() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let b = PoissonLoader::new(500, 0.1).sample(&mut rng);
+        let mut sorted = b.indices.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, b.indices);
+    }
+
+    #[test]
+    fn poisson_membership_independent_rate() {
+        // each specific index appears with frequency ≈ q
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let loader = PoissonLoader::new(100, 0.2);
+        let mut count7 = 0;
+        for _ in 0..1000 {
+            if loader.sample(&mut rng).indices.contains(&7) {
+                count7 += 1;
+            }
+        }
+        let rate = count7 as f64 / 1000.0;
+        assert!((rate - 0.2).abs() < 0.04, "rate={rate}");
+    }
+
+    #[test]
+    fn logical_chunks() {
+        let lb = LogicalBatch {
+            indices: (0..10).collect(),
+        };
+        let chunks = lb.chunks(4);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[2], &[8, 9]);
+        let empty = LogicalBatch { indices: vec![] };
+        assert_eq!(empty.chunks(4).len(), 1); // noise-only step still runs
+    }
+
+    #[test]
+    fn steps_per_epoch_poisson() {
+        assert_eq!(PoissonLoader::new(1000, 0.01).steps_per_epoch(), 100);
+        assert_eq!(PoissonLoader::new(1000, 0.064).steps_per_epoch(), 16);
+    }
+}

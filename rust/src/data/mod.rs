@@ -1,0 +1,13 @@
+//! Datasets and data loading.
+//!
+//! * [`dataset`] — in-memory datasets (fixed sample shape, integer labels)
+//! * [`synth`] — deterministic synthetic MNIST/CIFAR/IMDb-shaped corpora
+//! * [`loader`] — uniform batching and Poisson sampling (the DP-SGD
+//!   sampler), with mask-padding onto fixed physical batch shapes
+
+pub mod dataset;
+pub mod loader;
+pub mod synth;
+
+pub use dataset::{Batch, Dataset, SampleData};
+pub use loader::{LogicalBatch, PoissonLoader, UniformLoader};

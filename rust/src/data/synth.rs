@@ -1,0 +1,205 @@
+//! Deterministic synthetic datasets shaped like the paper's benchmarks.
+//!
+//! The paper trains on MNIST, CIFAR-10 and IMDb. Runtime benchmarks
+//! depend only on tensor shapes, and the end-to-end learning driver needs
+//! a *learnable* signal — so each generator produces class-separable data
+//! (class-conditional templates + noise) with the exact shapes of the
+//! original datasets. All generators are deterministic in the seed
+//! (substitution documented in DESIGN.md §2).
+
+use crate::rng::{gaussian, pcg::Xoshiro256pp, Rng};
+
+use super::dataset::Dataset;
+
+/// MNIST-shaped: [28, 28, 1] f32, 10 classes.
+///
+/// Each class is a smooth random template (low-frequency blobs); samples
+/// are template + N(0, noise²). Linearly separable enough that a CNN
+/// learns it in a few hundred DP steps.
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    synth_image("synth_mnist", n, seed, 28, 28, 1, 10, 0.3)
+}
+
+/// CIFAR-shaped: [32, 32, 3] f32, 10 classes.
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    synth_image("synth_cifar", n, seed, 32, 32, 3, 10, 0.4)
+}
+
+fn synth_image(
+    name: &str,
+    n: usize,
+    seed: u64,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    noise: f32,
+) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let per = h * w * c;
+    // low-frequency class templates: sum of a few random 2-D cosines
+    let mut templates = vec![0f32; classes * per];
+    for k in 0..classes {
+        let waves: Vec<(f64, f64, f64)> = (0..4)
+            .map(|_| {
+                (
+                    rng.next_f64() * 3.0 + 0.5, // fx
+                    rng.next_f64() * 3.0 + 0.5, // fy
+                    rng.next_f64() * std::f64::consts::TAU,
+                )
+            })
+            .collect();
+        for yy in 0..h {
+            for xx in 0..w {
+                let mut v = 0.0;
+                for &(fx, fy, ph) in &waves {
+                    v += (fx * xx as f64 / w as f64 * std::f64::consts::TAU
+                        + fy * yy as f64 / h as f64 * std::f64::consts::TAU
+                        + ph)
+                        .cos();
+                }
+                for ch in 0..c {
+                    templates[k * per + (yy * w + xx) * c + ch] =
+                        (v / 4.0) as f32 * (1.0 + 0.15 * ch as f32);
+                }
+            }
+        }
+    }
+    let mut data = vec![0f32; n * per];
+    let mut labels = Vec::with_capacity(n);
+    let mut noise_buf = vec![0f32; per];
+    for i in 0..n {
+        let k = rng.gen_range(classes as u64) as usize;
+        labels.push(k as i32);
+        gaussian::fill_standard_normal(&mut rng, &mut noise_buf);
+        for j in 0..per {
+            data[i * per + j] = templates[k * per + j] + noise * noise_buf[j];
+        }
+    }
+    Dataset::new_f32(name, vec![h, w, c], classes, data, labels).expect("consistent")
+}
+
+/// IMDb-shaped: [seq] i32 tokens in [0, vocab), 2 classes.
+///
+/// Class-conditional unigram distributions: each class has its own set of
+/// "sentiment-bearing" tokens mixed into a shared background distribution,
+/// so mean-pooled embeddings (and LSTM states) can separate the classes.
+pub fn synth_imdb(n: usize, seed: u64, vocab: usize, seq: usize) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let signal_tokens = 64.min(vocab / 4).max(1);
+    // class k draws its signal tokens from a class-specific band
+    let band = |k: usize, r: &mut Xoshiro256pp| -> i32 {
+        let base = (k + 1) * vocab / 4;
+        (base + r.gen_range(signal_tokens as u64) as usize) as i32 % vocab as i32
+    };
+    let mut data = vec![0i32; n * seq];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = rng.gen_range(2) as usize;
+        labels.push(k as i32);
+        for t in 0..seq {
+            // 35% signal tokens, 65% common background
+            data[i * seq + t] = if rng.bernoulli(0.35) {
+                band(k, &mut rng)
+            } else {
+                rng.gen_range((vocab / 4) as u64) as i32
+            };
+        }
+    }
+    Dataset::new_i32("synth_imdb", vec![seq], 2, data, labels).expect("consistent")
+}
+
+/// Dataset matching a task's input signature from the manifest.
+pub fn for_task(
+    task: &str,
+    n: usize,
+    seed: u64,
+    input_shape: &[usize],
+    vocab: Option<usize>,
+) -> Dataset {
+    match task {
+        "mnist" => synth_mnist(n, seed),
+        "cifar" => synth_cifar(n, seed),
+        "embed" | "lstm" => synth_imdb(n, seed, vocab.unwrap_or(10_000), input_shape[0]),
+        other => panic!("unknown task {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shape_and_determinism() {
+        let a = synth_mnist(32, 7);
+        let b = synth_mnist(32, 7);
+        assert_eq!(a.len(), 32);
+        assert_eq!(a.sample_shape, vec![28, 28, 1]);
+        assert_eq!(a.num_classes, 10);
+        let ba = a.gather(&[0, 5], 2).unwrap();
+        let bb = b.gather(&[0, 5], 2).unwrap();
+        assert_eq!(ba.x, bb.x);
+        assert_eq!(ba.y, bb.y);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = synth_mnist(4, 1).gather(&[0], 1).unwrap();
+        let b = synth_mnist(4, 2).gather(&[0], 1).unwrap();
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn cifar_shape() {
+        let d = synth_cifar(8, 3);
+        assert_eq!(d.sample_shape, vec![32, 32, 3]);
+        assert_eq!(d.sample_elements(), 3072);
+    }
+
+    #[test]
+    fn imdb_tokens_in_range() {
+        let d = synth_imdb(64, 5, 1000, 32);
+        let b = d.gather(&(0..64).collect::<Vec<_>>(), 64).unwrap();
+        for &t in b.x.as_i32().unwrap() {
+            assert!((0..1000).contains(&t));
+        }
+        assert!(b.y.iter().all(|&y| y == 0 || y == 1));
+    }
+
+    #[test]
+    fn imdb_classes_distinguishable() {
+        // signal-token histograms of the two classes must differ strongly
+        let d = synth_imdb(400, 9, 1000, 32);
+        let idx: Vec<usize> = (0..400).collect();
+        let b = d.gather(&idx, 400).unwrap();
+        let toks = b.x.as_i32().unwrap();
+        let mut hist = [[0u32; 2]; 1000];
+        for (i, &y) in b.y.iter().enumerate() {
+            for t in 0..32 {
+                hist[toks[i * 32 + t] as usize][y as usize] += 1;
+            }
+        }
+        // tokens in class-1's band [500, 564) should be much likelier in class 1
+        let c0: u32 = (500..564).map(|t| hist[t][0]).sum();
+        let c1: u32 = (500..564).map(|t| hist[t][1]).sum();
+        assert!(c1 > 5 * c0.max(1), "c0={c0} c1={c1}");
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = synth_mnist(500, 11);
+        let mut seen = [false; 10];
+        for i in 0..500 {
+            seen[d.label(i) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn for_task_dispatch() {
+        assert_eq!(for_task("mnist", 4, 0, &[28, 28, 1], None).sample_shape,
+                   vec![28, 28, 1]);
+        assert_eq!(for_task("lstm", 4, 0, &[64], Some(10_000)).sample_shape,
+                   vec![64]);
+    }
+}

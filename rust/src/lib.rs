@@ -1,0 +1,48 @@
+//! # opacus-rs — differentially private training, the three-layer way
+//!
+//! A Rust + JAX + Pallas reproduction of *Opacus: User-Friendly
+//! Differential Privacy Library in PyTorch* (Yousefpour et al., 2021).
+//!
+//! The crate is the Layer-3 coordinator: it owns the training loop,
+//! privacy accounting, Poisson sampling, noise generation (optionally
+//! through a cryptographically safe ChaCha20 generator), schedulers and
+//! the benchmark harness. All model compute — per-sample gradients,
+//! clipping, noisy updates — was AOT-lowered from JAX/Pallas to HLO text
+//! at build time (`make artifacts`) and is executed through the PJRT CPU
+//! client (`runtime`). Python never runs on the training path.
+//!
+//! ## Quickstart (the paper's two-line promise)
+//!
+//! ```no_run
+//! use opacus_rs::coordinator::Opacus;
+//! use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+//!
+//! let sys = Opacus::load("artifacts", "mnist").unwrap();
+//! let engine = PrivacyEngine::default();
+//! let mut trainer = engine
+//!     .make_private(sys, PrivacyParams::new(1.1, 1.0))
+//!     .unwrap();
+//! trainer.train_epochs(3).unwrap();
+//! println!("spent ε = {:.3}", trainer.epsilon(1e-5).unwrap());
+//! ```
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables
+//! * [`rng`] — PCG64 and ChaCha20 (secure mode) generators + Gaussian
+//! * [`accounting`] — RDP/GDP accountants and noise calibration
+//! * [`privacy`] — `PrivacyEngine`, module validator, schedulers
+//! * [`data`] — synthetic datasets, uniform + Poisson loaders
+//! * [`runtime`] — PJRT client, artifact registry, typed step executables
+//! * [`trainer`] — DP optimizer (virtual steps), training loop, metrics
+//! * [`bench`] — the harness regenerating every paper table and figure
+//! * [`coordinator`] — the user-facing facade (`Opacus`)
+
+pub mod accounting;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod privacy;
+pub mod rng;
+pub mod runtime;
+pub mod trainer;
+pub mod util;

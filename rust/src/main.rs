@@ -1,0 +1,246 @@
+//! `opacus` — the command-line launcher for opacus-rs.
+//!
+//! Subcommands:
+//!   train      train a task with DP-SGD (σ given or calibrated from ε)
+//!   epsilon    query the accountant for a hypothetical training run
+//!   calibrate  find σ for a target (ε, δ)
+//!   validate   run the DP-compatibility validator on a task's model
+//!   inspect    list artifacts / model metadata
+//!   help       this text
+//!
+//! Examples:
+//!   opacus train --task mnist --epochs 5 --sigma 1.1 --clip 1.0
+//!   opacus train --task embed --eps 3.0 --delta 1e-5 --epochs 8 --secure
+//!   opacus epsilon --q 0.004 --sigma 1.1 --steps 2344 --compare
+//!   opacus calibrate --eps 3 --delta 1e-5 --q 0.01 --steps 5000
+
+use anyhow::{bail, Result};
+
+use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::validator::validate_model;
+use opacus_rs::privacy::{EngineConfig, NoiseScheduler, PrivacyEngine, PrivacyParams};
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::table::Table;
+
+const FLAGS: &[&str] = &["secure", "uniform", "compare", "help"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, FLAGS)?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("epsilon") => cmd_epsilon(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `opacus help`)"),
+    }
+}
+
+const HELP: &str = "\
+opacus-rs: differentially private training (Opacus reproduction)
+
+USAGE: opacus <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS
+  train      --task mnist|cifar|embed|lstm [--epochs N] [--sigma S | --eps E]
+             [--clip C] [--lr L] [--batch B] [--train N] [--delta D]
+             [--schedule constant|exp:G|step:N:G] [--secure] [--uniform]
+             [--accountant rdp|gdp] [--artifacts DIR] [--out metrics.json]
+  epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
+  calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
+  validate   --task T [--artifacts DIR]
+  inspect    [--task T] [--artifacts DIR]
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let task = args.get_or("task", "mnist").to_string();
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let epochs = args.get_usize("epochs", 5)?;
+    let n_train = args.get_usize("train", 2048)?;
+    let batch = args.get_usize("batch", 64)?;
+    let delta = args.get_f64("delta", 1e-5)?;
+    let lr = args.get_f64("lr", 0.25)?;
+    let clip = args.get_f64("clip", 1.0)?;
+
+    let sys = Opacus::load_with_data(&artifacts, &task, n_train, (n_train / 8).max(32), 0)?;
+    let engine = PrivacyEngine::new(EngineConfig {
+        accountant: args.get_or("accountant", "rdp").to_string(),
+        secure_mode: args.has_flag("secure"),
+        seed: args.get_u64("seed", 42)?,
+        deterministic: true,
+    });
+
+    let mut pp = PrivacyParams::new(args.get_f64("sigma", 1.1)?, clip)
+        .with_lr(lr)
+        .with_batches(batch, 64);
+    if args.has_flag("uniform") {
+        // uniform + logical==physical uses the fused artifact when present
+        pp.physical_batch = batch;
+        pp = pp.uniform_sampling();
+    }
+
+    let mut trainer = if let Some(eps) = args.get("eps") {
+        let eps: f64 = eps.parse()?;
+        println!("calibrating σ for (ε={eps}, δ={delta}) over {epochs} epochs…");
+        engine.make_private_with_epsilon(sys, pp, eps, delta, epochs)?
+    } else {
+        engine.make_private(sys, pp)?
+    };
+    if let Some(s) = args.get("schedule") {
+        trainer.noise_scheduler = NoiseScheduler::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --schedule '{s}'"))?;
+    }
+
+    println!(
+        "task={task} σ={:.3} C={clip} lr={lr} q={:.4} steps/epoch={} sampler={}",
+        trainer.current_sigma(),
+        trainer.sample_rate(),
+        trainer.steps_per_epoch(),
+        if args.has_flag("uniform") {
+            "uniform"
+        } else {
+            "poisson"
+        },
+    );
+    for epoch in 0..epochs {
+        let loss = trainer.train_epoch()?;
+        println!(
+            "epoch {epoch:>3}: loss = {loss:.4}  ε = {:.3}  σ(t) = {:.3}",
+            trainer.epsilon(delta)?,
+            trainer.current_sigma(),
+        );
+    }
+    let (eval_loss, acc) = trainer.evaluate()?;
+    println!(
+        "held-out loss = {eval_loss:.4}, accuracy = {:.1}%, spent ε = {:.3} @ δ = {delta}",
+        acc * 100.0,
+        trainer.epsilon(delta)?
+    );
+    if let Some(out) = args.get("out") {
+        trainer.metrics.save(std::path::Path::new(out))?;
+        println!("metrics -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_epsilon(args: &Args) -> Result<()> {
+    let q = args.get_f64("q", 0.01)?;
+    let sigma = args.get_f64("sigma", 1.1)?;
+    let steps = args.get_u64("steps", 1000)?;
+    let delta = args.get_f64("delta", 1e-5)?;
+    let mut rdp = RdpAccountant::new();
+    rdp.record(sigma, q, steps);
+    let (eps, order) = rdp.get_epsilon_and_order(delta);
+    println!("RDP: ε = {eps:.4} at δ = {delta} (optimal order α = {order})");
+    if args.has_flag("compare") {
+        let mut gdp = GdpAccountant::new();
+        gdp.record(sigma, q, steps);
+        println!(
+            "GDP: ε = {:.4} (μ = {:.4}) — CLT approximation, not a strict bound",
+            gdp.get_epsilon(delta),
+            gdp.total_mu()
+        );
+        let mut t = Table::new(
+            "trajectory",
+            Table::header_from(&["steps", "eps RDP", "eps GDP"]),
+        );
+        for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+            let s = ((steps as f64) * frac) as u64;
+            let mut a = RdpAccountant::new();
+            a.record(sigma, q, s);
+            let mut g = GdpAccountant::new();
+            g.record(sigma, q, s);
+            t.add_row(vec![
+                s.to_string(),
+                format!("{:.4}", a.get_epsilon(delta)),
+                format!("{:.4}", g.get_epsilon(delta)),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let eps = args.get_f64("eps", 3.0)?;
+    let delta = args.get_f64("delta", 1e-5)?;
+    let q = args.get_f64("q", 0.01)?;
+    let steps = args.get_u64("steps", 1000)?;
+    let kind = match args.get_or("accountant", "rdp") {
+        "gdp" => CalibKind::Gdp,
+        _ => CalibKind::Rdp,
+    };
+    let sigma = accounting::get_noise_multiplier(kind, eps, delta, q, steps)?;
+    println!("σ = {sigma:.4} achieves (ε ≤ {eps}, δ = {delta}) over {steps} steps at q = {q}");
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let task = args.require("task")?;
+    let reg = Registry::open(artifacts)?;
+    let model = reg.model(task)?;
+    let errs = validate_model(model);
+    println!("task {task}: layers {:?}", model.layer_kinds);
+    if errs.is_empty() {
+        println!("OK: model is compatible with DP-SGD");
+    } else {
+        for e in &errs {
+            println!("VIOLATION: {e}");
+        }
+        bail!("{} violation(s)", errs.len());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let reg = Registry::open(artifacts)?;
+    if let Some(task) = args.get("task") {
+        let m = reg.model(task)?;
+        println!("task          : {task}");
+        println!("num_params    : {}", m.num_params);
+        println!("input         : {:?} {}", m.input_shape, m.input_dtype);
+        println!("classes       : {}", m.num_classes);
+        println!("layers        : {:?}", m.layer_kinds);
+        println!("vocab         : {:?}", m.vocab);
+        let mut t = Table::new(
+            "artifacts",
+            Table::header_from(&["name", "variant", "batch", "inputs", "outputs"]),
+        );
+        let mut names = reg.artifact_names();
+        names.retain(|n| {
+            reg.meta(n)
+                .map(|m2| m2.task.as_deref() == Some(task))
+                .unwrap_or(false)
+        });
+        for n in names {
+            let a = reg.meta(&n)?;
+            t.add_row(vec![
+                n.clone(),
+                a.variant.clone(),
+                a.batch.to_string(),
+                a.inputs.len().to_string(),
+                a.outputs.len().to_string(),
+            ]);
+        }
+        t.print();
+    } else {
+        println!("platform : {}", opacus_rs::runtime::client::platform()?);
+        println!("models   : {:?}", {
+            let mut v: Vec<_> = reg.manifest.models.keys().cloned().collect();
+            v.sort();
+            v
+        });
+        println!("artifacts: {}", reg.artifact_names().len());
+        println!("goldens  : {}", reg.manifest.goldens.len());
+    }
+    Ok(())
+}

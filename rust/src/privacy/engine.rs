@@ -1,0 +1,289 @@
+//! `PrivacyEngine` — the paper's main entry point (§2).
+//!
+//! Responsibilities, matching Opacus one-for-one:
+//! * wrap a training system into its private analogue (`make_private`,
+//!   implemented in [`crate::coordinator`] over this engine);
+//! * keep the privacy ledger (an [`Accountant`]) and answer
+//!   `get_epsilon(δ)` at any point during training;
+//! * calibrate σ for a target (ε, δ) (`make_private_with_epsilon`);
+//! * generate DP noise — through ChaCha20 when `secure_mode` is on;
+//! * validate the model before training (Appendix C).
+
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+
+use crate::accounting::{
+    self, accountant::Accountant, calibration, CalibKind,
+};
+use crate::rng::{gaussian, make_rng, Rng, RngKind};
+use crate::runtime::artifact::ModelMeta;
+
+use super::validator;
+
+/// Engine-level configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// "rdp" (default) or "gdp".
+    pub accountant: String,
+    /// Use the ChaCha20 CSPRNG for noise + batch composition.
+    pub secure_mode: bool,
+    /// Seed for deterministic runs (ignored by secure mode unless
+    /// `deterministic` is also set — tests only).
+    pub seed: u64,
+    pub deterministic: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            accountant: "rdp".into(),
+            secure_mode: false,
+            seed: 0,
+            deterministic: true,
+        }
+    }
+}
+
+/// Per-run privacy hyperparameters handed to `make_private`.
+#[derive(Debug, Clone)]
+pub struct PrivacyParams {
+    pub noise_multiplier: f64,
+    pub max_grad_norm: f64,
+    pub lr: f64,
+    /// Expected logical batch (DP-SGD lot size).
+    pub logical_batch: usize,
+    /// Physical batch the executables were compiled for.
+    pub physical_batch: usize,
+    /// Poisson sampling (true, default — required by the RDP analysis)
+    /// or uniform shuffling (false; accounting still uses q = B/N, the
+    /// common approximation — a documented deviation Opacus also allows).
+    pub poisson: bool,
+}
+
+impl PrivacyParams {
+    pub fn new(noise_multiplier: f64, max_grad_norm: f64) -> Self {
+        PrivacyParams {
+            noise_multiplier,
+            max_grad_norm,
+            lr: 0.05,
+            logical_batch: 64,
+            physical_batch: 64,
+            poisson: true,
+        }
+    }
+
+    pub fn with_lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_batches(mut self, logical: usize, physical: usize) -> Self {
+        self.logical_batch = logical;
+        self.physical_batch = physical;
+        self
+    }
+
+    pub fn uniform_sampling(mut self) -> Self {
+        self.poisson = false;
+        self
+    }
+}
+
+/// The privacy engine: ledger + noise source + validator.
+pub struct PrivacyEngine {
+    pub config: EngineConfig,
+    accountant: RefCell<Box<dyn Accountant>>,
+    rng: RefCell<Box<dyn Rng>>,
+}
+
+impl PrivacyEngine {
+    pub fn new(config: EngineConfig) -> Self {
+        let accountant = accounting::make_accountant(&config.accountant)
+            .unwrap_or_else(|| panic!("unknown accountant '{}'", config.accountant));
+        let kind = if config.secure_mode {
+            RngKind::Secure
+        } else {
+            RngKind::Standard
+        };
+        let rng = make_rng(kind, config.seed, config.deterministic);
+        PrivacyEngine {
+            config,
+            accountant: RefCell::new(accountant),
+            rng: RefCell::new(rng),
+        }
+    }
+
+    /// Validate the model (Appendix C). Errors if any layer is
+    /// DP-incompatible.
+    pub fn validate(&self, model: &ModelMeta) -> Result<()> {
+        let errs = validator::validate_model(model);
+        if !errs.is_empty() {
+            let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+            bail!("model failed DP validation:\n  {}", msgs.join("\n  "));
+        }
+        Ok(())
+    }
+
+    /// Fill `out` with standard normal noise from the engine's generator.
+    pub fn sample_noise(&self, out: &mut [f32]) {
+        gaussian::fill_standard_normal(self.rng.borrow_mut().as_mut(), out);
+    }
+
+    /// Borrow the generator for batch composition (Poisson sampling uses
+    /// the secure generator too when secure_mode is on — as in the paper).
+    pub fn with_rng<T>(&self, f: impl FnOnce(&mut dyn Rng) -> T) -> T {
+        f(self.rng.borrow_mut().as_mut())
+    }
+
+    /// Record `steps` optimizer steps into the ledger.
+    pub fn record_steps(&self, sigma: f64, sample_rate: f64, steps: u64) {
+        self.accountant.borrow_mut().record(sigma, sample_rate, steps);
+    }
+
+    /// Privacy spent so far.
+    pub fn get_epsilon(&self, delta: f64) -> f64 {
+        self.accountant.borrow().get_epsilon(delta)
+    }
+
+    pub fn steps_recorded(&self) -> u64 {
+        self.accountant.borrow().steps()
+    }
+
+    pub fn accountant_mechanism(&self) -> &'static str {
+        self.accountant.borrow().mechanism()
+    }
+
+    /// σ for a target (ε, δ) over `steps` steps at rate `q`
+    /// (`make_private_with_epsilon`'s core).
+    pub fn calibrate_sigma(
+        &self,
+        target_eps: f64,
+        delta: f64,
+        sample_rate: f64,
+        steps: u64,
+    ) -> Result<f64> {
+        let kind = match self.accountant_mechanism() {
+            "gdp" => CalibKind::Gdp,
+            _ => CalibKind::Rdp,
+        };
+        calibration::get_noise_multiplier(kind, target_eps, delta, sample_rate, steps)
+    }
+}
+
+impl Default for PrivacyEngine {
+    fn default() -> Self {
+        Self::new(EngineConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(kinds: &[&str]) -> ModelMeta {
+        ModelMeta {
+            task: "t".into(),
+            num_params: 10,
+            input_shape: vec![2],
+            input_dtype: "f32".into(),
+            num_classes: 2,
+            layer_kinds: kinds.iter().map(|s| s.to_string()).collect(),
+            vocab: None,
+            init_file: String::new(),
+        }
+    }
+
+    #[test]
+    fn fresh_engine_spends_nothing() {
+        let e = PrivacyEngine::default();
+        assert_eq!(e.get_epsilon(1e-5), 0.0);
+        assert_eq!(e.steps_recorded(), 0);
+    }
+
+    #[test]
+    fn budget_grows_with_steps() {
+        let e = PrivacyEngine::default();
+        e.record_steps(1.1, 0.01, 100);
+        let e1 = e.get_epsilon(1e-5);
+        e.record_steps(1.1, 0.01, 900);
+        let e2 = e.get_epsilon(1e-5);
+        assert!(e2 > e1 && e1 > 0.0);
+        assert_eq!(e.steps_recorded(), 1000);
+    }
+
+    #[test]
+    fn validation_gates_bad_models() {
+        let e = PrivacyEngine::default();
+        assert!(e.validate(&model(&["conv2d", "linear"])).is_ok());
+        let err = e.validate(&model(&["batchnorm"])).unwrap_err();
+        assert!(err.to_string().contains("batchnorm"));
+    }
+
+    #[test]
+    fn noise_is_deterministic_when_configured() {
+        let mk = || {
+            PrivacyEngine::new(EngineConfig {
+                seed: 42,
+                deterministic: true,
+                ..Default::default()
+            })
+        };
+        let (a, b) = (mk(), mk());
+        let mut va = vec![0f32; 32];
+        let mut vb = vec![0f32; 32];
+        a.sample_noise(&mut va);
+        b.sample_noise(&mut vb);
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn secure_mode_uses_chacha() {
+        let std_engine = PrivacyEngine::new(EngineConfig {
+            seed: 1,
+            secure_mode: false,
+            deterministic: true,
+            ..Default::default()
+        });
+        let sec_engine = PrivacyEngine::new(EngineConfig {
+            seed: 1,
+            secure_mode: true,
+            deterministic: true,
+            ..Default::default()
+        });
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        std_engine.sample_noise(&mut a);
+        sec_engine.sample_noise(&mut b);
+        assert_ne!(a, b); // different generators, same seed
+    }
+
+    #[test]
+    fn gdp_accountant_selectable() {
+        let e = PrivacyEngine::new(EngineConfig {
+            accountant: "gdp".into(),
+            ..Default::default()
+        });
+        assert_eq!(e.accountant_mechanism(), "gdp");
+        e.record_steps(1.0, 0.01, 100);
+        assert!(e.get_epsilon(1e-5) > 0.0);
+    }
+
+    #[test]
+    fn calibration_through_engine() {
+        let e = PrivacyEngine::default();
+        let sigma = e.calibrate_sigma(3.0, 1e-5, 0.01, 1000).unwrap();
+        assert!(sigma > 0.3 && sigma < 10.0, "sigma={sigma}");
+    }
+
+    #[test]
+    fn privacy_params_builder() {
+        let p = PrivacyParams::new(1.1, 1.0)
+            .with_lr(0.1)
+            .with_batches(256, 64)
+            .uniform_sampling();
+        assert_eq!(p.logical_batch, 256);
+        assert_eq!(p.physical_batch, 64);
+        assert!(!p.poisson);
+        assert_eq!(p.lr, 0.1);
+    }
+}

@@ -1,0 +1,14 @@
+//! The privacy layer: `PrivacyEngine`, model validation, schedulers.
+//!
+//! * [`engine`] — budget tracking, noise generation (secure mode),
+//!   calibration — the paper's `PrivacyEngine`
+//! * [`validator`] — DP-compatibility checks (paper Appendix C)
+//! * [`scheduler`] — noise-multiplier and batch-size schedules
+
+pub mod engine;
+pub mod scheduler;
+pub mod validator;
+
+pub use engine::{EngineConfig, PrivacyEngine, PrivacyParams};
+pub use scheduler::{BatchScheduler, NoiseScheduler};
+pub use validator::{validate_model, ValidationError};

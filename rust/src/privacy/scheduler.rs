@@ -1,0 +1,149 @@
+//! Noise-multiplier and batch-size schedulers (paper §2, "Noise scheduler
+//! and variable batch size").
+//!
+//! Like learning-rate schedulers: the engine evaluates the schedule each
+//! epoch and feeds the resulting σ (a runtime scalar input of the AOT
+//! step graph — no recompilation) to the optimizer, while the accountant
+//! records the *actual* σ used for each step, so heterogeneous schedules
+//! compose correctly in the privacy ledger.
+
+/// Noise-multiplier schedule: maps epoch -> multiplicative factor on the
+/// base σ.
+#[derive(Clone)]
+pub enum NoiseScheduler {
+    /// σ(t) = σ0.
+    Constant,
+    /// σ(t) = σ0 · γ^t (γ > 1 grows noise, γ < 1 anneals it).
+    Exponential { gamma: f64 },
+    /// σ(t) = σ0 · γ^⌊t / step_size⌋.
+    Step { step_size: usize, gamma: f64 },
+    /// Arbitrary user function of the epoch (the paper's "custom function").
+    Lambda(fn(usize) -> f64),
+}
+
+impl NoiseScheduler {
+    /// Factor to multiply the base noise multiplier by at `epoch` (0-based).
+    pub fn factor(&self, epoch: usize) -> f64 {
+        match self {
+            NoiseScheduler::Constant => 1.0,
+            NoiseScheduler::Exponential { gamma } => gamma.powi(epoch as i32),
+            NoiseScheduler::Step { step_size, gamma } => {
+                gamma.powi((epoch / step_size.max(&1).to_owned()) as i32)
+            }
+            NoiseScheduler::Lambda(f) => f(epoch),
+        }
+    }
+
+    pub fn sigma_at(&self, base_sigma: f64, epoch: usize) -> f64 {
+        base_sigma * self.factor(epoch)
+    }
+
+    /// Parse from CLI syntax: "constant", "exp:0.99", "step:10:0.9".
+    pub fn parse(s: &str) -> Option<NoiseScheduler> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["constant"] => Some(NoiseScheduler::Constant),
+            ["exp", g] => g.parse().ok().map(|gamma| NoiseScheduler::Exponential { gamma }),
+            ["step", n, g] => {
+                let step_size = n.parse().ok()?;
+                let gamma = g.parse().ok()?;
+                Some(NoiseScheduler::Step { step_size, gamma })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Batch-size schedule (the "variable batch size" feature): logical batch
+/// per epoch. The physical batch stays fixed; virtual steps absorb the
+/// difference.
+#[derive(Clone)]
+pub enum BatchScheduler {
+    Constant,
+    /// Multiply the logical batch by `gamma` every `step_size` epochs
+    /// (rounded, min 1).
+    Step { step_size: usize, gamma: f64 },
+}
+
+impl BatchScheduler {
+    pub fn batch_at(&self, base: usize, epoch: usize) -> usize {
+        match self {
+            BatchScheduler::Constant => base,
+            BatchScheduler::Step { step_size, gamma } => {
+                let k = (epoch / step_size.max(&1).to_owned()) as i32;
+                ((base as f64 * gamma.powi(k)).round() as usize).max(1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_identity() {
+        let s = NoiseScheduler::Constant;
+        for e in 0..5 {
+            assert_eq!(s.sigma_at(1.1, e), 1.1);
+        }
+    }
+
+    #[test]
+    fn exponential_decays() {
+        let s = NoiseScheduler::Exponential { gamma: 0.5 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(1), 0.5);
+        assert_eq!(s.factor(3), 0.125);
+    }
+
+    #[test]
+    fn step_holds_then_drops() {
+        let s = NoiseScheduler::Step {
+            step_size: 2,
+            gamma: 0.1,
+        };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(1), 1.0);
+        assert!((s.factor(2) - 0.1).abs() < 1e-12);
+        assert!((s.factor(5) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_custom() {
+        let s = NoiseScheduler::Lambda(|e| 1.0 + e as f64);
+        assert_eq!(s.sigma_at(2.0, 3), 8.0);
+    }
+
+    #[test]
+    fn parse_syntax() {
+        assert!(matches!(
+            NoiseScheduler::parse("constant"),
+            Some(NoiseScheduler::Constant)
+        ));
+        match NoiseScheduler::parse("exp:0.95") {
+            Some(NoiseScheduler::Exponential { gamma }) => assert_eq!(gamma, 0.95),
+            _ => panic!(),
+        }
+        match NoiseScheduler::parse("step:10:0.9") {
+            Some(NoiseScheduler::Step { step_size, gamma }) => {
+                assert_eq!(step_size, 10);
+                assert_eq!(gamma, 0.9);
+            }
+            _ => panic!(),
+        }
+        assert!(NoiseScheduler::parse("bogus:1").is_none());
+    }
+
+    #[test]
+    fn batch_schedule_grows() {
+        let s = BatchScheduler::Step {
+            step_size: 1,
+            gamma: 2.0,
+        };
+        assert_eq!(s.batch_at(64, 0), 64);
+        assert_eq!(s.batch_at(64, 1), 128);
+        assert_eq!(s.batch_at(64, 3), 512);
+        assert_eq!(BatchScheduler::Constant.batch_at(64, 9), 64);
+    }
+}

@@ -1,0 +1,169 @@
+//! Model validation — the paper's Appendix C ("Detection of DP
+//! Violations").
+//!
+//! Before training, Opacus validates that every module is compatible with
+//! per-sample gradient computation: layers that mix information across
+//! batch rows (BatchNorm) or track extra statistics outside the DP
+//! guarantee (`track_running_stats`) are rejected. Our models carry a
+//! `layer_kinds` list in the artifact manifest; the same rules apply.
+
+use std::fmt;
+
+use crate::runtime::artifact::ModelMeta;
+
+/// Why a model was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationError {
+    pub layer_index: usize,
+    pub layer_kind: String,
+    pub reason: String,
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "layer #{} ({}): {}",
+            self.layer_index, self.layer_kind, self.reason
+        )
+    }
+}
+
+/// Layer kinds with per-sample gradient support (GradSampleModule table).
+pub const SUPPORTED: &[&str] = &[
+    "linear",
+    "conv2d",
+    "embedding",
+    "layernorm",
+    "groupnorm",
+    "instancenorm",
+    "mha",
+    "rnn",
+    "gru",
+    "lstm",
+];
+
+/// Layer kinds that are fundamentally DP-incompatible.
+pub const FORBIDDEN: &[(&str, &str)] = &[
+    (
+        "batchnorm",
+        "shares statistics across samples of a batch; per-sample gradients \
+         are undefined (use GroupNorm or LayerNorm instead)",
+    ),
+    (
+        "instancenorm_tracked",
+        "track_running_stats retains statistics not covered by the DP \
+         guarantee",
+    ),
+    (
+        "syncbatchnorm",
+        "shares statistics across samples and devices",
+    ),
+];
+
+/// Validate a model's layer inventory. Returns all violations (not just
+/// the first), mirroring Opacus's ModuleValidator.validate(strict=False).
+pub fn validate_model(meta: &ModelMeta) -> Vec<ValidationError> {
+    let mut errors = Vec::new();
+    for (i, kind) in meta.layer_kinds.iter().enumerate() {
+        if let Some((_, reason)) = FORBIDDEN.iter().find(|(k, _)| k == kind) {
+            errors.push(ValidationError {
+                layer_index: i,
+                layer_kind: kind.clone(),
+                reason: reason.to_string(),
+            });
+        } else if !SUPPORTED.contains(&kind.as_str()) {
+            errors.push(ValidationError {
+                layer_index: i,
+                layer_kind: kind.clone(),
+                reason: "no per-sample gradient rule registered for this kind \
+                         (register a custom kind to allow it)"
+                    .to_string(),
+            });
+        }
+    }
+    errors
+}
+
+/// Validate with a user-extended allowlist (the paper's "custom layers"
+/// registration: users provide a per-sample gradient method and register
+/// the kind).
+pub fn validate_model_with_custom(meta: &ModelMeta, custom: &[&str]) -> Vec<ValidationError> {
+    let mut errors = validate_model(meta);
+    errors.retain(|e| !custom.contains(&e.layer_kind.as_str())
+        || FORBIDDEN.iter().any(|(k, _)| *k == e.layer_kind));
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(kinds: &[&str]) -> ModelMeta {
+        ModelMeta {
+            task: "test".into(),
+            num_params: 1,
+            input_shape: vec![1],
+            input_dtype: "f32".into(),
+            num_classes: 2,
+            layer_kinds: kinds.iter().map(|s| s.to_string()).collect(),
+            vocab: None,
+            init_file: String::new(),
+        }
+    }
+
+    #[test]
+    fn accepts_supported_models() {
+        assert!(validate_model(&meta(&["conv2d", "linear", "lstm"])).is_empty());
+        assert!(validate_model(&meta(&["embedding", "mha", "layernorm"])).is_empty());
+    }
+
+    #[test]
+    fn rejects_batchnorm_with_reason() {
+        let errs = validate_model(&meta(&["conv2d", "batchnorm", "linear"]));
+        assert_eq!(errs.len(), 1);
+        assert_eq!(errs[0].layer_index, 1);
+        assert!(errs[0].reason.contains("across samples"));
+        assert!(errs[0].to_string().contains("batchnorm"));
+    }
+
+    #[test]
+    fn rejects_tracked_instancenorm_but_allows_plain() {
+        assert!(validate_model(&meta(&["instancenorm"])).is_empty());
+        assert_eq!(validate_model(&meta(&["instancenorm_tracked"])).len(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let errs = validate_model(&meta(&["made_up_layer"]));
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].reason.contains("custom"));
+    }
+
+    #[test]
+    fn reports_all_violations() {
+        let errs = validate_model(&meta(&["batchnorm", "weird", "syncbatchnorm"]));
+        assert_eq!(errs.len(), 3);
+    }
+
+    #[test]
+    fn custom_registration_allows_user_layers() {
+        let m = meta(&["made_up_layer", "linear"]);
+        assert_eq!(validate_model(&m).len(), 1);
+        assert!(validate_model_with_custom(&m, &["made_up_layer"]).is_empty());
+        // but custom registration can NOT whitelist a forbidden layer
+        let bn = meta(&["batchnorm"]);
+        assert_eq!(validate_model_with_custom(&bn, &["batchnorm"]).len(), 1);
+    }
+
+    #[test]
+    fn real_manifest_models_validate() {
+        // the four paper tasks, as emitted by aot.py
+        for kinds in [
+            vec!["conv2d", "conv2d", "linear", "linear"],
+            vec!["embedding", "lstm", "linear"],
+        ] {
+            assert!(validate_model(&meta(&kinds)).is_empty());
+        }
+    }
+}

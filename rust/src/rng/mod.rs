@@ -1,0 +1,143 @@
+//! Random number generation for DP-SGD.
+//!
+//! Two generators implement [`Rng`]:
+//! * [`pcg::Xoshiro256pp`] — fast statistical PRNG (default mode);
+//! * [`chacha::ChaCha20Rng`] — cryptographically safe generator, selected
+//!   by the engine's `secure_mode` (the paper's CSPRNG feature). It is
+//!   slower but suitable for security-critical noise generation and batch
+//!   composition.
+//!
+//! [`gaussian`] layers Box–Muller standard-normal sampling over any `Rng`.
+
+pub mod chacha;
+pub mod gaussian;
+pub mod pcg;
+
+/// A 64-bit random generator. All randomness in the coordinator flows
+/// through this trait so secure mode is a one-line swap.
+pub trait Rng: Send {
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Uses rejection sampling to stay unbiased.
+    fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Bernoulli draw with probability `p`.
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+/// Fisher–Yates shuffle (free function so `Rng` stays dyn-compatible).
+pub fn shuffle<T>(rng: &mut dyn Rng, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.gen_range(i as u64 + 1) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// Which generator backs the engine (the `secure_mode` switch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngKind {
+    /// xoshiro256++ — fast, not cryptographically safe.
+    Standard,
+    /// ChaCha20 — cryptographically safe (paper's `secure_mode=True`).
+    Secure,
+}
+
+/// Construct a generator of the given kind from a 64-bit seed.
+/// In secure mode the seed is ignored in favour of OS entropy unless
+/// `deterministic` is set (tests / reproducibility).
+pub fn make_rng(kind: RngKind, seed: u64, deterministic: bool) -> Box<dyn Rng> {
+    match kind {
+        RngKind::Standard => Box::new(pcg::Xoshiro256pp::seed_from_u64(seed)),
+        RngKind::Secure => {
+            if deterministic {
+                Box::new(chacha::ChaCha20Rng::seed_from_u64(seed))
+            } else {
+                Box::new(chacha::ChaCha20Rng::from_os_entropy())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = pcg::Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..1000 {
+            assert!(r.gen_range(10) < 10);
+        }
+        assert_eq!(r.gen_range(1), 0);
+    }
+
+    #[test]
+    fn gen_range_covers_all_values() {
+        let mut r = pcg::Xoshiro256pp::seed_from_u64(8);
+        let mut seen = [false; 6];
+        for _ in 0..500 {
+            seen[r.gen_range(6) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = chacha::ChaCha20Rng::seed_from_u64(3);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = pcg::Xoshiro256pp::seed_from_u64(9);
+        let hits = (0..20_000).filter(|_| r.bernoulli(0.25)).count();
+        let rate = hits as f64 / 20_000.0;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = pcg::Xoshiro256pp::seed_from_u64(10);
+        let mut v: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn make_rng_deterministic_secure() {
+        let mut a = make_rng(RngKind::Secure, 42, true);
+        let mut b = make_rng(RngKind::Secure, 42, true);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn make_rng_kinds_differ() {
+        let mut a = make_rng(RngKind::Standard, 42, true);
+        let mut b = make_rng(RngKind::Secure, 42, true);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

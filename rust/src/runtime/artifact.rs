@@ -1,0 +1,368 @@
+//! Artifact registry: `manifest.json` parsing, HLO loading, compile cache.
+//!
+//! `make artifacts` (Python, build time) produces `artifacts/` with one
+//! HLO-text file per step graph plus a manifest describing every input/
+//! output signature. This module is the only bridge between that contract
+//! and the typed Rust API: everything downstream asks the [`Registry`]
+//! for a compiled executable by name.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::npy::NpyArray;
+
+/// dtype/shape of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4
+    }
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string(),
+            dtype: j
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec missing dtype"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+        })
+    }
+}
+
+/// One artifact (an AOT-compiled step graph).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,    // "train" | "layer"
+    pub variant: String, // dp | nodp | jaxstyle | microbatch | accum | apply | eval | naive
+    pub task: Option<String>,
+    pub layer: Option<String>,
+    pub batch: usize,
+    pub num_params: usize,
+    pub sample_input_bytes: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model-level metadata (per task).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub task: String,
+    pub num_params: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub num_classes: usize,
+    pub layer_kinds: Vec<String>,
+    pub vocab: Option<usize>,
+    pub init_file: String,
+}
+
+/// Golden test-vector description.
+#[derive(Debug, Clone)]
+pub struct GoldenMeta {
+    pub task: String,
+    pub step: String,
+    pub batch: usize,
+    pub scalars: HashMap<String, f64>,
+    pub files: HashMap<String, String>,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub models: HashMap<String, ModelMeta>,
+    pub goldens: Vec<GoldenMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                kind: a.get("kind").as_str().unwrap_or_default().to_string(),
+                variant: a.get("variant").as_str().unwrap_or_default().to_string(),
+                task: a.get("task").as_str().map(|s| s.to_string()),
+                layer: a.get("layer").as_str().map(|s| s.to_string()),
+                batch: a.get("batch").as_usize().unwrap_or(0),
+                num_params: a.get("num_params").as_usize().unwrap_or(0),
+                sample_input_bytes: a.get("sample_input_bytes").as_usize().unwrap_or(0),
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(name, meta);
+        }
+
+        let mut models = HashMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (task, m) in obj {
+                models.insert(
+                    task.clone(),
+                    ModelMeta {
+                        task: task.clone(),
+                        num_params: m.get("num_params").as_usize().unwrap_or(0),
+                        input_shape: m
+                            .get("input_shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        input_dtype: m
+                            .get("input_dtype")
+                            .as_str()
+                            .unwrap_or("f32")
+                            .to_string(),
+                        num_classes: m.get("num_classes").as_usize().unwrap_or(0),
+                        layer_kinds: m
+                            .get("layer_kinds")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                            .collect(),
+                        vocab: m.get("vocab").as_usize().filter(|_| !m.get("vocab").is_null()),
+                        init_file: m.get("init_file").as_str().unwrap_or_default().to_string(),
+                    },
+                );
+            }
+        }
+
+        let mut goldens = Vec::new();
+        for g in j.get("goldens").as_arr().unwrap_or(&[]) {
+            let mut scalars = HashMap::new();
+            if let Some(obj) = g.get("scalars").as_obj() {
+                for (k, v) in obj {
+                    scalars.insert(k.clone(), v.as_f64().unwrap_or(0.0));
+                }
+            }
+            let mut files = HashMap::new();
+            if let Some(obj) = g.get("files").as_obj() {
+                for (k, v) in obj {
+                    files.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+                }
+            }
+            goldens.push(GoldenMeta {
+                task: g.get("task").as_str().unwrap_or_default().to_string(),
+                step: g.get("step").as_str().unwrap_or_default().to_string(),
+                batch: g.get("batch").as_usize().unwrap_or(0),
+                scalars,
+                files,
+                rtol: g.get("rtol").as_f64().unwrap_or(1e-4),
+                atol: g.get("atol").as_f64().unwrap_or(1e-5),
+            });
+        }
+
+        Ok(Manifest {
+            artifacts,
+            models,
+            goldens,
+        })
+    }
+}
+
+/// Timing of one compile (the Fig. 4 "JIT overhead" analogue).
+#[derive(Debug, Clone, Copy)]
+pub struct CompileStats {
+    pub seconds: f64,
+}
+
+/// Registry: artifacts directory + manifest + compile cache.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Registry {
+    /// Open an artifacts directory produced by `make artifacts`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        Ok(Registry {
+            dir,
+            manifest: Manifest::parse(&text)?,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn model(&self, task: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .get(task)
+            .ok_or_else(|| anyhow!("unknown task '{task}'"))
+    }
+
+    /// Load the task's initial flat parameter vector.
+    pub fn init_params(&self, task: &str) -> Result<Vec<f32>> {
+        let meta = self.model(task)?;
+        let arr = NpyArray::read(&self.dir.join(&meta.init_file))?;
+        Ok(arr.as_f32()?.to_vec())
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    ///
+    /// The first call pays the PJRT compile cost — the moral equivalent of
+    /// the first-epoch JIT overhead in the paper's Fig. 4; `compile_log`
+    /// records it so the fig4 bench can report compile vs epoch time.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::client::global()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((name.to_string(), secs));
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// (name, seconds) for every compile performed so far.
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+
+    /// Names of all artifacts, sorted (for `opacus inspect`).
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// True when the artifact exists in the manifest AND on disk.
+    pub fn available(&self, name: &str) -> bool {
+        self.manifest
+            .artifacts
+            .get(name)
+            .map(|m| self.dir.join(&m.file).exists())
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_MANIFEST: &str = r#"{
+      "version": 1,
+      "models": {
+        "mnist": {"num_params": 26010, "input_shape": [28, 28, 1],
+                  "input_dtype": "f32", "num_classes": 10,
+                  "layer_kinds": ["conv2d", "linear"], "vocab": null,
+                  "init_file": "mnist_init.npy"}
+      },
+      "artifacts": [
+        {"name": "mnist_dp_b16", "file": "mnist_dp_b16.hlo.txt",
+         "kind": "train", "variant": "dp", "task": "mnist", "batch": 16,
+         "num_params": 26010,
+         "inputs": [{"name": "params", "dtype": "f32", "shape": [26010]},
+                    {"name": "x", "dtype": "f32", "shape": [16, 28, 28, 1]}],
+         "outputs": [{"name": "params", "dtype": "f32", "shape": [26010]}]}
+      ],
+      "goldens": [
+        {"task": "mnist", "step": "dp", "batch": 16,
+         "scalars": {"lr": 0.05}, "files": {"x": "golden_x.npy"},
+         "rtol": 2e-4, "atol": 1e-5}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts["mnist_dp_b16"];
+        assert_eq!(a.batch, 16);
+        assert_eq!(a.inputs[1].shape, vec![16, 28, 28, 1]);
+        assert_eq!(a.inputs[1].elements(), 16 * 28 * 28);
+        let model = &m.models["mnist"];
+        assert_eq!(model.num_params, 26010);
+        assert_eq!(model.layer_kinds, vec!["conv2d", "linear"]);
+        assert_eq!(m.goldens[0].scalars["lr"], 0.05);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn spec_bytes() {
+        let s = TensorSpec {
+            name: "x".into(),
+            dtype: "f32".into(),
+            shape: vec![16, 10],
+        };
+        assert_eq!(s.bytes(), 640);
+    }
+}

@@ -1,0 +1,51 @@
+//! Process-wide PJRT CPU client.
+//!
+//! PJRT client creation is expensive (~50 ms) and the client owns the
+//! device. `PjRtClient` is internally reference-counted (`Rc`), so it is
+//! confined to one thread; the coordinator is single-threaded on the
+//! request path by design (the testbed has one core), hence a
+//! thread-local singleton. `global()` hands out cheap Rc clones.
+
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use xla::PjRtClient;
+
+thread_local! {
+    static CLIENT: RefCell<Option<PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The shared PJRT CPU client for this thread (created on first use).
+pub fn global() -> Result<PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT client: {e}"))?);
+        }
+        Ok(slot.as_ref().expect("set above").clone())
+    })
+}
+
+/// Platform string, e.g. "cpu" (diagnostics / `opacus inspect`).
+pub fn platform() -> Result<String> {
+    Ok(global()?.platform_name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_platform() {
+        assert_eq!(platform().unwrap(), "cpu");
+        assert!(global().unwrap().device_count() >= 1);
+    }
+
+    #[test]
+    fn repeated_calls_cheap() {
+        // second call must not re-create the client (timing heuristic)
+        let _ = global().unwrap();
+        let (c, secs) = crate::util::stats::time_it(|| global().unwrap());
+        assert!(secs < 0.01, "client re-created? {secs}s");
+        drop(c);
+    }
+}

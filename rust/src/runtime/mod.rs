@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the training hot path.
+//!
+//! * [`client`] — process-wide PJRT CPU client
+//! * [`tensor`] — host tensors ⇄ PJRT buffers/literals
+//! * [`artifact`] — `manifest.json` model + artifact registry/compile cache
+//! * [`step`] — typed wrappers for each step signature (dp/nodp/accum/…)
+//! * [`memory`] — the paper's Eq (1)–(3) memory model + host probes
+
+pub mod artifact;
+pub mod client;
+pub mod memory;
+pub mod step;
+pub mod tensor;
+
+pub use artifact::{ArtifactMeta, GoldenMeta, Manifest, ModelMeta, Registry};
+pub use step::{EvalStep, LayerStep, TrainStep};
+pub use tensor::HostTensor;

@@ -1,0 +1,394 @@
+//! Typed step executables — the bridge between the coordinator's training
+//! loop and the AOT-compiled HLO graphs.
+//!
+//! [`Step`] is the untyped core (validate inputs against the manifest
+//! signature, upload, execute, download). The typed wrappers expose each
+//! step family with the right argument lists:
+//!
+//! * [`TrainStep`] — fused DP step / plain SGD step / microbatch step
+//! * [`AccumStep`] + [`ApplyStep`] — the virtual-step split
+//! * [`EvalStep`] — loss/accuracy
+//! * [`LayerStep`] — per-layer microbenchmark graphs (Fig. 2/3/5)
+
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+use super::artifact::{ArtifactMeta, Registry};
+use super::tensor::{HostTensor, TensorData};
+
+/// Hyperparameters passed to DP steps as runtime scalars.
+#[derive(Debug, Clone, Copy)]
+pub struct HyperParams {
+    pub lr: f32,
+    pub clip: f32,
+    pub sigma: f32,
+    /// Expected (logical) batch size — the DP-SGD denominator.
+    pub denom: f32,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            lr: 0.05,
+            clip: 1.0,
+            sigma: 1.1,
+            denom: 64.0,
+        }
+    }
+}
+
+/// An executable step with its manifest signature.
+pub struct Step {
+    pub meta: ArtifactMeta,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl Step {
+    pub fn load(reg: &Registry, name: &str) -> Result<Step> {
+        let meta = reg.meta(name)?.clone();
+        let exe = reg.load(name)?;
+        Ok(Step { meta, exe })
+    }
+
+    /// Validate + upload + execute + download.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "step {}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(self.meta.inputs.iter()) {
+            if t.shape != spec.shape {
+                bail!(
+                    "step {} input '{}': shape {:?} != expected {:?}",
+                    self.meta.name,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            if t.dtype_str() != spec.dtype {
+                bail!(
+                    "step {} input '{}': dtype {} != expected {}",
+                    self.meta.name,
+                    spec.name,
+                    t.dtype_str(),
+                    spec.dtype
+                );
+            }
+        }
+        let bufs = inputs
+            .iter()
+            .map(|t| t.to_buffer())
+            .collect::<Result<Vec<_>>>()?;
+        let out = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.meta.name))?;
+        // AOT graphs are lowered with return_tuple=True: one tuple output.
+        let mut tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading result of {}: {e}", self.meta.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.meta.name))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Total input bytes (live host-side buffer accounting for Table 3).
+    pub fn input_bytes(&self) -> usize {
+        self.meta.inputs.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Total output bytes.
+    pub fn output_bytes(&self) -> usize {
+        self.meta.outputs.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+/// Output of a DP training step.
+#[derive(Debug, Clone)]
+pub struct DpStepOut {
+    pub params: Vec<f32>,
+    pub loss: f64,
+    /// Mean pre-clip per-sample gradient norm (monitoring, like Opacus's
+    /// per-sample grad stats — Appendix D).
+    pub snorm_mean: f64,
+}
+
+/// Fused training step (variants: dp / jaxstyle / microbatch / nodp).
+pub struct TrainStep {
+    pub step: Step,
+}
+
+impl TrainStep {
+    pub fn load(reg: &Registry, name: &str) -> Result<TrainStep> {
+        let step = Step::load(reg, name)?;
+        if step.meta.kind != "train" {
+            bail!("{name} is not a train step");
+        }
+        Ok(TrainStep { step })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.step.meta.batch
+    }
+
+    pub fn is_dp(&self) -> bool {
+        matches!(
+            self.step.meta.variant.as_str(),
+            "dp" | "jaxstyle" | "microbatch"
+        )
+    }
+
+    /// Run a DP-variant step: returns updated params + stats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<DpStepOut> {
+        let b = self.batch();
+        let p = self.step.meta.num_params;
+        let inputs = vec![
+            HostTensor::f32(vec![p], params.to_vec()),
+            x,
+            HostTensor::i32(vec![b], y.to_vec()),
+            HostTensor::f32(vec![b], mask.to_vec()),
+            HostTensor::f32(vec![p], noise.to_vec()),
+            HostTensor::scalar(hp.lr),
+            HostTensor::scalar(hp.clip),
+            HostTensor::scalar(hp.sigma),
+            HostTensor::scalar(hp.denom),
+        ];
+        let mut out = self.step.run(&inputs)?;
+        if out.len() != 3 {
+            bail!("dp step returned {} outputs", out.len());
+        }
+        let snorm_mean = out[2].scalar_value()?;
+        let loss = out[1].scalar_value()?;
+        let params = match out.swap_remove(0).data {
+            TensorData::F32(v) => v,
+            _ => bail!("params output not f32"),
+        };
+        Ok(DpStepOut {
+            params,
+            loss,
+            snorm_mean,
+        })
+    }
+
+    /// Run a non-DP (plain SGD) step.
+    pub fn nodp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        denom: f32,
+    ) -> Result<(Vec<f32>, f64)> {
+        let b = self.batch();
+        let p = self.step.meta.num_params;
+        let inputs = vec![
+            HostTensor::f32(vec![p], params.to_vec()),
+            x,
+            HostTensor::i32(vec![b], y.to_vec()),
+            HostTensor::f32(vec![b], mask.to_vec()),
+            HostTensor::scalar(lr),
+            HostTensor::scalar(denom),
+        ];
+        let mut out = self.step.run(&inputs)?;
+        let loss = out[1].scalar_value()?;
+        let params = match out.swap_remove(0).data {
+            TensorData::F32(v) => v,
+            _ => bail!("params output not f32"),
+        };
+        Ok((params, loss))
+    }
+}
+
+/// Clipped-gradient accumulation (first half of a virtual step).
+pub struct AccumStep {
+    pub step: Step,
+}
+
+/// Output of one accumulation micro-step.
+#[derive(Debug, Clone)]
+pub struct AccumOut {
+    pub gsum: Vec<f32>,
+    pub loss_sum: f64,
+    pub snorm_sum: f64,
+}
+
+impl AccumStep {
+    pub fn load(reg: &Registry, name: &str) -> Result<AccumStep> {
+        Ok(AccumStep {
+            step: Step::load(reg, name)?,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.step.meta.batch
+    }
+
+    pub fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<AccumOut> {
+        let b = self.batch();
+        let p = self.step.meta.num_params;
+        let inputs = vec![
+            HostTensor::f32(vec![p], params.to_vec()),
+            x,
+            HostTensor::i32(vec![b], y.to_vec()),
+            HostTensor::f32(vec![b], mask.to_vec()),
+            HostTensor::scalar(clip),
+        ];
+        let mut out = self.step.run(&inputs)?;
+        let snorm_sum = out[2].scalar_value()?;
+        let loss_sum = out[1].scalar_value()?;
+        let gsum = match out.swap_remove(0).data {
+            TensorData::F32(v) => v,
+            _ => bail!("gsum output not f32"),
+        };
+        Ok(AccumOut {
+            gsum,
+            loss_sum,
+            snorm_sum,
+        })
+    }
+}
+
+/// Noisy parameter update from an accumulated gradient sum.
+pub struct ApplyStep {
+    pub step: Step,
+}
+
+impl ApplyStep {
+    pub fn load(reg: &Registry, name: &str) -> Result<ApplyStep> {
+        Ok(ApplyStep {
+            step: Step::load(reg, name)?,
+        })
+    }
+
+    pub fn run(
+        &self,
+        params: &[f32],
+        gsum: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<Vec<f32>> {
+        let p = self.step.meta.num_params;
+        let inputs = vec![
+            HostTensor::f32(vec![p], params.to_vec()),
+            HostTensor::f32(vec![p], gsum.to_vec()),
+            HostTensor::f32(vec![p], noise.to_vec()),
+            HostTensor::scalar(hp.lr),
+            HostTensor::scalar(hp.clip),
+            HostTensor::scalar(hp.sigma),
+            HostTensor::scalar(hp.denom),
+        ];
+        let mut out = self.step.run(&inputs)?;
+        match out.swap_remove(0).data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("params output not f32"),
+        }
+    }
+}
+
+/// Evaluation step: summed loss + correct-prediction count.
+pub struct EvalStep {
+    pub step: Step,
+}
+
+impl EvalStep {
+    pub fn load(reg: &Registry, name: &str) -> Result<EvalStep> {
+        Ok(EvalStep {
+            step: Step::load(reg, name)?,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.step.meta.batch
+    }
+
+    pub fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        let b = self.batch();
+        let p = self.step.meta.num_params;
+        let inputs = vec![
+            HostTensor::f32(vec![p], params.to_vec()),
+            x,
+            HostTensor::i32(vec![b], y.to_vec()),
+            HostTensor::f32(vec![b], mask.to_vec()),
+        ];
+        let out = self.step.run(&inputs)?;
+        Ok((out[0].scalar_value()?, out[1].scalar_value()?))
+    }
+}
+
+/// Per-layer microbenchmark step (Fig. 2/3/5 workloads).
+pub struct LayerStep {
+    pub step: Step,
+}
+
+impl LayerStep {
+    pub fn load(reg: &Registry, name: &str) -> Result<LayerStep> {
+        let step = Step::load(reg, name)?;
+        if step.meta.kind != "layer" {
+            bail!("{name} is not a layer step");
+        }
+        Ok(LayerStep { step })
+    }
+
+    pub fn is_dp(&self) -> bool {
+        self.step.meta.variant == "dp"
+    }
+
+    /// Run with synthetic params/inputs (benchmark path).
+    pub fn run_bench(&self, params: &[f32], x: HostTensor, clip: f32) -> Result<f64> {
+        let p = self.step.meta.num_params;
+        let out = if self.is_dp() {
+            let b = self.step.meta.batch;
+            self.step.run(&[
+                HostTensor::f32(vec![p], params.to_vec()),
+                x,
+                HostTensor::f32(vec![b], vec![1.0; b]),
+                HostTensor::scalar(clip),
+            ])?
+        } else {
+            self.step
+                .run(&[HostTensor::f32(vec![p], params.to_vec()), x])?
+        };
+        out[1].scalar_value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyperparams_default() {
+        let hp = HyperParams::default();
+        assert_eq!(hp.clip, 1.0);
+        assert!(hp.sigma > 0.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Host tensors and their conversion to PJRT buffers / XLA literals.
+//!
+//! The coordinator's whole data model is flat little-endian buffers:
+//! parameters are one `f32[P]` vector, batches are `f32[B, …]` /
+//! `i32[B, T]`, hyperparameters are `f32[]` scalars. `HostTensor` is the
+//! single host-side representation all of them share.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal, PjRtBuffer};
+
+use super::client;
+
+/// Element payload of a host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        HostTensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        HostTensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    /// A 0-d f32 scalar (hyperparameter inputs: lr, clip, σ, denom).
+    pub fn scalar(v: f32) -> Self {
+        HostTensor {
+            shape: vec![],
+            data: TensorData::F32(vec![v]),
+        }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Upload to the default PJRT device.
+    pub fn to_buffer(&self) -> Result<PjRtBuffer> {
+        let client = client::global()?;
+        let buf = match &self.data {
+            TensorData::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+            TensorData::I32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Download a (non-tuple) literal into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => Err(anyhow!("unsupported literal element type {other:?}")),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss).
+    pub fn scalar_value(&self) -> Result<f64> {
+        match &self.data {
+            TensorData::F32(v) => v
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| anyhow!("empty tensor")),
+            TensorData::I32(v) => v
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| anyhow!("empty tensor")),
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match &self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype_str(), "f32");
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = HostTensor::scalar(0.5);
+        assert!(s.shape.is_empty());
+        assert_eq!(s.scalar_value().unwrap(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros() {
+        let z = HostTensor::zeros_f32(vec![4, 2]);
+        assert_eq!(z.len(), 8);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn buffer_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.5, -2.0, 0.0, 7.25]);
+        let buf = t.to_buffer().unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn buffer_roundtrip_i32() {
+        let t = HostTensor::i32(vec![3], vec![-7, 0, 2_000_000]);
+        let buf = t.to_buffer().unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_buffer_roundtrip() {
+        let t = HostTensor::scalar(3.25);
+        let lit = t.to_buffer().unwrap().to_literal_sync().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar_value().unwrap(), 3.25);
+    }
+}

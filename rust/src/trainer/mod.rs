@@ -1,0 +1,13 @@
+//! Training loop: the DP optimizer (virtual steps) and the private trainer.
+//!
+//! * [`metrics`] — per-step records, loss curves, JSON export
+//! * [`optimizer`] — clipped-gradient accumulation across physical batches
+//! * [`trainer`] — `PrivateTrainer`: epochs/steps/eval over PJRT steps
+
+pub mod metrics;
+pub mod optimizer;
+pub mod trainer;
+
+pub use metrics::{MetricsLog, StepRecord};
+pub use optimizer::DpOptimizer;
+pub use trainer::{PrivateTrainer, TrainerSteps};

@@ -1,0 +1,134 @@
+//! DP optimizer state: clipped-gradient accumulation across physical
+//! batches — the paper's *virtual steps* (§2 "Virtual steps").
+//!
+//! A logical (privacy-accounted) batch may exceed what fits in memory as
+//! one per-sample gradient tensor. The accumulator sums the *already
+//! clipped* per-sample gradient sums of successive physical batches; the
+//! noisy update is applied once per logical batch with the logical
+//! denominator. This is numerically identical to one giant fused step
+//! (verified in python/tests/test_dpsgd.py and the Rust integration
+//! tests).
+
+use crate::runtime::step::AccumOut;
+
+/// Accumulator over physical micro-batches within one logical step.
+#[derive(Debug, Clone)]
+pub struct DpOptimizer {
+    accum: Vec<f32>,
+    loss_sum: f64,
+    snorm_sum: f64,
+    samples: usize,
+    micro_steps: usize,
+}
+
+impl DpOptimizer {
+    pub fn new(num_params: usize) -> Self {
+        DpOptimizer {
+            accum: vec![0.0; num_params],
+            loss_sum: 0.0,
+            snorm_sum: 0.0,
+            samples: 0,
+            micro_steps: 0,
+        }
+    }
+
+    /// Fold in one physical batch's clipped gradient sum.
+    pub fn add(&mut self, out: &AccumOut, logical_samples: usize) {
+        assert_eq!(out.gsum.len(), self.accum.len());
+        for (a, g) in self.accum.iter_mut().zip(out.gsum.iter()) {
+            *a += g;
+        }
+        self.loss_sum += out.loss_sum;
+        self.snorm_sum += out.snorm_sum;
+        self.samples += logical_samples;
+        self.micro_steps += 1;
+    }
+
+    pub fn micro_steps(&self) -> usize {
+        self.micro_steps
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Mean loss over accumulated samples (NaN if empty — noise-only step).
+    pub fn mean_loss(&self) -> f64 {
+        if self.samples == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.samples as f64
+        }
+    }
+
+    pub fn mean_snorm(&self) -> f64 {
+        if self.samples == 0 {
+            f64::NAN
+        } else {
+            self.snorm_sum / self.samples as f64
+        }
+    }
+
+    /// Hand out the accumulated sum and reset for the next logical step.
+    pub fn take(&mut self) -> Vec<f32> {
+        let n = self.accum.len();
+        let g = std::mem::replace(&mut self.accum, vec![0.0; n]);
+        self.loss_sum = 0.0;
+        self.snorm_sum = 0.0;
+        self.samples = 0;
+        self.micro_steps = 0;
+        g
+    }
+
+    /// Borrow the accumulated sum without resetting.
+    pub fn gsum(&self) -> &[f32] {
+        &self.accum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(g: Vec<f32>, loss: f64, snorm: f64) -> AccumOut {
+        AccumOut {
+            gsum: g,
+            loss_sum: loss,
+            snorm_sum: snorm,
+        }
+    }
+
+    #[test]
+    fn accumulates_and_resets() {
+        let mut opt = DpOptimizer::new(3);
+        opt.add(&out(vec![1.0, 2.0, 3.0], 4.0, 2.0), 2);
+        opt.add(&out(vec![0.5, 0.5, 0.5], 2.0, 1.0), 1);
+        assert_eq!(opt.gsum(), &[1.5, 2.5, 3.5]);
+        assert_eq!(opt.micro_steps(), 2);
+        assert_eq!(opt.samples(), 3);
+        assert!((opt.mean_loss() - 2.0).abs() < 1e-12);
+        assert!((opt.mean_snorm() - 1.0).abs() < 1e-12);
+        let g = opt.take();
+        assert_eq!(g, vec![1.5, 2.5, 3.5]);
+        assert_eq!(opt.gsum(), &[0.0, 0.0, 0.0]);
+        assert_eq!(opt.samples(), 0);
+        assert!(opt.mean_loss().is_nan());
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        let mut opt = DpOptimizer::new(2);
+        opt.add(&out(vec![1.0], 0.0, 0.0), 1);
+    }
+
+    #[test]
+    fn empty_logical_batch_is_fine() {
+        // Poisson can select zero samples; the noisy update still happens
+        let mut opt = DpOptimizer::new(2);
+        opt.add(&out(vec![0.0, 0.0], 0.0, 0.0), 0);
+        assert_eq!(opt.samples(), 0);
+        assert!(opt.mean_loss().is_nan());
+        assert_eq!(opt.take(), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,285 @@
+//! `PrivateTrainer` — the training loop over AOT step executables.
+//!
+//! Two execution modes, chosen automatically:
+//! * **Fused** — uniform sampling with logical == physical batch: each
+//!   step is one `dp_step` executable call (per-sample grads + clip +
+//!   noise + update in a single HLO module). The fast path benchmarked in
+//!   Table 1.
+//! * **Virtual** — Poisson sampling or logical > physical batch: each
+//!   logical batch is split into mask-padded physical chunks, run through
+//!   `grad_accum`, folded by [`DpOptimizer`], and finished with one
+//!   `apply_update` (noise + SGD). The paper's virtual-steps feature.
+//!
+//! Every logical step records `(σ_t, q)` into the engine's accountant,
+//! so ε is queryable mid-training (early stopping / monitoring).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{Dataset, LogicalBatch, PoissonLoader, UniformLoader};
+use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
+use crate::privacy::scheduler::NoiseScheduler;
+use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, HyperParams, TrainStep};
+
+use super::metrics::{MetricsLog, StepRecord};
+use super::optimizer::DpOptimizer;
+
+/// The step executables a trainer may use.
+pub struct TrainerSteps {
+    pub fused_dp: Option<TrainStep>,
+    pub accum: Option<AccumStep>,
+    pub apply: Option<ApplyStep>,
+    pub eval: Option<EvalStep>,
+}
+
+enum Mode {
+    Fused,
+    Virtual,
+}
+
+enum Loader {
+    Uniform(UniformLoader),
+    Poisson(PoissonLoader),
+}
+
+/// A differentially private trainer (the output of `make_private`).
+pub struct PrivateTrainer {
+    pub task: String,
+    pub params: Vec<f32>,
+    pub metrics: MetricsLog,
+    pub noise_scheduler: NoiseScheduler,
+    steps: TrainerSteps,
+    train: Dataset,
+    test: Option<Dataset>,
+    engine: PrivacyEngine,
+    pp: PrivacyParams,
+    mode: Mode,
+    loader: Loader,
+    epoch: usize,
+    global_step: u64,
+    noise_buf: Vec<f32>,
+    num_params: usize,
+}
+
+impl PrivateTrainer {
+    /// Assemble a trainer. Called by `PrivacyEngine::make_private` (see
+    /// `coordinator`); use that entry point unless you are wiring custom
+    /// steps.
+    pub fn new(
+        task: &str,
+        params: Vec<f32>,
+        steps: TrainerSteps,
+        train: Dataset,
+        test: Option<Dataset>,
+        engine: PrivacyEngine,
+        pp: PrivacyParams,
+    ) -> Result<PrivateTrainer> {
+        let num_params = params.len();
+        let n = train.len();
+
+        let use_fused = !pp.poisson
+            && pp.logical_batch == pp.physical_batch
+            && steps.fused_dp.is_some();
+        let (mode, loader) = if use_fused {
+            (
+                Mode::Fused,
+                Loader::Uniform(UniformLoader::new(n, pp.physical_batch, false)),
+            )
+        } else {
+            if steps.accum.is_none() || steps.apply.is_none() {
+                bail!(
+                    "virtual-step mode needs accum+apply artifacts \
+                     (task {task}, poisson={}, logical={}, physical={})",
+                    pp.poisson,
+                    pp.logical_batch,
+                    pp.physical_batch
+                );
+            }
+            let loader = if pp.poisson {
+                Loader::Poisson(PoissonLoader::with_expected_batch(n, pp.logical_batch))
+            } else {
+                Loader::Uniform(UniformLoader::new(n, pp.logical_batch, false))
+            };
+            (Mode::Virtual, loader)
+        };
+
+        Ok(PrivateTrainer {
+            task: task.to_string(),
+            params,
+            metrics: MetricsLog::new(),
+            noise_scheduler: NoiseScheduler::Constant,
+            steps,
+            train,
+            test,
+            engine,
+            pp,
+            mode,
+            loader,
+            epoch: 0,
+            global_step: 0,
+            noise_buf: vec![0.0; num_params],
+            num_params,
+        })
+    }
+
+    /// The DP-SGD sampling rate used for accounting.
+    pub fn sample_rate(&self) -> f64 {
+        match &self.loader {
+            Loader::Poisson(p) => p.sample_rate(),
+            Loader::Uniform(_) => self.pp.logical_batch as f64 / self.train.len() as f64,
+        }
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        match &self.loader {
+            Loader::Poisson(p) => p.steps_per_epoch(),
+            Loader::Uniform(u) => u.steps_per_epoch(),
+        }
+    }
+
+    /// σ in effect this epoch (base σ × schedule factor).
+    pub fn current_sigma(&self) -> f64 {
+        self.noise_scheduler
+            .sigma_at(self.pp.noise_multiplier, self.epoch)
+    }
+
+    /// Privacy spent so far.
+    pub fn epsilon(&self, delta: f64) -> Result<f64> {
+        Ok(self.engine.get_epsilon(delta))
+    }
+
+    pub fn engine(&self) -> &PrivacyEngine {
+        &self.engine
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.global_step
+    }
+
+    fn hp(&self, sigma: f64) -> HyperParams {
+        HyperParams {
+            lr: self.pp.lr as f32,
+            clip: self.pp.max_grad_norm as f32,
+            sigma: sigma as f32,
+            denom: self.pp.logical_batch as f32,
+        }
+    }
+
+    /// Run one logical step (one noise addition, one accountant entry).
+    fn logical_step(&mut self, lb: &LogicalBatch, sigma: f64) -> Result<(f64, f64, usize)> {
+        let hp = self.hp(sigma);
+        let (loss, snorm, logical) = match self.mode {
+            Mode::Fused => {
+                let step = self.steps.fused_dp.as_ref().expect("fused mode");
+                let phys = step.batch();
+                if lb.indices.len() > phys {
+                    bail!("fused mode: logical batch exceeds physical batch");
+                }
+                let batch = self.train.gather(&lb.indices, phys)?;
+                self.engine.sample_noise(&mut self.noise_buf);
+                let out = step.dp_step(
+                    &self.params,
+                    batch.x,
+                    &batch.y,
+                    &batch.mask,
+                    &self.noise_buf,
+                    hp,
+                )?;
+                self.params = out.params;
+                (out.loss, out.snorm_mean, batch.logical_size)
+            }
+            Mode::Virtual => {
+                let accum = self.steps.accum.as_ref().expect("virtual mode");
+                let apply = self.steps.apply.as_ref().expect("virtual mode");
+                let phys = accum.batch();
+                let mut opt = DpOptimizer::new(self.num_params);
+                for chunk in lb.chunks(phys) {
+                    let batch = self.train.gather(chunk, phys)?;
+                    let out = accum.run(
+                        &self.params,
+                        batch.x,
+                        &batch.y,
+                        &batch.mask,
+                        hp.clip,
+                    )?;
+                    opt.add(&out, batch.logical_size);
+                }
+                let loss = opt.mean_loss();
+                let snorm = opt.mean_snorm();
+                let samples = opt.samples();
+                let gsum = opt.take();
+                self.engine.sample_noise(&mut self.noise_buf);
+                self.params = apply.run(&self.params, &gsum, &self.noise_buf, hp)?;
+                (loss, snorm, samples)
+            }
+        };
+        // ledger: one SGM invocation at (σ, q)
+        self.engine.record_steps(sigma, self.sample_rate(), 1);
+        self.global_step += 1;
+        Ok((loss, snorm, logical))
+    }
+
+    /// Train one epoch; returns the mean loss over the epoch.
+    pub fn train_epoch(&mut self) -> Result<f64> {
+        let sigma = self.current_sigma();
+        let batches: Vec<LogicalBatch> = match &self.loader {
+            Loader::Uniform(u) => self.engine.with_rng(|r| u.epoch(r)),
+            Loader::Poisson(p) => self.engine.with_rng(|r| p.epoch(r)),
+        };
+        let mut losses = Vec::with_capacity(batches.len());
+        for lb in &batches {
+            let (loss, snorm, logical) = self.logical_step(lb, sigma)?;
+            if loss.is_finite() {
+                losses.push(loss);
+            }
+            let epsilon = self.engine.get_epsilon(1e-5);
+            self.metrics.push(StepRecord {
+                step: self.global_step,
+                epoch: self.epoch,
+                loss,
+                snorm,
+                sigma,
+                logical_batch: logical,
+                epsilon,
+            });
+        }
+        self.epoch += 1;
+        Ok(crate::util::stats::mean(&losses))
+    }
+
+    /// Train `n` epochs; returns per-epoch mean losses.
+    pub fn train_epochs(&mut self, n: usize) -> Result<Vec<f64>> {
+        (0..n).map(|_| self.train_epoch()).collect()
+    }
+
+    /// Evaluate on the held-out set: (mean loss, accuracy).
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let eval = self
+            .steps
+            .eval
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval step loaded for task {}", self.task))?;
+        let test = self
+            .test
+            .as_ref()
+            .ok_or_else(|| anyhow!("no test split configured"))?;
+        let phys = eval.batch();
+        let idx: Vec<usize> = (0..test.len()).collect();
+        let (mut loss_sum, mut correct, mut total) = (0.0, 0.0, 0.0);
+        for chunk in idx.chunks(phys) {
+            let b = test.gather(chunk, phys)?;
+            let (l, c) = eval.run(&self.params, b.x, &b.y, &b.mask)?;
+            loss_sum += l;
+            correct += c;
+            total += b.logical_size as f64;
+        }
+        let out = (loss_sum / total, correct / total);
+        self.metrics.push_eval(self.global_step, out.0, out.1);
+        Ok(out)
+    }
+
+    /// Save parameters as .npy (checkpointing).
+    pub fn save_params(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::npy::NpyArray::f32(vec![self.params.len()], self.params.clone())
+            .write(path)
+    }
+}

@@ -1,0 +1,170 @@
+//! Tiny CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports `subcommand --key value --flag positional` grammars with
+//! typed accessors and a generated usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, key/value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `flag_names` lists boolean options that take no
+    /// value; everything else starting with `--` consumes the next token.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                    continue;
+                }
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                out.options.insert(name.to_string(), val.clone());
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list option, e.g. `--batches 16,32,64`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => {
+                let mut out = Vec::new();
+                for part in s.split(',') {
+                    let t = part.trim();
+                    if t.is_empty() {
+                        continue;
+                    }
+                    out.push(t.parse().map_err(|_| {
+                        anyhow!("--{name} expects comma-separated integers, got '{t}'")
+                    })?);
+                }
+                if out.is_empty() {
+                    bail!("--{name} list is empty");
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["train", "--task", "mnist", "--secure", "--lr", "0.1", "extra"]),
+            &["secure"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("task"), Some("mnist"));
+        assert!(a.has_flag("secure"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_key_equals_value() {
+        let a = Args::parse(&sv(&["--epochs=7"]), &[]).unwrap();
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--task"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = Args::parse(&sv(&["--lr", "abc"]), &[]).unwrap();
+        assert!(a.get_f64("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("task", "mnist"), "mnist");
+        assert_eq!(a.get_usize("epochs", 3).unwrap(), 3);
+        assert!(a.require("task").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["--batches", "16, 32,64"]), &[]).unwrap();
+        assert_eq!(a.get_usize_list("batches", &[1]).unwrap(), vec![16, 32, 64]);
+        assert_eq!(a.get_usize_list("other", &[8]).unwrap(), vec![8]);
+    }
+}

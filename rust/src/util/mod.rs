@@ -1,0 +1,8 @@
+//! Hand-rolled substrates (the image vendors no serde/clap/criterion/rand;
+//! building these in-tree is part of the reproduction scope).
+
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod stats;
+pub mod table;

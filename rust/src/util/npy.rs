@@ -1,0 +1,274 @@
+//! Reader/writer for NumPy `.npy` files (format version 1.0).
+//!
+//! Only what the pipeline needs: little-endian `f32`/`f64`/`i32`/`i64`
+//! C-contiguous arrays. Used for initial parameters, golden test vectors
+//! and checkpoints.
+
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// An n-dimensional array loaded from / destined for a .npy file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray {
+            shape,
+            data: NpyData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray {
+            shape,
+            data: NpyData::I32(data),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 (exact type match required).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            other => bail!("expected f32 npy, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            other => bail!("expected i32 npy, got {}", other.dtype_str()),
+        }
+    }
+
+    /// Convert to f32 regardless of stored type (lossy for i64/f64).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn read(path: &Path) -> Result<NpyArray> {
+        let bytes = fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<NpyArray> {
+        if bytes.len() < 10 || &bytes[..6] != MAGIC {
+            bail!("not a .npy file");
+        }
+        let major = bytes[6];
+        let header_len = match major {
+            1 => u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            2 | 3 => u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            _ => bail!("unsupported npy version {major}"),
+        };
+        let header_start = if major == 1 { 10 } else { 12 };
+        let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+            .context("npy header not utf-8")?;
+        let descr = extract_quoted(header, "descr").context("missing descr")?;
+        let fortran = header.contains("'fortran_order': True");
+        if fortran {
+            bail!("fortran-order npy not supported");
+        }
+        let shape = extract_shape(header).context("missing shape")?;
+        let n: usize = shape.iter().product();
+        let body = &bytes[header_start + header_len..];
+
+        let data = match descr.as_str() {
+            "<f4" => NpyData::F32(read_vec::<4, f32>(body, n, f32::from_le_bytes)?),
+            "<f8" => NpyData::F64(read_vec::<8, f64>(body, n, f64::from_le_bytes)?),
+            "<i4" => NpyData::I32(read_vec::<4, i32>(body, n, i32::from_le_bytes)?),
+            "<i8" => NpyData::I64(read_vec::<8, i64>(body, n, i64::from_le_bytes)?),
+            other => bail!("unsupported dtype {other}"),
+        };
+        Ok(NpyArray { shape, data })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        fs::write(path, self.to_bytes()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let shape_str = match self.shape.len() {
+            1 => format!("({},)", self.shape[0]),
+            _ => format!(
+                "({})",
+                self.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+            self.data.dtype_str(),
+            shape_str
+        );
+        // pad so that data starts at a multiple of 64
+        let unpadded = MAGIC.len() + 4 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+
+        let mut out = Vec::with_capacity(unpadded + pad + self.len() * 8);
+        out.extend_from_slice(MAGIC);
+        out.push(1);
+        out.push(0);
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        match &self.data {
+            NpyData::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+            NpyData::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+            NpyData::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+            NpyData::I64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        }
+        out
+    }
+}
+
+impl NpyData {
+    fn dtype_str(&self) -> &'static str {
+        match self {
+            NpyData::F32(_) => "<f4",
+            NpyData::F64(_) => "<f8",
+            NpyData::I32(_) => "<i4",
+            NpyData::I64(_) => "<i8",
+        }
+    }
+}
+
+fn read_vec<const W: usize, T>(
+    body: &[u8],
+    n: usize,
+    from_le: fn([u8; W]) -> T,
+) -> Result<Vec<T>> {
+    if body.len() < n * W {
+        bail!("npy body too short: {} < {}", body.len(), n * W);
+    }
+    Ok(body[..n * W]
+        .chunks_exact(W)
+        .map(|c| from_le(c.try_into().unwrap()))
+        .collect())
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let idx = header.find(&format!("'{key}'"))?;
+    let rest = &header[idx..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let quote = rest.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let end = rest[1..].find(quote)?;
+    Some(rest[1..1 + end].to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let idx = header.find("'shape'")?;
+    let rest = &header[idx..];
+    let open = rest.find('(')?;
+    let close = rest.find(')')?;
+    let inner = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse().ok()?);
+    }
+    if out.is_empty() {
+        out.push(1); // 0-d array: treat as singleton
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let a = NpyArray::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = NpyArray::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_i32_1d() {
+        let a = NpyArray::i32(vec![4], vec![-1, 0, 7, 2_000_000_000]);
+        let b = NpyArray::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.as_i32().unwrap()[3], 2_000_000_000);
+    }
+
+    #[test]
+    fn header_padding_is_64_aligned() {
+        let a = NpyArray::f32(vec![1], vec![42.0]);
+        let bytes = a.to_bytes();
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(NpyArray::from_bytes(b"NOTNUMPYxxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let a = NpyArray::f32(vec![8], vec![0.0; 8]);
+        let mut bytes = a.to_bytes();
+        bytes.truncate(bytes.len() - 4);
+        assert!(NpyArray::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn parses_numpy_generated_header_variants() {
+        // header with explicit spaces, as numpy writes it
+        let a = NpyArray::f32(vec![3], vec![1.5, -2.0, 0.25]);
+        let bytes = a.to_bytes();
+        let parsed = NpyArray::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed.shape, vec![3]);
+        assert_eq!(parsed.as_f32().unwrap(), &[1.5, -2.0, 0.25]);
+    }
+
+    #[test]
+    fn to_f32_vec_converts() {
+        let a = NpyArray {
+            shape: vec![2],
+            data: NpyData::F64(vec![1.5, 2.5]),
+        };
+        assert_eq!(a.to_f32_vec(), vec![1.5f32, 2.5]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Paper-style ASCII table rendering for the benchmark harness.
+//!
+//! Every bench prints its results through this module so the output rows
+//! visually match the paper's tables (Table 1: one row per framework,
+//! one column per batch size; Tables 2/3: per-layer raw values).
+
+/// A simple right-aligned table with a header row.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: Vec<String>) -> Table {
+        Table {
+            title: title.to_string(),
+            header,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn header_from(strs: &[&str]) -> Vec<String> {
+        strs.iter().map(|s| s.to_string()).collect()
+    }
+
+    pub fn add_row(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Render with column-wise alignment (first column left, rest right).
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |row: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = row.get(i).map(|s| s.as_str()).unwrap_or("");
+                if i == 0 {
+                    line.push_str(&format!("{cell:<w$}"));
+                } else {
+                    line.push_str(&format!("  {cell:>w$}"));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &widths));
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds with adaptive precision (matches the paper's 2-3 s.f.).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 10.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+/// Format a multiplicative overhead factor ("2.3x").
+pub fn fmt_factor(f: f64) -> String {
+    if f >= 100.0 {
+        format!("{f:.0}x")
+    } else if f >= 10.0 {
+        format!("{f:.1}x")
+    } else {
+        format!("{f:.2}x")
+    }
+}
+
+/// Format a byte count as MB with paper-style precision.
+pub fn fmt_mb(bytes: f64) -> String {
+    let mb = bytes / (1024.0 * 1024.0);
+    if mb >= 100.0 {
+        format!("{mb:.0}")
+    } else if mb >= 1.0 {
+        format!("{mb:.1}")
+    } else {
+        format!("{mb:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", Table::header_from(&["name", "16", "32"]));
+        t.add_row(vec!["opacus".into(), "1.22".into(), "0.64".into()]);
+        t.add_row(vec!["pyvacy".into(), "109.08".into(), "110.94".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("opacus"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines equal length (alignment)
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn fmt_secs_precision() {
+        assert_eq!(fmt_secs(109.08), "109");
+        assert_eq!(fmt_secs(15.81), "15.8");
+        assert_eq!(fmt_secs(3.72), "3.72");
+        assert_eq!(fmt_secs(0.15), "0.150");
+    }
+
+    #[test]
+    fn fmt_factor_precision() {
+        assert_eq!(fmt_factor(334.0), "334x");
+        assert_eq!(fmt_factor(17.5), "17.5x");
+        assert_eq!(fmt_factor(2.31), "2.31x");
+    }
+
+    #[test]
+    fn fmt_mb_values() {
+        assert_eq!(fmt_mb(1024.0 * 1024.0 * 738.0), "738");
+        assert_eq!(fmt_mb(1024.0 * 1024.0 * 6.35), "6.3");
+        assert_eq!(fmt_mb(1024.0 * 40.0), "0.039");
+    }
+
+    #[test]
+    fn empty_table_renders() {
+        let t = Table::new("", vec![]);
+        assert_eq!(t.render(), "");
+    }
+}

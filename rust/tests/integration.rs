@@ -1,0 +1,353 @@
+//! Integration tests over real AOT artifacts (require `make artifacts`).
+//!
+//! The golden tests are the cross-language correctness anchor: aot.py
+//! executed each step in JAX with fixed inputs and saved the outputs;
+//! here the PJRT-compiled HLO must reproduce them from Rust.
+
+use std::path::PathBuf;
+
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::{EngineConfig, PrivacyEngine, PrivacyParams};
+use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::runtime::step::{AccumStep, ApplyStep, EvalStep, HyperParams, TrainStep};
+use opacus_rs::runtime::tensor::HostTensor;
+use opacus_rs::util::npy::NpyArray;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn load_npy(dir: &std::path::Path, file: &str) -> NpyArray {
+    NpyArray::read(&dir.join(file)).unwrap_or_else(|e| panic!("loading {file}: {e}"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let mut worst = 0.0f64;
+    let mut worst_i = 0;
+    for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+        let err = (g as f64 - w as f64).abs();
+        let bound = atol + rtol * (w as f64).abs();
+        if err - bound > worst {
+            worst = err - bound;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= 0.0,
+        "{what}: worst mismatch at {worst_i}: got {} want {} (excess {worst:.3e})",
+        got[worst_i],
+        want[worst_i]
+    );
+}
+
+/// Run every dp-step golden: Rust PJRT execution must match JAX outputs.
+#[test]
+fn golden_dp_steps_match_jax() {
+    let dir = require_artifacts!();
+    let reg = Registry::open(&dir).unwrap();
+    let goldens: Vec<_> = reg
+        .manifest
+        .goldens
+        .iter()
+        .filter(|g| g.step == "dp")
+        .cloned()
+        .collect();
+    assert_eq!(goldens.len(), 4, "expected one dp golden per task");
+    for g in goldens {
+        let name = format!("{}_dp_b{}", g.task, g.batch);
+        let step = TrainStep::load(&reg, &name).unwrap();
+        let params = load_npy(&dir, &g.files["params"]);
+        let x_arr = load_npy(&dir, &g.files["x"]);
+        let y = load_npy(&dir, &g.files["y"]);
+        let mask = load_npy(&dir, &g.files["mask"]);
+        let noise = load_npy(&dir, &g.files["noise"]);
+        let want_params = load_npy(&dir, &g.files["out_params"]);
+        let want_loss = load_npy(&dir, &g.files["out_loss"]);
+        let want_snorm = load_npy(&dir, &g.files["out_snorm"]);
+
+        let x = match &x_arr.data {
+            opacus_rs::util::npy::NpyData::F32(v) => {
+                HostTensor::f32(x_arr.shape.clone(), v.clone())
+            }
+            opacus_rs::util::npy::NpyData::I32(v) => {
+                HostTensor::i32(x_arr.shape.clone(), v.clone())
+            }
+            _ => panic!("unexpected x dtype"),
+        };
+        let hp = HyperParams {
+            lr: g.scalars["lr"] as f32,
+            clip: g.scalars["clip"] as f32,
+            sigma: g.scalars["sigma"] as f32,
+            denom: g.scalars["denom"] as f32,
+        };
+        let out = step
+            .dp_step(
+                params.as_f32().unwrap(),
+                x,
+                y.as_i32().unwrap(),
+                mask.as_f32().unwrap(),
+                noise.as_f32().unwrap(),
+                hp,
+            )
+            .unwrap();
+        assert_close(
+            &out.params,
+            want_params.as_f32().unwrap(),
+            g.rtol,
+            g.atol,
+            &format!("{name} params"),
+        );
+        let wl = want_loss.as_f32().unwrap()[0] as f64;
+        assert!(
+            (out.loss - wl).abs() < 1e-4 * wl.abs().max(1.0),
+            "{name} loss: {} vs {wl}",
+            out.loss
+        );
+        let ws = want_snorm.as_f32().unwrap()[0] as f64;
+        assert!(
+            (out.snorm_mean - ws).abs() < 1e-3 * ws.abs().max(1.0),
+            "{name} snorm: {} vs {ws}",
+            out.snorm_mean
+        );
+    }
+}
+
+/// Eval goldens: loss sums and correct counts match JAX.
+#[test]
+fn golden_eval_steps_match_jax() {
+    let dir = require_artifacts!();
+    let reg = Registry::open(&dir).unwrap();
+    for g in reg.manifest.goldens.iter().filter(|g| g.step == "eval") {
+        let name = format!("{}_eval_b{}", g.task, g.batch);
+        let step = EvalStep::load(&reg, &name).unwrap();
+        let params = reg.init_params(&g.task).unwrap();
+        let x_arr = load_npy(&dir, &g.files["x"]);
+        let y = load_npy(&dir, &g.files["y"]);
+        let mask = load_npy(&dir, &g.files["mask"]);
+        let x = match &x_arr.data {
+            opacus_rs::util::npy::NpyData::F32(v) => {
+                HostTensor::f32(x_arr.shape.clone(), v.clone())
+            }
+            opacus_rs::util::npy::NpyData::I32(v) => {
+                HostTensor::i32(x_arr.shape.clone(), v.clone())
+            }
+            _ => panic!("unexpected x dtype"),
+        };
+        let (loss_sum, correct) = step
+            .run(&params, x, y.as_i32().unwrap(), mask.as_f32().unwrap())
+            .unwrap();
+        let wl = load_npy(&dir, &g.files["out_loss_sum"]).as_f32().unwrap()[0] as f64;
+        let wc = load_npy(&dir, &g.files["out_correct"]).as_f32().unwrap()[0] as f64;
+        assert!(
+            (loss_sum - wl).abs() < 1e-3 * wl.abs().max(1.0),
+            "{name}: loss_sum {loss_sum} vs {wl}"
+        );
+        assert_eq!(correct, wc, "{name}: correct count");
+    }
+}
+
+/// Virtual steps: accum(half A) + accum(half B) + apply == fused dp_step.
+#[test]
+fn virtual_steps_equal_fused_step() {
+    let dir = require_artifacts!();
+    let reg = Registry::open(&dir).unwrap();
+    let g = reg
+        .manifest
+        .goldens
+        .iter()
+        .find(|g| g.step == "dp" && g.task == "mnist")
+        .unwrap()
+        .clone();
+
+    // fused result from the golden files
+    let want = load_npy(&dir, &g.files["out_params"]);
+    let params = load_npy(&dir, &g.files["params"]);
+    let x = load_npy(&dir, &g.files["x"]);
+    let y = load_npy(&dir, &g.files["y"]);
+    let noise = load_npy(&dir, &g.files["noise"]);
+
+    let accum = AccumStep::load(&reg, "mnist_accum_b64").unwrap();
+    let apply = ApplyStep::load(&reg, "mnist_apply_b64").unwrap();
+    let phys = accum.batch(); // 64 > 16, so one padded chunk
+    let b = g.batch;
+    let per: usize = x.shape[1..].iter().product();
+
+    // assemble one padded physical batch holding the 16 golden samples
+    let xf = x.as_f32().unwrap();
+    let mut xbuf = Vec::with_capacity(phys * per);
+    xbuf.extend_from_slice(xf);
+    for _ in b..phys {
+        xbuf.extend_from_slice(&xf[..per]);
+    }
+    let mut shape = vec![phys];
+    shape.extend_from_slice(&x.shape[1..]);
+    let mut yv = y.as_i32().unwrap().to_vec();
+    yv.resize(phys, yv[0]);
+    let mut mask = vec![1.0f32; b];
+    mask.resize(phys, 0.0);
+
+    let out = accum
+        .run(
+            params.as_f32().unwrap(),
+            HostTensor::f32(shape, xbuf),
+            &yv,
+            &mask,
+            g.scalars["clip"] as f32,
+        )
+        .unwrap();
+    let hp = HyperParams {
+        lr: g.scalars["lr"] as f32,
+        clip: g.scalars["clip"] as f32,
+        sigma: g.scalars["sigma"] as f32,
+        denom: g.scalars["denom"] as f32,
+    };
+    let new_params = apply
+        .run(
+            params.as_f32().unwrap(),
+            &out.gsum,
+            noise.as_f32().unwrap(),
+            hp,
+        )
+        .unwrap();
+    assert_close(
+        &new_params,
+        want.as_f32().unwrap(),
+        5e-4,
+        1e-5,
+        "virtual == fused",
+    );
+}
+
+/// The two-line API end to end: training reduces loss; ε grows and is
+/// consistent with a fresh accountant over the same history.
+#[test]
+fn make_private_trains_and_accounts() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 256, 64, 7).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        seed: 3,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(0.8, 1.2)
+        .with_lr(0.25)
+        .with_batches(64, 64);
+    let mut trainer = engine.make_private(sys, pp).unwrap();
+    assert_eq!(trainer.steps_per_epoch(), 4); // Poisson: ceil(1/q), q=64/256
+
+    let losses = trainer.train_epochs(4).unwrap();
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    let eps = trainer.epsilon(1e-5).unwrap();
+    assert!(eps > 0.0 && eps.is_finite());
+    assert_eq!(trainer.global_step(), 16);
+    // metrics recorded per logical step
+    assert_eq!(trainer.metrics.len(), 16);
+    let (eval_loss, acc) = trainer.evaluate().unwrap();
+    assert!(eval_loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+/// Uniform fused mode: logical == physical, no Poisson.
+#[test]
+fn fused_uniform_mode_trains() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 1).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        seed: 5,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(0.5, 1.0)
+        .with_lr(0.3)
+        .with_batches(16, 16)
+        .uniform_sampling();
+    let mut trainer = engine.make_private(sys, pp).unwrap();
+    let losses = trainer.train_epochs(3).unwrap();
+    assert_eq!(trainer.global_step(), 24); // 128/16 = 8 steps × 3 epochs
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+/// Calibrated training: achieved ε must not exceed the target.
+#[test]
+fn make_private_with_epsilon_respects_budget() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 256, 32, 2).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        seed: 9,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(0.0, 1.0).with_batches(64, 64);
+    let epochs = 3;
+    let mut trainer = engine
+        .make_private_with_epsilon(sys, pp, 5.0, 1e-5, epochs)
+        .unwrap();
+    trainer.train_epochs(epochs).unwrap();
+    let eps = trainer.epsilon(1e-5).unwrap();
+    assert!(eps <= 5.0 * 1.01, "ε = {eps} exceeds target 5.0");
+    assert!(eps > 1.0, "ε = {eps} suspiciously small — calibration too loose");
+}
+
+/// Secure mode end to end (ChaCha20 noise + sampling).
+#[test]
+fn secure_mode_trains() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 3).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        secure_mode: true,
+        deterministic: true,
+        seed: 11,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(1.0, 1.0).with_batches(64, 64);
+    let mut trainer = engine.make_private(sys, pp).unwrap();
+    let loss = trainer.train_epoch().unwrap();
+    assert!(loss.is_finite());
+}
+
+/// The embedding task (i32 inputs) round-trips through the runtime.
+#[test]
+fn embed_task_trains() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "embed", 256, 64, 4).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        seed: 13,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(0.7, 1.0).with_lr(0.5).with_batches(64, 64);
+    let mut trainer = engine.make_private(sys, pp).unwrap();
+    let losses = trainer.train_epochs(3).unwrap();
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "embed loss did not decrease: {losses:?}"
+    );
+}
+
+/// Compile log records the first-epoch "JIT analogue" cost (Fig. 4).
+#[test]
+fn compile_log_populated() {
+    let dir = require_artifacts!();
+    let reg = Registry::open(&dir).unwrap();
+    assert!(reg.compile_log().is_empty());
+    let _ = TrainStep::load(&reg, "mnist_nodp_b16").unwrap();
+    let log = reg.compile_log();
+    assert_eq!(log.len(), 1);
+    assert!(log[0].1 > 0.0);
+    // cached second load: no new compile entry
+    let _ = TrainStep::load(&reg, "mnist_nodp_b16").unwrap();
+    assert_eq!(reg.compile_log().len(), 1);
+}
