@@ -1,13 +1,13 @@
 //! DP training of the IMDb LSTM (1,081,002 params — the paper's hardest
 //! Table-1 model): embedding + custom LSTM + classifier head, per-sample
-//! gradients through the recurrence, virtual steps over physical batches
-//! of 64.
+//! gradients through the recurrence, and the `BatchMemoryManager`
+//! virtualizing a logical batch of 128 over physical batches of 64.
 //!
 //! Run: cargo run --release --example imdb_lstm_dp [-- --epochs 4
 //!      --train 512 --sigma 0.8]
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{EngineConfig, PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::PrivacyEngine;
 use opacus_rs::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -24,27 +24,38 @@ fn main() -> anyhow::Result<()> {
         sys.model.vocab, sys.model.input_shape, sys.model.layer_kinds
     );
 
-    let engine = PrivacyEngine::new(EngineConfig {
-        seed: 17,
-        ..Default::default()
-    });
-    // logical batch 128 over physical 64 => 2 virtual micro-steps/step
-    let pp = PrivacyParams::new(sigma, 1.0)
-        .with_lr(0.4)
-        .with_batches(128, 64);
-    let mut trainer = engine.make_private(sys, pp)?;
+    // logical batch 128 over physical 64: the batch memory manager runs
+    // each logical step as ~2 accumulation micro-steps
+    let mut private = PrivacyEngine::private()
+        .noise_multiplier(sigma)
+        .max_grad_norm(1.0)
+        .lr(0.4)
+        .logical_batch(128)
+        .physical_batch(64)
+        .seed(17)
+        .build(sys)?;
 
     for epoch in 0..epochs {
-        let loss = trainer.train_epoch()?;
+        let loss = private.train_epoch()?;
         println!(
             "epoch {epoch}: loss = {loss:.4}  ε = {:.3}",
-            trainer.epsilon(1e-5)?
+            private.epsilon(1e-5)?
         );
     }
-    let (eval_loss, acc) = trainer.evaluate()?;
+    let (eval_loss, acc) = private.evaluate()?;
     println!(
         "held-out: loss = {eval_loss:.4}, accuracy = {:.1}% (2-class)",
         acc * 100.0
     );
+    if let Some(bmm) = private.memory_manager() {
+        println!(
+            "batch memory manager: {} logical steps -> {} micro steps \
+             (amplification {:.2}x, peak logical batch {})",
+            bmm.logical_steps(),
+            bmm.micro_steps(),
+            bmm.amplification(),
+            bmm.peak_logical_batch()
+        );
+    }
     Ok(())
 }

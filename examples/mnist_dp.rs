@@ -4,14 +4,14 @@
 //! privacy trajectory and held-out accuracy, and write everything to
 //! results/mnist_dp_run.json.
 //!
-//! σ is calibrated for a target budget of (ε = 3.0, δ = 1e-5) — the
-//! `make_private_with_epsilon` path.
+//! σ is calibrated for a target budget of (ε = 3.0, δ = 1e-5) through the
+//! builder's `.target_epsilon` — the `make_private_with_epsilon` path.
 //!
 //! Run: cargo run --release --example mnist_dp [-- --epochs 12
 //!      --train 2048 --batch 64 --eps 3.0 --secure]
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{EngineConfig, PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::{NoiseSource, PrivacyEngine, SamplingMode};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 
@@ -27,20 +27,26 @@ fn main() -> anyhow::Result<()> {
 
     println!("== opacus-rs end-to-end driver: MNIST CNN (26,010 params) ==");
     let sys = Opacus::load_with_data("artifacts", "mnist", n_train, 512, 0)?;
-    let engine = PrivacyEngine::new(EngineConfig {
-        secure_mode: args.has_flag("secure"),
-        seed: 42,
-        deterministic: true,
-        ..Default::default()
-    });
 
-    let mut pp = PrivacyParams::new(0.0, 1.0)
-        .with_lr(lr)
-        .with_batches(batch, 64);
-    if args.has_flag("uniform") {
-        pp = pp.uniform_sampling();
-    }
-    let mut trainer = engine.make_private_with_epsilon(sys, pp, target_eps, delta, epochs)?;
+    let mut trainer = PrivacyEngine::private()
+        .noise(if args.has_flag("secure") {
+            NoiseSource::Deterministic
+        } else {
+            NoiseSource::Standard
+        })
+        .sampling(if args.has_flag("uniform") {
+            SamplingMode::Uniform
+        } else {
+            SamplingMode::Poisson
+        })
+        .max_grad_norm(1.0)
+        .lr(lr)
+        .logical_batch(batch)
+        .physical_batch(64)
+        .seed(42)
+        .target_epsilon(target_eps, delta, epochs)
+        .build(sys)?
+        .into_trainer();
     println!(
         "calibrated σ = {:.3} for (ε={target_eps}, δ={delta}) over {} steps \
          (q = {:.4}, Poisson sampling)",

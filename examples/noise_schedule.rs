@@ -10,16 +10,19 @@
 
 use opacus_rs::accounting::{Accountant, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{NoiseScheduler, PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::{NoiseScheduler, PrivacyEngine};
 
 fn main() -> anyhow::Result<()> {
     let sys = Opacus::load_with_data("artifacts", "mnist", 512, 128, 5)?;
-    let engine = PrivacyEngine::default();
-    let pp = PrivacyParams::new(/* base σ */ 1.4, 1.0)
-        .with_lr(0.3)
-        .with_batches(64, 64);
     let sample_rate = 64.0 / 512.0;
-    let mut trainer = engine.make_private(sys, pp)?;
+    let mut trainer = PrivacyEngine::private()
+        .noise_multiplier(/* base σ */ 1.4)
+        .max_grad_norm(1.0)
+        .lr(0.3)
+        .logical_batch(64)
+        .physical_batch(64)
+        .build(sys)?
+        .into_trainer();
     trainer.noise_scheduler = NoiseScheduler::Exponential { gamma: 0.9 };
 
     // shadow ledgers to compare accountants on the same schedule

@@ -5,31 +5,47 @@
 //!     model, optimizer, data_loader = privacy_engine.make_private(...)  # line 2
 //!     # Now it's business as usual
 //!
+//! Here the two lines are the typed builder: `PrivacyEngine::private()`
+//! configures, `.build(sys)` wraps — returning a `Private` bundle with
+//! the trainer plus optimizer and loader handles (the paper's
+//! three-object wrap).
+//!
 //! Run: cargo run --release --example quickstart
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::PrivacyEngine;
 
 fn main() -> anyhow::Result<()> {
     // dataset + model + optimizer: one loaded system (AOT artifacts)
     let sys = Opacus::load("artifacts", "mnist")?;
 
     // the two Opacus lines:
-    let privacy_engine = PrivacyEngine::default();
-    let mut trainer = privacy_engine.make_private(
-        sys,
-        PrivacyParams::new(/* noise_multiplier */ 1.1, /* max_grad_norm */ 1.0)
-            .with_lr(0.25)
-            .with_batches(/* logical */ 64, /* physical */ 64),
-    )?;
+    let mut private = PrivacyEngine::private()
+        .noise_multiplier(1.1)
+        .max_grad_norm(1.0)
+        .lr(0.25)
+        .logical_batch(64)
+        .physical_batch(64)
+        .build(sys)?;
 
-    // now it's business as usual
+    // the bundle mirrors the model/optimizer/loader wrap:
+    println!(
+        "optimizer: σ = {}, C = {} ({}); loader: {:?}, q = {:.4}, {} steps/epoch",
+        private.optimizer.noise_multiplier,
+        private.optimizer.max_grad_norm,
+        private.optimizer.clipping.as_str(),
+        private.loader.sampling,
+        private.loader.sample_rate,
+        private.loader.steps_per_epoch,
+    );
+
+    // now it's business as usual (`Private` derefs to the trainer)
     for epoch in 0..3 {
-        let loss = trainer.train_epoch()?;
-        let eps = trainer.epsilon(1e-5)?;
+        let loss = private.train_epoch()?;
+        let eps = private.epsilon(1e-5)?;
         println!("epoch {epoch}: loss = {loss:.4}   (ε, δ) = ({eps:.3}, 1e-5)");
     }
-    let (eval_loss, acc) = trainer.evaluate()?;
+    let (eval_loss, acc) = private.evaluate()?;
     println!("held-out: loss = {eval_loss:.4}, accuracy = {:.1}%", acc * 100.0);
     Ok(())
 }

@@ -4,9 +4,9 @@
 //!
 //! Run: cargo run --release --example validate_model
 
-use opacus_rs::privacy::validator::{validate_model, validate_model_with_custom};
-use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
 use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::validator::{validate_model, validate_model_with_custom};
+use opacus_rs::privacy::PrivacyEngine;
 use opacus_rs::runtime::artifact::ModelMeta;
 
 fn meta(kinds: &[&str]) -> ModelMeta {
@@ -44,12 +44,15 @@ fn main() -> anyhow::Result<()> {
     let errs = validate_model_with_custom(&custom, &["my_custom_attention"]);
     println!("  {} violations\n", errs.len());
 
-    println!("== 4. make_private refuses to wrap an invalid model ==");
+    println!("== 4. the builder refuses to wrap an invalid model ==");
     // forge a system whose manifest model carries a batchnorm
     let mut sys = Opacus::load("artifacts", "mnist")?;
     sys.model.layer_kinds.push("batchnorm".to_string());
-    let engine = PrivacyEngine::default();
-    match engine.make_private(sys, PrivacyParams::new(1.1, 1.0)) {
+    match PrivacyEngine::private()
+        .noise_multiplier(1.1)
+        .max_grad_norm(1.0)
+        .build(sys)
+    {
         Err(e) => println!("  refused as expected:\n  {e}"),
         Ok(_) => anyhow::bail!("validator failed to reject batchnorm!"),
     }

@@ -11,15 +11,21 @@
 //! reduction from the smallest to the largest batch.
 //!
 //! Usage: cargo bench --bench table1 [-- --tasks mnist,embed
-//!        --samples 512 --epochs 3 --out results/table1.json]
+//!        --samples 512 --epochs 3 --out results/table1.json
+//!        --bench-out BENCH_pr1.json]
+//!
+//! `--bench-out` records the perf-trajectory baseline: steps/sec of the
+//! DP variant at the canonical physical batch (64) per task.
 
-use opacus_rs::bench::{EpochTimer, TaskWorkload, Variant};
+use opacus_rs::bench::{steps_per_sec, EpochTimer, TaskWorkload, Variant};
 use opacus_rs::runtime::artifact::Registry;
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 use opacus_rs::util::table::Table;
 
 const ALL_BATCHES: [usize; 6] = [16, 32, 64, 128, 256, 512];
+/// The batch size the perf-trajectory baseline is recorded at.
+const BASELINE_BATCH: usize = 64;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +41,8 @@ fn main() -> anyhow::Result<()> {
 
     let reg = Registry::open("artifacts")?;
     let mut all_results: Vec<Json> = Vec::new();
+    // (task, steps/sec) of the DP variant at the baseline batch
+    let mut baseline: Vec<(String, f64)> = Vec::new();
 
     for task in &tasks {
         let title = format!(
@@ -59,13 +67,18 @@ fn main() -> anyhow::Result<()> {
                             first = Some(t);
                         }
                         last = Some(t);
+                        let sps = steps_per_sec(b, samples, t);
                         all_results.push(Json::obj(vec![
                             ("task", Json::str(task)),
                             ("variant", Json::str(variant.row_label())),
                             ("batch", Json::num(b as f64)),
                             ("median_epoch_s", Json::num(t)),
+                            ("steps_per_sec", Json::num(sps)),
                             ("compile_s", Json::num(w.compile_secs)),
                         ]));
+                        if variant == Variant::Dp && b == BASELINE_BATCH {
+                            baseline.push((task.clone(), sps));
+                        }
                         Some(t)
                     }
                     Err(_) => None,
@@ -91,6 +104,36 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all("results").ok();
     std::fs::write(&out_path, Json::Arr(all_results).to_string())?;
     println!("raw results -> {out_path}");
+    if let Some(bench_out) = args.get("bench-out") {
+        let tasks = Json::obj(
+            baseline
+                .iter()
+                .map(|(t, sps)| (t.as_str(), Json::num(*sps)))
+                .collect(),
+        );
+        // keep the schema of the committed BENCH_pr*.json files: the
+        // regeneration command and status survive a rewrite
+        let command = format!(
+            "cd rust && cargo bench --bench table1 -- --samples {samples} --epochs {epochs} \
+             --bench-out {bench_out}"
+        );
+        let j = Json::obj(vec![
+            ("bench", Json::str("rust/benches/table1.rs")),
+            (
+                "metric",
+                Json::str(&format!(
+                    "steps_per_sec at physical batch {BASELINE_BATCH}, variant opacus-rs (DP)"
+                )),
+            ),
+            ("command", Json::str(&command)),
+            ("samples_per_epoch", Json::num(samples as f64)),
+            ("epochs", Json::num(epochs as f64)),
+            ("status", Json::str("recorded")),
+            ("tasks", tasks),
+        ]);
+        std::fs::write(bench_out, j.to_string())?;
+        println!("perf baseline -> {bench_out}");
+    }
     println!(
         "(batches 1024/2048 omitted: single-core CPU testbed — see EXPERIMENTS.md; \
          cifar/lstm generated at 16/64/256 only)"

@@ -7,6 +7,8 @@
 //! public, so user-defined accountants plug in exactly like Opacus's
 //! "interface to write custom privacy accountants".
 
+use anyhow::{bail, Result};
+
 use super::{gdp, rdp};
 
 /// A privacy accountant: records mechanism invocations, answers ε queries.
@@ -157,12 +159,20 @@ impl Accountant for GdpAccountant {
     }
 }
 
-/// Accountant selection (CLI / config).
-pub fn make_accountant(kind: &str) -> Option<Box<dyn Accountant>> {
+/// Accountant names accepted by [`make_accountant`] (and by the CLI's
+/// `--accountant` flag / `AccountantKind::from_str`).
+pub const VALID_ACCOUNTANTS: &[&str] = &["rdp", "gdp"];
+
+/// Accountant selection (CLI / config). Unknown names are an error (not a
+/// panic) so the failure can surface through `PrivateBuilder::build`.
+pub fn make_accountant(kind: &str) -> Result<Box<dyn Accountant>> {
     match kind {
-        "rdp" => Some(Box::new(RdpAccountant::new())),
-        "gdp" => Some(Box::new(GdpAccountant::new())),
-        _ => None,
+        "rdp" => Ok(Box::new(RdpAccountant::new())),
+        "gdp" => Ok(Box::new(GdpAccountant::new())),
+        other => bail!(
+            "unknown accountant '{other}' (valid kinds: {})",
+            VALID_ACCOUNTANTS.join(", ")
+        ),
     }
 }
 
@@ -243,7 +253,19 @@ mod tests {
     fn factory() {
         assert_eq!(make_accountant("rdp").unwrap().mechanism(), "rdp");
         assert_eq!(make_accountant("gdp").unwrap().mechanism(), "gdp");
-        assert!(make_accountant("prv").is_none());
+        assert!(make_accountant("prv").is_err());
+    }
+
+    #[test]
+    fn factory_error_lists_valid_kinds() {
+        let err = make_accountant("prv")
+            .err()
+            .expect("unknown accountant must be an error")
+            .to_string();
+        assert!(err.contains("prv"), "error should name the bad kind: {err}");
+        for kind in VALID_ACCOUNTANTS {
+            assert!(err.contains(kind), "error should list '{kind}': {err}");
+        }
     }
 
     #[test]

@@ -12,5 +12,7 @@ pub mod gdp;
 pub mod rdp;
 pub mod special;
 
-pub use accountant::{make_accountant, Accountant, GdpAccountant, RdpAccountant};
+pub use accountant::{
+    make_accountant, Accountant, GdpAccountant, RdpAccountant, VALID_ACCOUNTANTS,
+};
 pub use calibration::{get_noise_multiplier, CalibKind};

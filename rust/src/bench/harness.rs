@@ -189,6 +189,16 @@ impl TaskWorkload {
     }
 }
 
+/// Optimizer steps per wall-second for an epoch of `samples` samples at
+/// batch `batch` that took `epoch_secs` — the perf-trajectory metric
+/// recorded in BENCH_pr*.json baselines.
+pub fn steps_per_sec(batch: usize, samples: usize, epoch_secs: f64) -> f64 {
+    if epoch_secs <= 0.0 || batch == 0 {
+        return 0.0;
+    }
+    samples.div_ceil(batch) as f64 / epoch_secs
+}
+
 /// Formatting helper: seconds or "-" for missing cells.
 pub struct EpochTimer;
 
@@ -217,6 +227,15 @@ mod tests {
             "embed_jaxstyle_b64"
         );
         assert_eq!(Variant::NoDp.artifact_name("cifar", 256), "cifar_nodp_b256");
+    }
+
+    #[test]
+    fn steps_per_sec_math() {
+        // 512 samples at b64 = 8 steps; 4 s epoch -> 2 steps/s
+        assert_eq!(steps_per_sec(64, 512, 4.0), 2.0);
+        // ragged epoch rounds the step count up
+        assert_eq!(steps_per_sec(64, 100, 1.0), 2.0);
+        assert_eq!(steps_per_sec(64, 512, 0.0), 0.0);
     }
 
     #[test]

@@ -7,5 +7,5 @@
 pub mod harness;
 pub mod layers;
 
-pub use harness::{EpochTimer, TaskWorkload, Variant};
+pub use harness::{steps_per_sec, EpochTimer, TaskWorkload, Variant};
 pub use layers::LayerWorkload;

@@ -1,22 +1,48 @@
 //! The user-facing facade — the paper's two-line `make_private` promise.
 //!
+//! The preferred API is the typed [`PrivateBuilder`]
+//! (entered through `PrivacyEngine::private()` or `Opacus::make_private()`):
+//!
 //! ```no_run
 //! use opacus_rs::coordinator::Opacus;
-//! use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+//! use opacus_rs::privacy::PrivacyEngine;
 //!
 //! let sys = Opacus::load("artifacts", "mnist").unwrap();
-//! let engine = PrivacyEngine::default();
-//! let mut trainer = engine
-//!     .make_private(sys, PrivacyParams::new(1.1, 1.0))
+//! let mut private = PrivacyEngine::private()   // line 1
+//!     .noise_multiplier(1.1)
+//!     .max_grad_norm(1.0)
+//!     .build(sys)                              // line 2
 //!     .unwrap();
-//! trainer.train_epochs(3).unwrap();
-//! println!("ε = {:.3}", trainer.epsilon(1e-5).unwrap());
+//! private.train_epochs(3).unwrap();
+//! println!("ε = {:.3}", private.epsilon(1e-5).unwrap());
 //! ```
+//!
+//! `build` returns a [`Private`](crate::privacy::Private) bundle — the
+//! wrapped trainer plus optimizer and loader handles, mirroring the
+//! paper's three-object (model, optimizer, data loader) wrap. The bundle
+//! `Deref`s to the trainer, so training calls go straight through.
+//!
+//! A privacy budget instead of a fixed σ:
+//!
+//! ```no_run
+//! # use opacus_rs::coordinator::Opacus;
+//! # use opacus_rs::privacy::PrivacyEngine;
+//! # let sys = Opacus::load("artifacts", "mnist").unwrap();
+//! let private = PrivacyEngine::private()
+//!     .target_epsilon(3.0, 1e-5, /* epochs */ 3)
+//!     .build(sys)
+//!     .unwrap();
+//! ```
+//!
+//! The pre-builder monolithic entry points
+//! (`engine.make_private(sys, pp)` / `make_private_with_epsilon`) remain
+//! as thin deprecated shims.
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 use crate::data::{synth, Dataset};
+use crate::privacy::builder::PrivateBuilder;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::runtime::artifact::{ModelMeta, Registry};
 use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, TrainStep};
@@ -75,34 +101,37 @@ impl Opacus {
         })
     }
 
-    /// Load the step set for the given privacy parameters.
+    /// Start a typed [`PrivateBuilder`] — identical to
+    /// `PrivacyEngine::private()`, offered here so the facade alone is
+    /// enough: `Opacus::make_private().noise_multiplier(1.1).build(sys)`.
+    pub fn make_private() -> PrivateBuilder {
+        PrivateBuilder::new()
+    }
+
+    /// Load the step set for the given privacy parameters, discovering
+    /// batch sizes from the registry (no hard-coded `_b64` names).
     fn steps_for(&self, pp: &PrivacyParams) -> Result<TrainerSteps> {
-        let task = &self.model.task;
-        let fused_name = format!("{task}_dp_b{}", pp.physical_batch);
-        let fused_dp = if self.registry.available(&fused_name) {
-            Some(TrainStep::load(&self.registry, &fused_name)?)
-        } else {
-            None
-        };
-        // accum/apply/eval are emitted at the canonical batch (64)
-        let accum_name = format!("{task}_accum_b64");
-        let accum = if self.registry.available(&accum_name) {
-            Some(AccumStep::load(&self.registry, &accum_name)?)
-        } else {
-            None
-        };
-        let apply_name = format!("{task}_apply_b64");
-        let apply = if self.registry.available(&apply_name) {
-            Some(ApplyStep::load(&self.registry, &apply_name)?)
-        } else {
-            None
-        };
-        let eval_name = format!("{task}_eval_b64");
-        let eval = if self.registry.available(&eval_name) {
-            Some(EvalStep::load(&self.registry, &eval_name)?)
-        } else {
-            None
-        };
+        let sel = select_steps(&self.registry, &self.model.task, pp.physical_batch);
+        let fused_dp = sel
+            .fused
+            .as_deref()
+            .map(|n| TrainStep::load(&self.registry, n))
+            .transpose()?;
+        let accum = sel
+            .accum
+            .as_deref()
+            .map(|n| AccumStep::load(&self.registry, n))
+            .transpose()?;
+        let apply = sel
+            .apply
+            .as_deref()
+            .map(|n| ApplyStep::load(&self.registry, n))
+            .transpose()?;
+        let eval = sel
+            .eval
+            .as_deref()
+            .map(|n| EvalStep::load(&self.registry, n))
+            .transpose()?;
         Ok(TrainerSteps {
             fused_dp,
             accum,
@@ -112,27 +141,74 @@ impl Opacus {
     }
 }
 
+/// The artifact names chosen for one task at one physical batch size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepSelection {
+    /// Fused DP step — only at the exact physical batch (its batch IS the
+    /// logical batch in fused mode).
+    pub fused: Option<String>,
+    pub accum: Option<String>,
+    pub apply: Option<String>,
+    pub eval: Option<String>,
+}
+
+/// Discover step executables from the registry: for accum/apply/eval,
+/// enumerate the available batch sizes and pick the largest ≤
+/// `physical_batch` (falling back to the smallest available — more
+/// chunks, still correct — when every compiled batch is larger).
+pub fn select_steps(reg: &Registry, task: &str, physical_batch: usize) -> StepSelection {
+    let pick = |variant: &str| -> Option<String> {
+        let batches = reg.batches_for(task, variant);
+        let best = batches
+            .iter()
+            .rev()
+            .find(|&&b| b <= physical_batch)
+            .or_else(|| batches.first())?;
+        Some(format!("{task}_{variant}_b{best}"))
+    };
+    let fused_name = format!("{task}_dp_b{physical_batch}");
+    StepSelection {
+        fused: reg.available(&fused_name).then_some(fused_name),
+        accum: pick("accum"),
+        apply: pick("apply"),
+        eval: pick("eval"),
+    }
+}
+
+/// Shared wrap path: validate the model, discover + load steps, assemble
+/// the trainer. Used by `PrivateBuilder::build` and the legacy shims.
+pub(crate) fn build_with_engine(
+    engine: PrivacyEngine,
+    sys: Opacus,
+    pp: PrivacyParams,
+) -> Result<PrivateTrainer> {
+    engine.validate(&sys.model)?;
+    let steps = sys.steps_for(&pp)?;
+    PrivateTrainer::new(
+        &sys.model.task,
+        sys.init_params,
+        steps,
+        sys.train,
+        Some(sys.test),
+        engine,
+        pp,
+    )
+}
+
 impl PrivacyEngine {
-    /// Wrap a loaded system into its differentially private analogue:
-    /// the model becomes per-sample-gradient capable (it was AOT-compiled
-    /// that way), the optimizer clips + noises, the loader becomes a
-    /// Poisson sampler. One call — the paper's headline API.
+    /// Monolithic wrap — kept as a thin shim over the builder pipeline.
+    #[deprecated(note = "use the typed builder: `PrivacyEngine::private()…build(sys)`")]
     pub fn make_private(self, sys: Opacus, pp: PrivacyParams) -> Result<PrivateTrainer> {
-        self.validate(&sys.model)?;
-        let steps = sys.steps_for(&pp)?;
-        PrivateTrainer::new(
-            &sys.model.task,
-            sys.init_params,
-            steps,
-            sys.train,
-            Some(sys.test),
-            self,
-            pp,
-        )
+        let mut pp = pp;
+        pp.num_layers = sys.model.layer_kinds.len().max(1);
+        build_with_engine(self, sys, pp)
     }
 
-    /// `make_private_with_epsilon`: calibrate σ for a target (ε, δ) over
-    /// `epochs` epochs, then wrap.
+    /// Monolithic calibrated wrap — kept as a thin shim; prefer
+    /// `PrivacyEngine::private().target_epsilon(ε, δ, epochs).build(sys)`.
+    #[deprecated(
+        note = "use the typed builder: `PrivacyEngine::private().target_epsilon(…)…build(sys)`"
+    )]
     pub fn make_private_with_epsilon(
         self,
         sys: Opacus,
@@ -147,6 +223,117 @@ impl PrivacyEngine {
         let total_steps = steps_per_epoch * epochs as u64;
         let sigma = self.calibrate_sigma(target_eps, delta, q, total_steps)?;
         pp.noise_multiplier = sigma;
-        self.make_private(sys, pp)
+        pp.num_layers = sys.model.layer_kinds.len().max(1);
+        build_with_engine(self, sys, pp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a synthetic on-disk registry: a manifest naming accum/apply/
+    /// eval artifacts at several batch sizes, with files on disk only for
+    /// a subset (discovery must honour both the manifest and the disk).
+    fn synthetic_registry(tag: &str, on_disk: &[&str]) -> (std::path::PathBuf, Registry) {
+        let dir = std::env::temp_dir().join(format!(
+            "opacus_rs_selftest_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok(); // stale leftovers from a dead run
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut artifacts = String::new();
+        for (i, name) in [
+            "mnist_accum_b16",
+            "mnist_accum_b32",
+            "mnist_accum_b64",
+            "mnist_apply_b32",
+            "mnist_eval_b32",
+            "mnist_dp_b48",
+        ]
+        .iter()
+        .enumerate()
+        {
+            let batch: usize = name.rsplit('_').next().unwrap()[1..].parse().unwrap();
+            let variant = name.split('_').nth(1).unwrap();
+            if i > 0 {
+                artifacts.push(',');
+            }
+            artifacts.push_str(&format!(
+                r#"{{"name": "{name}", "file": "{name}.hlo.txt", "kind": "train",
+                    "variant": "{variant}", "task": "mnist", "batch": {batch},
+                    "num_params": 10, "inputs": [], "outputs": []}}"#
+            ));
+        }
+        let manifest = format!(r#"{{"version": 1, "artifacts": [{artifacts}]}}"#);
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        for name in on_disk {
+            std::fs::write(dir.join(format!("{name}.hlo.txt")), "stub").unwrap();
+        }
+        let reg = Registry::open(&dir).unwrap();
+        (dir, reg)
+    }
+
+    #[test]
+    fn select_steps_picks_largest_batch_at_most_physical() {
+        let (dir, reg) = synthetic_registry(
+            "pick",
+            &[
+                "mnist_accum_b16",
+                "mnist_accum_b32",
+                "mnist_accum_b64",
+                "mnist_apply_b32",
+                "mnist_eval_b32",
+            ],
+        );
+        let sel = select_steps(&reg, "mnist", 64);
+        assert_eq!(sel.accum.as_deref(), Some("mnist_accum_b64"));
+        assert_eq!(sel.apply.as_deref(), Some("mnist_apply_b32"));
+        assert_eq!(sel.eval.as_deref(), Some("mnist_eval_b32"));
+        assert_eq!(sel.fused, None); // no mnist_dp_b64 in the manifest
+
+        // physical 48: largest accum ≤ 48 is b32 — no hard-coded b64
+        let sel = select_steps(&reg, "mnist", 48);
+        assert_eq!(sel.accum.as_deref(), Some("mnist_accum_b32"));
+
+        // physical 8: nothing ≤ 8, fall back to the smallest available
+        let sel = select_steps(&reg, "mnist", 8);
+        assert_eq!(sel.accum.as_deref(), Some("mnist_accum_b16"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn select_steps_ignores_manifest_entries_missing_on_disk() {
+        // b64 is in the manifest but absent on disk: discovery must skip it
+        let (dir, reg) = synthetic_registry("disk", &["mnist_accum_b16", "mnist_accum_b32"]);
+        let sel = select_steps(&reg, "mnist", 64);
+        assert_eq!(sel.accum.as_deref(), Some("mnist_accum_b32"));
+        assert_eq!(sel.apply, None);
+        assert_eq!(sel.eval, None);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn select_steps_fused_requires_exact_batch() {
+        let (dir, reg) = synthetic_registry("fused", &["mnist_dp_b48"]);
+        assert_eq!(
+            select_steps(&reg, "mnist", 48).fused.as_deref(),
+            Some("mnist_dp_b48")
+        );
+        assert_eq!(select_steps(&reg, "mnist", 64).fused, None);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn select_steps_unknown_task_selects_nothing() {
+        let (dir, reg) = synthetic_registry("task", &["mnist_accum_b16"]);
+        let sel = select_steps(&reg, "cifar", 64);
+        assert_eq!(sel, StepSelection {
+            fused: None,
+            accum: None,
+            apply: None,
+            eval: None
+        });
+        std::fs::remove_dir_all(dir).ok();
     }
 }

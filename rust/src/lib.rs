@@ -15,16 +15,27 @@
 //!
 //! ```no_run
 //! use opacus_rs::coordinator::Opacus;
-//! use opacus_rs::privacy::{PrivacyEngine, PrivacyParams};
+//! use opacus_rs::privacy::PrivacyEngine;
 //!
 //! let sys = Opacus::load("artifacts", "mnist").unwrap();
-//! let engine = PrivacyEngine::default();
-//! let mut trainer = engine
-//!     .make_private(sys, PrivacyParams::new(1.1, 1.0))
+//! let mut private = PrivacyEngine::private()   // line 1: the builder
+//!     .noise_multiplier(1.1)
+//!     .max_grad_norm(1.0)
+//!     .build(sys)                              // line 2: the wrap
 //!     .unwrap();
-//! trainer.train_epochs(3).unwrap();
-//! println!("spent ε = {:.3}", trainer.epsilon(1e-5).unwrap());
+//! private.train_epochs(3).unwrap();
+//! println!("spent ε = {:.3}", private.epsilon(1e-5).unwrap());
 //! ```
+//!
+//! The builder is fully typed — [`privacy::AccountantKind`],
+//! [`privacy::ClippingStrategy`], [`privacy::NoiseSource`],
+//! [`privacy::SamplingMode`], explicit `.logical_batch(n)` /
+//! `.physical_batch(n)` — and `build` returns a [`privacy::Private`]
+//! bundle (trainer + optimizer handle + loader handle, the paper's
+//! three-object wrap). Budget-first training swaps the fixed σ for
+//! `.target_epsilon(3.0, 1e-5, epochs)`. Logical batches larger than the
+//! physical batch are virtualized by the
+//! [`trainer::BatchMemoryManager`] with identical privacy accounting.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables

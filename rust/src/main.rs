@@ -19,7 +19,9 @@ use anyhow::{bail, Result};
 use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
 use opacus_rs::privacy::validator::validate_model;
-use opacus_rs::privacy::{EngineConfig, NoiseScheduler, PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::{
+    AccountantKind, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine, SamplingMode,
+};
 use opacus_rs::runtime::artifact::Registry;
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::table::Table;
@@ -50,9 +52,10 @@ USAGE: opacus <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS
   train      --task mnist|cifar|embed|lstm [--epochs N] [--sigma S | --eps E]
-             [--clip C] [--lr L] [--batch B] [--train N] [--delta D]
-             [--schedule constant|exp:G|step:N:G] [--secure] [--uniform]
-             [--accountant rdp|gdp] [--artifacts DIR] [--out metrics.json]
+             [--clip C] [--lr L] [--batch B] [--physical B] [--train N]
+             [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
+             [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
+             [--artifacts DIR] [--out metrics.json]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
   validate   --task T [--artifacts DIR]
@@ -68,46 +71,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     let delta = args.get_f64("delta", 1e-5)?;
     let lr = args.get_f64("lr", 0.25)?;
     let clip = args.get_f64("clip", 1.0)?;
+    let uniform = args.has_flag("uniform");
+    // --uniform defaults physical to the logical batch (fused step), but
+    // an explicit --physical still wins (uniform + virtual steps)
+    let physical = if uniform {
+        args.get_usize("physical", batch)?
+    } else {
+        args.get_usize("physical", 64)?
+    };
 
     let sys = Opacus::load_with_data(&artifacts, &task, n_train, (n_train / 8).max(32), 0)?;
-    let engine = PrivacyEngine::new(EngineConfig {
-        accountant: args.get_or("accountant", "rdp").to_string(),
-        secure_mode: args.has_flag("secure"),
-        seed: args.get_u64("seed", 42)?,
-        deterministic: true,
-    });
 
-    let mut pp = PrivacyParams::new(args.get_f64("sigma", 1.1)?, clip)
-        .with_lr(lr)
-        .with_batches(batch, 64);
-    if args.has_flag("uniform") {
-        // uniform + logical==physical uses the fused artifact when present
-        pp.physical_batch = batch;
-        pp = pp.uniform_sampling();
-    }
-
-    let mut trainer = if let Some(eps) = args.get("eps") {
+    // every CLI flag maps onto one typed builder method
+    let mut builder = PrivacyEngine::private()
+        .accountant(args.get_or("accountant", "rdp").parse::<AccountantKind>()?)
+        .clipping(args.get_or("clipping", "flat").parse::<ClippingStrategy>()?)
+        .noise(if args.has_flag("secure") {
+            NoiseSource::Deterministic
+        } else {
+            NoiseSource::Standard
+        })
+        .sampling(if uniform {
+            SamplingMode::Uniform
+        } else {
+            SamplingMode::Poisson
+        })
+        .noise_multiplier(args.get_f64("sigma", 1.1)?)
+        .max_grad_norm(clip)
+        .lr(lr)
+        .logical_batch(batch)
+        .physical_batch(physical)
+        .seed(args.get_u64("seed", 42)?);
+    if let Some(eps) = args.get("eps") {
         let eps: f64 = eps.parse()?;
         println!("calibrating σ for (ε={eps}, δ={delta}) over {epochs} epochs…");
-        engine.make_private_with_epsilon(sys, pp, eps, delta, epochs)?
-    } else {
-        engine.make_private(sys, pp)?
-    };
+        builder = builder.target_epsilon(eps, delta, epochs);
+    }
+    let private = builder.build(sys)?;
+    let (mut trainer, optimizer, loader) = private.into_parts();
     if let Some(s) = args.get("schedule") {
         trainer.noise_scheduler = NoiseScheduler::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --schedule '{s}'"))?;
     }
 
     println!(
-        "task={task} σ={:.3} C={clip} lr={lr} q={:.4} steps/epoch={} sampler={}",
+        "task={task} σ={:.3} C={clip} ({}, eff {:.3}) lr={lr} q={:.4} steps/epoch={} \
+         sampler={:?}",
         trainer.current_sigma(),
-        trainer.sample_rate(),
-        trainer.steps_per_epoch(),
-        if args.has_flag("uniform") {
-            "uniform"
-        } else {
-            "poisson"
-        },
+        optimizer.clipping.as_str(),
+        optimizer.effective_clip,
+        loader.sample_rate,
+        loader.steps_per_epoch,
+        loader.sampling,
     );
     for epoch in 0..epochs {
         let loss = trainer.train_epoch()?;

@@ -1,0 +1,591 @@
+//! `PrivateBuilder` — the typed, composable make-private API.
+//!
+//! The paper's headline is "make a training pipeline private by adding as
+//! little as two lines"; the engine separately wraps model, optimizer and
+//! data loader. This module is that API surface for opacus-rs: a builder
+//! entered through [`PrivacyEngine::private()`](crate::privacy::PrivacyEngine::private)
+//! (or `Opacus::make_private()`), configured with *typed* knobs —
+//! [`AccountantKind`], [`ClippingStrategy`], [`NoiseSource`],
+//! [`SamplingMode`], explicit logical/physical batch sizes — and finished
+//! with either a fixed noise multiplier or a privacy target
+//! (`.target_epsilon(ε, δ, epochs)`, the `make_private_with_epsilon`
+//! analogue). `build(sys)` returns a [`Private`] bundle mirroring the
+//! paper's three-object wrap: the trainer plus optimizer/loader handles.
+//!
+//! ```no_run
+//! use opacus_rs::coordinator::Opacus;
+//! use opacus_rs::privacy::PrivacyEngine;
+//!
+//! let sys = Opacus::load("artifacts", "mnist").unwrap();
+//! let mut private = PrivacyEngine::private()
+//!     .noise_multiplier(1.1)
+//!     .max_grad_norm(1.0)
+//!     .logical_batch(512)
+//!     .physical_batch(64)
+//!     .build(sys)
+//!     .unwrap();
+//! private.train_epochs(3).unwrap();
+//! println!("spent ε = {:.3}", private.epsilon(1e-5).unwrap());
+//! ```
+//!
+//! Every configuration error — an unknown accountant, a non-positive
+//! clip, an unreachable (ε, δ) target — surfaces as a `Result`, never a
+//! panic.
+
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+use crate::accounting::{calibration, CalibKind, VALID_ACCOUNTANTS};
+use crate::coordinator::Opacus;
+use crate::privacy::engine::{EngineConfig, PrivacyEngine, PrivacyParams};
+use crate::trainer::trainer::PrivateTrainer;
+
+/// Which privacy accountant keeps the ledger (typed replacement for the
+/// stringly `EngineConfig::accountant`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AccountantKind {
+    /// Rényi-DP of the Sampled Gaussian Mechanism — Opacus's default, a
+    /// strict guarantee.
+    #[default]
+    Rdp,
+    /// Gaussian-DP CLT accountant — tighter for small q / many steps, but
+    /// an asymptotic approximation.
+    Gdp,
+}
+
+impl AccountantKind {
+    pub const ALL: [AccountantKind; 2] = [AccountantKind::Rdp, AccountantKind::Gdp];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AccountantKind::Rdp => "rdp",
+            AccountantKind::Gdp => "gdp",
+        }
+    }
+
+    /// The calibration family used for `.target_epsilon`.
+    pub fn calib_kind(self) -> CalibKind {
+        match self {
+            AccountantKind::Rdp => CalibKind::Rdp,
+            AccountantKind::Gdp => CalibKind::Gdp,
+        }
+    }
+}
+
+impl FromStr for AccountantKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "rdp" => Ok(AccountantKind::Rdp),
+            "gdp" => Ok(AccountantKind::Gdp),
+            other => bail!(
+                "unknown accountant '{other}' (valid kinds: {})",
+                VALID_ACCOUNTANTS.join(", ")
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for AccountantKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How per-sample gradients are clipped before aggregation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClippingStrategy {
+    /// One global threshold C on the full flattened gradient (Opacus's
+    /// default `flat` clipping).
+    #[default]
+    Flat,
+    /// Split the clipping budget uniformly across the model's L layers:
+    /// each layer gets Cᵢ = C/√L, so the total L2 sensitivity stays ≤ C
+    /// (√(Σ Cᵢ²) = C). The compiled step graphs clip the flattened
+    /// gradient with one scalar, so the per-layer thresholds are enforced
+    /// through the global bound C/√L — a (conservative) sufficient
+    /// condition for every per-layer constraint; accounting is unchanged
+    /// because noise scales with the same effective clip.
+    PerLayer,
+}
+
+impl ClippingStrategy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClippingStrategy::Flat => "flat",
+            ClippingStrategy::PerLayer => "perlayer",
+        }
+    }
+
+    /// The scalar clip handed to the compiled step for a model with
+    /// `num_layers` trainable layers.
+    pub fn effective_clip(self, max_grad_norm: f64, num_layers: usize) -> f64 {
+        match self {
+            ClippingStrategy::Flat => max_grad_norm,
+            ClippingStrategy::PerLayer => max_grad_norm / (num_layers.max(1) as f64).sqrt(),
+        }
+    }
+}
+
+impl FromStr for ClippingStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "flat" => Ok(ClippingStrategy::Flat),
+            "perlayer" | "per_layer" => Ok(ClippingStrategy::PerLayer),
+            other => bail!("unknown clipping strategy '{other}' (valid: flat, perlayer)"),
+        }
+    }
+}
+
+/// Where DP noise (and batch-composition randomness) comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NoiseSource {
+    /// xoshiro256++ seeded from `.seed(..)` — fast, reproducible, not
+    /// cryptographically safe. The default.
+    #[default]
+    Standard,
+    /// ChaCha20 seeded from OS entropy — the paper's `secure_mode=True`.
+    Secure,
+    /// ChaCha20 seeded from `.seed(..)` — CSPRNG output streams with
+    /// test/replay reproducibility.
+    Deterministic,
+}
+
+impl NoiseSource {
+    /// (secure_mode, deterministic) for [`EngineConfig`].
+    fn engine_flags(self) -> (bool, bool) {
+        match self {
+            NoiseSource::Standard => (false, true),
+            NoiseSource::Secure => (true, false),
+            NoiseSource::Deterministic => (true, true),
+        }
+    }
+}
+
+/// How logical batches are composed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplingMode {
+    /// Each sample joins a batch independently with probability q — the
+    /// assumption behind the RDP analysis. The default.
+    #[default]
+    Poisson,
+    /// Shuffle + chunk. Accounting still uses q = B/N (the common
+    /// approximation, a documented deviation Opacus also allows); enables
+    /// the fused step when logical == physical batch.
+    Uniform,
+}
+
+/// A (ε, δ, epochs) privacy target: σ is calibrated at build time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpsilonTarget {
+    pub epsilon: f64,
+    pub delta: f64,
+    pub epochs: usize,
+}
+
+/// The noise/steps plan a builder resolves to for a dataset of n samples —
+/// exposed so calibration is testable without AOT artifacts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainingPlan {
+    /// Noise multiplier (given, or calibrated from the ε target).
+    pub sigma: f64,
+    /// DP-SGD sampling rate q = logical_batch / n (capped at 1).
+    pub sample_rate: f64,
+    /// Logical (privacy-accounted) steps per epoch, ⌈1/q⌉.
+    pub steps_per_epoch: u64,
+    /// Total steps the calibration assumed (only with a target set).
+    pub planned_steps: Option<u64>,
+}
+
+/// Read-only description of the wrapped optimizer (clip + noise + lr) —
+/// one of the three objects in the paper's model/optimizer/loader wrap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimizerHandle {
+    pub noise_multiplier: f64,
+    pub max_grad_norm: f64,
+    pub clipping: ClippingStrategy,
+    /// The scalar clip actually handed to the compiled steps (equals
+    /// `max_grad_norm` for flat clipping, C/√L for per-layer).
+    pub effective_clip: f64,
+    pub lr: f64,
+}
+
+/// Read-only description of the wrapped data loader.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoaderHandle {
+    pub sampling: SamplingMode,
+    pub logical_batch: usize,
+    pub physical_batch: usize,
+    pub sample_rate: f64,
+    pub steps_per_epoch: usize,
+}
+
+/// The three-object bundle `build` returns: the trainer plus handles for
+/// the wrapped optimizer and loader. `Deref`s to the trainer, so
+/// `private.train_epoch()` etc. work directly.
+pub struct Private<T> {
+    pub trainer: T,
+    pub optimizer: OptimizerHandle,
+    pub loader: LoaderHandle,
+}
+
+impl<T> std::ops::Deref for Private<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.trainer
+    }
+}
+
+impl<T> std::ops::DerefMut for Private<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.trainer
+    }
+}
+
+impl<T> Private<T> {
+    /// Unwrap the trainer, dropping the handles.
+    pub fn into_trainer(self) -> T {
+        self.trainer
+    }
+
+    /// Split into (trainer, optimizer handle, loader handle).
+    pub fn into_parts(self) -> (T, OptimizerHandle, LoaderHandle) {
+        (self.trainer, self.optimizer, self.loader)
+    }
+}
+
+/// Composable, typed configuration for wrapping a training system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrivateBuilder {
+    accountant: AccountantKind,
+    clipping: ClippingStrategy,
+    noise_source: NoiseSource,
+    sampling: SamplingMode,
+    noise_multiplier: f64,
+    max_grad_norm: f64,
+    lr: f64,
+    logical_batch: usize,
+    physical_batch: usize,
+    seed: u64,
+    target: Option<EpsilonTarget>,
+}
+
+impl Default for PrivateBuilder {
+    fn default() -> Self {
+        PrivateBuilder {
+            accountant: AccountantKind::Rdp,
+            clipping: ClippingStrategy::Flat,
+            noise_source: NoiseSource::Standard,
+            sampling: SamplingMode::Poisson,
+            noise_multiplier: 1.0,
+            max_grad_norm: 1.0,
+            lr: 0.05,
+            logical_batch: 64,
+            physical_batch: 64,
+            seed: 0,
+            target: None,
+        }
+    }
+}
+
+impl PrivateBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Choose the privacy accountant (default: RDP).
+    pub fn accountant(mut self, kind: AccountantKind) -> Self {
+        self.accountant = kind;
+        self
+    }
+
+    /// Choose the clipping strategy (default: flat).
+    pub fn clipping(mut self, strategy: ClippingStrategy) -> Self {
+        self.clipping = strategy;
+        self
+    }
+
+    /// Choose the noise source (default: standard PRNG).
+    pub fn noise(mut self, source: NoiseSource) -> Self {
+        self.noise_source = source;
+        self
+    }
+
+    /// Choose the batch sampler (default: Poisson).
+    pub fn sampling(mut self, mode: SamplingMode) -> Self {
+        self.sampling = mode;
+        self
+    }
+
+    /// Fixed noise multiplier σ (ignored when `.target_epsilon` is set).
+    pub fn noise_multiplier(mut self, sigma: f64) -> Self {
+        self.noise_multiplier = sigma;
+        self
+    }
+
+    /// Per-sample gradient clipping norm C.
+    pub fn max_grad_norm(mut self, clip: f64) -> Self {
+        self.max_grad_norm = clip;
+        self
+    }
+
+    /// SGD learning rate.
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Logical (privacy-accounted, DP-SGD lot) batch size.
+    pub fn logical_batch(mut self, n: usize) -> Self {
+        self.logical_batch = n;
+        self
+    }
+
+    /// Physical batch cap — the [`BatchMemoryManager`](crate::trainer::BatchMemoryManager)
+    /// virtualizes any larger logical batch over chunks of this size.
+    ///
+    /// Best-effort lower bound: step graphs are AOT-compiled at fixed
+    /// batch sizes, so when every available accum/apply artifact is
+    /// larger than `n`, the smallest compiled batch is used (each chunk
+    /// still holds ≤ n real samples, mask-padded to the compiled width).
+    pub fn physical_batch(mut self, n: usize) -> Self {
+        self.physical_batch = n;
+        self
+    }
+
+    /// Seed for the standard / deterministic noise sources.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Calibrate σ at build time so training `epochs` epochs spends at
+    /// most (ε, δ) — the `make_private_with_epsilon` path.
+    pub fn target_epsilon(mut self, epsilon: f64, delta: f64, epochs: usize) -> Self {
+        self.target = Some(EpsilonTarget {
+            epsilon,
+            delta,
+            epochs,
+        });
+        self
+    }
+
+    /// Resolve the noise/steps plan for a dataset of `n_train` samples.
+    /// Pure accounting — needs no artifacts, so calibration round-trips
+    /// are unit-testable.
+    pub fn plan(&self, n_train: usize) -> Result<TrainingPlan> {
+        if n_train == 0 {
+            bail!("cannot plan DP training over an empty dataset");
+        }
+        if self.logical_batch == 0 || self.physical_batch == 0 {
+            bail!(
+                "batch sizes must be positive (logical={}, physical={})",
+                self.logical_batch,
+                self.physical_batch
+            );
+        }
+        if self.max_grad_norm <= 0.0 {
+            bail!("max_grad_norm must be positive, got {}", self.max_grad_norm);
+        }
+        let q = (self.logical_batch as f64 / n_train as f64).min(1.0);
+        let steps_per_epoch = (1.0 / q).ceil() as u64;
+        match self.target {
+            Some(t) => {
+                if t.epochs == 0 {
+                    bail!("target_epsilon needs at least one epoch");
+                }
+                let planned = steps_per_epoch * t.epochs as u64;
+                let sigma = calibration::get_noise_multiplier(
+                    self.accountant.calib_kind(),
+                    t.epsilon,
+                    t.delta,
+                    q,
+                    planned,
+                )?;
+                Ok(TrainingPlan {
+                    sigma,
+                    sample_rate: q,
+                    steps_per_epoch,
+                    planned_steps: Some(planned),
+                })
+            }
+            None => {
+                if self.noise_multiplier <= 0.0 {
+                    bail!(
+                        "noise_multiplier must be positive (got {}); \
+                         set .noise_multiplier(σ) or .target_epsilon(ε, δ, epochs)",
+                        self.noise_multiplier
+                    );
+                }
+                Ok(TrainingPlan {
+                    sigma: self.noise_multiplier,
+                    sample_rate: q,
+                    steps_per_epoch,
+                    planned_steps: None,
+                })
+            }
+        }
+    }
+
+    fn engine_config(&self) -> EngineConfig {
+        let (secure_mode, deterministic) = self.noise_source.engine_flags();
+        EngineConfig {
+            accountant: self.accountant.as_str().to_string(),
+            secure_mode,
+            seed: self.seed,
+            deterministic,
+        }
+    }
+
+    /// Wrap a loaded system: validate the model, resolve the plan,
+    /// discover step executables, and return the three-object bundle.
+    pub fn build(self, sys: Opacus) -> Result<Private<PrivateTrainer>> {
+        let engine = PrivacyEngine::try_new(self.engine_config())?;
+        let plan = self.plan(sys.train.len())?;
+        let num_layers = sys.model.layer_kinds.len().max(1);
+        let pp = PrivacyParams {
+            noise_multiplier: plan.sigma,
+            max_grad_norm: self.max_grad_norm,
+            lr: self.lr,
+            logical_batch: self.logical_batch,
+            physical_batch: self.physical_batch,
+            poisson: self.sampling == SamplingMode::Poisson,
+            clipping: self.clipping,
+            num_layers,
+        };
+        let optimizer = OptimizerHandle {
+            noise_multiplier: plan.sigma,
+            max_grad_norm: self.max_grad_norm,
+            clipping: self.clipping,
+            effective_clip: self.clipping.effective_clip(self.max_grad_norm, num_layers),
+            lr: self.lr,
+        };
+        let trainer = crate::coordinator::build_with_engine(engine, sys, pp)?;
+        let loader = LoaderHandle {
+            sampling: self.sampling,
+            logical_batch: self.logical_batch,
+            physical_batch: self.physical_batch,
+            sample_rate: trainer.sample_rate(),
+            steps_per_epoch: trainer.steps_per_epoch(),
+        };
+        Ok(Private {
+            trainer,
+            optimizer,
+            loader,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::{make_accountant, Accountant};
+
+    #[test]
+    fn accountant_kind_round_trips() {
+        for kind in AccountantKind::ALL {
+            assert_eq!(kind.as_str().parse::<AccountantKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn unknown_accountant_error_lists_valid_kinds() {
+        let err = "prv".parse::<AccountantKind>().unwrap_err().to_string();
+        assert!(err.contains("prv"));
+        assert!(err.contains("rdp") && err.contains("gdp"), "{err}");
+    }
+
+    #[test]
+    fn clipping_strategy_effective_clip() {
+        assert_eq!(ClippingStrategy::Flat.effective_clip(1.5, 4), 1.5);
+        let per = ClippingStrategy::PerLayer.effective_clip(1.0, 4);
+        assert!((per - 0.5).abs() < 1e-12, "C/√4 = 0.5, got {per}");
+        // degenerate layer counts never divide by zero
+        assert_eq!(ClippingStrategy::PerLayer.effective_clip(1.0, 0), 1.0);
+        // budget is preserved: √(Σ (C/√L)²) = C
+        let l = 7usize;
+        let c = ClippingStrategy::PerLayer.effective_clip(2.0, l);
+        assert!(((c * c * l as f64).sqrt() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_fixed_sigma() {
+        let p = PrivateBuilder::new()
+            .noise_multiplier(1.3)
+            .logical_batch(64)
+            .plan(2048)
+            .unwrap();
+        assert_eq!(p.sigma, 1.3);
+        assert!((p.sample_rate - 64.0 / 2048.0).abs() < 1e-12);
+        assert_eq!(p.steps_per_epoch, 32);
+        assert_eq!(p.planned_steps, None);
+    }
+
+    #[test]
+    fn plan_rejects_bad_config() {
+        assert!(PrivateBuilder::new().plan(0).is_err());
+        assert!(PrivateBuilder::new().logical_batch(0).plan(100).is_err());
+        assert!(PrivateBuilder::new().physical_batch(0).plan(100).is_err());
+        assert!(PrivateBuilder::new().max_grad_norm(0.0).plan(100).is_err());
+        assert!(PrivateBuilder::new().noise_multiplier(0.0).plan(100).is_err());
+        assert!(PrivateBuilder::new()
+            .target_epsilon(3.0, 1e-5, 0)
+            .plan(100)
+            .is_err());
+    }
+
+    /// Satellite: calibration round-trip. For every accountant kind and
+    /// sampling mode, `.target_epsilon(ε, δ, epochs)` must yield a σ whose
+    /// spent ε after the planned steps is ≤ 1.05 × target.
+    #[test]
+    fn target_epsilon_round_trips_within_5_percent() {
+        let n = 4096;
+        for kind in AccountantKind::ALL {
+            for sampling in [SamplingMode::Poisson, SamplingMode::Uniform] {
+                for &(eps, delta, epochs) in
+                    &[(3.0, 1e-5, 3usize), (1.0, 1e-5, 5), (8.0, 1e-6, 2)]
+                {
+                    let builder = PrivateBuilder::new()
+                        .accountant(kind)
+                        .sampling(sampling)
+                        .logical_batch(128)
+                        .physical_batch(64)
+                        .target_epsilon(eps, delta, epochs);
+                    let plan = builder.plan(n).unwrap();
+                    let planned = plan.planned_steps.unwrap();
+                    assert_eq!(planned, plan.steps_per_epoch * epochs as u64);
+                    // replay the planned steps into a fresh ledger
+                    let mut acc = make_accountant(kind.as_str()).unwrap();
+                    acc.record(plan.sigma, plan.sample_rate, planned);
+                    let spent = acc.get_epsilon(delta);
+                    assert!(
+                        spent <= eps * 1.05,
+                        "{kind}/{sampling:?}: spent ε = {spent} > 1.05 × {eps}"
+                    );
+                    assert!(
+                        spent > eps * 0.5,
+                        "{kind}/{sampling:?}: calibration far too loose (ε = {spent} ≪ {eps})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_builder_is_valid() {
+        let plan = PrivateBuilder::default().plan(1024).unwrap();
+        assert_eq!(plan.sigma, 1.0);
+        assert_eq!(plan.steps_per_epoch, 16);
+    }
+
+    #[test]
+    fn logical_batch_larger_than_dataset_caps_q_at_one() {
+        let plan = PrivateBuilder::new().logical_batch(512).plan(100).unwrap();
+        assert_eq!(plan.sample_rate, 1.0);
+        assert_eq!(plan.steps_per_epoch, 1);
+    }
+}

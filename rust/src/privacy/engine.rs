@@ -18,6 +18,7 @@ use crate::accounting::{
 use crate::rng::{gaussian, make_rng, Rng, RngKind};
 use crate::runtime::artifact::ModelMeta;
 
+use super::builder::{ClippingStrategy, PrivateBuilder};
 use super::validator;
 
 /// Engine-level configuration.
@@ -45,6 +46,10 @@ impl Default for EngineConfig {
 }
 
 /// Per-run privacy hyperparameters handed to `make_private`.
+///
+/// Prefer configuring these through [`PrivateBuilder`]
+/// (`PrivacyEngine::private()`); this struct remains the wire format the
+/// builder resolves to and the legacy `make_private(sys, pp)` shim accepts.
 #[derive(Debug, Clone)]
 pub struct PrivacyParams {
     pub noise_multiplier: f64,
@@ -52,12 +57,18 @@ pub struct PrivacyParams {
     pub lr: f64,
     /// Expected logical batch (DP-SGD lot size).
     pub logical_batch: usize,
-    /// Physical batch the executables were compiled for.
+    /// Physical batch cap; the batch memory manager virtualizes larger
+    /// logical batches over chunks of (at most) this size.
     pub physical_batch: usize,
     /// Poisson sampling (true, default — required by the RDP analysis)
     /// or uniform shuffling (false; accounting still uses q = B/N, the
     /// common approximation — a documented deviation Opacus also allows).
     pub poisson: bool,
+    /// How the clip budget is applied (flat or per-layer split).
+    pub clipping: ClippingStrategy,
+    /// Trainable layer count, used by per-layer clipping (set from the
+    /// model metadata when wrapping; 1 means "treat as one layer").
+    pub num_layers: usize,
 }
 
 impl PrivacyParams {
@@ -69,6 +80,8 @@ impl PrivacyParams {
             logical_batch: 64,
             physical_batch: 64,
             poisson: true,
+            clipping: ClippingStrategy::Flat,
+            num_layers: 1,
         }
     }
 
@@ -87,6 +100,17 @@ impl PrivacyParams {
         self.poisson = false;
         self
     }
+
+    pub fn with_clipping(mut self, strategy: ClippingStrategy) -> Self {
+        self.clipping = strategy;
+        self
+    }
+
+    /// The scalar clip handed to the compiled steps under the configured
+    /// strategy (C for flat, C/√L for per-layer).
+    pub fn effective_clip(&self) -> f64 {
+        self.clipping.effective_clip(self.max_grad_norm, self.num_layers)
+    }
 }
 
 /// The privacy engine: ledger + noise source + validator.
@@ -97,19 +121,36 @@ pub struct PrivacyEngine {
 }
 
 impl PrivacyEngine {
-    pub fn new(config: EngineConfig) -> Self {
-        let accountant = accounting::make_accountant(&config.accountant)
-            .unwrap_or_else(|| panic!("unknown accountant '{}'", config.accountant));
+    /// Start a typed [`PrivateBuilder`] — the preferred entry point:
+    /// `PrivacyEngine::private().noise_multiplier(1.1).build(sys)`.
+    pub fn private() -> PrivateBuilder {
+        PrivateBuilder::new()
+    }
+
+    /// Construct an engine; an unknown accountant name is an error (not a
+    /// panic) so misconfiguration surfaces as `Result` through the
+    /// builder.
+    pub fn try_new(config: EngineConfig) -> Result<Self> {
+        let accountant = accounting::make_accountant(&config.accountant)?;
         let kind = if config.secure_mode {
             RngKind::Secure
         } else {
             RngKind::Standard
         };
         let rng = make_rng(kind, config.seed, config.deterministic);
-        PrivacyEngine {
+        Ok(PrivacyEngine {
             config,
             accountant: RefCell::new(accountant),
             rng: RefCell::new(rng),
+        })
+    }
+
+    /// Panicking convenience kept for backwards compatibility; prefer
+    /// [`PrivacyEngine::try_new`] or the builder.
+    pub fn new(config: EngineConfig) -> Self {
+        match Self::try_new(config) {
+            Ok(engine) => engine,
+            Err(e) => panic!("{e}"),
         }
     }
 
@@ -285,5 +326,26 @@ mod tests {
         assert_eq!(p.physical_batch, 64);
         assert!(!p.poisson);
         assert_eq!(p.lr, 0.1);
+        assert_eq!(p.clipping, ClippingStrategy::Flat);
+        assert_eq!(p.effective_clip(), 1.0);
+    }
+
+    #[test]
+    fn per_layer_clipping_shrinks_effective_clip() {
+        let mut p = PrivacyParams::new(1.1, 2.0).with_clipping(ClippingStrategy::PerLayer);
+        p.num_layers = 4;
+        assert!((p.effective_clip() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn try_new_rejects_unknown_accountant() {
+        let err = PrivacyEngine::try_new(EngineConfig {
+            accountant: "prv".into(),
+            ..Default::default()
+        })
+        .err()
+        .expect("unknown accountant must be an error")
+        .to_string();
+        assert!(err.contains("prv") && err.contains("rdp") && err.contains("gdp"), "{err}");
     }
 }

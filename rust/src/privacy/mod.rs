@@ -1,14 +1,23 @@
-//! The privacy layer: `PrivacyEngine`, model validation, schedulers.
+//! The privacy layer: the make-private builder, `PrivacyEngine`, model
+//! validation, schedulers.
 //!
+//! * [`builder`] — `PrivateBuilder`: the typed, composable make-private
+//!   API (`PrivacyEngine::private()…build(sys)`) and the `Private<T>`
+//!   three-object bundle
 //! * [`engine`] — budget tracking, noise generation (secure mode),
 //!   calibration — the paper's `PrivacyEngine`
 //! * [`validator`] — DP-compatibility checks (paper Appendix C)
 //! * [`scheduler`] — noise-multiplier and batch-size schedules
 
+pub mod builder;
 pub mod engine;
 pub mod scheduler;
 pub mod validator;
 
+pub use builder::{
+    AccountantKind, ClippingStrategy, EpsilonTarget, LoaderHandle, NoiseSource,
+    OptimizerHandle, Private, PrivateBuilder, SamplingMode, TrainingPlan,
+};
 pub use engine::{EngineConfig, PrivacyEngine, PrivacyParams};
 pub use scheduler::{BatchScheduler, NoiseScheduler};
 pub use validator::{validate_model, ValidationError};

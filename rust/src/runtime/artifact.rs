@@ -307,6 +307,24 @@ impl Registry {
             .map(|m| self.dir.join(&m.file).exists())
             .unwrap_or(false)
     }
+
+    /// Sorted, deduplicated batch sizes of the *available* artifacts for
+    /// a (task, variant) pair — e.g. `batches_for("mnist", "accum")`.
+    /// This is how the coordinator discovers step batch sizes instead of
+    /// hard-coding `_b64` names.
+    pub fn batches_for(&self, task: &str, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.task.as_deref() == Some(task) && a.variant == variant)
+            .filter(|a| self.dir.join(&a.file).exists())
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,173 @@
+//! `BatchMemoryManager` — virtualizes logical batches over the compiled
+//! physical batch (the paper's virtual-steps / batch-memory-manager
+//! feature, decoupling the privacy-accounted lot size from what fits in
+//! memory).
+//!
+//! The manager owns the logical→physical decomposition: it knows the
+//! batch size the accum executable was compiled for and the user's
+//! physical cap, splits every logical batch into mask-padded chunks of
+//! `min(compiled, cap)` indices, and keeps live statistics (logical
+//! steps, micro steps, peak logical batch) so the amplification factor of
+//! gradient accumulation is observable. Privacy accounting is untouched:
+//! one logical batch is still exactly one noise addition and one ledger
+//! entry, no matter how many chunks it was executed in.
+
+use crate::data::LogicalBatch;
+
+/// Splits logical batches into physical chunks and tracks usage.
+#[derive(Debug, Clone)]
+pub struct BatchMemoryManager {
+    /// Batch size the accum executable was compiled for.
+    compiled_batch: usize,
+    /// User-requested physical cap (`.physical_batch(n)` on the builder).
+    physical_limit: usize,
+    logical_steps: u64,
+    micro_steps: u64,
+    peak_logical: usize,
+}
+
+impl BatchMemoryManager {
+    pub fn new(compiled_batch: usize, physical_limit: usize) -> Self {
+        assert!(compiled_batch > 0, "compiled batch must be positive");
+        assert!(physical_limit > 0, "physical limit must be positive");
+        BatchMemoryManager {
+            compiled_batch,
+            physical_limit,
+            logical_steps: 0,
+            micro_steps: 0,
+            peak_logical: 0,
+        }
+    }
+
+    /// Indices per chunk: the compiled batch, tightened by the user cap.
+    pub fn chunk_size(&self) -> usize {
+        self.compiled_batch.min(self.physical_limit)
+    }
+
+    /// The batch size chunks are padded to (the executable's shape).
+    pub fn compiled_batch(&self) -> usize {
+        self.compiled_batch
+    }
+
+    /// Micro-steps a logical batch of `logical` samples will take (an
+    /// empty batch still takes one — the noise-only step must run).
+    pub fn micro_steps_for(&self, logical: usize) -> usize {
+        if logical == 0 {
+            1
+        } else {
+            logical.div_ceil(self.chunk_size())
+        }
+    }
+
+    /// Split one logical batch into physical chunks, recording stats.
+    /// The chunks borrow from the logical batch, not the manager, so the
+    /// caller can keep using other state while iterating.
+    pub fn split<'a>(&mut self, lb: &'a LogicalBatch) -> Vec<&'a [usize]> {
+        let chunks = lb.chunks(self.chunk_size());
+        self.logical_steps += 1;
+        self.micro_steps += chunks.len() as u64;
+        self.peak_logical = self.peak_logical.max(lb.indices.len());
+        chunks
+    }
+
+    /// Logical (privacy-accounted) batches split so far.
+    pub fn logical_steps(&self) -> u64 {
+        self.logical_steps
+    }
+
+    /// Physical executions performed so far.
+    pub fn micro_steps(&self) -> u64 {
+        self.micro_steps
+    }
+
+    /// Largest logical batch observed.
+    pub fn peak_logical_batch(&self) -> usize {
+        self.peak_logical
+    }
+
+    /// Mean micro-steps per logical step — 1.0 means no virtualization
+    /// was needed, k means each logical batch cost k executions.
+    pub fn amplification(&self) -> f64 {
+        if self.logical_steps == 0 {
+            1.0
+        } else {
+            self.micro_steps as f64 / self.logical_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lb(n: usize) -> LogicalBatch {
+        LogicalBatch {
+            indices: (0..n).collect(),
+        }
+    }
+
+    #[test]
+    fn chunk_size_is_min_of_compiled_and_cap() {
+        assert_eq!(BatchMemoryManager::new(64, 64).chunk_size(), 64);
+        assert_eq!(BatchMemoryManager::new(64, 32).chunk_size(), 32);
+        assert_eq!(BatchMemoryManager::new(16, 512).chunk_size(), 16);
+    }
+
+    #[test]
+    fn logical_512_over_physical_64_takes_8_micro_steps() {
+        let mut m = BatchMemoryManager::new(64, 64);
+        assert_eq!(m.micro_steps_for(512), 8);
+        let batch = lb(512);
+        let chunks = m.split(&batch);
+        assert_eq!(chunks.len(), 8);
+        assert!(chunks.iter().all(|c| c.len() == 64));
+        assert_eq!(m.logical_steps(), 1);
+        assert_eq!(m.micro_steps(), 8);
+        assert_eq!(m.peak_logical_batch(), 512);
+        assert_eq!(m.amplification(), 8.0);
+    }
+
+    #[test]
+    fn ragged_logical_batch_keeps_partial_tail() {
+        let mut m = BatchMemoryManager::new(64, 64);
+        let batch = lb(100);
+        let chunks = m.split(&batch);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].len(), 64);
+        assert_eq!(chunks[1].len(), 36);
+        // every index appears exactly once, in order
+        let flat: Vec<usize> = chunks.concat();
+        assert_eq!(flat, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_logical_batch_still_takes_one_step() {
+        // Poisson can select zero samples; noise must still be added
+        let mut m = BatchMemoryManager::new(64, 64);
+        assert_eq!(m.micro_steps_for(0), 1);
+        let batch = lb(0);
+        let chunks = m.split(&batch);
+        assert_eq!(chunks.len(), 1);
+        assert!(chunks[0].is_empty());
+        assert_eq!(m.micro_steps(), 1);
+    }
+
+    #[test]
+    fn stats_accumulate_across_logical_steps() {
+        let mut m = BatchMemoryManager::new(64, 64);
+        for n in [512, 0, 64, 70] {
+            let batch = lb(n);
+            m.split(&batch);
+        }
+        assert_eq!(m.logical_steps(), 4);
+        assert_eq!(m.micro_steps(), 8 + 1 + 1 + 2);
+        assert_eq!(m.peak_logical_batch(), 512);
+    }
+
+    #[test]
+    fn user_cap_below_compiled_batch_tightens_chunks() {
+        let mut m = BatchMemoryManager::new(64, 16);
+        let batch = lb(64);
+        assert_eq!(m.split(&batch).len(), 4);
+    }
+}

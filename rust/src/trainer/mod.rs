@@ -1,13 +1,17 @@
-//! Training loop: the DP optimizer (virtual steps) and the private trainer.
+//! Training loop: the DP optimizer (virtual steps), the batch memory
+//! manager, and the private trainer.
 //!
 //! * [`metrics`] — per-step records, loss curves, JSON export
+//! * [`memory`] — `BatchMemoryManager`: logical→physical virtualization
 //! * [`optimizer`] — clipped-gradient accumulation across physical batches
 //! * [`trainer`] — `PrivateTrainer`: epochs/steps/eval over PJRT steps
 
+pub mod memory;
 pub mod metrics;
 pub mod optimizer;
 pub mod trainer;
 
+pub use memory::BatchMemoryManager;
 pub use metrics::{MetricsLog, StepRecord};
 pub use optimizer::DpOptimizer;
 pub use trainer::{PrivateTrainer, TrainerSteps};

@@ -9,6 +9,7 @@
 //! (verified in python/tests/test_dpsgd.py and the Rust integration
 //! tests).
 
+use crate::privacy::builder::ClippingStrategy;
 use crate::runtime::step::AccumOut;
 
 /// Accumulator over physical micro-batches within one logical step.
@@ -19,17 +20,30 @@ pub struct DpOptimizer {
     snorm_sum: f64,
     samples: usize,
     micro_steps: usize,
+    clipping: ClippingStrategy,
 }
 
 impl DpOptimizer {
     pub fn new(num_params: usize) -> Self {
+        Self::with_clipping(num_params, ClippingStrategy::Flat)
+    }
+
+    /// Accumulator that records which clipping strategy produced its
+    /// inputs (the strategy decides the scalar clip the accum step ran
+    /// with; see [`ClippingStrategy::effective_clip`]).
+    pub fn with_clipping(num_params: usize, clipping: ClippingStrategy) -> Self {
         DpOptimizer {
             accum: vec![0.0; num_params],
             loss_sum: 0.0,
             snorm_sum: 0.0,
             samples: 0,
             micro_steps: 0,
+            clipping,
         }
+    }
+
+    pub fn clipping(&self) -> ClippingStrategy {
+        self.clipping
     }
 
     /// Fold in one physical batch's clipped gradient sum.
@@ -120,6 +134,13 @@ mod tests {
     fn size_mismatch_panics() {
         let mut opt = DpOptimizer::new(2);
         opt.add(&out(vec![1.0], 0.0, 0.0), 1);
+    }
+
+    #[test]
+    fn clipping_strategy_is_carried() {
+        let opt = DpOptimizer::with_clipping(2, ClippingStrategy::PerLayer);
+        assert_eq!(opt.clipping(), ClippingStrategy::PerLayer);
+        assert_eq!(DpOptimizer::new(2).clipping(), ClippingStrategy::Flat);
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //!   noise + update in a single HLO module). The fast path benchmarked in
 //!   Table 1.
 //! * **Virtual** — Poisson sampling or logical > physical batch: each
-//!   logical batch is split into mask-padded physical chunks, run through
-//!   `grad_accum`, folded by [`DpOptimizer`], and finished with one
-//!   `apply_update` (noise + SGD). The paper's virtual-steps feature.
+//!   logical batch is split by the [`BatchMemoryManager`] into mask-padded
+//!   physical chunks, run through `grad_accum`, folded by [`DpOptimizer`],
+//!   and finished with one `apply_update` (noise + SGD). The paper's
+//!   virtual-steps / batch-memory-manager feature.
 //!
 //! Every logical step records `(σ_t, q)` into the engine's accountant,
 //! so ε is queryable mid-training (early stopping / monitoring).
@@ -20,6 +21,7 @@ use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::privacy::scheduler::NoiseScheduler;
 use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, HyperParams, TrainStep};
 
+use super::memory::BatchMemoryManager;
 use super::metrics::{MetricsLog, StepRecord};
 use super::optimizer::DpOptimizer;
 
@@ -54,6 +56,8 @@ pub struct PrivateTrainer {
     pp: PrivacyParams,
     mode: Mode,
     loader: Loader,
+    /// Present in virtual mode: logical→physical decomposition + stats.
+    bmm: Option<BatchMemoryManager>,
     epoch: usize,
     global_step: u64,
     noise_buf: Vec<f32>,
@@ -79,13 +83,14 @@ impl PrivateTrainer {
         let use_fused = !pp.poisson
             && pp.logical_batch == pp.physical_batch
             && steps.fused_dp.is_some();
-        let (mode, loader) = if use_fused {
+        let (mode, loader, bmm) = if use_fused {
             (
                 Mode::Fused,
                 Loader::Uniform(UniformLoader::new(n, pp.physical_batch, false)),
+                None,
             )
         } else {
-            if steps.accum.is_none() || steps.apply.is_none() {
+            let (Some(accum), Some(_)) = (steps.accum.as_ref(), steps.apply.as_ref()) else {
                 bail!(
                     "virtual-step mode needs accum+apply artifacts \
                      (task {task}, poisson={}, logical={}, physical={})",
@@ -93,13 +98,14 @@ impl PrivateTrainer {
                     pp.logical_batch,
                     pp.physical_batch
                 );
-            }
+            };
+            let bmm = BatchMemoryManager::new(accum.batch(), pp.physical_batch);
             let loader = if pp.poisson {
                 Loader::Poisson(PoissonLoader::with_expected_batch(n, pp.logical_batch))
             } else {
                 Loader::Uniform(UniformLoader::new(n, pp.logical_batch, false))
             };
-            (Mode::Virtual, loader)
+            (Mode::Virtual, loader, Some(bmm))
         };
 
         Ok(PrivateTrainer {
@@ -114,6 +120,7 @@ impl PrivateTrainer {
             pp,
             mode,
             loader,
+            bmm,
             epoch: 0,
             global_step: 0,
             noise_buf: vec![0.0; num_params],
@@ -155,10 +162,18 @@ impl PrivateTrainer {
         self.global_step
     }
 
+    /// The batch memory manager (virtual mode only): logical→physical
+    /// decomposition stats — micro steps, peak logical batch, amplification.
+    pub fn memory_manager(&self) -> Option<&BatchMemoryManager> {
+        self.bmm.as_ref()
+    }
+
     fn hp(&self, sigma: f64) -> HyperParams {
         HyperParams {
             lr: self.pp.lr as f32,
-            clip: self.pp.max_grad_norm as f32,
+            // the clipping strategy decides the scalar the graphs clip
+            // (and scale noise) with: C for flat, C/√L for per-layer
+            clip: self.pp.effective_clip() as f32,
             sigma: sigma as f32,
             denom: self.pp.logical_batch as f32,
         }
@@ -191,8 +206,9 @@ impl PrivateTrainer {
                 let accum = self.steps.accum.as_ref().expect("virtual mode");
                 let apply = self.steps.apply.as_ref().expect("virtual mode");
                 let phys = accum.batch();
-                let mut opt = DpOptimizer::new(self.num_params);
-                for chunk in lb.chunks(phys) {
+                let bmm = self.bmm.as_mut().expect("virtual mode");
+                let mut opt = DpOptimizer::with_clipping(self.num_params, self.pp.clipping);
+                for chunk in bmm.split(lb) {
                     let batch = self.train.gather(chunk, phys)?;
                     let out = accum.run(
                         &self.params,

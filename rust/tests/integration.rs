@@ -3,11 +3,18 @@
 //! The golden tests are the cross-language correctness anchor: aot.py
 //! executed each step in JAX with fixed inputs and saved the outputs;
 //! here the PJRT-compiled HLO must reproduce them from Rust.
+//!
+//! The legacy `make_private(sys, pp)` shims are deprecated in favour of
+//! the `PrivateBuilder`; their tests stay on purpose (the shim must keep
+//! passing), hence the file-wide allow.
+#![allow(deprecated)]
 
 use std::path::PathBuf;
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{EngineConfig, PrivacyEngine, PrivacyParams};
+use opacus_rs::privacy::{
+    AccountantKind, ClippingStrategy, EngineConfig, PrivacyEngine, PrivacyParams, SamplingMode,
+};
 use opacus_rs::runtime::artifact::Registry;
 use opacus_rs::runtime::step::{AccumStep, ApplyStep, EvalStep, HyperParams, TrainStep};
 use opacus_rs::runtime::tensor::HostTensor;
@@ -335,6 +342,145 @@ fn embed_task_trains() {
         losses.last().unwrap() < losses.first().unwrap(),
         "embed loss did not decrease: {losses:?}"
     );
+}
+
+/// Acceptance: the typed builder produces a working trainer with the
+/// three-object bundle (trainer + optimizer handle + loader handle).
+#[test]
+fn builder_constructs_working_trainer() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 256, 64, 7).unwrap();
+    let mut private = PrivacyEngine::private()
+        .noise_multiplier(1.1)
+        .max_grad_norm(1.0)
+        .lr(0.25)
+        .seed(3)
+        .build(sys)
+        .unwrap();
+    assert_eq!(private.optimizer.noise_multiplier, 1.1);
+    assert_eq!(private.optimizer.effective_clip, 1.0);
+    assert_eq!(private.loader.sampling, SamplingMode::Poisson);
+    assert_eq!(private.loader.steps_per_epoch, 4); // ceil(1/q), q = 64/256
+    let losses = private.train_epochs(2).unwrap();
+    assert_eq!(losses.len(), 2);
+    assert!(private.epsilon(1e-5).unwrap() > 0.0);
+    assert_eq!(private.global_step(), 8);
+}
+
+/// Acceptance: `.target_epsilon(3.0, 1e-5, 3)` calibrates σ and training
+/// the planned epochs stays within the budget.
+#[test]
+fn builder_target_epsilon_calibrates() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 256, 32, 2).unwrap();
+    let mut private = PrivacyEngine::private()
+        .target_epsilon(3.0, 1e-5, 3)
+        .seed(9)
+        .build(sys)
+        .unwrap();
+    assert!(private.optimizer.noise_multiplier > 0.0);
+    private.train_epochs(3).unwrap();
+    let eps = private.epsilon(1e-5).unwrap();
+    assert!(eps <= 3.0 * 1.05, "ε = {eps} exceeds 1.05 × target 3.0");
+    assert!(eps > 0.5, "ε = {eps} suspiciously small — calibration too loose");
+}
+
+/// Builder + GDP accountant end to end.
+#[test]
+fn builder_gdp_accountant_trains() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 4).unwrap();
+    let mut private = PrivacyEngine::private()
+        .accountant(AccountantKind::Gdp)
+        .noise_multiplier(1.0)
+        .max_grad_norm(1.0)
+        .seed(5)
+        .build(sys)
+        .unwrap();
+    assert_eq!(private.engine().accountant_mechanism(), "gdp");
+    private.train_epoch().unwrap();
+    assert!(private.epsilon(1e-5).unwrap() > 0.0);
+}
+
+/// Per-layer clipping: trains, and the effective clip handed to the
+/// steps is C/√L while the configured max_grad_norm stays C.
+#[test]
+fn builder_per_layer_clipping_trains() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 6).unwrap();
+    let num_layers = sys.model.layer_kinds.len().max(1);
+    let mut private = PrivacyEngine::private()
+        .clipping(ClippingStrategy::PerLayer)
+        .noise_multiplier(1.0)
+        .max_grad_norm(1.0)
+        .seed(6)
+        .build(sys)
+        .unwrap();
+    assert_eq!(private.optimizer.max_grad_norm, 1.0);
+    let want = 1.0 / (num_layers as f64).sqrt();
+    assert!((private.optimizer.effective_clip - want).abs() < 1e-12);
+    let loss = private.train_epoch().unwrap();
+    assert!(loss.is_finite());
+}
+
+/// The BatchMemoryManager virtualizes logical batch 512 over physical
+/// batch 64 (8 accumulation micro-steps per logical step) and spends the
+/// SAME ε as the monolithic make_private path with identical parameters.
+#[test]
+fn batch_memory_manager_matches_monolithic_epsilon() {
+    let dir = require_artifacts!();
+
+    // builder path: logical 512 over physical 64
+    let sys = Opacus::load_with_data(&dir, "mnist", 1024, 64, 7).unwrap();
+    let mut private = PrivacyEngine::private()
+        .noise_multiplier(1.0)
+        .max_grad_norm(1.0)
+        .lr(0.1)
+        .logical_batch(512)
+        .physical_batch(64)
+        .seed(3)
+        .build(sys)
+        .unwrap();
+    assert_eq!(private.loader.steps_per_epoch, 2); // ceil(1/q), q = 512/1024
+    private.train_epoch().unwrap();
+    let bmm = private.memory_manager().expect("virtual mode has a manager");
+    assert_eq!(bmm.logical_steps(), 2);
+    assert!(
+        bmm.amplification() > 4.0,
+        "E[micro/logical] ≈ 8, got {}",
+        bmm.amplification()
+    );
+    assert!(bmm.peak_logical_batch() > 64, "logical batches exceed physical");
+    let eps_virtual = private.epsilon(1e-5).unwrap();
+
+    // monolithic path: same (σ, q) and the same number of logical steps
+    let sys = Opacus::load_with_data(&dir, "mnist", 1024, 64, 7).unwrap();
+    let engine = PrivacyEngine::new(EngineConfig {
+        seed: 3,
+        ..Default::default()
+    });
+    let pp = PrivacyParams::new(1.0, 1.0).with_lr(0.1).with_batches(512, 64);
+    let mut trainer = engine.make_private(sys, pp).unwrap();
+    trainer.train_epoch().unwrap();
+    let eps_monolithic = trainer.epsilon(1e-5).unwrap();
+
+    assert!(
+        (eps_virtual - eps_monolithic).abs() < 1e-12,
+        "virtualized ε = {eps_virtual} != monolithic ε = {eps_monolithic}"
+    );
+}
+
+/// The facade's `Opacus::make_private()` builder alias works too.
+#[test]
+fn facade_builder_entry_point() {
+    let dir = require_artifacts!();
+    let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 8).unwrap();
+    let mut private = Opacus::make_private()
+        .noise_multiplier(1.0)
+        .max_grad_norm(1.0)
+        .build(sys)
+        .unwrap();
+    assert!(private.train_epoch().unwrap().is_finite());
 }
 
 /// Compile log records the first-epoch "JIT analogue" cost (Fig. 4).
