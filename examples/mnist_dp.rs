@@ -1,17 +1,20 @@
 //! End-to-end validation driver (EXPERIMENTS.md §E2E): train the MNIST
-//! CNN (26,010 params — the paper's Table-1a model) with DP-SGD for a few
-//! hundred steps on the synthetic-MNIST corpus, log the loss curve, the
-//! privacy trajectory and held-out accuracy, and write everything to
+//! CNN (the paper's Table-1a model) with DP-SGD for a few hundred steps
+//! on the synthetic-MNIST corpus, log the loss curve, the privacy
+//! trajectory and held-out accuracy, and write everything to
 //! results/mnist_dp_run.json.
 //!
 //! σ is calibrated for a target budget of (ε = 3.0, δ = 1e-5) through the
 //! builder's `.target_epsilon` — the `make_private_with_epsilon` path.
 //!
+//! `--backend auto` (default) runs on XLA artifacts when they exist and
+//! on the native per-sample-gradient engine otherwise.
+//!
 //! Run: cargo run --release --example mnist_dp [-- --epochs 12
-//!      --train 2048 --batch 64 --eps 3.0 --secure]
+//!      --train 2048 --batch 64 --eps 3.0 --secure --backend native]
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::{NoiseSource, PrivacyEngine, SamplingMode};
+use opacus_rs::privacy::{Backend, NoiseSource, PrivacyEngine, SamplingMode};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 
@@ -24,11 +27,14 @@ fn main() -> anyhow::Result<()> {
     let target_eps = args.get_f64("eps", 3.0)?;
     let delta = args.get_f64("delta", 1e-5)?;
     let lr = args.get_f64("lr", 0.25)?;
+    let backend: Backend = args.get_or("backend", "auto").parse()?;
 
-    println!("== opacus-rs end-to-end driver: MNIST CNN (26,010 params) ==");
-    let sys = Opacus::load_with_data("artifacts", "mnist", n_train, 512, 0)?;
+    println!("== opacus-rs end-to-end driver: MNIST CNN ==");
+    let sys = Opacus::load_with_backend("artifacts", "mnist", backend, n_train, 512, 0)?;
+    println!("execution backend: {}", sys.backend_description());
 
     let mut trainer = PrivacyEngine::private()
+        .backend(backend)
         .noise(if args.has_flag("secure") {
             NoiseSource::Deterministic
         } else {

@@ -13,7 +13,9 @@ use opacus_rs::coordinator::Opacus;
 use opacus_rs::privacy::{NoiseScheduler, PrivacyEngine};
 
 fn main() -> anyhow::Result<()> {
+    // Backend::Auto: XLA artifacts when present, native engine otherwise
     let sys = Opacus::load_with_data("artifacts", "mnist", 512, 128, 5)?;
+    println!("execution backend: {}", sys.backend_name());
     let sample_rate = 64.0 / 512.0;
     let mut trainer = PrivacyEngine::private()
         .noise_multiplier(/* base σ */ 1.4)

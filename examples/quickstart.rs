@@ -10,17 +10,25 @@
 //! the trainer plus optimizer and loader handles (the paper's
 //! three-object wrap).
 //!
+//! Execution is backend-pluggable (`.backend(..)`): `Backend::Auto`
+//! (the default) uses AOT XLA artifacts when they exist and otherwise
+//! the pure-Rust native per-sample-gradient engine — so this example
+//! runs end to end on a machine that never ran `make artifacts`.
+//!
 //! Run: cargo run --release --example quickstart
 
 use opacus_rs::coordinator::Opacus;
-use opacus_rs::privacy::PrivacyEngine;
+use opacus_rs::privacy::{Backend, PrivacyEngine};
 
 fn main() -> anyhow::Result<()> {
-    // dataset + model + optimizer: one loaded system (AOT artifacts)
+    // dataset + model + optimizer: one loaded system
+    // (backend auto-selected: XLA artifacts if present, else native)
     let sys = Opacus::load("artifacts", "mnist")?;
+    println!("execution backend: {}", sys.backend_description());
 
     // the two Opacus lines:
     let mut private = PrivacyEngine::private()
+        .backend(Backend::Auto)
         .noise_multiplier(1.1)
         .max_grad_norm(1.0)
         .lr(0.25)

@@ -45,8 +45,11 @@ fn main() -> anyhow::Result<()> {
     println!("  {} violations\n", errs.len());
 
     println!("== 4. the builder refuses to wrap an invalid model ==");
-    // forge a system whose manifest model carries a batchnorm
+    // forge a system whose model metadata carries a batchnorm (works on
+    // either backend — Auto falls back to the native engine when no
+    // artifacts exist)
     let mut sys = Opacus::load("artifacts", "mnist")?;
+    println!("  (execution backend: {})", sys.backend_name());
     sys.model.layer_kinds.push("batchnorm".to_string());
     match PrivacyEngine::private()
         .noise_multiplier(1.1)

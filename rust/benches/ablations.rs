@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         let apply = ApplyStep::load(&reg, "mnist_apply_b64")?;
         let model = reg.model("mnist")?;
         let data = opacus_rs::data::synth::for_task(
-            "mnist", 256, 42, &model.input_shape, model.vocab);
+            "mnist", 256, 42, &model.input_shape, model.vocab)?;
         let params = reg.init_params("mnist")?;
         let mut noise = vec![0f32; params.len()];
         let mut rng = Xoshiro256pp::seed_from_u64(1);

@@ -8,10 +8,18 @@
 //!                       documented in DESIGN.md §2)
 //!   * raw runtimes (Table 2), raw memory (Table 3), L/C ratios (Table 4)
 //!
-//! Usage: cargo bench --bench fig2_layers [-- --iters 20 --raw]
+//! Usage: cargo bench --bench fig2_layers [-- --iters 20 --raw
+//!        --backend auto|xla|native]
+//!
+//! `--backend native` (or `auto` with no artifacts) times the native
+//! GradSampleLayer kernels for the four natively-supported kinds
+//! (linear, conv, embedding, layernorm); the remaining rows print "-".
+
+use anyhow::anyhow;
 
 use opacus_rs::bench::LayerWorkload;
 use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::runtime::Backend;
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 use opacus_rs::util::table::{fmt_factor, fmt_mb, Table};
@@ -35,8 +43,28 @@ fn main() -> anyhow::Result<()> {
     let iters = args.get_usize("iters", 10)?;
     let warmup = args.get_usize("warmup", 3)?;
     let raw = args.has_flag("raw");
+    let backend: Backend = args.get_or("backend", "auto").parse()?;
 
-    let reg = Registry::open("artifacts")?;
+    let reg = match backend {
+        Backend::Native => None,
+        Backend::Xla => Some(Registry::open("artifacts")?),
+        Backend::Auto => Registry::open("artifacts").ok(),
+    };
+    println!(
+        "fig2: running on the {} backend",
+        if reg.is_some() { "xla" } else { "native" }
+    );
+    // native canonical workloads exist for these kinds (XLA's "conv"
+    // row maps onto the native conv2d kernel)
+    let native_kind = |label: &str| -> Option<&'static str> {
+        match label {
+            "conv" => Some("conv2d"),
+            "linear" => Some("linear"),
+            "embedding" => Some("embedding"),
+            "layernorm" => Some("layernorm"),
+            _ => None,
+        }
+    };
     let mut results: Vec<Json> = Vec::new();
 
     let mut header = vec!["layer / batch".to_string()];
@@ -78,8 +106,22 @@ fn main() -> anyhow::Result<()> {
         let mut rmem_row = vec![label.clone()];
         let mut lc_done = false;
         for &b in &BATCHES {
-            let nodp = LayerWorkload::load(&reg, label, "nodp", b);
-            let dp = LayerWorkload::load(&reg, dp_layer, "dp", b);
+            let (nodp, dp) = match &reg {
+                Some(reg) => (
+                    LayerWorkload::load(reg, label, "nodp", b),
+                    LayerWorkload::load(reg, dp_layer, "dp", b),
+                ),
+                None => match native_kind(label) {
+                    Some(kind) => (
+                        LayerWorkload::load_native(kind, "nodp", b),
+                        LayerWorkload::load_native(kind, "dp", b),
+                    ),
+                    None => (
+                        Err(anyhow!("no native kernel for layer '{label}'")),
+                        Err(anyhow!("no native kernel for layer '{label}'")),
+                    ),
+                },
+            };
             match (nodp, dp) {
                 (Ok(nodp), Ok(dp)) => {
                     let t_nodp = nodp.mean_runtime(warmup, iters)?;

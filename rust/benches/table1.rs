@@ -1,8 +1,9 @@
 //! Table 1 — median per-epoch runtime of DP-SGD variants vs batch size,
-//! for all four end-to-end tasks (paper §3.1).
+//! for all four end-to-end tasks (paper §3.1), on either execution
+//! backend.
 //!
 //! Rows (framework substitutions per DESIGN.md §2):
-//!   jax-style fused (DP)  ≙ JAX (DP)
+//!   jax-style fused (DP)  ≙ JAX (DP)          (XLA backend only)
 //!   no-DP baseline        ≙ PyTorch without DP
 //!   opacus-rs (DP)        ≙ Opacus
 //!   micro-batch (DP)      ≙ PyVacy
@@ -11,14 +12,22 @@
 //! reduction from the smallest to the largest batch.
 //!
 //! Usage: cargo bench --bench table1 [-- --tasks mnist,embed
-//!        --samples 512 --epochs 3 --out results/table1.json
-//!        --bench-out BENCH_pr1.json]
+//!        --samples 512 --epochs 3 --backend auto|xla|native
+//!        --out results/table1.json --bench-out BENCH_pr2.json]
+//!
+//! `--backend native` (or `auto` with no artifacts) runs the pure-Rust
+//! per-sample-gradient engine — no `make artifacts` needed, so the bench
+//! produces a trajectory on any machine.
 //!
 //! `--bench-out` records the perf-trajectory baseline: steps/sec of the
 //! DP variant at the canonical physical batch (64) per task.
 
+use std::path::Path;
+
 use opacus_rs::bench::{steps_per_sec, EpochTimer, TaskWorkload, Variant};
 use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::runtime::backend::auto_backend_kind;
+use opacus_rs::runtime::{Backend, BackendKind};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 use opacus_rs::util::table::Table;
@@ -38,16 +47,43 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.trim().to_string())
         .collect();
     let out_path = args.get_or("out", "results/table1.json").to_string();
+    let backend: Backend = args.get_or("backend", "auto").parse()?;
 
-    let reg = Registry::open("artifacts")?;
+    // xla / auto: open the registry when possible; native: skip it
+    let reg = match backend {
+        Backend::Native => None,
+        Backend::Xla => Some(Registry::open("artifacts")?),
+        Backend::Auto => Registry::open("artifacts").ok(),
+    };
+    // Auto resolves per task, with the same rule as `Backend::Auto`
+    // everywhere else (a usable on-disk artifact set for THAT task);
+    // a manifest alone never forces a task onto the XLA path.
+    let task_backend = |task: &str| -> &'static str {
+        let xla = match backend {
+            Backend::Native => false,
+            Backend::Xla => true,
+            Backend::Auto => {
+                reg.is_some()
+                    && auto_backend_kind(Path::new("artifacts"), task) == BackendKind::Xla
+            }
+        };
+        if xla {
+            "xla"
+        } else {
+            "native"
+        }
+    };
+
     let mut all_results: Vec<Json> = Vec::new();
-    // (task, steps/sec) of the DP variant at the baseline batch
-    let mut baseline: Vec<(String, f64)> = Vec::new();
+    // (task, backend, steps/sec) of the DP variant at the baseline batch
+    let mut baseline: Vec<(String, &'static str, f64)> = Vec::new();
 
     for task in &tasks {
+        let backend_label = task_backend(task);
+        println!("table1: {task} runs on the {backend_label} backend");
         let title = format!(
-            "Table 1 ({task}): median per-epoch runtime (s), {samples} samples/epoch, \
-             median of {epochs} epochs"
+            "Table 1 ({task}, {backend_label}): median per-epoch runtime (s), \
+             {samples} samples/epoch, median of {epochs} epochs"
         );
         let mut header = vec!["framework / batch".to_string()];
         header.extend(ALL_BATCHES.iter().map(|b| b.to_string()));
@@ -60,16 +96,26 @@ fn main() -> anyhow::Result<()> {
             let mut first: Option<f64> = None;
             let mut last: Option<f64> = None;
             for &b in &ALL_BATCHES {
-                let cell = match TaskWorkload::load(&reg, task, variant, b, samples.min(2048)) {
+                let loaded = match (&reg, backend_label) {
+                    (Some(reg), "xla") => {
+                        TaskWorkload::load(reg, task, variant, b, samples.min(2048))
+                    }
+                    _ => TaskWorkload::load_native(task, variant, b, samples.min(2048)),
+                };
+                let cell = match loaded {
                     Ok(mut w) => {
                         let t = w.median_epoch(epochs, samples)?;
                         if first.is_none() {
                             first = Some(t);
                         }
                         last = Some(t);
-                        let sps = steps_per_sec(b, samples, t);
+                        // steps/sec must use the batch the step actually
+                        // executed at (micro-batch runs at b=1 whatever
+                        // the column says)
+                        let sps = steps_per_sec(w.batch, samples, t);
                         all_results.push(Json::obj(vec![
                             ("task", Json::str(task)),
+                            ("backend", Json::str(backend_label)),
                             ("variant", Json::str(variant.row_label())),
                             ("batch", Json::num(b as f64)),
                             ("median_epoch_s", Json::num(t)),
@@ -77,7 +123,7 @@ fn main() -> anyhow::Result<()> {
                             ("compile_s", Json::num(w.compile_secs)),
                         ]));
                         if variant == Variant::Dp && b == BASELINE_BATCH {
-                            baseline.push((task.clone(), sps));
+                            baseline.push((task.clone(), backend_label, sps));
                         }
                         Some(t)
                     }
@@ -105,38 +151,50 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out_path, Json::Arr(all_results).to_string())?;
     println!("raw results -> {out_path}");
     if let Some(bench_out) = args.get("bench-out") {
-        let tasks = Json::obj(
+        let tasks_json = Json::obj(
             baseline
                 .iter()
-                .map(|(t, sps)| (t.as_str(), Json::num(*sps)))
+                .map(|(t, _, sps)| (t.as_str(), Json::num(*sps)))
+                .collect(),
+        );
+        // per-task backend the baseline rows actually ran on
+        let backends_json = Json::obj(
+            baseline
+                .iter()
+                .map(|(t, be, _)| (t.as_str(), Json::str(be)))
                 .collect(),
         );
         // keep the schema of the committed BENCH_pr*.json files: the
         // regeneration command and status survive a rewrite
         let command = format!(
             "cd rust && cargo bench --bench table1 -- --samples {samples} --epochs {epochs} \
-             --bench-out {bench_out}"
+             --backend {backend} --bench-out {bench_out}"
         );
         let j = Json::obj(vec![
             ("bench", Json::str("rust/benches/table1.rs")),
             (
                 "metric",
                 Json::str(&format!(
-                    "steps_per_sec at physical batch {BASELINE_BATCH}, variant opacus-rs (DP)"
+                    "steps_per_sec at physical batch {BASELINE_BATCH}, variant opacus-rs (DP), \
+                     backend mode {backend}"
                 )),
             ),
             ("command", Json::str(&command)),
+            ("backend", Json::str(backend.as_str())),
+            ("task_backends", backends_json),
             ("samples_per_epoch", Json::num(samples as f64)),
             ("epochs", Json::num(epochs as f64)),
             ("status", Json::str("recorded")),
-            ("tasks", tasks),
+            ("tasks", tasks_json),
         ]);
         std::fs::write(bench_out, j.to_string())?;
         println!("perf baseline -> {bench_out}");
     }
-    println!(
-        "(batches 1024/2048 omitted: single-core CPU testbed — see EXPERIMENTS.md; \
-         cifar/lstm generated at 16/64/256 only)"
-    );
+    if reg.is_some() {
+        println!(
+            "(batches 1024/2048 omitted: single-core CPU testbed — see EXPERIMENTS.md; \
+             cifar/lstm generated at 16/64/256 only)"
+        );
+    }
     Ok(())
 }

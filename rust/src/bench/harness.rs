@@ -11,6 +11,8 @@ use anyhow::{anyhow, Result};
 use crate::data::{synth, Dataset};
 use crate::rng::{gaussian, pcg::Xoshiro256pp};
 use crate::runtime::artifact::Registry;
+use crate::runtime::backend::native::NativeBackend;
+use crate::runtime::backend::{BackendKind, ExecutionBackend, FusedStep};
 use crate::runtime::step::{HyperParams, TrainStep};
 use crate::util::stats;
 
@@ -56,13 +58,18 @@ impl Variant {
     }
 }
 
-/// A loaded (task, variant, batch) workload ready to time.
+/// A loaded (task, variant, batch) workload ready to time, on either
+/// execution backend.
 pub struct TaskWorkload {
     pub task: String,
     pub variant: Variant,
+    /// The batch size the step actually executes at (1 for the
+    /// micro-batch variant regardless of the requested column batch) —
+    /// use this, not the request, for steps/sec arithmetic.
     pub batch: usize,
+    pub backend: BackendKind,
     pub compile_secs: f64,
-    step: TrainStep,
+    step: Box<dyn FusedStep>,
     data: Dataset,
     params: Vec<f32>,
     noise: Vec<f32>,
@@ -70,8 +77,9 @@ pub struct TaskWorkload {
 }
 
 impl TaskWorkload {
-    /// Load a workload; `Err` if the artifact was not generated (e.g.
-    /// batches above the CPU cap — the caller prints "-" for that cell).
+    /// Load an XLA workload; `Err` if the artifact was not generated
+    /// (e.g. batches above the CPU cap — the caller prints "-" for that
+    /// cell).
     pub fn load(
         reg: &Registry,
         task: &str,
@@ -91,8 +99,57 @@ impl TaskWorkload {
             .get(before)
             .map(|(_, s)| *s)
             .unwrap_or(0.0);
-        let data = synth::for_task(task, n_data, 42, &model.input_shape, model.vocab);
+        let data = synth::for_task(task, n_data, 42, &model.input_shape, model.vocab)?;
         let params = reg.init_params(task)?;
+        Self::assemble(
+            task,
+            variant,
+            BackendKind::Xla,
+            compile_secs,
+            Box::new(step),
+            data,
+            params,
+        )
+    }
+
+    /// Load the same workload on the native backend: no artifacts, no
+    /// compile cost, any batch size. `JaxStyle` has no native analogue
+    /// (it benchmarks an XLA lowering strategy) and returns `Err`, which
+    /// the table prints as "-".
+    pub fn load_native(
+        task: &str,
+        variant: Variant,
+        batch: usize,
+        n_data: usize,
+    ) -> Result<TaskWorkload> {
+        if variant == Variant::JaxStyle {
+            return Err(anyhow!("jaxstyle is an XLA-only variant"));
+        }
+        let backend = NativeBackend::for_task(task)?;
+        let model = backend.model_meta();
+        let step_batch = if variant == Variant::Microbatch { 1 } else { batch };
+        let steps = backend.trainer_steps(step_batch)?;
+        let step = steps
+            .fused_dp
+            .ok_or_else(|| anyhow!("native backend produced no fused step"))?;
+        let data = synth::for_task(task, n_data, 42, &model.input_shape, model.vocab)?;
+        let params = backend.init_params()?;
+        Self::assemble(task, variant, BackendKind::Native, 0.0, step, data, params)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        task: &str,
+        variant: Variant,
+        backend: BackendKind,
+        compile_secs: f64,
+        step: Box<dyn FusedStep>,
+        data: Dataset,
+        params: Vec<f32>,
+    ) -> Result<TaskWorkload> {
+        // the executed batch comes from the step itself (micro-batch
+        // artifacts/steps run at b=1 whatever column requested them)
+        let batch = step.batch();
         let mut rng = Xoshiro256pp::seed_from_u64(7);
         let mut noise = vec![0f32; params.len()];
         if variant != Variant::NoDp {
@@ -102,6 +159,7 @@ impl TaskWorkload {
             task: task.to_string(),
             variant,
             batch,
+            backend,
             compile_secs,
             step,
             data,
@@ -249,5 +307,25 @@ mod tests {
         let labels: std::collections::BTreeSet<_> =
             Variant::all().iter().map(|v| v.row_label()).collect();
         assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn native_workload_runs_without_artifacts() {
+        let mut w = TaskWorkload::load_native("mnist", Variant::Dp, 8, 32).unwrap();
+        assert_eq!(w.backend, BackendKind::Native);
+        assert_eq!(w.compile_secs, 0.0);
+        let secs = w.run_epoch(16).unwrap();
+        assert!(secs > 0.0);
+        // micro-batch always runs at b=1 regardless of the requested batch
+        let w = TaskWorkload::load_native("mnist", Variant::Microbatch, 64, 8).unwrap();
+        assert_eq!(w.batch, 1);
+        // jaxstyle is an XLA lowering comparison — no native analogue
+        assert!(TaskWorkload::load_native("mnist", Variant::JaxStyle, 8, 8).is_err());
+    }
+
+    #[test]
+    fn native_nodp_workload_trains() {
+        let mut w = TaskWorkload::load_native("embed", Variant::NoDp, 4, 16).unwrap();
+        assert!(w.median_epoch(2, 8).unwrap() > 0.0);
     }
 }

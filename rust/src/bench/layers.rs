@@ -1,21 +1,40 @@
-//! Per-layer microbenchmark harness (Fig. 2/3/5, Tables 2/3/4).
+//! Per-layer microbenchmark harness (Fig. 2/3/5, Tables 2/3/4), on
+//! either execution backend.
 //!
 //! Mirrors opacus/benchmarks: for each layer we time one forward + one
 //! backward pass, with DP (per-sample grads through the GradSampleModule
-//! analogue) and without, and report the runtime factor. Memory is
-//! reported three ways (DESIGN.md §2 substitution):
+//! analogue) and without, and report the runtime factor. The XLA path
+//! loads `layer_*` artifacts; the native path
+//! ([`LayerWorkload::load_native`]) runs the
+//! [`GradSampleLayer`](crate::runtime::backend::native::GradSampleLayer)
+//! kernels directly — `fig2_layers` (and `table1`) accept
+//! `--backend native` and need no artifacts for the natively-supported
+//! kinds, while `fig3`/`fig4`/`fig5` time artifact-specific workloads
+//! (sequence-length sweeps, fused-vs-naive lowerings) and remain
+//! XLA-only. Memory is reported three ways (DESIGN.md §2 substitution):
 //! * the paper's analytic model Eq (1)–(3) ([`crate::runtime::memory`]),
-//! * exact live-buffer accounting from the artifact signatures,
+//! * exact live-buffer accounting from the signatures,
 //! * the process RSS high-water delta (coarse; CPU allocators recycle).
 
 use anyhow::{anyhow, Result};
 
 use crate::rng::{gaussian, pcg::Xoshiro256pp, Rng};
 use crate::runtime::artifact::Registry;
+use crate::runtime::backend::native::steps::NativeLayerBench;
+use crate::runtime::backend::BackendKind;
 use crate::runtime::memory::MemoryModel;
 use crate::runtime::step::LayerStep;
 use crate::runtime::tensor::HostTensor;
 use crate::util::stats;
+
+enum Exec {
+    Xla {
+        step: LayerStep,
+        params: Vec<f32>,
+        x: HostTensor,
+    },
+    Native(NativeLayerBench),
+}
 
 /// A loaded per-layer workload.
 pub struct LayerWorkload {
@@ -23,13 +42,13 @@ pub struct LayerWorkload {
     pub variant: String,
     pub batch: usize,
     pub num_params: usize,
-    step: LayerStep,
-    params: Vec<f32>,
-    x: HostTensor,
+    pub backend: BackendKind,
+    exec: Exec,
     input_shape: Vec<usize>,
 }
 
 impl LayerWorkload {
+    /// Load an XLA layer workload from the artifact registry.
     pub fn load(reg: &Registry, layer: &str, variant: &str, batch: usize) -> Result<LayerWorkload> {
         let name = format!("layer_{layer}_{variant}_b{batch}");
         if !reg.available(&name) {
@@ -63,22 +82,43 @@ impl LayerWorkload {
             variant: variant.to_string(),
             batch,
             num_params,
-            step,
-            params,
-            x,
+            backend: BackendKind::Xla,
+            exec: Exec::Xla { step, params, x },
             input_shape,
         })
+    }
+
+    /// Load the canonical native workload for a layer kind — no
+    /// registry, no artifacts.
+    pub fn load_native(layer: &str, variant: &str, batch: usize) -> Result<LayerWorkload> {
+        let bench = NativeLayerBench::new(layer, variant, batch)?;
+        let num_params = bench.num_params;
+        let input_shape = bench.input_shape();
+        Ok(LayerWorkload {
+            layer: layer.to_string(),
+            variant: variant.to_string(),
+            batch,
+            num_params,
+            backend: BackendKind::Native,
+            exec: Exec::Native(bench),
+            input_shape,
+        })
+    }
+
+    fn run_once(&self) -> Result<f64> {
+        match &self.exec {
+            Exec::Xla { step, params, x } => step.run_bench(params, x.clone(), 1.0),
+            Exec::Native(bench) => bench.run(1.0),
+        }
     }
 
     /// Mean seconds for one fwd+bwd pass (after warmup).
     pub fn mean_runtime(&self, warmup: usize, iters: usize) -> Result<f64> {
         for _ in 0..warmup {
-            self.step.run_bench(&self.params, self.x.clone(), 1.0)?;
+            self.run_once()?;
         }
         let times = stats::sample_runtimes(0, iters, || {
-            self.step
-                .run_bench(&self.params, self.x.clone(), 1.0)
-                .expect("bench step failed");
+            self.run_once().expect("bench step failed");
         });
         Ok(stats::mean(&times))
     }
@@ -96,11 +136,16 @@ impl LayerWorkload {
     /// Live-buffer bytes: inputs + outputs (+ the [B, P] per-sample
     /// gradient tensor for DP variants — the bL term of Eq (2)).
     pub fn live_buffer_bytes(&self) -> usize {
-        let base = self.step.step.input_bytes() + self.step.step.output_bytes();
-        if self.step.is_dp() {
-            base + self.batch * self.num_params * 4
-        } else {
-            base
+        match &self.exec {
+            Exec::Xla { step, .. } => {
+                let base = step.step.input_bytes() + step.step.output_bytes();
+                if step.is_dp() {
+                    base + self.batch * self.num_params * 4
+                } else {
+                    base
+                }
+            }
+            Exec::Native(bench) => bench.live_buffer_bytes(),
         }
     }
 }
@@ -114,5 +159,24 @@ mod tests {
         // constructed without artifacts: validate formula only
         let m = MemoryModel::new(4096.0 + 8.0, 262_656.0 * 4.0, 512);
         assert!(m.overhead() > 50.0); // linear layer at b=512: large factor
+    }
+
+    #[test]
+    fn native_layer_workloads_run() {
+        for kind in ["linear", "conv2d", "embedding", "layernorm"] {
+            let w = LayerWorkload::load_native(kind, "dp", 2).unwrap();
+            assert_eq!(w.backend, BackendKind::Native);
+            assert!(w.num_params > 0);
+            assert!(w.mean_runtime(0, 1).unwrap() >= 0.0);
+            assert!(w.live_buffer_bytes() > 0);
+            assert!(w.memory_model().overhead() >= 1.0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn native_dp_memory_exceeds_nodp() {
+        let dp = LayerWorkload::load_native("linear", "dp", 16).unwrap();
+        let nodp = LayerWorkload::load_native("linear", "nodp", 16).unwrap();
+        assert!(dp.live_buffer_bytes() > nodp.live_buffer_bytes());
     }
 }

@@ -6,11 +6,13 @@
 //! ```no_run
 //! use opacus_rs::coordinator::Opacus;
 //! use opacus_rs::privacy::PrivacyEngine;
+//! use opacus_rs::runtime::Backend;
 //!
 //! let sys = Opacus::load("artifacts", "mnist").unwrap();
 //! let mut private = PrivacyEngine::private()   // line 1
 //!     .noise_multiplier(1.1)
 //!     .max_grad_norm(1.0)
+//!     .backend(Backend::Auto)                  // xla if artifacts, else native
 //!     .build(sys)                              // line 2
 //!     .unwrap();
 //! private.train_epochs(3).unwrap();
@@ -22,48 +24,51 @@
 //! paper's three-object (model, optimizer, data loader) wrap. The bundle
 //! `Deref`s to the trainer, so training calls go straight through.
 //!
-//! A privacy budget instead of a fixed σ:
-//!
-//! ```no_run
-//! # use opacus_rs::coordinator::Opacus;
-//! # use opacus_rs::privacy::PrivacyEngine;
-//! # let sys = Opacus::load("artifacts", "mnist").unwrap();
-//! let private = PrivacyEngine::private()
-//!     .target_epsilon(3.0, 1e-5, /* epochs */ 3)
-//!     .build(sys)
-//!     .unwrap();
-//! ```
+//! Execution is backend-pluggable: [`Backend::Auto`] (default) runs on
+//! the AOT XLA/PJRT artifacts when `make artifacts` output exists for the
+//! task, and otherwise on the pure-Rust
+//! [`NativeBackend`](crate::runtime::backend::native::NativeBackend) —
+//! so the same program trains with differential privacy on a machine
+//! with no artifacts and no XLA toolchain at all.
 //!
 //! The pre-builder monolithic entry points
 //! (`engine.make_private(sys, pp)` / `make_private_with_epsilon`) remain
 //! as thin deprecated shims.
 
 use anyhow::{bail, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::data::{synth, Dataset};
 use crate::privacy::builder::PrivateBuilder;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::runtime::artifact::{ModelMeta, Registry};
-use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, TrainStep};
-use crate::trainer::trainer::{PrivateTrainer, TrainerSteps};
+use crate::runtime::backend::{self, Backend, BackendKind, ExecutionBackend, TrainerSteps};
+use crate::trainer::trainer::PrivateTrainer;
 
-/// A loaded training system: artifacts + model metadata + data.
+/// A loaded training system: execution backend + model metadata + data.
 pub struct Opacus {
-    pub registry: Registry,
+    backend: Box<dyn ExecutionBackend>,
+    /// Model metadata (a copy of the backend's view; mutable so callers
+    /// can e.g. inject layers to exercise the validator).
     pub model: ModelMeta,
     pub train: Dataset,
     pub test: Dataset,
     pub init_params: Vec<f32>,
+    artifacts_dir: PathBuf,
+    task: String,
+    /// (n_train, n_test, seed) — kept so a backend switch can regenerate
+    /// data against the new backend's input signature.
+    data_spec: (usize, usize, u64),
 }
 
 impl Opacus {
-    /// Load a task with default synthetic data (2048 train / 256 test).
+    /// Load a task with default synthetic data (2048 train / 256 test)
+    /// and automatic backend selection.
     pub fn load(artifacts_dir: impl AsRef<Path>, task: &str) -> Result<Opacus> {
         Self::load_with_data(artifacts_dir, task, 2048, 256, 0)
     }
 
-    /// Load with explicit dataset sizes and seed.
+    /// Load with explicit dataset sizes and seed (automatic backend).
     pub fn load_with_data(
         artifacts_dir: impl AsRef<Path>,
         task: &str,
@@ -71,10 +76,23 @@ impl Opacus {
         n_test: usize,
         seed: u64,
     ) -> Result<Opacus> {
-        let registry = Registry::open(artifacts_dir)?;
-        let model = registry.model(task)?.clone();
-        let init_params = registry
-            .init_params(task)
+        Self::load_with_backend(artifacts_dir, task, Backend::Auto, n_train, n_test, seed)
+    }
+
+    /// Load with an explicit backend request.
+    pub fn load_with_backend(
+        artifacts_dir: impl AsRef<Path>,
+        task: &str,
+        backend: Backend,
+        n_train: usize,
+        n_test: usize,
+        seed: u64,
+    ) -> Result<Opacus> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let backend = backend::resolve(&artifacts_dir, task, backend)?;
+        let model = backend.model_meta().clone();
+        let init_params = backend
+            .init_params()
             .with_context(|| format!("loading init params for {task}"))?;
         if init_params.len() != model.num_params {
             bail!(
@@ -90,15 +108,74 @@ impl Opacus {
             seed,
             &model.input_shape,
             model.vocab,
-        );
+        )?;
         let (train, test) = full.split_tail(n_test)?;
         Ok(Opacus {
-            registry,
+            backend,
             model,
             train,
             test,
             init_params,
+            artifacts_dir,
+            task: task.to_string(),
+            data_spec: (n_train, n_test, seed),
         })
+    }
+
+    /// The resolved backend's identity (xla | native).
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// The resolved backend's display name (e.g. "xla-pjrt", "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// One-line backend description for `opacus inspect`.
+    pub fn backend_description(&self) -> String {
+        self.backend.describe()
+    }
+
+    /// The artifact registry, when the XLA backend is active.
+    pub fn registry(&self) -> Option<&Registry> {
+        self.backend.registry()
+    }
+
+    /// Re-resolve the system onto the requested backend. `Auto` and a
+    /// request matching the current backend are no-ops; switching
+    /// **reloads from scratch** — model metadata, initial parameters and
+    /// the synthetic data are regenerated against the new backend's
+    /// input signature, so any caller mutations to `model`/`train`/
+    /// `test`/`init_params` made since `load` are discarded (a note is
+    /// printed to stderr). Load with `load_with_backend` up front when
+    /// you need to customize the system for a specific backend.
+    pub fn with_backend(self, requested: Backend) -> Result<Opacus> {
+        let keep = match requested {
+            Backend::Auto => true,
+            Backend::Xla => self.backend.kind() == BackendKind::Xla,
+            Backend::Native => self.backend.kind() == BackendKind::Native,
+        };
+        if keep {
+            return Ok(self);
+        }
+        eprintln!(
+            "note: switching task '{}' from the {} backend to '{}' reloads the system \
+             (model metadata, init params and synthetic data are regenerated; any \
+             post-load customization is discarded)",
+            self.task,
+            self.backend.name(),
+            requested,
+        );
+        let (n_train, n_test, seed) = self.data_spec;
+        Self::load_with_backend(
+            &self.artifacts_dir,
+            &self.task,
+            requested,
+            n_train,
+            n_test,
+            seed,
+        )
     }
 
     /// Start a typed [`PrivateBuilder`] — identical to
@@ -108,40 +185,15 @@ impl Opacus {
         PrivateBuilder::new()
     }
 
-    /// Load the step set for the given privacy parameters, discovering
-    /// batch sizes from the registry (no hard-coded `_b64` names).
+    /// Build the step set for the given privacy parameters through the
+    /// resolved backend.
     fn steps_for(&self, pp: &PrivacyParams) -> Result<TrainerSteps> {
-        let sel = select_steps(&self.registry, &self.model.task, pp.physical_batch);
-        let fused_dp = sel
-            .fused
-            .as_deref()
-            .map(|n| TrainStep::load(&self.registry, n))
-            .transpose()?;
-        let accum = sel
-            .accum
-            .as_deref()
-            .map(|n| AccumStep::load(&self.registry, n))
-            .transpose()?;
-        let apply = sel
-            .apply
-            .as_deref()
-            .map(|n| ApplyStep::load(&self.registry, n))
-            .transpose()?;
-        let eval = sel
-            .eval
-            .as_deref()
-            .map(|n| EvalStep::load(&self.registry, n))
-            .transpose()?;
-        Ok(TrainerSteps {
-            fused_dp,
-            accum,
-            apply,
-            eval,
-        })
+        self.backend.trainer_steps(pp.physical_batch)
     }
 }
 
-/// The artifact names chosen for one task at one physical batch size.
+/// The artifact names chosen for one task at one physical batch size
+/// (XLA backend's registry-driven discovery).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepSelection {
     /// Fused DP step — only at the exact physical batch (its batch IS the
@@ -335,5 +387,39 @@ mod tests {
             eval: None
         });
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_falls_back_to_native_without_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "opacus_rs_coord_native_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let sys = Opacus::load_with_data(&dir, "mnist", 64, 16, 0).unwrap();
+        assert_eq!(sys.backend_kind(), BackendKind::Native);
+        assert_eq!(sys.backend_name(), "native");
+        assert!(sys.registry().is_none());
+        assert_eq!(sys.train.len(), 64);
+        assert_eq!(sys.test.len(), 16);
+        assert_eq!(sys.init_params.len(), sys.model.num_params);
+        // Auto / matching requests are no-ops; the system stays native
+        let sys = sys.with_backend(Backend::Auto).unwrap();
+        assert_eq!(sys.backend_kind(), BackendKind::Native);
+        let sys = sys.with_backend(Backend::Native).unwrap();
+        assert_eq!(sys.backend_kind(), BackendKind::Native);
+        // but an explicit XLA request must fail loudly here
+        assert!(sys.with_backend(Backend::Xla).is_err());
+    }
+
+    #[test]
+    fn explicit_native_backend_serves_all_tasks() {
+        let dir = std::env::temp_dir().join("opacus_rs_coord_never_exists");
+        for &task in crate::runtime::backend::native::NATIVE_TASKS {
+            let sys =
+                Opacus::load_with_backend(&dir, task, Backend::Native, 32, 8, 1).unwrap();
+            assert_eq!(sys.backend_kind(), BackendKind::Native);
+            assert!(sys.backend_description().contains(task));
+        }
     }
 }

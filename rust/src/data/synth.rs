@@ -7,9 +7,14 @@
 //! original datasets. All generators are deterministic in the seed
 //! (substitution documented in DESIGN.md §2).
 
+use anyhow::{anyhow, Result};
+
 use crate::rng::{gaussian, pcg::Xoshiro256pp, Rng};
 
 use super::dataset::Dataset;
+
+/// Tasks with a synthetic-corpus generator (one per paper benchmark).
+pub const VALID_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm"];
 
 /// MNIST-shaped: [28, 28, 1] f32, 10 classes.
 ///
@@ -109,19 +114,29 @@ pub fn synth_imdb(n: usize, seed: u64, vocab: usize, seq: usize) -> Dataset {
     Dataset::new_i32("synth_imdb", vec![seq], 2, data, labels).expect("consistent")
 }
 
-/// Dataset matching a task's input signature from the manifest.
+/// Dataset matching a task's input signature from the model metadata.
+/// Unknown tasks are an error (not a panic) listing the valid options,
+/// matching the `AccountantKind` error convention.
 pub fn for_task(
     task: &str,
     n: usize,
     seed: u64,
     input_shape: &[usize],
     vocab: Option<usize>,
-) -> Dataset {
+) -> Result<Dataset> {
     match task {
-        "mnist" => synth_mnist(n, seed),
-        "cifar" => synth_cifar(n, seed),
-        "embed" | "lstm" => synth_imdb(n, seed, vocab.unwrap_or(10_000), input_shape[0]),
-        other => panic!("unknown task {other}"),
+        "mnist" => Ok(synth_mnist(n, seed)),
+        "cifar" => Ok(synth_cifar(n, seed)),
+        "embed" | "lstm" => {
+            let seq = *input_shape.first().ok_or_else(|| {
+                anyhow!("task '{task}': empty input shape (expected [seq_len])")
+            })?;
+            Ok(synth_imdb(n, seed, vocab.unwrap_or(10_000), seq))
+        }
+        other => Err(anyhow!(
+            "unknown task '{other}' (valid tasks: {})",
+            VALID_TASKS.join(", ")
+        )),
     }
 }
 
@@ -197,9 +212,22 @@ mod tests {
 
     #[test]
     fn for_task_dispatch() {
-        assert_eq!(for_task("mnist", 4, 0, &[28, 28, 1], None).sample_shape,
-                   vec![28, 28, 1]);
-        assert_eq!(for_task("lstm", 4, 0, &[64], Some(10_000)).sample_shape,
-                   vec![64]);
+        assert_eq!(
+            for_task("mnist", 4, 0, &[28, 28, 1], None).unwrap().sample_shape,
+            vec![28, 28, 1]
+        );
+        assert_eq!(
+            for_task("lstm", 4, 0, &[64], Some(10_000)).unwrap().sample_shape,
+            vec![64]
+        );
+    }
+
+    #[test]
+    fn for_task_unknown_error_lists_valid_tasks() {
+        let err = for_task("svhn", 4, 0, &[1], None).unwrap_err().to_string();
+        assert!(err.contains("svhn"), "{err}");
+        for t in VALID_TASKS {
+            assert!(err.contains(t), "{err} missing {t}");
+        }
     }
 }

@@ -3,24 +3,34 @@
 //! A Rust + JAX + Pallas reproduction of *Opacus: User-Friendly
 //! Differential Privacy Library in PyTorch* (Yousefpour et al., 2021).
 //!
-//! The crate is the Layer-3 coordinator: it owns the training loop,
-//! privacy accounting, Poisson sampling, noise generation (optionally
-//! through a cryptographically safe ChaCha20 generator), schedulers and
-//! the benchmark harness. All model compute — per-sample gradients,
-//! clipping, noisy updates — was AOT-lowered from JAX/Pallas to HLO text
-//! at build time (`make artifacts`) and is executed through the PJRT CPU
-//! client (`runtime`). Python never runs on the training path.
+//! The crate owns the training loop, privacy accounting, Poisson
+//! sampling, noise generation (optionally through a cryptographically
+//! safe ChaCha20 generator), schedulers and the benchmark harness. Model
+//! compute runs behind the pluggable
+//! [`runtime::backend::ExecutionBackend`]:
+//!
+//! * **XLA backend** — per-sample gradients, clipping and noisy updates
+//!   AOT-lowered from JAX/Pallas to HLO at build time (`make artifacts`)
+//!   and executed through the PJRT CPU client. Python never runs on the
+//!   training path.
+//! * **Native backend** — the same DP step pipeline in pure Rust:
+//!   batched per-sample-gradient kernels per layer kind
+//!   ([`runtime::backend::native::GradSampleLayer`] — linear, conv2d,
+//!   embedding, layernorm), per-sample L2 norms, flat or per-layer
+//!   clipping, Gaussian noise, SGD. No artifacts, no bindings — `cargo
+//!   test` runs the full integration path anywhere.
 //!
 //! ## Quickstart (the paper's two-line promise)
 //!
 //! ```no_run
 //! use opacus_rs::coordinator::Opacus;
-//! use opacus_rs::privacy::PrivacyEngine;
+//! use opacus_rs::privacy::{Backend, PrivacyEngine};
 //!
 //! let sys = Opacus::load("artifacts", "mnist").unwrap();
 //! let mut private = PrivacyEngine::private()   // line 1: the builder
 //!     .noise_multiplier(1.1)
 //!     .max_grad_norm(1.0)
+//!     .backend(Backend::Auto)                  // xla if artifacts, else native
 //!     .build(sys)                              // line 2: the wrap
 //!     .unwrap();
 //! private.train_epochs(3).unwrap();
@@ -29,22 +39,34 @@
 //!
 //! The builder is fully typed — [`privacy::AccountantKind`],
 //! [`privacy::ClippingStrategy`], [`privacy::NoiseSource`],
-//! [`privacy::SamplingMode`], explicit `.logical_batch(n)` /
-//! `.physical_batch(n)` — and `build` returns a [`privacy::Private`]
-//! bundle (trainer + optimizer handle + loader handle, the paper's
-//! three-object wrap). Budget-first training swaps the fixed σ for
-//! `.target_epsilon(3.0, 1e-5, epochs)`. Logical batches larger than the
-//! physical batch are virtualized by the
-//! [`trainer::BatchMemoryManager`] with identical privacy accounting.
+//! [`privacy::SamplingMode`], [`privacy::Backend`], explicit
+//! `.logical_batch(n)` / `.physical_batch(n)` — and `build` returns a
+//! [`privacy::Private`] bundle (trainer + optimizer handle + loader
+//! handle, the paper's three-object wrap). Budget-first training swaps
+//! the fixed σ for `.target_epsilon(3.0, 1e-5, epochs)`. Logical batches
+//! larger than the physical batch are virtualized by the
+//! [`trainer::BatchMemoryManager`] with identical privacy accounting on
+//! either backend.
+//!
+//! ## User-defined layers (paper §4)
+//!
+//! The native backend's extension point is the
+//! [`runtime::backend::native::GradSampleLayer`] trait: implement the
+//! batched forward + per-sample backward for a new layer kind, stack it
+//! in a [`runtime::backend::native::model::NativeModel`], and register
+//! the kind string with
+//! [`privacy::validator::validate_model_with_custom`]. Clipping, noise,
+//! virtual steps and accounting are layer-agnostic.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables
-//! * [`rng`] — PCG64 and ChaCha20 (secure mode) generators + Gaussian
+//! * [`rng`] — xoshiro and ChaCha20 (secure mode) generators + Gaussian
 //! * [`accounting`] — RDP/GDP accountants and noise calibration
 //! * [`privacy`] — `PrivacyEngine`, module validator, schedulers
-//! * [`data`] — synthetic datasets, uniform + Poisson loaders
-//! * [`runtime`] — PJRT client, artifact registry, typed step executables
+//! * [`runtime`] — execution backends (XLA/PJRT + native), artifact
+//!   registry, typed step executables
 //! * [`trainer`] — DP optimizer (virtual steps), training loop, metrics
+//! * [`data`] — synthetic datasets, uniform + Poisson loaders
 //! * [`bench`] — the harness regenerating every paper table and figure
 //! * [`coordinator`] — the user-facing facade (`Opacus`)
 

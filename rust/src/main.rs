@@ -15,14 +15,17 @@
 //!   opacus calibrate --eps 3 --delta 1e-5 --q 0.01 --steps 5000
 
 use anyhow::{bail, Result};
+use std::path::Path;
 
 use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
 use opacus_rs::privacy::validator::validate_model;
 use opacus_rs::privacy::{
-    AccountantKind, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine, SamplingMode,
+    AccountantKind, Backend, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine,
+    SamplingMode,
 };
 use opacus_rs::runtime::artifact::Registry;
+use opacus_rs::runtime::ExecutionBackend;
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::table::Table;
 
@@ -55,11 +58,15 @@ SUBCOMMANDS
              [--clip C] [--lr L] [--batch B] [--physical B] [--train N]
              [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
              [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
-             [--artifacts DIR] [--out metrics.json]
+             [--backend auto|xla|native] [--artifacts DIR] [--out metrics.json]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
-  validate   --task T [--artifacts DIR]
-  inspect    [--task T] [--artifacts DIR]
+  validate   --task T [--backend auto|xla|native] [--artifacts DIR]
+  inspect    [--task T] [--backend auto|xla|native] [--artifacts DIR]
+
+The default --backend auto runs on AOT XLA artifacts when `make
+artifacts` output exists for the task, and otherwise on the pure-Rust
+native per-sample-gradient engine (no artifacts needed).
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -80,10 +87,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.get_usize("physical", 64)?
     };
 
-    let sys = Opacus::load_with_data(&artifacts, &task, n_train, (n_train / 8).max(32), 0)?;
+    let backend = args.get_or("backend", "auto").parse::<Backend>()?;
+    let sys = Opacus::load_with_backend(
+        &artifacts,
+        &task,
+        backend,
+        n_train,
+        (n_train / 8).max(32),
+        0,
+    )?;
+    println!("backend: {} ({})", sys.backend_name(), sys.backend_description());
 
     // every CLI flag maps onto one typed builder method
     let mut builder = PrivacyEngine::private()
+        .backend(backend)
         .accountant(args.get_or("accountant", "rdp").parse::<AccountantKind>()?)
         .clipping(args.get_or("clipping", "flat").parse::<ClippingStrategy>()?)
         .noise(if args.has_flag("secure") {
@@ -110,8 +127,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let private = builder.build(sys)?;
     let (mut trainer, optimizer, loader) = private.into_parts();
     if let Some(s) = args.get("schedule") {
-        trainer.noise_scheduler = NoiseScheduler::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("bad --schedule '{s}'"))?;
+        trainer.noise_scheduler = s.parse::<NoiseScheduler>()?;
     }
 
     println!(
@@ -200,9 +216,11 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 fn cmd_validate(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let task = args.require("task")?;
-    let reg = Registry::open(artifacts)?;
-    let model = reg.model(task)?;
+    let backend = args.get_or("backend", "auto").parse::<Backend>()?;
+    let resolved = opacus_rs::runtime::backend::resolve(Path::new(artifacts), task, backend)?;
+    let model = resolved.model_meta();
     let errs = validate_model(model);
+    println!("backend: {}", resolved.name());
     println!("task {task}: layers {:?}", model.layer_kinds);
     if errs.is_empty() {
         println!("OK: model is compatible with DP-SGD");
@@ -217,45 +235,86 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
-    let reg = Registry::open(artifacts)?;
+    let backend = args.get_or("backend", "auto").parse::<Backend>()?;
     if let Some(task) = args.get("task") {
-        let m = reg.model(task)?;
+        // per-task view: resolve the backend the task would actually run on
+        let resolved = opacus_rs::runtime::backend::resolve(Path::new(artifacts), task, backend)?;
+        let m = resolved.model_meta();
+        println!("backend       : {} — {}", resolved.name(), resolved.describe());
         println!("task          : {task}");
         println!("num_params    : {}", m.num_params);
         println!("input         : {:?} {}", m.input_shape, m.input_dtype);
         println!("classes       : {}", m.num_classes);
         println!("layers        : {:?}", m.layer_kinds);
         println!("vocab         : {:?}", m.vocab);
+        if let Some(reg) = resolved.registry() {
+            let mut t = Table::new(
+                "artifacts",
+                Table::header_from(&["name", "variant", "batch", "inputs", "outputs"]),
+            );
+            let mut names = reg.artifact_names();
+            names.retain(|n| {
+                reg.meta(n)
+                    .map(|m2| m2.task.as_deref() == Some(task))
+                    .unwrap_or(false)
+            });
+            for n in names {
+                let a = reg.meta(&n)?;
+                t.add_row(vec![
+                    n.clone(),
+                    a.variant.clone(),
+                    a.batch.to_string(),
+                    a.inputs.len().to_string(),
+                    a.outputs.len().to_string(),
+                ]);
+            }
+            t.print();
+        } else {
+            use opacus_rs::runtime::backend::xla::XlaBackend;
+            if !XlaBackend::artifacts_present(Path::new(artifacts), task) {
+                println!("artifacts     : none (native engine: steps exist at any batch size)");
+            } else if opacus_rs::runtime::client::available() {
+                println!(
+                    "artifacts     : present in {artifacts} (unused — native backend \
+                     requested explicitly; drop --backend native or pass xla to use them)"
+                );
+            } else {
+                println!(
+                    "artifacts     : present in {artifacts} but PJRT is unavailable \
+                     (xla-stub build) — running natively; link real xla-rs to use them"
+                );
+            }
+        }
+    } else {
+        // overview: report what each known task would auto-select
+        match Registry::open(artifacts) {
+            Ok(reg) => {
+                println!("artifacts dir : {artifacts}");
+                println!("models        : {:?}", {
+                    let mut v: Vec<_> = reg.manifest.models.keys().cloned().collect();
+                    v.sort();
+                    v
+                });
+                println!("artifacts     : {}", reg.artifact_names().len());
+                println!("goldens       : {}", reg.manifest.goldens.len());
+            }
+            Err(_) => {
+                println!("artifacts dir : {artifacts} (no manifest — XLA path unavailable)");
+            }
+        }
+        match opacus_rs::runtime::client::platform() {
+            Ok(p) => println!("pjrt platform : {p}"),
+            Err(_) => println!("pjrt platform : unavailable (native engine only)"),
+        }
         let mut t = Table::new(
-            "artifacts",
-            Table::header_from(&["name", "variant", "batch", "inputs", "outputs"]),
+            "backend auto-selection",
+            Table::header_from(&["task", "active backend"]),
         );
-        let mut names = reg.artifact_names();
-        names.retain(|n| {
-            reg.meta(n)
-                .map(|m2| m2.task.as_deref() == Some(task))
-                .unwrap_or(false)
-        });
-        for n in names {
-            let a = reg.meta(&n)?;
-            t.add_row(vec![
-                n.clone(),
-                a.variant.clone(),
-                a.batch.to_string(),
-                a.inputs.len().to_string(),
-                a.outputs.len().to_string(),
-            ]);
+        for &task in opacus_rs::runtime::backend::native::NATIVE_TASKS {
+            let kind = opacus_rs::runtime::backend::auto_backend_kind(Path::new(artifacts), task);
+            t.add_row(vec![task.to_string(), kind.to_string()]);
         }
         t.print();
-    } else {
-        println!("platform : {}", opacus_rs::runtime::client::platform()?);
-        println!("models   : {:?}", {
-            let mut v: Vec<_> = reg.manifest.models.keys().cloned().collect();
-            v.sort();
-            v
-        });
-        println!("artifacts: {}", reg.artifact_names().len());
-        println!("goldens  : {}", reg.manifest.goldens.len());
     }
     Ok(())
 }

@@ -38,6 +38,7 @@ use std::str::FromStr;
 use crate::accounting::{calibration, CalibKind, VALID_ACCOUNTANTS};
 use crate::coordinator::Opacus;
 use crate::privacy::engine::{EngineConfig, PrivacyEngine, PrivacyParams};
+use crate::runtime::backend::Backend;
 use crate::trainer::trainer::PrivateTrainer;
 
 /// Which privacy accountant keeps the ledger (typed replacement for the
@@ -265,6 +266,7 @@ pub struct PrivateBuilder {
     clipping: ClippingStrategy,
     noise_source: NoiseSource,
     sampling: SamplingMode,
+    backend: Backend,
     noise_multiplier: f64,
     max_grad_norm: f64,
     lr: f64,
@@ -281,6 +283,7 @@ impl Default for PrivateBuilder {
             clipping: ClippingStrategy::Flat,
             noise_source: NoiseSource::Standard,
             sampling: SamplingMode::Poisson,
+            backend: Backend::Auto,
             noise_multiplier: 1.0,
             max_grad_norm: 1.0,
             lr: 0.05,
@@ -318,6 +321,19 @@ impl PrivateBuilder {
     /// Choose the batch sampler (default: Poisson).
     pub fn sampling(mut self, mode: SamplingMode) -> Self {
         self.sampling = mode;
+        self
+    }
+
+    /// Choose the execution backend (default: [`Backend::Auto`] — XLA
+    /// when usable artifacts exist for the task AND real PJRT bindings
+    /// are linked, else the pure-Rust native per-sample-gradient
+    /// engine). When the request differs from how the system was loaded,
+    /// `build` reloads it from scratch (see
+    /// [`Opacus::with_backend`](crate::coordinator::Opacus::with_backend)
+    /// — post-load mutations to model/data are discarded, with a stderr
+    /// note). Load with `Opacus::load_with_backend` to avoid the reload.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -441,9 +457,11 @@ impl PrivateBuilder {
         }
     }
 
-    /// Wrap a loaded system: validate the model, resolve the plan,
-    /// discover step executables, and return the three-object bundle.
+    /// Wrap a loaded system: resolve the backend, validate the model,
+    /// resolve the plan, build step executables, and return the
+    /// three-object bundle.
     pub fn build(self, sys: Opacus) -> Result<Private<PrivateTrainer>> {
+        let sys = sys.with_backend(self.backend)?;
         let engine = PrivacyEngine::try_new(self.engine_config())?;
         let plan = self.plan(sys.train.len())?;
         let num_layers = sys.model.layer_kinds.len().max(1);

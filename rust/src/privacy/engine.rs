@@ -145,13 +145,13 @@ impl PrivacyEngine {
         })
     }
 
-    /// Panicking convenience kept for backwards compatibility; prefer
-    /// [`PrivacyEngine::try_new`] or the builder.
-    pub fn new(config: EngineConfig) -> Self {
-        match Self::try_new(config) {
-            Ok(engine) => engine,
-            Err(e) => panic!("{e}"),
-        }
+    /// Former panicking constructor, now a deprecated alias that keeps
+    /// the `Result` contract: misconfiguration (e.g. an unknown
+    /// accountant) surfaces as an error listing the valid options, never
+    /// a panic.
+    #[deprecated(note = "use `PrivacyEngine::try_new` (same behaviour, explicit Result)")]
+    pub fn new(config: EngineConfig) -> Result<Self> {
+        Self::try_new(config)
     }
 
     /// Validate the model (Appendix C). Errors if any layer is
@@ -213,7 +213,7 @@ impl PrivacyEngine {
 
 impl Default for PrivacyEngine {
     fn default() -> Self {
-        Self::new(EngineConfig::default())
+        Self::try_new(EngineConfig::default()).expect("default engine config is always valid")
     }
 }
 
@@ -263,11 +263,12 @@ mod tests {
     #[test]
     fn noise_is_deterministic_when_configured() {
         let mk = || {
-            PrivacyEngine::new(EngineConfig {
+            PrivacyEngine::try_new(EngineConfig {
                 seed: 42,
                 deterministic: true,
                 ..Default::default()
             })
+            .unwrap()
         };
         let (a, b) = (mk(), mk());
         let mut va = vec![0f32; 32];
@@ -279,18 +280,20 @@ mod tests {
 
     #[test]
     fn secure_mode_uses_chacha() {
-        let std_engine = PrivacyEngine::new(EngineConfig {
+        let std_engine = PrivacyEngine::try_new(EngineConfig {
             seed: 1,
             secure_mode: false,
             deterministic: true,
             ..Default::default()
-        });
-        let sec_engine = PrivacyEngine::new(EngineConfig {
+        })
+        .unwrap();
+        let sec_engine = PrivacyEngine::try_new(EngineConfig {
             seed: 1,
             secure_mode: true,
             deterministic: true,
             ..Default::default()
-        });
+        })
+        .unwrap();
         let mut a = vec![0f32; 16];
         let mut b = vec![0f32; 16];
         std_engine.sample_noise(&mut a);
@@ -300,10 +303,11 @@ mod tests {
 
     #[test]
     fn gdp_accountant_selectable() {
-        let e = PrivacyEngine::new(EngineConfig {
+        let e = PrivacyEngine::try_new(EngineConfig {
             accountant: "gdp".into(),
             ..Default::default()
-        });
+        })
+        .unwrap();
         assert_eq!(e.accountant_mechanism(), "gdp");
         e.record_steps(1.0, 0.01, 100);
         assert!(e.get_epsilon(1e-5) > 0.0);

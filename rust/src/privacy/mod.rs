@@ -21,3 +21,6 @@ pub use builder::{
 pub use engine::{EngineConfig, PrivacyEngine, PrivacyParams};
 pub use scheduler::{BatchScheduler, NoiseScheduler};
 pub use validator::{validate_model, ValidationError};
+
+/// Re-exported for builder users: `.backend(Backend::Native)`.
+pub use crate::runtime::backend::{Backend, BackendKind};

@@ -39,17 +39,42 @@ impl NoiseScheduler {
     }
 
     /// Parse from CLI syntax: "constant", "exp:0.99", "step:10:0.9".
+    /// Prefer `s.parse::<NoiseScheduler>()` — this `Option` form predates
+    /// the typed error and is kept for compatibility.
     pub fn parse(s: &str) -> Option<NoiseScheduler> {
+        s.parse().ok()
+    }
+}
+
+/// Valid schedule syntaxes, quoted by parse errors.
+pub const VALID_SCHEDULES: &[&str] = &["constant", "exp:<gamma>", "step:<epochs>:<gamma>"];
+
+impl std::str::FromStr for NoiseScheduler {
+    type Err = anyhow::Error;
+
+    /// Typed parse: an unknown or malformed schedule is an error listing
+    /// the valid syntaxes (never a panic), matching the `AccountantKind`
+    /// error convention.
+    fn from_str(s: &str) -> anyhow::Result<NoiseScheduler> {
+        let invalid = || {
+            anyhow::anyhow!(
+                "unknown noise schedule '{s}' (valid schedules: {})",
+                VALID_SCHEDULES.join(", ")
+            )
+        };
         let parts: Vec<&str> = s.split(':').collect();
         match parts.as_slice() {
-            ["constant"] => Some(NoiseScheduler::Constant),
-            ["exp", g] => g.parse().ok().map(|gamma| NoiseScheduler::Exponential { gamma }),
+            ["constant"] => Ok(NoiseScheduler::Constant),
+            ["exp", g] => g
+                .parse()
+                .map(|gamma| NoiseScheduler::Exponential { gamma })
+                .map_err(|_| invalid()),
             ["step", n, g] => {
-                let step_size = n.parse().ok()?;
-                let gamma = g.parse().ok()?;
-                Some(NoiseScheduler::Step { step_size, gamma })
+                let step_size = n.parse().map_err(|_| invalid())?;
+                let gamma = g.parse().map_err(|_| invalid())?;
+                Ok(NoiseScheduler::Step { step_size, gamma })
             }
-            _ => None,
+            _ => Err(invalid()),
         }
     }
 }
@@ -121,18 +146,26 @@ mod tests {
             NoiseScheduler::parse("constant"),
             Some(NoiseScheduler::Constant)
         ));
-        match NoiseScheduler::parse("exp:0.95") {
-            Some(NoiseScheduler::Exponential { gamma }) => assert_eq!(gamma, 0.95),
-            _ => panic!(),
-        }
-        match NoiseScheduler::parse("step:10:0.9") {
-            Some(NoiseScheduler::Step { step_size, gamma }) => {
-                assert_eq!(step_size, 10);
-                assert_eq!(gamma, 0.9);
-            }
-            _ => panic!(),
-        }
+        assert!(matches!(
+            NoiseScheduler::parse("exp:0.95"),
+            Some(NoiseScheduler::Exponential { gamma }) if gamma == 0.95
+        ));
+        assert!(matches!(
+            NoiseScheduler::parse("step:10:0.9"),
+            Some(NoiseScheduler::Step { step_size: 10, gamma }) if gamma == 0.9
+        ));
         assert!(NoiseScheduler::parse("bogus:1").is_none());
+    }
+
+    #[test]
+    fn typed_parse_error_lists_valid_schedules() {
+        for bad in ["bogus:1", "exp:fast", "step:a:b", ""] {
+            let err = bad.parse::<NoiseScheduler>().unwrap_err().to_string();
+            assert!(err.contains("constant"), "{err}");
+            assert!(err.contains("exp:"), "{err}");
+            assert!(err.contains("step:"), "{err}");
+        }
+        assert!("exp:0.9".parse::<NoiseScheduler>().is_ok());
     }
 
     #[test]

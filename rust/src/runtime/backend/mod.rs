@@ -1,0 +1,278 @@
+//! Execution backends — where DP-SGD compute actually runs.
+//!
+//! The trainer is written against four *step families* (fused train,
+//! gradient accumulation, noisy apply, eval). Historically those were only
+//! satisfiable by AOT-compiled XLA/PJRT artifacts; this module abstracts
+//! them behind the [`ExecutionBackend`] trait with two implementations:
+//!
+//! * [`xla::XlaBackend`] — the original path: HLO artifacts from
+//!   `make artifacts`, compiled once through PJRT and executed from the
+//!   hot loop. Fastest when available; needs the artifact directory and
+//!   real xla-rs bindings.
+//! * [`native::NativeBackend`] — a pure-Rust batched per-sample-gradient
+//!   engine over flat [`HostTensor`] buffers: a
+//!   [`GradSampleLayer`](native::GradSampleLayer) kernel per layer kind
+//!   (linear, conv2d, embedding, layernorm), per-sample L2 norms,
+//!   clipping, Gaussian noise and SGD apply. Runs anywhere `cargo test`
+//!   runs — no artifacts, no bindings.
+//!
+//! [`Backend::Auto`] (the default) picks XLA when the artifact registry
+//! has a matching model with at least one compiled step on disk AND a
+//! PJRT client can be created (i.e. real xla-rs bindings are linked,
+//! not the stub), and falls back to the native engine otherwise.
+
+pub mod native;
+pub mod xla;
+
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::str::FromStr;
+
+use super::artifact::{ModelMeta, Registry};
+use super::step::{AccumOut, DpStepOut, HyperParams};
+use super::tensor::HostTensor;
+
+/// User-facing backend selector (builder `.backend(..)`, CLI `--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// XLA if usable artifacts exist for the task, else native.
+    #[default]
+    Auto,
+    /// Force the AOT XLA/PJRT artifact path.
+    Xla,
+    /// Force the pure-Rust per-sample-gradient engine.
+    Native,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 3] = [Backend::Auto, Backend::Xla, Backend::Native];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Xla => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+impl FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "xla" => Ok(Backend::Xla),
+            "native" => Ok(Backend::Native),
+            other => bail!("unknown backend '{other}' (valid backends: auto, xla, native)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A resolved backend identity (no `Auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Xla,
+    Native,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Fused train step: per-sample grads + clip + noise + SGD in one call
+/// (plus the plain-SGD variant the benches time as the no-DP baseline).
+pub trait FusedStep {
+    fn batch(&self) -> usize;
+
+    #[allow(clippy::too_many_arguments)]
+    fn dp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<DpStepOut>;
+
+    fn nodp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        denom: f32,
+    ) -> Result<(Vec<f32>, f64)>;
+}
+
+/// Clipped per-sample-gradient accumulation (first half of a virtual step).
+pub trait AccumExec {
+    fn batch(&self) -> usize;
+
+    fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<AccumOut>;
+}
+
+/// Noisy SGD update from an accumulated clipped-gradient sum.
+pub trait ApplyExec {
+    fn run(
+        &self,
+        params: &[f32],
+        gsum: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Evaluation: (summed masked loss, correct-prediction count).
+pub trait EvalExec {
+    fn batch(&self) -> usize;
+
+    fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)>;
+}
+
+/// The step set a backend hands to the trainer. Fields are optional
+/// because the XLA backend only provides what was compiled; the native
+/// backend always provides all four.
+pub struct TrainerSteps {
+    pub backend: BackendKind,
+    pub fused_dp: Option<Box<dyn FusedStep>>,
+    pub accum: Option<Box<dyn AccumExec>>,
+    pub apply: Option<Box<dyn ApplyExec>>,
+    pub eval: Option<Box<dyn EvalExec>>,
+}
+
+/// A loaded execution backend for one task: model metadata, initial
+/// parameters, and step construction.
+pub trait ExecutionBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Short name for logs / `opacus inspect`, e.g. "xla-pjrt".
+    fn name(&self) -> &'static str;
+
+    fn model_meta(&self) -> &ModelMeta;
+
+    /// The task's initial flat parameter vector.
+    fn init_params(&self) -> Result<Vec<f32>>;
+
+    /// Build the step set at the given physical batch size.
+    fn trainer_steps(&self, physical_batch: usize) -> Result<TrainerSteps>;
+
+    /// The artifact registry (XLA backend only).
+    fn registry(&self) -> Option<&Registry> {
+        None
+    }
+
+    /// One-line description for `opacus inspect`.
+    fn describe(&self) -> String;
+}
+
+/// Decide which backend `Auto` means for `(artifacts_dir, task)` —
+/// pure decision logic, separated from construction so it is testable
+/// without building any steps.
+pub fn auto_backend_kind(artifacts_dir: &Path, task: &str) -> BackendKind {
+    if xla::XlaBackend::usable(artifacts_dir, task) {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
+    }
+}
+
+/// Resolve a backend request into a loaded backend.
+pub fn resolve(
+    artifacts_dir: &Path,
+    task: &str,
+    requested: Backend,
+) -> Result<Box<dyn ExecutionBackend>> {
+    match requested {
+        Backend::Xla => Ok(Box::new(xla::XlaBackend::open(artifacts_dir, task)?)),
+        Backend::Native => Ok(Box::new(native::NativeBackend::for_task(task)?)),
+        Backend::Auto => match auto_backend_kind(artifacts_dir, task) {
+            BackendKind::Xla => Ok(Box::new(xla::XlaBackend::open(artifacts_dir, task)?)),
+            BackendKind::Native => native::NativeBackend::for_task(task)
+                .map(|b| Box::new(b) as Box<dyn ExecutionBackend>)
+                .map_err(|e| {
+                    e.context(format!(
+                        "backend auto-selection: no usable XLA artifacts for '{task}' in \
+                         {artifacts_dir:?} and the native backend cannot serve it either"
+                    ))
+                }),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_round_trips() {
+        for b in Backend::ALL {
+            assert_eq!(b.as_str().parse::<Backend>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_valid_options() {
+        let err = "tpu".parse::<Backend>().unwrap_err().to_string();
+        assert!(err.contains("tpu"), "{err}");
+        for valid in ["auto", "xla", "native"] {
+            assert!(err.contains(valid), "{err} missing {valid}");
+        }
+    }
+
+    #[test]
+    fn auto_prefers_native_without_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "opacus_rs_backend_auto_none_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        // directory doesn't even exist: Auto must not error, just go native
+        assert_eq!(auto_backend_kind(&dir, "mnist"), BackendKind::Native);
+        let b = resolve(&dir, "mnist", Backend::Auto).unwrap();
+        assert_eq!(b.kind(), BackendKind::Native);
+    }
+
+    #[test]
+    fn explicit_xla_without_artifacts_is_an_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "opacus_rs_backend_xla_none_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let err = resolve(&dir, "mnist", Backend::Xla).unwrap_err().to_string();
+        assert!(err.contains("manifest") || err.contains("artifacts"), "{err}");
+    }
+}

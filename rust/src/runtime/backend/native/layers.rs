@@ -1,0 +1,738 @@
+//! [`GradSampleLayer`] — batched per-sample-gradient kernels, the native
+//! analogue of Opacus's `GradSampleModule` rules (paper §4).
+//!
+//! Each implementation computes, for a physical batch of B samples in one
+//! call: the batched forward pass, the batched input gradient, and the
+//! *per-sample* parameter gradients written into a `[B, P_total]` matrix
+//! through [`GradSink`]. Keeping per-sample grads materialized mirrors
+//! the paper's vectorized-computation design (einsum-style, after Lee &
+//! Kifer 2020) and is what per-sample clipping consumes.
+//!
+//! This trait is also the **user-defined-layer extension point**: to add
+//! a custom layer kind, implement `GradSampleLayer`, include it in a
+//! [`NativeModel`](super::model::NativeModel) stack, and register the
+//! kind string with the validator
+//! ([`validate_model_with_custom`](crate::privacy::validator::validate_model_with_custom)).
+//! Built-in kinds mirror `privacy/validator.rs::SUPPORTED`: `linear`,
+//! `conv2d`, `embedding`, `layernorm`.
+
+use anyhow::{bail, Result};
+
+use crate::rng::{gaussian, Rng};
+use crate::runtime::tensor::HostTensor;
+
+/// Writes one layer's per-sample parameter gradients into its column
+/// block of the model-wide `[B, P_total]` gradient matrix. Rows are
+/// zero-initialized by the model, so kernels may accumulate with `+=`.
+///
+/// With `stride == 0` every sample's row aliases the same `[P_total]`
+/// buffer — because kernels accumulate with `+=`, that mode computes the
+/// *summed* gradient directly in O(P) memory (the no-DP baseline path,
+/// no per-sample materialization).
+pub struct GradSink<'a> {
+    buf: &'a mut [f32],
+    stride: usize,
+    offset: usize,
+    len: usize,
+}
+
+impl<'a> GradSink<'a> {
+    pub fn new(buf: &'a mut [f32], stride: usize, offset: usize, len: usize) -> Self {
+        debug_assert!(stride == 0 || offset + len <= stride);
+        debug_assert!(offset + len <= buf.len());
+        GradSink {
+            buf,
+            stride,
+            offset,
+            len,
+        }
+    }
+
+    /// Sample `b`'s gradient slice for this layer (`len` elements).
+    /// All samples share one slice when the sink was built with stride 0.
+    pub fn row(&mut self, b: usize) -> &mut [f32] {
+        let start = b * self.stride + self.offset;
+        &mut self.buf[start..start + self.len]
+    }
+}
+
+/// A layer with a batched per-sample gradient rule.
+pub trait GradSampleLayer {
+    /// Kind string as used by the validator (`linear`, `conv2d`, …).
+    fn kind(&self) -> &'static str;
+
+    /// Flat parameter count of this layer.
+    fn num_params(&self) -> usize;
+
+    /// Per-sample output shape for a per-sample input shape.
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>>;
+
+    /// Batched forward over `x` = `[B, in...]`; `params` is this layer's
+    /// flat slice. Returns `[B, out...]`.
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor>;
+
+    /// Batched backward: `x` is the cached layer input, `dy` the upstream
+    /// per-sample gradients `[B, out...]`. Writes per-sample parameter
+    /// gradients through `gs` and returns `dx` = `[B, in...]` (f32).
+    ///
+    /// `need_dx` is false when the caller will discard the input
+    /// gradient (the model's first layer) — implementations should then
+    /// skip the dx computation and may return an empty `[B, 0]` tensor,
+    /// which halves the cost of expensive kernels like conv2d on the
+    /// training hot path.
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor>;
+
+    /// Deterministic parameter initialization into this layer's slice.
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng);
+}
+
+fn batch_of(t: &HostTensor) -> usize {
+    *t.shape.first().unwrap_or(&0)
+}
+
+fn per_sample_elems(t: &HostTensor) -> usize {
+    t.shape[1..].iter().product()
+}
+
+// ---------------------------------------------------------------- Linear
+
+/// Fully connected layer, `y = W x + b`. Accepts any input whose
+/// per-sample element count equals `in_dim` (implicit flatten).
+pub struct Linear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize) -> Self {
+        Linear { in_dim, out_dim }
+    }
+}
+
+impl GradSampleLayer for Linear {
+    fn kind(&self) -> &'static str {
+        "linear"
+    }
+
+    fn num_params(&self) -> usize {
+        self.out_dim * self.in_dim + self.out_dim
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let n: usize = in_shape.iter().product();
+        if n != self.in_dim {
+            bail!(
+                "linear: input shape {in_shape:?} has {n} elements, expected {}",
+                self.in_dim
+            );
+        }
+        Ok(vec![self.out_dim])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let xs = x.as_f32()?;
+        if per_sample_elems(x) != self.in_dim {
+            bail!("linear forward: bad input shape {:?}", x.shape);
+        }
+        let (ind, outd) = (self.in_dim, self.out_dim);
+        let w = &params[..outd * ind];
+        let bias = &params[outd * ind..];
+        let mut y = vec![0f32; b * outd];
+        for s in 0..b {
+            let xr = &xs[s * ind..(s + 1) * ind];
+            let yr = &mut y[s * outd..(s + 1) * outd];
+            for o in 0..outd {
+                let wr = &w[o * ind..(o + 1) * ind];
+                let mut acc = bias[o];
+                for i in 0..ind {
+                    acc += wr[i] * xr[i];
+                }
+                yr[o] = acc;
+            }
+        }
+        Ok(HostTensor::f32(vec![b, outd], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (ind, outd) = (self.in_dim, self.out_dim);
+        let w = &params[..outd * ind];
+        let mut dx = if need_dx { vec![0f32; b * ind] } else { Vec::new() };
+        for s in 0..b {
+            let xr = &xs[s * ind..(s + 1) * ind];
+            let dyr = &dys[s * outd..(s + 1) * outd];
+            let g = gs.row(s);
+            for o in 0..outd {
+                let d = dyr[o];
+                let gw = &mut g[o * ind..(o + 1) * ind];
+                for i in 0..ind {
+                    gw[i] += d * xr[i];
+                }
+            }
+            if need_dx {
+                let dxr = &mut dx[s * ind..(s + 1) * ind];
+                for o in 0..outd {
+                    let d = dyr[o];
+                    let wr = &w[o * ind..(o + 1) * ind];
+                    for i in 0..ind {
+                        dxr[i] += d * wr[i];
+                    }
+                }
+            }
+            let gb = &mut g[outd * ind..];
+            for o in 0..outd {
+                gb[o] += dyr[o];
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(&x.shape[1..]);
+        Ok(HostTensor::f32(shape, dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.out_dim * self.in_dim;
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (2.0 / self.in_dim as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+// ---------------------------------------------------------------- Conv2d
+
+/// 2-D convolution over NHWC inputs with square kernel, stride and
+/// symmetric zero padding.
+pub struct Conv2d {
+    pub in_c: usize,
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    pub fn new(in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Conv2d {
+            in_c,
+            out_c,
+            k,
+            stride,
+            pad,
+        }
+    }
+
+    fn out_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let span = |n: usize| -> Result<usize> {
+            let padded = n + 2 * self.pad;
+            if padded < self.k {
+                bail!("conv2d: input {n} smaller than kernel {} (pad {})", self.k, self.pad);
+            }
+            Ok((padded - self.k) / self.stride + 1)
+        };
+        Ok((span(h)?, span(w)?))
+    }
+}
+
+impl GradSampleLayer for Conv2d {
+    fn kind(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn num_params(&self) -> usize {
+        self.out_c * self.k * self.k * self.in_c + self.out_c
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [h, w, c] = in_shape else {
+            bail!("conv2d: expected [H, W, C] input, got {in_shape:?}");
+        };
+        if *c != self.in_c {
+            bail!("conv2d: input channels {c} != {}", self.in_c);
+        }
+        let (oh, ow) = self.out_hw(*h, *w)?;
+        Ok(vec![oh, ow, self.out_c])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let &[h, w, _] = &x.shape[1..] else {
+            bail!("conv2d forward: bad input shape {:?}", x.shape);
+        };
+        let (oh, ow) = self.out_hw(h, w)?;
+        let xs = x.as_f32()?;
+        let (ic, oc, k, s, p) = (self.in_c, self.out_c, self.k, self.stride, self.pad);
+        let wts = &params[..oc * k * k * ic];
+        let bias = &params[oc * k * k * ic..];
+        let mut y = vec![0f32; b * oh * ow * oc];
+        for smp in 0..b {
+            let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
+            let yr = &mut y[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for o in 0..oc {
+                        let mut acc = bias[o];
+                        for ky in 0..k {
+                            let iy = (oy * s + ky) as isize - p as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * s + kx) as isize - p as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let xbase = (iy as usize * w + ix as usize) * ic;
+                                let wbase = ((o * k + ky) * k + kx) * ic;
+                                for c in 0..ic {
+                                    acc += wts[wbase + c] * xr[xbase + c];
+                                }
+                            }
+                        }
+                        yr[(oy * ow + ox) * oc + o] = acc;
+                    }
+                }
+            }
+        }
+        Ok(HostTensor::f32(vec![b, oh, ow, oc], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let &[h, w, _] = &x.shape[1..] else {
+            bail!("conv2d backward: bad input shape {:?}", x.shape);
+        };
+        let (oh, ow) = self.out_hw(h, w)?;
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (ic, oc, k, s, p) = (self.in_c, self.out_c, self.k, self.stride, self.pad);
+        let wts = &params[..oc * k * k * ic];
+        let nw = oc * k * k * ic;
+        let mut dx = if need_dx {
+            vec![0f32; b * h * w * ic]
+        } else {
+            Vec::new()
+        };
+        for smp in 0..b {
+            let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
+            let dyr = &dys[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
+            let dx_start = smp * h * w * ic;
+            let g = gs.row(smp);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for o in 0..oc {
+                        let d = dyr[(oy * ow + ox) * oc + o];
+                        if d == 0.0 {
+                            continue;
+                        }
+                        g[nw + o] += d;
+                        for ky in 0..k {
+                            let iy = (oy * s + ky) as isize - p as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * s + kx) as isize - p as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let xbase = (iy as usize * w + ix as usize) * ic;
+                                let wbase = ((o * k + ky) * k + kx) * ic;
+                                if need_dx {
+                                    let dxr = &mut dx[dx_start..dx_start + h * w * ic];
+                                    for c in 0..ic {
+                                        g[wbase + c] += d * xr[xbase + c];
+                                        dxr[xbase + c] += d * wts[wbase + c];
+                                    }
+                                } else {
+                                    for c in 0..ic {
+                                        g[wbase + c] += d * xr[xbase + c];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(vec![b, h, w, ic], dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.out_c * self.k * self.k * self.in_c;
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let fan_in = (self.k * self.k * self.in_c) as f64;
+        let scale = (2.0 / fan_in).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+// ------------------------------------------------------------- Embedding
+
+/// Token embedding lookup: i32 tokens `[B, T]` → `[B, T, dim]`.
+pub struct Embedding {
+    pub vocab: usize,
+    pub dim: usize,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, dim: usize) -> Self {
+        Embedding { vocab, dim }
+    }
+}
+
+impl GradSampleLayer for Embedding {
+    fn kind(&self) -> &'static str {
+        "embedding"
+    }
+
+    fn num_params(&self) -> usize {
+        self.vocab * self.dim
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [t] = in_shape else {
+            bail!("embedding: expected [T] token input, got {in_shape:?}");
+        };
+        Ok(vec![*t, self.dim])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let t = per_sample_elems(x);
+        let toks = x.as_i32()?;
+        let d = self.dim;
+        let mut y = vec![0f32; b * t * d];
+        for (pos, &tok) in toks.iter().enumerate() {
+            if tok < 0 || tok as usize >= self.vocab {
+                bail!("embedding: token {tok} out of range [0, {})", self.vocab);
+            }
+            let row = &params[tok as usize * d..(tok as usize + 1) * d];
+            y[pos * d..(pos + 1) * d].copy_from_slice(row);
+        }
+        Ok(HostTensor::f32(vec![b, t, d], y))
+    }
+
+    fn backward(
+        &self,
+        _params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        _need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let t = per_sample_elems(x);
+        let toks = x.as_i32()?;
+        let dys = dy.as_f32()?;
+        let d = self.dim;
+        for smp in 0..b {
+            let g = gs.row(smp);
+            for pos in 0..t {
+                let tok = toks[smp * t + pos] as usize;
+                let dyr = &dys[(smp * t + pos) * d..(smp * t + pos + 1) * d];
+                let gr = &mut g[tok * d..(tok + 1) * d];
+                for j in 0..d {
+                    gr[j] += dyr[j];
+                }
+            }
+        }
+        // tokens carry no gradient regardless of need_dx
+        Ok(HostTensor::f32(vec![b, 0], Vec::new()))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        gaussian::fill_standard_normal(rng, params);
+        for p in params.iter_mut() {
+            *p *= 0.1;
+        }
+    }
+}
+
+// ------------------------------------------------------------- LayerNorm
+
+/// Layer normalization over the last axis, with learnable scale and
+/// shift (`gamma`, `beta`).
+pub struct LayerNorm {
+    pub dim: usize,
+    pub eps: f64,
+}
+
+impl LayerNorm {
+    pub fn new(dim: usize) -> Self {
+        LayerNorm { dim, eps: 1e-5 }
+    }
+}
+
+impl GradSampleLayer for LayerNorm {
+    fn kind(&self) -> &'static str {
+        "layernorm"
+    }
+
+    fn num_params(&self) -> usize {
+        2 * self.dim
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        match in_shape.last() {
+            Some(&d) if d == self.dim => Ok(in_shape.to_vec()),
+            other => bail!(
+                "layernorm: last input axis {other:?} != normalized dim {}",
+                self.dim
+            ),
+        }
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let xs = x.as_f32()?;
+        let d = self.dim;
+        let rows = xs.len() / d;
+        let gamma = &params[..d];
+        let beta = &params[d..];
+        let mut y = vec![0f32; xs.len()];
+        for r in 0..rows {
+            let xr = &xs[r * d..(r + 1) * d];
+            let yr = &mut y[r * d..(r + 1) * d];
+            let (mu, inv) = row_stats(xr, self.eps);
+            for j in 0..d {
+                let xhat = (xr[j] as f64 - mu) * inv;
+                yr[j] = (xhat * gamma[j] as f64 + beta[j] as f64) as f32;
+            }
+        }
+        Ok(HostTensor::f32(x.shape.clone(), y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let d = self.dim;
+        let rows_per_sample = per_sample_elems(x) / d;
+        let gamma = &params[..d];
+        let mut dx = if need_dx {
+            vec![0f32; xs.len()]
+        } else {
+            Vec::new()
+        };
+        for smp in 0..b {
+            let g = gs.row(smp);
+            for rr in 0..rows_per_sample {
+                let r = smp * rows_per_sample + rr;
+                let xr = &xs[r * d..(r + 1) * d];
+                let dyr = &dys[r * d..(r + 1) * d];
+                let (mu, inv) = row_stats(xr, self.eps);
+                let mut m1 = 0.0f64; // mean(dxhat)
+                let mut m2 = 0.0f64; // mean(dxhat * xhat)
+                for j in 0..d {
+                    let xhat = (xr[j] as f64 - mu) * inv;
+                    let dxhat = dyr[j] as f64 * gamma[j] as f64;
+                    m1 += dxhat;
+                    m2 += dxhat * xhat;
+                    // per-sample parameter grads: dgamma then dbeta
+                    g[j] += (dyr[j] as f64 * xhat) as f32;
+                    g[d + j] += dyr[j];
+                }
+                if need_dx {
+                    m1 /= d as f64;
+                    m2 /= d as f64;
+                    let dxr = &mut dx[r * d..(r + 1) * d];
+                    for j in 0..d {
+                        let xhat = (xr[j] as f64 - mu) * inv;
+                        let dxhat = dyr[j] as f64 * gamma[j] as f64;
+                        dxr[j] = (inv * (dxhat - m1 - xhat * m2)) as f32;
+                    }
+                }
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(x.shape.clone(), dx))
+    }
+
+    fn init(&self, params: &mut [f32], _rng: &mut dyn Rng) {
+        let d = self.dim;
+        params[..d].fill(1.0);
+        params[d..].fill(0.0);
+    }
+}
+
+/// (mean, 1/√(var + eps)) of one normalization row, in f64.
+fn row_stats(xr: &[f32], eps: f64) -> (f64, f64) {
+    let n = xr.len() as f64;
+    let mu = xr.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = xr.iter().map(|&v| (v as f64 - mu).powi(2)).sum::<f64>() / n;
+    (mu, 1.0 / (var + eps).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::pcg::Xoshiro256pp;
+
+    fn init_params(layer: &dyn GradSampleLayer, seed: u64) -> Vec<f32> {
+        let mut p = vec![0f32; layer.num_params()];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        layer.init(&mut p, &mut rng);
+        p
+    }
+
+    #[test]
+    fn linear_forward_matches_manual() {
+        let l = Linear::new(2, 2);
+        // W = [[1, 2], [3, 4]], b = [0.5, -0.5]
+        let params = vec![1.0, 2.0, 3.0, 4.0, 0.5, -0.5];
+        let x = HostTensor::f32(vec![2, 2], vec![1.0, 1.0, 0.0, 2.0]);
+        let y = l.forward(&params, &x).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[3.5, 6.5, 4.5, 7.5]);
+    }
+
+    #[test]
+    fn linear_backward_per_sample_grads() {
+        let l = Linear::new(2, 1);
+        let params = vec![2.0, -1.0, 0.0]; // W = [2, -1], b = 0
+        let x = HostTensor::f32(vec![2, 2], vec![1.0, 3.0, -2.0, 0.5]);
+        let dy = HostTensor::f32(vec![2, 1], vec![1.0, 2.0]);
+        let mut buf = vec![0f32; 2 * 3];
+        let mut gs = GradSink::new(&mut buf, 3, 0, 3);
+        let dx = l.backward(&params, &x, &dy, &mut gs, true).unwrap();
+        // sample 0: dW = 1·x = [1, 3], db = 1; sample 1: dW = 2·x = [-4, 1], db = 2
+        assert_eq!(buf, vec![1.0, 3.0, 1.0, -4.0, 1.0, 2.0]);
+        // dx = dy · W
+        assert_eq!(dx.as_f32().unwrap(), &[2.0, -1.0, 4.0, -2.0]);
+
+        // need_dx = false: identical parameter grads, empty dx
+        let mut buf2 = vec![0f32; 2 * 3];
+        let mut gs2 = GradSink::new(&mut buf2, 3, 0, 3);
+        let dx2 = l.backward(&params, &x, &dy, &mut gs2, false).unwrap();
+        assert_eq!(buf2, buf);
+        assert!(dx2.is_empty());
+
+        // stride-0 shared sink: rows accumulate into one summed gradient
+        let mut gsum = vec![0f32; 3];
+        let mut shared = GradSink::new(&mut gsum, 0, 0, 3);
+        l.backward(&params, &x, &dy, &mut shared, false).unwrap();
+        assert_eq!(gsum, vec![1.0 - 4.0, 3.0 + 1.0, 1.0 + 2.0]);
+    }
+
+    #[test]
+    fn conv2d_shapes() {
+        let c = Conv2d::new(1, 8, 3, 2, 1);
+        assert_eq!(c.out_shape(&[28, 28, 1]).unwrap(), vec![14, 14, 8]);
+        assert!(c.out_shape(&[28, 28, 3]).is_err());
+        let c = Conv2d::new(3, 4, 3, 1, 0);
+        assert_eq!(c.out_shape(&[8, 8, 3]).unwrap(), vec![6, 6, 4]);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel_passes_through() {
+        // 1x1 kernel, single channel, weight 1, bias 0: y == x
+        let c = Conv2d::new(1, 1, 1, 1, 0);
+        let params = vec![1.0, 0.0];
+        let x = HostTensor::f32(vec![1, 2, 2, 1], vec![1.0, -2.0, 3.0, 4.0]);
+        let y = c.forward(&params, &x).unwrap();
+        assert_eq!(y.as_f32().unwrap(), x.as_f32().unwrap());
+        // and its backward returns dy as dx with dW = Σ x·dy, db = Σ dy
+        let dy = HostTensor::f32(vec![1, 2, 2, 1], vec![1.0, 1.0, 1.0, 1.0]);
+        let mut buf = vec![0f32; 2];
+        let mut gs = GradSink::new(&mut buf, 2, 0, 2);
+        let dx = c.backward(&params, &x, &dy, &mut gs, true).unwrap();
+        assert_eq!(dx.as_f32().unwrap(), &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(buf, vec![6.0, 4.0]); // Σx = 6, Σdy = 4
+    }
+
+    #[test]
+    fn embedding_lookup_and_grad() {
+        let e = Embedding::new(4, 2);
+        let params = vec![0., 0., 1., 2., 3., 4., 5., 6.]; // rows 0..4
+        let x = HostTensor::i32(vec![1, 3], vec![1, 3, 1]);
+        let y = e.forward(&params, &x).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[1., 2., 5., 6., 1., 2.]);
+        // repeated token 1 must accumulate
+        let dy = HostTensor::f32(vec![1, 3, 2], vec![1., 1., 1., 1., 1., 1.]);
+        let mut buf = vec![0f32; 8];
+        let mut gs = GradSink::new(&mut buf, 8, 0, 8);
+        e.backward(&params, &x, &dy, &mut gs, true).unwrap();
+        assert_eq!(buf, vec![0., 0., 2., 2., 0., 0., 1., 1.]);
+        // out-of-range tokens are an error, not UB
+        let bad = HostTensor::i32(vec![1, 1], vec![4]);
+        assert!(e.forward(&params, &bad).is_err());
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let ln = LayerNorm::new(4);
+        let params = init_params(&ln, 0); // gamma = 1, beta = 0
+        let x = HostTensor::f32(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = ln.forward(&params, &x).unwrap();
+        let ys = y.as_f32().unwrap();
+        let mean: f32 = ys.iter().sum::<f32>() / 4.0;
+        let var: f32 = ys.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_grad_orthogonal_to_constants() {
+        // dx of layernorm must sum to ~0 along the normalized axis
+        let ln = LayerNorm::new(4);
+        let params = init_params(&ln, 0);
+        let x = HostTensor::f32(vec![1, 4], vec![0.3, -1.2, 2.0, 0.7]);
+        let dy = HostTensor::f32(vec![1, 4], vec![1.0, -0.5, 0.25, 2.0]);
+        let mut buf = vec![0f32; 8];
+        let mut gs = GradSink::new(&mut buf, 8, 0, 8);
+        let dx = ln.backward(&params, &x, &dy, &mut gs, true).unwrap();
+        let s: f32 = dx.as_f32().unwrap().iter().sum();
+        assert!(s.abs() < 1e-5, "Σdx = {s}");
+        // dbeta = dy
+        assert_eq!(&buf[4..], dy.as_f32().unwrap());
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let l = Linear::new(8, 4);
+        assert_eq!(init_params(&l, 7), init_params(&l, 7));
+        assert_ne!(init_params(&l, 7), init_params(&l, 8));
+    }
+}

@@ -1,0 +1,241 @@
+//! The native execution backend: the full DP step pipeline in pure Rust.
+//!
+//! Everything the AOT artifacts do — batched per-sample gradients, L2
+//! norms, clipping, Gaussian noise application, SGD, eval — implemented
+//! over flat [`HostTensor`](crate::runtime::tensor::HostTensor) buffers
+//! with no external dependencies. Slower than compiled XLA, but runs on
+//! any machine `cargo` runs on, which turns the whole integration suite
+//! into always-on coverage and gives the benches a baseline to compare
+//! the XLA path against.
+//!
+//! * [`layers`] — the [`GradSampleLayer`] kernels (linear, conv2d,
+//!   embedding, layernorm) and the extension point for custom kinds
+//! * [`model`] — sequential stacks + softmax-CE head + clipping pipeline
+//! * [`steps`] — the step-family adapters the trainer consumes
+//!
+//! Tasks served natively: `mnist`, `cifar`, `embed`, `lstm`. The `lstm`
+//! task is served by a text-classifier *substitute* stack (embedding →
+//! meanpool → layernorm → linear×2): there is no native recurrent
+//! per-sample kernel yet, and the XLA artifacts remain the only true
+//! LSTM execution path. The substitution is visible in
+//! `ModelMeta::layer_kinds`.
+
+pub mod layers;
+pub mod model;
+pub mod steps;
+
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+use crate::runtime::artifact::ModelMeta;
+
+use self::layers::{Conv2d, Embedding, LayerNorm, Linear};
+use self::model::{NativeModel, Op};
+use self::steps::{NativeAccumStep, NativeApplyStep, NativeEvalStep, NativeFusedStep};
+use super::{BackendKind, ExecutionBackend, TrainerSteps};
+
+pub use self::layers::{GradSampleLayer, GradSink};
+
+/// Tasks the native backend can serve (matches `data::synth::VALID_TASKS`).
+pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm"];
+
+/// Per-task deterministic parameter-init seed (stable across runs so
+/// checkpoints and parity tests are reproducible).
+fn init_seed(task: &str) -> u64 {
+    0x6F70_6163_7573_0000 | task.bytes().map(|b| b as u64).sum::<u64>()
+}
+
+/// Build the native model stack for a task.
+pub fn model_for_task(task: &str) -> Result<NativeModel> {
+    match task {
+        "mnist" => NativeModel::new(
+            task,
+            vec![28, 28, 1],
+            "f32",
+            10,
+            None,
+            vec![
+                Op::Layer(Box::new(Conv2d::new(1, 8, 3, 2, 1))), // [14,14,8]
+                Op::Relu,
+                Op::Layer(Box::new(Conv2d::new(8, 16, 3, 2, 1))), // [7,7,16]
+                Op::Relu,
+                Op::Flatten,
+                Op::Layer(Box::new(Linear::new(7 * 7 * 16, 32))),
+                Op::Relu,
+                Op::Layer(Box::new(Linear::new(32, 10))),
+            ],
+        ),
+        "cifar" => NativeModel::new(
+            task,
+            vec![32, 32, 3],
+            "f32",
+            10,
+            None,
+            vec![
+                Op::Layer(Box::new(Conv2d::new(3, 8, 3, 2, 1))), // [16,16,8]
+                Op::Relu,
+                Op::Layer(Box::new(Conv2d::new(8, 16, 3, 2, 1))), // [8,8,16]
+                Op::Relu,
+                Op::Flatten,
+                Op::Layer(Box::new(Linear::new(8 * 8 * 16, 10))),
+            ],
+        ),
+        "embed" => NativeModel::new(
+            task,
+            vec![32],
+            "i32",
+            2,
+            Some(2000),
+            vec![
+                Op::Layer(Box::new(Embedding::new(2000, 16))), // [32,16]
+                Op::MeanPool,                                  // [16]
+                Op::Layer(Box::new(Linear::new(16, 2))),
+            ],
+        ),
+        // LSTM-task substitute: no native recurrent per-sample kernel yet
+        // (XLA artifacts carry the real LSTM); see the module docs.
+        "lstm" => NativeModel::new(
+            task,
+            vec![64],
+            "i32",
+            2,
+            Some(4000),
+            vec![
+                Op::Layer(Box::new(Embedding::new(4000, 32))), // [64,32]
+                Op::MeanPool,                                  // [32]
+                Op::Layer(Box::new(LayerNorm::new(32))),
+                Op::Layer(Box::new(Linear::new(32, 32))),
+                Op::Relu,
+                Op::Layer(Box::new(Linear::new(32, 2))),
+            ],
+        ),
+        other => Err(anyhow!(
+            "no native model for task '{other}' (native tasks: {})",
+            NATIVE_TASKS.join(", ")
+        )),
+    }
+}
+
+/// The pure-Rust execution backend for one task.
+pub struct NativeBackend {
+    model: Rc<NativeModel>,
+    meta: ModelMeta,
+}
+
+impl NativeBackend {
+    pub fn for_task(task: &str) -> Result<NativeBackend> {
+        let model = Rc::new(model_for_task(task)?);
+        let meta = ModelMeta {
+            task: task.to_string(),
+            num_params: model.num_params(),
+            input_shape: model.input_shape.clone(),
+            input_dtype: model.input_dtype.to_string(),
+            num_classes: model.num_classes,
+            layer_kinds: model.layer_kinds(),
+            vocab: model.vocab,
+            init_file: String::new(),
+        };
+        Ok(NativeBackend { model, meta })
+    }
+
+    pub fn model(&self) -> &Rc<NativeModel> {
+        &self.model
+    }
+}
+
+impl ExecutionBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn model_meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        Ok(self.model.init_params(init_seed(&self.meta.task)))
+    }
+
+    fn trainer_steps(&self, physical_batch: usize) -> Result<TrainerSteps> {
+        if physical_batch == 0 {
+            return Err(anyhow!("native backend: physical batch must be positive"));
+        }
+        Ok(TrainerSteps {
+            backend: BackendKind::Native,
+            fused_dp: Some(Box::new(NativeFusedStep::new(
+                self.model.clone(),
+                physical_batch,
+            ))),
+            accum: Some(Box::new(NativeAccumStep::new(
+                self.model.clone(),
+                physical_batch,
+            ))),
+            apply: Some(Box::new(NativeApplyStep::new(self.model.num_params()))),
+            eval: Some(Box::new(NativeEvalStep::new(
+                self.model.clone(),
+                physical_batch,
+            ))),
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native: task {} ({} params, layers {:?}) — pure-Rust per-sample-gradient engine",
+            self.meta.task, self.meta.num_params, self.meta.layer_kinds
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_native_tasks_build_and_validate() {
+        for &task in NATIVE_TASKS {
+            let b = NativeBackend::for_task(task).unwrap();
+            assert_eq!(b.kind(), BackendKind::Native);
+            let meta = b.model_meta();
+            assert!(meta.num_params > 0);
+            let errs = crate::privacy::validator::validate_model(meta);
+            assert!(errs.is_empty(), "{task}: {errs:?}");
+            let params = b.init_params().unwrap();
+            assert_eq!(params.len(), meta.num_params);
+            assert_eq!(params, b.init_params().unwrap(), "init must be deterministic");
+        }
+    }
+
+    #[test]
+    fn unknown_task_error_lists_native_tasks() {
+        let err = NativeBackend::for_task("imagenet").unwrap_err().to_string();
+        assert!(err.contains("imagenet"), "{err}");
+        for t in NATIVE_TASKS {
+            assert!(err.contains(t), "{err} missing {t}");
+        }
+    }
+
+    #[test]
+    fn native_steps_always_complete() {
+        let b = NativeBackend::for_task("mnist").unwrap();
+        let steps = b.trainer_steps(16).unwrap();
+        assert!(steps.fused_dp.is_some());
+        assert!(steps.accum.is_some());
+        assert!(steps.apply.is_some());
+        assert!(steps.eval.is_some());
+        assert_eq!(steps.fused_dp.unwrap().batch(), 16);
+        assert!(b.trainer_steps(0).is_err());
+    }
+
+    #[test]
+    fn mnist_layer_kinds_match_xla_manifest_convention() {
+        let b = NativeBackend::for_task("mnist").unwrap();
+        assert_eq!(
+            b.model_meta().layer_kinds,
+            vec!["conv2d", "conv2d", "linear", "linear"]
+        );
+    }
+}

@@ -1,0 +1,658 @@
+//! `NativeModel` — a sequential stack of [`GradSampleLayer`]s plus
+//! structural ops and a softmax-cross-entropy head, with the full DP
+//! gradient pipeline: batched per-sample gradients, per-sample L2 norms,
+//! clipping, and sums, all over flat f32 buffers.
+//!
+//! Users extend the native backend here (paper §4, custom layers):
+//! implement [`GradSampleLayer`] for the new kind and build a
+//! `NativeModel` stack containing it — the pipeline (clipping, noise,
+//! virtual steps, accounting) is layer-agnostic.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::pcg::Xoshiro256pp;
+use crate::runtime::tensor::HostTensor;
+
+use super::layers::{GradSampleLayer, GradSink};
+
+/// One stage of the model: a parameterized layer or a structural op.
+pub enum Op {
+    Layer(Box<dyn GradSampleLayer>),
+    /// Elementwise max(0, x).
+    Relu,
+    /// Collapse per-sample dims to one axis (no data movement; buffers
+    /// are row-major contiguous).
+    Flatten,
+    /// Mean over the first per-sample axis: `[T, D…]` → `[D…]`.
+    MeanPool,
+}
+
+/// Per-sample gradient output of one batched backward pass.
+pub struct PerSampleGrads {
+    /// Row-major `[B, P]` per-sample parameter gradients.
+    pub gsample: Vec<f32>,
+    /// Per-sample losses (masked samples contribute 0).
+    pub losses: Vec<f64>,
+    pub num_params: usize,
+}
+
+/// Clipped-and-summed gradients of one physical batch.
+pub struct DpGrad {
+    /// Σ_b clip_C(g_b) over real (unmasked) samples.
+    pub gsum: Vec<f32>,
+    /// Σ_b loss_b over real samples.
+    pub loss_sum: f64,
+    /// Σ_b ‖g_b‖₂ (pre-clip) over real samples.
+    pub snorm_sum: f64,
+    /// Number of real samples in the batch.
+    pub real: usize,
+}
+
+/// A sequential native model with a classification head.
+pub struct NativeModel {
+    pub task: String,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: &'static str,
+    pub num_classes: usize,
+    pub vocab: Option<usize>,
+    ops: Vec<Op>,
+    num_params: usize,
+    /// (offset, len) per `Op::Layer`, indexed like `ops` (None for
+    /// structural ops).
+    param_spans: Vec<Option<(usize, usize)>>,
+}
+
+impl NativeModel {
+    /// Assemble and shape-check a model. The final op's output must be
+    /// `[num_classes]` logits.
+    pub fn new(
+        task: &str,
+        input_shape: Vec<usize>,
+        input_dtype: &'static str,
+        num_classes: usize,
+        vocab: Option<usize>,
+        ops: Vec<Op>,
+    ) -> Result<NativeModel> {
+        let mut shape = input_shape.clone();
+        let mut num_params = 0;
+        let mut param_spans = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::Layer(l) => {
+                    shape = l
+                        .out_shape(&shape)
+                        .with_context(|| format!("{task}: op #{i} ({})", l.kind()))?;
+                    let len = l.num_params();
+                    param_spans.push(Some((num_params, len)));
+                    num_params += len;
+                }
+                Op::Relu => param_spans.push(None),
+                Op::Flatten => {
+                    shape = vec![shape.iter().product()];
+                    param_spans.push(None);
+                }
+                Op::MeanPool => {
+                    if shape.len() < 2 {
+                        bail!("{task}: meanpool needs ≥ 2 per-sample axes, got {shape:?}");
+                    }
+                    shape = shape[1..].to_vec();
+                    param_spans.push(None);
+                }
+            }
+        }
+        if shape != vec![num_classes] {
+            bail!(
+                "{task}: model output shape {shape:?} != [{num_classes}] logits"
+            );
+        }
+        Ok(NativeModel {
+            task: task.to_string(),
+            input_shape,
+            input_dtype,
+            num_classes,
+            vocab,
+            ops,
+            num_params,
+            param_spans,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    /// Kind strings of the parameterized layers, for `ModelMeta` /
+    /// validation.
+    pub fn layer_kinds(&self) -> Vec<String> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Layer(l) => Some(l.kind().to_string()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Deterministic flat parameter init.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut params = vec![0f32; self.num_params];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        for (op, span) in self.ops.iter().zip(&self.param_spans) {
+            if let (Op::Layer(l), Some((off, len))) = (op, span) {
+                l.init(&mut params[*off..*off + *len], &mut rng);
+            }
+        }
+        params
+    }
+
+    /// Batched forward pass caching every op input; returns the
+    /// activation trace (`trace[0]` = input, `trace.last()` = logits).
+    fn forward_trace(&self, params: &[f32], x: &HostTensor) -> Result<Vec<HostTensor>> {
+        if params.len() != self.num_params {
+            bail!(
+                "{}: params length {} != model num_params {}",
+                self.task,
+                params.len(),
+                self.num_params
+            );
+        }
+        let mut trace = Vec::with_capacity(self.ops.len() + 1);
+        trace.push(x.clone());
+        for (op, span) in self.ops.iter().zip(&self.param_spans) {
+            let cur = trace.last().expect("trace is never empty");
+            let next = match (op, span) {
+                (Op::Layer(l), Some((off, len))) => l.forward(&params[*off..*off + *len], cur)?,
+                (Op::Relu, _) => relu_forward(cur)?,
+                (Op::Flatten, _) => flatten(cur),
+                (Op::MeanPool, _) => meanpool_forward(cur)?,
+                (Op::Layer(_), None) => unreachable!("layer without param span"),
+            };
+            trace.push(next);
+        }
+        Ok(trace)
+    }
+
+    /// Batched logits `[B, num_classes]`.
+    pub fn logits(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        Ok(self
+            .forward_trace(params, x)?
+            .pop()
+            .expect("trace is never empty"))
+    }
+
+    /// Shared batched backward driver: forward trace, masked softmax-CE,
+    /// then every op's backward writing parameter gradients into `buf`
+    /// through a [`GradSink`] of the given `stride` (`num_params` for a
+    /// per-sample `[B, P]` matrix, `0` for in-place summed accumulation).
+    /// Returns the per-sample losses.
+    fn backward_into(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        buf: &mut [f32],
+        stride: usize,
+    ) -> Result<Vec<f64>> {
+        let b = *x.shape.first().unwrap_or(&0);
+        if y.len() != b || mask.len() != b {
+            bail!(
+                "{}: batch {} but {} labels / {} mask entries",
+                self.task,
+                b,
+                y.len(),
+                mask.len()
+            );
+        }
+        let trace = self.forward_trace(params, x)?;
+        let logits = trace.last().expect("trace is never empty");
+        let (losses, dlogits) = softmax_ce_backward(logits, y, mask, self.num_classes)?;
+
+        let mut dy = dlogits;
+        for (i, op) in self.ops.iter().enumerate().rev() {
+            let op_in = &trace[i];
+            dy = match (op, &self.param_spans[i]) {
+                (Op::Layer(l), Some((off, len))) => {
+                    let mut sink = GradSink::new(buf, stride, *off, *len);
+                    // the first op's input gradient is discarded: let the
+                    // kernel skip computing it (halves conv2d backward)
+                    l.backward(&params[*off..*off + *len], op_in, &dy, &mut sink, i != 0)?
+                }
+                (Op::Relu, _) => relu_backward(op_in, &dy)?,
+                (Op::Flatten, _) => reshape_like(dy, op_in),
+                (Op::MeanPool, _) => meanpool_backward(op_in, &dy)?,
+                (Op::Layer(_), None) => unreachable!("layer without param span"),
+            };
+        }
+        Ok(losses)
+    }
+
+    /// Full per-sample gradient computation for one physical batch:
+    /// forward, masked softmax-CE, batched backward through every op.
+    pub fn per_sample_grads(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<PerSampleGrads> {
+        let b = *x.shape.first().unwrap_or(&0);
+        let p = self.num_params;
+        let mut gsample = vec![0f32; b * p];
+        let losses = self.backward_into(params, x, y, mask, &mut gsample, p)?;
+        Ok(PerSampleGrads {
+            gsample,
+            losses,
+            num_params: p,
+        })
+    }
+
+    /// The DP gradient of one physical batch: per-sample grads, per-sample
+    /// L2 norms, clip to `clip`, sum. `clip` is the *effective* scalar the
+    /// caller resolved (C for flat clipping, C/√L for per-layer).
+    pub fn dp_grad(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<DpGrad> {
+        let ps = self.per_sample_grads(params, x, y, mask)?;
+        let b = mask.len();
+        let p = ps.num_params;
+        let mut gsum = vec![0f32; p];
+        let mut loss_sum = 0.0;
+        let mut snorm_sum = 0.0;
+        let mut real = 0;
+        for s in 0..b {
+            if mask[s] == 0.0 {
+                continue;
+            }
+            real += 1;
+            loss_sum += ps.losses[s];
+            let row = &ps.gsample[s * p..(s + 1) * p];
+            let norm = l2_norm(row);
+            snorm_sum += norm;
+            let factor = clip_factor(norm, clip);
+            for (acc, &g) in gsum.iter_mut().zip(row.iter()) {
+                *acc += factor * g;
+            }
+        }
+        Ok(DpGrad {
+            gsum,
+            loss_sum,
+            snorm_sum,
+            real,
+        })
+    }
+
+    /// Plain (non-DP) summed gradient + summed loss over real samples —
+    /// the no-DP baseline the benches time. Uses a stride-0 (shared-row)
+    /// [`GradSink`], so gradients are accumulated directly into one
+    /// `[P]` buffer: O(P) memory, no per-sample materialization — the
+    /// honest baseline the DP overhead factors are measured against.
+    /// Masked samples contribute zero (their loss gradient is zeroed).
+    pub fn grad_sum(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, f64, usize)> {
+        let mut gsum = vec![0f32; self.num_params];
+        let losses = self.backward_into(params, x, y, mask, &mut gsum, 0)?;
+        let mut loss_sum = 0.0;
+        let mut real = 0;
+        for (s, &m) in mask.iter().enumerate() {
+            if m != 0.0 {
+                real += 1;
+                loss_sum += losses[s];
+            }
+        }
+        Ok((gsum, loss_sum, real))
+    }
+
+    /// Masked eval: (Σ loss, Σ correct) over real samples.
+    pub fn eval(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        let logits = self.logits(params, x)?;
+        let ls = logits.as_f32()?;
+        let c = self.num_classes;
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        for (s, (&label, &m)) in y.iter().zip(mask.iter()).enumerate() {
+            if m == 0.0 {
+                continue;
+            }
+            let row = &ls[s * c..(s + 1) * c];
+            loss_sum += ce_loss(row, label)?;
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i as i32)
+                .unwrap_or(-1);
+            if argmax == label {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
+/// ‖v‖₂ with an f64 accumulator.
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt()
+}
+
+/// The per-sample clipping rule: scale factor min(1, C/‖g‖) applied to a
+/// gradient of norm `norm` under clip threshold `clip`. Shared by the
+/// training pipeline ([`NativeModel::dp_grad`]) and the layer benches so
+/// the rule cannot drift between them.
+pub fn clip_factor(norm: f64, clip: f32) -> f32 {
+    if norm > clip as f64 {
+        (clip as f64 / norm) as f32
+    } else {
+        1.0
+    }
+}
+
+fn relu_forward(x: &HostTensor) -> Result<HostTensor> {
+    let xs = x.as_f32()?;
+    Ok(HostTensor::f32(
+        x.shape.clone(),
+        xs.iter().map(|&v| v.max(0.0)).collect(),
+    ))
+}
+
+fn relu_backward(x: &HostTensor, dy: &HostTensor) -> Result<HostTensor> {
+    let xs = x.as_f32()?;
+    let dys = dy.as_f32()?;
+    Ok(HostTensor::f32(
+        x.shape.clone(),
+        xs.iter()
+            .zip(dys.iter())
+            .map(|(&v, &d)| if v > 0.0 { d } else { 0.0 })
+            .collect(),
+    ))
+}
+
+fn flatten(x: &HostTensor) -> HostTensor {
+    let b = *x.shape.first().unwrap_or(&0);
+    let per: usize = x.shape[1..].iter().product();
+    let mut t = x.clone();
+    t.shape = vec![b, per];
+    t
+}
+
+/// Reshape `t`'s data to `like`'s shape (same element count).
+fn reshape_like(t: HostTensor, like: &HostTensor) -> HostTensor {
+    let mut t = t;
+    debug_assert_eq!(t.len(), like.len());
+    t.shape = like.shape.clone();
+    t
+}
+
+fn meanpool_forward(x: &HostTensor) -> Result<HostTensor> {
+    let xs = x.as_f32()?;
+    let b = *x.shape.first().unwrap_or(&0);
+    let t = x.shape[1];
+    let d: usize = x.shape[2..].iter().product();
+    let mut y = vec![0f32; b * d];
+    for s in 0..b {
+        for pos in 0..t {
+            let xr = &xs[(s * t + pos) * d..(s * t + pos + 1) * d];
+            let yr = &mut y[s * d..(s + 1) * d];
+            for j in 0..d {
+                yr[j] += xr[j];
+            }
+        }
+    }
+    let inv = 1.0 / t as f32;
+    for v in y.iter_mut() {
+        *v *= inv;
+    }
+    let mut shape = vec![b];
+    shape.extend_from_slice(&x.shape[2..]);
+    Ok(HostTensor::f32(shape, y))
+}
+
+fn meanpool_backward(x: &HostTensor, dy: &HostTensor) -> Result<HostTensor> {
+    let dys = dy.as_f32()?;
+    let b = *x.shape.first().unwrap_or(&0);
+    let t = x.shape[1];
+    let d: usize = x.shape[2..].iter().product();
+    let inv = 1.0 / t as f32;
+    let mut dx = vec![0f32; b * t * d];
+    for s in 0..b {
+        let dyr = &dys[s * d..(s + 1) * d];
+        for pos in 0..t {
+            let dxr = &mut dx[(s * t + pos) * d..(s * t + pos + 1) * d];
+            for j in 0..d {
+                dxr[j] = dyr[j] * inv;
+            }
+        }
+    }
+    Ok(HostTensor::f32(x.shape.clone(), dx))
+}
+
+/// Numerically stable per-sample CE loss of one logits row.
+fn ce_loss(row: &[f32], label: i32) -> Result<f64> {
+    if label < 0 || label as usize >= row.len() {
+        bail!("label {label} out of range [0, {})", row.len());
+    }
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = row
+        .iter()
+        .map(|&v| (v as f64 - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    Ok(lse - row[label as usize] as f64)
+}
+
+/// Per-sample losses and masked d(loss_b)/d(logits) for softmax CE.
+/// Each sample's gradient is of its OWN loss (no batch averaging) — the
+/// DP pipeline divides by the logical-batch denominator at apply time.
+fn softmax_ce_backward(
+    logits: &HostTensor,
+    y: &[i32],
+    mask: &[f32],
+    classes: usize,
+) -> Result<(Vec<f64>, HostTensor)> {
+    let ls = logits.as_f32()?;
+    let b = y.len();
+    let mut losses = vec![0f64; b];
+    let mut dl = vec![0f32; b * classes];
+    for s in 0..b {
+        if mask[s] == 0.0 {
+            continue;
+        }
+        let row = &ls[s * classes..(s + 1) * classes];
+        let label = y[s];
+        if label < 0 || label as usize >= classes {
+            bail!("label {label} out of range [0, {classes})");
+        }
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let exps: Vec<f64> = row.iter().map(|&v| (v as f64 - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        losses[s] = z.ln() + max - row[label as usize] as f64;
+        let dr = &mut dl[s * classes..(s + 1) * classes];
+        for c in 0..classes {
+            let p = exps[c] / z;
+            let onehot = if c == label as usize { 1.0 } else { 0.0 };
+            dr[c] = (p - onehot) as f32;
+        }
+    }
+    Ok((losses, HostTensor::f32(vec![b, classes], dl)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::{LayerNorm, Linear};
+    use super::*;
+
+    fn tiny_model() -> NativeModel {
+        NativeModel::new(
+            "tiny",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Linear::new(3, 4))),
+                Op::Relu,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_check_rejects_bad_stacks() {
+        // output is [4], not [2] logits
+        let err = NativeModel::new(
+            "bad",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![Op::Layer(Box::new(Linear::new(3, 4)))],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("[2]"), "{err}");
+        // inner dimension mismatch points at the offending op
+        let err = NativeModel::new(
+            "bad2",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Linear::new(3, 4))),
+                Op::Layer(Box::new(Linear::new(5, 2))),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("op #1"), "{err}");
+    }
+
+    #[test]
+    fn param_accounting() {
+        let m = tiny_model();
+        assert_eq!(m.num_params(), 3 * 4 + 4 + 4 * 2 + 2);
+        assert_eq!(m.layer_kinds(), vec!["linear", "linear"]);
+        let p = m.init_params(1);
+        assert_eq!(p.len(), m.num_params());
+        assert_eq!(p, m.init_params(1), "init must be deterministic");
+    }
+
+    #[test]
+    fn losses_positive_and_masked_rows_zero() {
+        let m = tiny_model();
+        let params = m.init_params(3);
+        let x = HostTensor::f32(vec![2, 3], vec![0.5, -0.2, 0.8, 1.0, 0.0, -1.0]);
+        let ps = m
+            .per_sample_grads(&params, &x, &[1, 0], &[1.0, 0.0])
+            .unwrap();
+        assert!(ps.losses[0] > 0.0);
+        assert_eq!(ps.losses[1], 0.0);
+        let p = ps.num_params;
+        assert!(ps.gsample[..p].iter().any(|&g| g != 0.0));
+        assert!(ps.gsample[p..].iter().all(|&g| g == 0.0), "masked row must be zero");
+    }
+
+    #[test]
+    fn dp_grad_clips_norms() {
+        let m = tiny_model();
+        let params = m.init_params(5);
+        let x = HostTensor::f32(vec![2, 3], vec![2.0, -1.0, 0.7, -0.4, 1.3, 0.1]);
+        let tight = m.dp_grad(&params, &x, &[0, 1], &[1.0, 1.0], 1e-4).unwrap();
+        // with a tiny clip, ‖Σ clipped‖ ≤ B·C
+        assert!(l2_norm(&tight.gsum) <= 2.0 * 1e-4 + 1e-9);
+        let loose = m.dp_grad(&params, &x, &[0, 1], &[1.0, 1.0], 1e9).unwrap();
+        assert!(l2_norm(&loose.gsum) > l2_norm(&tight.gsum));
+        assert_eq!(loose.real, 2);
+        assert!((loose.snorm_sum - tight.snorm_sum).abs() < 1e-9, "pre-clip norms identical");
+    }
+
+    #[test]
+    fn finite_difference_gradient_check() {
+        // d(loss)/d(param) by central differences vs the analytic
+        // per-sample gradient, through linear + relu + linear + layernorm
+        let m = NativeModel::new(
+            "fd",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Linear::new(3, 4))),
+                Op::Layer(Box::new(LayerNorm::new(4))),
+                Op::Relu,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let mut params = m.init_params(11);
+        let x = HostTensor::f32(vec![1, 3], vec![0.8, -0.3, 0.5]);
+        let y = [1];
+        let mask = [1.0];
+        let ps = m.per_sample_grads(&params, &x, &y, &mask).unwrap();
+        let h = 1e-3f32;
+        for idx in [0, 3, 7, 12, 15, params.len() - 1] {
+            let orig = params[idx];
+            params[idx] = orig + h;
+            let up = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
+            params[idx] = orig - h;
+            let dn = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
+            params[idx] = orig;
+            let fd = (up - dn) / (2.0 * h as f64);
+            let got = ps.gsample[idx] as f64;
+            assert!(
+                (fd - got).abs() < 1e-2 * fd.abs().max(1.0) * 1.0 + 1e-3,
+                "param {idx}: fd {fd} vs analytic {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_sum_equals_summed_per_sample_grads() {
+        // the O(P) stride-0 baseline must equal summing the [B, P] rows
+        let m = tiny_model();
+        let params = m.init_params(13);
+        let x = HostTensor::f32(vec![3, 3], vec![0.4, -1.0, 0.2, 0.9, 0.1, -0.3, 0.0, 0.5, 1.1]);
+        let y = [1, 0, 1];
+        let mask = [1.0, 0.0, 1.0];
+        let (gsum, loss_sum, real) = m.grad_sum(&params, &x, &y, &mask).unwrap();
+        let ps = m.per_sample_grads(&params, &x, &y, &mask).unwrap();
+        let p = ps.num_params;
+        for (j, &g) in gsum.iter().enumerate() {
+            let want: f64 = (0..3).map(|s| ps.gsample[s * p + j] as f64).sum();
+            assert!(
+                (g as f64 - want).abs() < 1e-5,
+                "param {j}: stride-0 sum {g} vs row sum {want}"
+            );
+        }
+        assert_eq!(real, 2);
+        assert!((loss_sum - (ps.losses[0] + ps.losses[2])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_counts_masked() {
+        let m = tiny_model();
+        let params = m.init_params(9);
+        let x = HostTensor::f32(vec![3, 3], vec![0.1; 9]);
+        let (loss, correct) = m.eval(&params, &x, &[0, 1, 0], &[1.0, 1.0, 0.0]).unwrap();
+        assert!(loss > 0.0);
+        assert!((0.0..=2.0).contains(&correct));
+    }
+}

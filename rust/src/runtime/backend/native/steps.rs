@@ -1,0 +1,462 @@
+//! Native step adapters — the four step families the trainer consumes,
+//! implemented over [`NativeModel`]'s per-sample-gradient pipeline, with
+//! semantics matching the AOT graphs one-for-one:
+//!
+//! * fused DP step: `p' = p − lr · (Σ clip_C(g_b) + σ·C·noise) / denom`
+//! * accum: clipped per-sample gradient sum of one physical chunk
+//! * apply: the noisy SGD update from an accumulated sum
+//! * eval: summed masked loss + correct-prediction count
+//!
+//! Because the native engine is shape-flexible, every family exists at
+//! any batch size — no registry discovery, no artifact-missing skips.
+
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+use crate::rng::Rng;
+use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
+use crate::runtime::step::{AccumOut, DpStepOut, HyperParams};
+use crate::runtime::tensor::HostTensor;
+
+use super::layers::{Conv2d, Embedding, GradSampleLayer, GradSink, LayerNorm, Linear};
+use super::model::{clip_factor, l2_norm, NativeModel};
+
+fn check_batch(kind: &str, x: &HostTensor, y: &[i32], mask: &[f32], batch: usize) -> Result<()> {
+    let b = *x.shape.first().unwrap_or(&0);
+    if b != batch || y.len() != batch || mask.len() != batch {
+        bail!(
+            "native {kind} step: expected batch {batch}, got x[{b}], {} labels, {} mask",
+            y.len(),
+            mask.len()
+        );
+    }
+    Ok(())
+}
+
+/// The noisy SGD update both the fused step and the apply step perform:
+/// `p' = p − lr · (Σ clip_C(g_b) + σ·C·noise) / denom`. One definition so
+/// fused and virtual execution cannot drift apart.
+fn noisy_sgd_update(params: &[f32], gsum: &[f32], noise: &[f32], hp: HyperParams) -> Vec<f32> {
+    let scale = hp.sigma * hp.clip;
+    let inv_denom = 1.0 / hp.denom;
+    params
+        .iter()
+        .zip(gsum.iter().zip(noise.iter()))
+        .map(|(&p, (&gs, &n))| p - hp.lr * (gs + scale * n) * inv_denom)
+        .collect()
+}
+
+/// Fused DP train step (and the plain-SGD baseline variant).
+pub struct NativeFusedStep {
+    model: Rc<NativeModel>,
+    batch: usize,
+}
+
+impl NativeFusedStep {
+    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+        NativeFusedStep { model, batch }
+    }
+}
+
+impl FusedStep for NativeFusedStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn dp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<DpStepOut> {
+        check_batch("fused dp", &x, y, mask, self.batch)?;
+        if noise.len() != params.len() {
+            bail!(
+                "native fused dp step: noise length {} != params {}",
+                noise.len(),
+                params.len()
+            );
+        }
+        let g = self.model.dp_grad(params, &x, y, mask, hp.clip)?;
+        let new_params = noisy_sgd_update(params, &g.gsum, noise, hp);
+        let (loss, snorm_mean) = if g.real > 0 {
+            (g.loss_sum / g.real as f64, g.snorm_sum / g.real as f64)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        Ok(DpStepOut {
+            params: new_params,
+            loss,
+            snorm_mean,
+        })
+    }
+
+    fn nodp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        denom: f32,
+    ) -> Result<(Vec<f32>, f64)> {
+        check_batch("nodp", &x, y, mask, self.batch)?;
+        let (gsum, loss_sum, real) = self.model.grad_sum(params, &x, y, mask)?;
+        let inv_denom = 1.0 / denom;
+        let new_params: Vec<f32> = params
+            .iter()
+            .zip(gsum.iter())
+            .map(|(&p, &gs)| p - lr * gs * inv_denom)
+            .collect();
+        let loss = if real > 0 {
+            loss_sum / real as f64
+        } else {
+            f64::NAN
+        };
+        Ok((new_params, loss))
+    }
+}
+
+/// Clipped-gradient accumulation over one physical chunk.
+pub struct NativeAccumStep {
+    model: Rc<NativeModel>,
+    batch: usize,
+}
+
+impl NativeAccumStep {
+    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+        NativeAccumStep { model, batch }
+    }
+}
+
+impl AccumExec for NativeAccumStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<AccumOut> {
+        check_batch("accum", &x, y, mask, self.batch)?;
+        let g = self.model.dp_grad(params, &x, y, mask, clip)?;
+        Ok(AccumOut {
+            gsum: g.gsum,
+            loss_sum: g.loss_sum,
+            snorm_sum: g.snorm_sum,
+        })
+    }
+}
+
+/// The noisy SGD update from an accumulated clipped-gradient sum.
+pub struct NativeApplyStep {
+    num_params: usize,
+}
+
+impl NativeApplyStep {
+    pub fn new(num_params: usize) -> Self {
+        NativeApplyStep { num_params }
+    }
+}
+
+impl ApplyExec for NativeApplyStep {
+    fn run(
+        &self,
+        params: &[f32],
+        gsum: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<Vec<f32>> {
+        if params.len() != self.num_params
+            || gsum.len() != self.num_params
+            || noise.len() != self.num_params
+        {
+            bail!(
+                "native apply step: lengths p={} g={} n={} != num_params {}",
+                params.len(),
+                gsum.len(),
+                noise.len(),
+                self.num_params
+            );
+        }
+        Ok(noisy_sgd_update(params, gsum, noise, hp))
+    }
+}
+
+/// Masked evaluation over one physical chunk.
+pub struct NativeEvalStep {
+    model: Rc<NativeModel>,
+    batch: usize,
+}
+
+impl NativeEvalStep {
+    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+        NativeEvalStep { model, batch }
+    }
+}
+
+impl EvalExec for NativeEvalStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        check_batch("eval", &x, y, mask, self.batch)?;
+        self.model.eval(params, &x, y, mask)
+    }
+}
+
+/// Single-layer fwd+bwd workload for the per-layer microbenchmarks
+/// (Fig. 2/3/5) on the native backend: one batched forward, one batched
+/// backward producing per-sample grads, and (DP variant) per-sample
+/// clipping + summation.
+pub struct NativeLayerBench {
+    layer: Box<dyn GradSampleLayer>,
+    pub kind: String,
+    pub batch: usize,
+    pub num_params: usize,
+    dp: bool,
+    params: Vec<f32>,
+    x: HostTensor,
+    out_elems: usize,
+}
+
+/// Layer kinds `NativeLayerBench` knows canonical workloads for.
+pub const BENCH_KINDS: &[&str] = &["linear", "conv2d", "embedding", "layernorm"];
+
+impl NativeLayerBench {
+    /// Canonical per-kind workload at the requested batch. `variant` is
+    /// "dp" (per-sample grads + clip) or "nodp" (plain summed grads).
+    pub fn new(kind: &str, variant: &str, batch: usize) -> Result<NativeLayerBench> {
+        let dp = match variant {
+            "dp" => true,
+            "nodp" => false,
+            other => bail!("unknown layer-bench variant '{other}' (valid: dp, nodp)"),
+        };
+        let mut rng = crate::rng::pcg::Xoshiro256pp::seed_from_u64(99);
+        let (layer, x): (Box<dyn GradSampleLayer>, HostTensor) = match kind {
+            "linear" => {
+                let l = Linear::new(512, 512);
+                let mut v = vec![0f32; batch * 512];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 512], v))
+            }
+            "conv2d" => {
+                let l = Conv2d::new(3, 16, 3, 1, 1);
+                let mut v = vec![0f32; batch * 16 * 16 * 3];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 16, 16, 3], v))
+            }
+            "embedding" => {
+                let l = Embedding::new(5000, 64);
+                let v: Vec<i32> = (0..batch * 20)
+                    .map(|_| rng.gen_range(5000) as i32)
+                    .collect();
+                (Box::new(l), HostTensor::i32(vec![batch, 20], v))
+            }
+            "layernorm" => {
+                let l = LayerNorm::new(512);
+                let mut v = vec![0f32; batch * 512];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 512], v))
+            }
+            other => bail!(
+                "no native layer bench for kind '{other}' (valid kinds: {})",
+                BENCH_KINDS.join(", ")
+            ),
+        };
+        let num_params = layer.num_params();
+        let mut params = vec![0f32; num_params];
+        layer.init(&mut params, &mut rng);
+        let out_shape = layer.out_shape(&x.shape[1..])?;
+        let out_elems: usize = out_shape.iter().product();
+        Ok(NativeLayerBench {
+            layer,
+            kind: kind.to_string(),
+            batch,
+            num_params,
+            dp,
+            params,
+            x,
+            out_elems,
+        })
+    }
+
+    /// One fwd+bwd pass; returns a data-dependent scalar so the work
+    /// cannot be optimized away.
+    ///
+    /// DP variant: materialize `[B, P]` per-sample grads, per-sample
+    /// clip, sum. No-DP variant: stride-0 shared sink — gradients
+    /// accumulate straight into one `[P]` buffer, matching how a
+    /// non-private framework computes the batch gradient (this is the
+    /// baseline the paper's overhead factors divide by).
+    pub fn run(&self, clip: f32) -> Result<f64> {
+        let y = self.layer.forward(&self.params, &self.x)?;
+        let b = self.batch;
+        let p = self.num_params;
+        // uniform upstream gradient (mean-of-outputs pseudo-loss)
+        let mut shape = vec![b];
+        shape.extend_from_slice(&y.shape[1..]);
+        let dy = HostTensor::f32(
+            shape,
+            vec![1.0 / self.out_elems as f32; b * self.out_elems],
+        );
+        let gsum = if self.dp {
+            let mut gsample = vec![0f32; b * p];
+            let mut sink = GradSink::new(&mut gsample, p, 0, p);
+            self.layer.backward(&self.params, &self.x, &dy, &mut sink, false)?;
+            let mut gsum = vec![0f32; p];
+            for s in 0..b {
+                let row = &gsample[s * p..(s + 1) * p];
+                let factor = clip_factor(l2_norm(row), clip);
+                for (acc, &g) in gsum.iter_mut().zip(row.iter()) {
+                    *acc += factor * g;
+                }
+            }
+            gsum
+        } else {
+            let mut gsum = vec![0f32; p];
+            let mut sink = GradSink::new(&mut gsum, 0, 0, p);
+            self.layer.backward(&self.params, &self.x, &dy, &mut sink, false)?;
+            gsum
+        };
+        Ok(gsum.iter().map(|&g| g as f64).sum::<f64>() / p as f64)
+    }
+
+    /// Per-sample input shape of the canonical workload.
+    pub fn input_shape(&self) -> Vec<usize> {
+        self.x.shape[1..].to_vec()
+    }
+
+    /// Live native buffers: input + per-sample grads (+ the [B, P] matrix
+    /// for DP) — the Eq (2) analogue for the native engine.
+    pub fn live_buffer_bytes(&self) -> usize {
+        let base = self.x.byte_len() + self.num_params * 4 + self.batch * self.out_elems * 4;
+        if self.dp {
+            base + self.batch * self.num_params * 4
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NativeBackend;
+    use super::*;
+    use crate::runtime::backend::ExecutionBackend;
+
+    fn mnist_batch(b: usize, seed: u64) -> (HostTensor, Vec<i32>, Vec<f32>) {
+        let ds = crate::data::synth::synth_mnist(b, seed);
+        let idx: Vec<usize> = (0..b).collect();
+        let batch = ds.gather(&idx, b).unwrap();
+        (batch.x, batch.y, batch.mask)
+    }
+
+    #[test]
+    fn fused_step_updates_params_and_reports_stats() {
+        let backend = NativeBackend::for_task("mnist").unwrap();
+        let steps = backend.trainer_steps(8).unwrap();
+        let fused = steps.fused_dp.unwrap();
+        let params = backend.init_params().unwrap();
+        let (x, y, mask) = mnist_batch(8, 3);
+        let noise = vec![0f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.1,
+            clip: 1.0,
+            sigma: 0.0,
+            denom: 8.0,
+        };
+        let out = fused.dp_step(&params, x, &y, &mask, &noise, hp).unwrap();
+        assert_eq!(out.params.len(), params.len());
+        assert_ne!(out.params, params, "params must move");
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        assert!(out.snorm_mean > 0.0);
+    }
+
+    #[test]
+    fn fused_zero_noise_zero_lr_is_identity() {
+        let backend = NativeBackend::for_task("embed").unwrap();
+        let steps = backend.trainer_steps(4).unwrap();
+        let fused = steps.fused_dp.unwrap();
+        let params = backend.init_params().unwrap();
+        let ds = crate::data::synth::synth_imdb(4, 1, 2000, 32);
+        let batch = ds.gather(&[0, 1, 2, 3], 4).unwrap();
+        let noise = vec![0f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.0,
+            clip: 1.0,
+            sigma: 1.1,
+            denom: 4.0,
+        };
+        let out = fused
+            .dp_step(&params, batch.x, &batch.y, &batch.mask, &noise, hp)
+            .unwrap();
+        assert_eq!(out.params, params);
+    }
+
+    #[test]
+    fn apply_adds_scaled_noise() {
+        let apply = NativeApplyStep::new(3);
+        let hp = HyperParams {
+            lr: 1.0,
+            clip: 2.0,
+            sigma: 0.5,
+            denom: 1.0,
+        };
+        // p' = p − (g + σ·C·n) = p − g − 1.0·n
+        let out = apply
+            .run(&[1.0, 1.0, 1.0], &[0.5, 0.0, 0.0], &[0.0, 1.0, -1.0], hp)
+            .unwrap();
+        assert_eq!(out, vec![0.5, 0.0, 2.0]);
+        assert!(apply.run(&[1.0], &[1.0, 2.0], &[0.0], hp).is_err());
+    }
+
+    #[test]
+    fn eval_bounds() {
+        let backend = NativeBackend::for_task("mnist").unwrap();
+        let steps = backend.trainer_steps(16).unwrap();
+        let eval = steps.eval.unwrap();
+        let params = backend.init_params().unwrap();
+        let (x, y, mut mask) = mnist_batch(16, 5);
+        mask[15] = 0.0; // one padded row
+        let (loss_sum, correct) = eval.run(&params, x, &y, &mask).unwrap();
+        assert!(loss_sum > 0.0);
+        assert!((0.0..=15.0).contains(&correct));
+    }
+
+    #[test]
+    fn layer_bench_runs_all_kinds() {
+        for &kind in BENCH_KINDS {
+            for variant in ["dp", "nodp"] {
+                let w = NativeLayerBench::new(kind, variant, 4).unwrap();
+                let v = w.run(1.0).unwrap();
+                assert!(v.is_finite(), "{kind}/{variant}");
+                assert!(w.live_buffer_bytes() > 0);
+            }
+        }
+        let err = NativeLayerBench::new("lstm", "dp", 4).unwrap_err().to_string();
+        assert!(err.contains("linear"), "{err}");
+        assert!(NativeLayerBench::new("linear", "fast", 4).is_err());
+    }
+
+    #[test]
+    fn dp_layer_bench_uses_more_live_memory() {
+        let dp = NativeLayerBench::new("linear", "dp", 8).unwrap();
+        let nodp = NativeLayerBench::new("linear", "nodp", 8).unwrap();
+        assert!(dp.live_buffer_bytes() > nodp.live_buffer_bytes());
+    }
+}

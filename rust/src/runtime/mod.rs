@@ -1,18 +1,21 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
-//! the training hot path.
+//! The execution runtime: backends, artifacts, tensors, steps.
 //!
-//! * [`client`] — process-wide PJRT CPU client
+//! * [`backend`] — the [`ExecutionBackend`](backend::ExecutionBackend)
+//!   abstraction: XLA/PJRT artifacts or the pure-Rust native engine
+//! * [`client`] — process-wide PJRT CPU client (XLA backend)
 //! * [`tensor`] — host tensors ⇄ PJRT buffers/literals
 //! * [`artifact`] — `manifest.json` model + artifact registry/compile cache
-//! * [`step`] — typed wrappers for each step signature (dp/nodp/accum/…)
+//! * [`step`] — typed wrappers for each AOT step signature (dp/nodp/accum/…)
 //! * [`memory`] — the paper's Eq (1)–(3) memory model + host probes
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod memory;
 pub mod step;
 pub mod tensor;
 
 pub use artifact::{ArtifactMeta, GoldenMeta, Manifest, ModelMeta, Registry};
+pub use backend::{Backend, BackendKind, ExecutionBackend, TrainerSteps};
 pub use step::{EvalStep, LayerStep, TrainStep};
 pub use tensor::HostTensor;

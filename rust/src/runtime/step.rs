@@ -1,5 +1,5 @@
-//! Typed step executables — the bridge between the coordinator's training
-//! loop and the AOT-compiled HLO graphs.
+//! Typed step executables — the XLA backend's bridge between the
+//! training loop and the AOT-compiled HLO graphs.
 //!
 //! [`Step`] is the untyped core (validate inputs against the manifest
 //! signature, upload, execute, download). The typed wrappers expose each
@@ -9,6 +9,13 @@
 //! * [`AccumStep`] + [`ApplyStep`] — the virtual-step split
 //! * [`EvalStep`] — loss/accuracy
 //! * [`LayerStep`] — per-layer microbenchmark graphs (Fig. 2/3/5)
+//!
+//! The shared output/hyperparameter types ([`HyperParams`],
+//! [`DpStepOut`], [`AccumOut`]) double as the wire format of the
+//! backend-agnostic step-family traits in
+//! [`crate::runtime::backend`]; the trait impls for these wrappers live
+//! in `runtime/backend/xla.rs`, and the native engine reimplements the
+//! same semantics in pure Rust.
 
 use anyhow::{anyhow, bail, Result};
 use std::rc::Rc;

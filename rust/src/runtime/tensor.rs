@@ -170,6 +170,9 @@ mod tests {
 
     #[test]
     fn buffer_roundtrip_f32() {
+        if !client::available_or_skip() {
+            return;
+        }
         let t = HostTensor::f32(vec![2, 2], vec![1.5, -2.0, 0.0, 7.25]);
         let buf = t.to_buffer().unwrap();
         let lit = buf.to_literal_sync().unwrap();
@@ -179,6 +182,9 @@ mod tests {
 
     #[test]
     fn buffer_roundtrip_i32() {
+        if !client::available_or_skip() {
+            return;
+        }
         let t = HostTensor::i32(vec![3], vec![-7, 0, 2_000_000]);
         let buf = t.to_buffer().unwrap();
         let lit = buf.to_literal_sync().unwrap();
@@ -188,6 +194,9 @@ mod tests {
 
     #[test]
     fn scalar_buffer_roundtrip() {
+        if !client::available_or_skip() {
+            return;
+        }
         let t = HostTensor::scalar(3.25);
         let lit = t.to_buffer().unwrap().to_literal_sync().unwrap();
         let back = HostTensor::from_literal(&lit).unwrap();

@@ -1,9 +1,11 @@
-//! `PrivateTrainer` — the training loop over AOT step executables.
+//! `PrivateTrainer` — the training loop over backend step executables
+//! (AOT XLA artifacts or the native per-sample-gradient engine; the
+//! trainer is backend-agnostic through the step-family traits).
 //!
 //! Two execution modes, chosen automatically:
 //! * **Fused** — uniform sampling with logical == physical batch: each
-//!   step is one `dp_step` executable call (per-sample grads + clip +
-//!   noise + update in a single HLO module). The fast path benchmarked in
+//!   step is one `dp_step` call (per-sample grads + clip + noise +
+//!   update in a single executable). The fast path benchmarked in
 //!   Table 1.
 //! * **Virtual** — Poisson sampling or logical > physical batch: each
 //!   logical batch is split by the [`BatchMemoryManager`] into mask-padded
@@ -19,19 +21,16 @@ use anyhow::{anyhow, bail, Result};
 use crate::data::{Dataset, LogicalBatch, PoissonLoader, UniformLoader};
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::privacy::scheduler::NoiseScheduler;
-use crate::runtime::step::{AccumStep, ApplyStep, EvalStep, HyperParams, TrainStep};
+use crate::runtime::backend::BackendKind;
+use crate::runtime::step::HyperParams;
 
 use super::memory::BatchMemoryManager;
 use super::metrics::{MetricsLog, StepRecord};
 use super::optimizer::DpOptimizer;
 
-/// The step executables a trainer may use.
-pub struct TrainerSteps {
-    pub fused_dp: Option<TrainStep>,
-    pub accum: Option<AccumStep>,
-    pub apply: Option<ApplyStep>,
-    pub eval: Option<EvalStep>,
-}
+/// The step set a trainer runs on — re-exported from the backend layer;
+/// obtained from [`ExecutionBackend::trainer_steps`](crate::runtime::backend::ExecutionBackend::trainer_steps).
+pub use crate::runtime::backend::TrainerSteps;
 
 enum Mode {
     Fused,
@@ -156,6 +155,11 @@ impl PrivateTrainer {
 
     pub fn engine(&self) -> &PrivacyEngine {
         &self.engine
+    }
+
+    /// Which execution backend the step set came from (xla | native).
+    pub fn backend_kind(&self) -> BackendKind {
+        self.steps.backend
     }
 
     pub fn global_step(&self) -> u64 {

@@ -245,10 +245,10 @@ fn virtual_steps_equal_fused_step() {
 fn make_private_trains_and_accounts() {
     let dir = require_artifacts!();
     let sys = Opacus::load_with_data(&dir, "mnist", 256, 64, 7).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         seed: 3,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(0.8, 1.2)
         .with_lr(0.25)
         .with_batches(64, 64);
@@ -275,10 +275,10 @@ fn make_private_trains_and_accounts() {
 fn fused_uniform_mode_trains() {
     let dir = require_artifacts!();
     let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 1).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         seed: 5,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(0.5, 1.0)
         .with_lr(0.3)
         .with_batches(16, 16)
@@ -294,10 +294,10 @@ fn fused_uniform_mode_trains() {
 fn make_private_with_epsilon_respects_budget() {
     let dir = require_artifacts!();
     let sys = Opacus::load_with_data(&dir, "mnist", 256, 32, 2).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         seed: 9,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(0.0, 1.0).with_batches(64, 64);
     let epochs = 3;
     let mut trainer = engine
@@ -314,12 +314,12 @@ fn make_private_with_epsilon_respects_budget() {
 fn secure_mode_trains() {
     let dir = require_artifacts!();
     let sys = Opacus::load_with_data(&dir, "mnist", 128, 32, 3).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         secure_mode: true,
         deterministic: true,
         seed: 11,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(1.0, 1.0).with_batches(64, 64);
     let mut trainer = engine.make_private(sys, pp).unwrap();
     let loss = trainer.train_epoch().unwrap();
@@ -331,10 +331,10 @@ fn secure_mode_trains() {
 fn embed_task_trains() {
     let dir = require_artifacts!();
     let sys = Opacus::load_with_data(&dir, "embed", 256, 64, 4).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         seed: 13,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(0.7, 1.0).with_lr(0.5).with_batches(64, 64);
     let mut trainer = engine.make_private(sys, pp).unwrap();
     let losses = trainer.train_epochs(3).unwrap();
@@ -455,10 +455,10 @@ fn batch_memory_manager_matches_monolithic_epsilon() {
 
     // monolithic path: same (σ, q) and the same number of logical steps
     let sys = Opacus::load_with_data(&dir, "mnist", 1024, 64, 7).unwrap();
-    let engine = PrivacyEngine::new(EngineConfig {
+    let engine = PrivacyEngine::try_new(EngineConfig {
         seed: 3,
         ..Default::default()
-    });
+    }).unwrap();
     let pp = PrivacyParams::new(1.0, 1.0).with_lr(0.1).with_batches(512, 64);
     let mut trainer = engine.make_private(sys, pp).unwrap();
     trainer.train_epoch().unwrap();
