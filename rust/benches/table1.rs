@@ -13,14 +13,21 @@
 //!
 //! Usage: cargo bench --bench table1 [-- --tasks mnist,embed
 //!        --samples 512 --epochs 3 --backend auto|xla|native
-//!        --out results/table1.json --bench-out BENCH_pr2.json]
+//!        --workers 1,2,4 --out results/table1.json
+//!        --bench-out BENCH_pr2.json]
 //!
 //! `--backend native` (or `auto` with no artifacts) runs the pure-Rust
 //! per-sample-gradient engine — no `make artifacts` needed, so the bench
 //! produces a trajectory on any machine.
 //!
+//! `--workers 1,2,4` appends the worker-scaling sweep: steps/sec of the
+//! DP variant at the baseline batch per task × worker count, on the
+//! distributed native pool (the PR-3 acceptance metric: > 1.5× at 4
+//! workers on the conv2d task).
+//!
 //! `--bench-out` records the perf-trajectory baseline: steps/sec of the
-//! DP variant at the canonical physical batch (64) per task.
+//! DP variant at the canonical physical batch (64) per task, plus the
+//! worker sweep when requested.
 
 use std::path::Path;
 
@@ -48,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let out_path = args.get_or("out", "results/table1.json").to_string();
     let backend: Backend = args.get_or("backend", "auto").parse()?;
+    let worker_sweep = args.get_usize_list("workers", &[])?;
 
     // xla / auto: open the registry when possible; native: skip it
     let reg = match backend {
@@ -147,6 +155,53 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
+    // worker-scaling sweep (distributed native pool): steps/sec of the
+    // DP variant at the baseline batch, per task × worker count
+    let mut sweep_rows: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    if !worker_sweep.is_empty() {
+        let mut header = vec!["task / workers".to_string()];
+        header.extend(worker_sweep.iter().map(|w| w.to_string()));
+        header.push("speedup".to_string());
+        let title = format!(
+            "worker scaling (native pool, opacus-rs DP variant, batch {BASELINE_BATCH}, \
+             {samples} samples/epoch): steps/sec"
+        );
+        let mut table = Table::new(&title, header);
+        for task in &tasks {
+            let mut cells: Vec<(usize, f64)> = Vec::new();
+            for &w in &worker_sweep {
+                // unlike the XLA cells above there is no legitimate
+                // missing-artifact case here: a load/run failure is a
+                // distributed-pool regression and must fail the bench,
+                // not record a fake 0.0 baseline
+                let mut wl = TaskWorkload::load_native_parallel(
+                    task,
+                    Variant::Dp,
+                    BASELINE_BATCH,
+                    samples.min(2048),
+                    w,
+                )?;
+                let t = wl.median_epoch(epochs, samples)?;
+                cells.push((w, steps_per_sec(wl.batch, samples, t)));
+            }
+            let mut row = vec![task.clone()];
+            row.extend(cells.iter().map(|(_, sps)| format!("{sps:.2}")));
+            // speedup = widest pool vs the smallest-pool baseline,
+            // whatever order --workers was given in
+            let base = cells.iter().min_by_key(|&&(w, _)| w);
+            let top = cells.iter().max_by_key(|&&(w, _)| w);
+            let speedup = match (base, top) {
+                (Some(&(_, base)), Some(&(_, top))) if base > 0.0 => top / base,
+                _ => 0.0,
+            };
+            row.push(format!("{speedup:.2}x"));
+            table.add_row(row);
+            sweep_rows.push((task.clone(), cells));
+        }
+        table.print();
+        println!();
+    }
+
     std::fs::create_dir_all("results").ok();
     std::fs::write(&out_path, Json::Arr(all_results).to_string())?;
     println!("raw results -> {out_path}");
@@ -164,13 +219,34 @@ fn main() -> anyhow::Result<()> {
                 .map(|(t, be, _)| (t.as_str(), Json::str(be)))
                 .collect(),
         );
+        // worker sweep results: task -> { "<workers>": steps/sec }
+        let sweep_json = Json::Obj(
+            sweep_rows
+                .iter()
+                .map(|(task, cells)| {
+                    let per_worker = Json::Obj(
+                        cells
+                            .iter()
+                            .map(|&(w, sps)| (w.to_string(), Json::num(sps)))
+                            .collect(),
+                    );
+                    (task.clone(), per_worker)
+                })
+                .collect(),
+        );
+        let workers_flag = if worker_sweep.is_empty() {
+            String::new()
+        } else {
+            let list: Vec<String> = worker_sweep.iter().map(|w| w.to_string()).collect();
+            format!(" --workers {}", list.join(","))
+        };
         // keep the schema of the committed BENCH_pr*.json files: the
         // regeneration command and status survive a rewrite
         let command = format!(
             "cd rust && cargo bench --bench table1 -- --samples {samples} --epochs {epochs} \
-             --backend {backend} --bench-out {bench_out}"
+             --backend {backend}{workers_flag} --bench-out {bench_out}"
         );
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::str("rust/benches/table1.rs")),
             (
                 "metric",
@@ -186,7 +262,13 @@ fn main() -> anyhow::Result<()> {
             ("epochs", Json::num(epochs as f64)),
             ("status", Json::str("recorded")),
             ("tasks", tasks_json),
-        ]);
+        ];
+        // only sweep runs carry the field, so regenerating a non-sweep
+        // baseline (BENCH_pr2.json) keeps its committed schema
+        if !sweep_rows.is_empty() {
+            fields.push(("workers_sweep", sweep_json));
+        }
+        let j = Json::obj(fields);
         std::fs::write(bench_out, j.to_string())?;
         println!("perf baseline -> {bench_out}");
     }

@@ -9,6 +9,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::data::{synth, Dataset};
+use crate::distributed::{ExecSpec, Parallelism};
 use crate::rng::{gaussian, pcg::Xoshiro256pp};
 use crate::runtime::artifact::Registry;
 use crate::runtime::backend::native::NativeBackend;
@@ -122,13 +123,36 @@ impl TaskWorkload {
         batch: usize,
         n_data: usize,
     ) -> Result<TaskWorkload> {
+        Self::load_native_parallel(task, variant, batch, n_data, 1)
+    }
+
+    /// The native workload over `workers` threads: steps come from the
+    /// distributed worker pool (`workers = 1` bypasses it), which is
+    /// what the table1 worker-scaling sweep times.
+    pub fn load_native_parallel(
+        task: &str,
+        variant: Variant,
+        batch: usize,
+        n_data: usize,
+        workers: usize,
+    ) -> Result<TaskWorkload> {
         if variant == Variant::JaxStyle {
             return Err(anyhow!("jaxstyle is an XLA-only variant"));
         }
         let backend = NativeBackend::for_task(task)?;
         let model = backend.model_meta();
         let step_batch = if variant == Variant::Microbatch { 1 } else { batch };
-        let steps = backend.trainer_steps(step_batch)?;
+        let exec = ExecSpec {
+            parallelism: match workers {
+                1 => Parallelism::Single,
+                // 0 (and absurd counts) surface the same typed error
+                // the CLI and builder produce, when the steps are built
+                n => Parallelism::Workers(n),
+            },
+            seed: 7,
+            ..Default::default()
+        };
+        let steps = backend.trainer_steps_parallel(step_batch, &exec)?;
         let step = steps
             .fused_dp
             .ok_or_else(|| anyhow!("native backend produced no fused step"))?;
@@ -327,5 +351,13 @@ mod tests {
     fn native_nodp_workload_trains() {
         let mut w = TaskWorkload::load_native("embed", Variant::NoDp, 4, 16).unwrap();
         assert!(w.median_epoch(2, 8).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn parallel_workload_runs_and_matches_batch() {
+        let mut w = TaskWorkload::load_native_parallel("embed", Variant::Dp, 8, 32, 2).unwrap();
+        assert_eq!(w.backend, BackendKind::Native);
+        assert_eq!(w.batch, 8);
+        assert!(w.run_epoch(16).unwrap() > 0.0);
     }
 }

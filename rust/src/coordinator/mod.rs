@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 use crate::data::{synth, Dataset};
+use crate::distributed::ExecSpec;
 use crate::privacy::builder::PrivateBuilder;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::runtime::artifact::{ModelMeta, Registry};
@@ -186,9 +187,10 @@ impl Opacus {
     }
 
     /// Build the step set for the given privacy parameters through the
-    /// resolved backend.
-    fn steps_for(&self, pp: &PrivacyParams) -> Result<TrainerSteps> {
-        self.backend.trainer_steps(pp.physical_batch)
+    /// resolved backend. `exec` carries the parallel-execution request
+    /// (worker count, noise division, per-worker generator seeds).
+    fn steps_for(&self, pp: &PrivacyParams, exec: &ExecSpec) -> Result<TrainerSteps> {
+        self.backend.trainer_steps_parallel(pp.physical_batch, exec)
     }
 }
 
@@ -229,13 +231,23 @@ pub fn select_steps(reg: &Registry, task: &str, physical_batch: usize) -> StepSe
 
 /// Shared wrap path: validate the model, discover + load steps, assemble
 /// the trainer. Used by `PrivateBuilder::build` and the legacy shims.
+/// The parallel-execution spec inherits the engine's noise-source flags,
+/// so per-worker noise streams follow the same secure/deterministic
+/// policy as the root generator.
 pub(crate) fn build_with_engine(
     engine: PrivacyEngine,
     sys: Opacus,
     pp: PrivacyParams,
 ) -> Result<PrivateTrainer> {
     engine.validate(&sys.model)?;
-    let steps = sys.steps_for(&pp)?;
+    let exec = ExecSpec {
+        parallelism: pp.parallelism,
+        noise_division: pp.noise_division,
+        secure_mode: engine.config.secure_mode,
+        seed: engine.config.seed,
+        deterministic: engine.config.deterministic,
+    };
+    let steps = sys.steps_for(&pp, &exec)?;
     PrivateTrainer::new(
         &sys.model.task,
         sys.init_params,

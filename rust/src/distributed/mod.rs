@@ -1,0 +1,214 @@
+//! Data-parallel distributed DP-SGD — the worker-parallel execution
+//! subsystem over the native per-sample-gradient engine.
+//!
+//! DP-SGD is embarrassingly parallel across samples once clipping is
+//! per-sample (Abadi et al., 2016): each worker can compute the clipped
+//! per-sample-gradient sum of its shard independently, and the only
+//! cross-worker coupling is one gradient reduction and one noise
+//! addition per logical step. This module is that design, single-process
+//! and thread-based, mirroring Opacus's `DifferentiallyPrivateDDP`
+//! semantics:
+//!
+//! * [`pool`] — a persistent [`WorkerPool`]: N threads, each holding the
+//!   shared read-only [`NativeModel`](crate::runtime::backend::native::model::NativeModel)
+//!   snapshot plus a private noise generator, served jobs over channels;
+//! * [`shard`] — the [`ShardPlan`]: balanced contiguous row shards of
+//!   one physical batch;
+//! * [`reduce`] — pairwise [`tree_reduce`] of f64 gradient partials, so
+//!   the summed gradient is insensitive to the worker count;
+//! * [`noise`] — [`NoiseDivision`]: noise added exactly once at the root
+//!   (rank-0, the default — byte-identical accounting and, under
+//!   [`NoiseSource::Deterministic`](crate::privacy::NoiseSource), a
+//!   bit-stable noise stream across worker counts), or split per worker
+//!   at σ/√N (DPDDP-style; the N shares sum to a single-node σ draw);
+//! * [`step`] — [`DistributedStep`], one struct implementing the
+//!   existing `FusedStep`/`AccumExec`/`ApplyExec`/`EvalExec` step-family
+//!   traits, so the trainer is oblivious to parallel execution.
+//!
+//! Privacy semantics are unchanged by construction: one logical step is
+//! still exactly one noise addition and one accountant entry, and ε is
+//! byte-identical to a single-worker run because the accountant only
+//! ever sees (σ, q, steps).
+
+pub mod noise;
+pub mod pool;
+pub mod reduce;
+pub mod shard;
+pub mod step;
+
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+pub use self::noise::{worker_seed, NoiseDivision};
+pub use self::pool::WorkerPool;
+pub use self::reduce::tree_reduce;
+pub use self::shard::ShardPlan;
+pub use self::step::DistributedStep;
+
+/// Upper bound on `Parallelism::Auto`: physical batches are small (64 by
+/// default), so shards thinner than `batch / 8` lose more to dispatch
+/// than they gain from parallelism.
+pub const AUTO_WORKER_CAP: usize = 8;
+
+/// Hard ceiling on explicit worker counts — far above any useful pool
+/// for CPU shards, but low enough that a typo'd `--workers 500000`
+/// surfaces as a typed error instead of OS thread exhaustion.
+pub const MAX_WORKERS: usize = 256;
+
+/// Detected CPU count of this machine (≥ 1; what `Auto` is derived from
+/// and what `opacus inspect` reports).
+pub fn detected_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// How many worker threads execute each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Run every step in the calling thread — no pool, the pre-PR-3
+    /// execution path. The default.
+    #[default]
+    Single,
+    /// One worker per detected CPU, capped at [`AUTO_WORKER_CAP`].
+    Auto,
+    /// Exactly n worker threads (n ≥ 1; 0 is a configuration error).
+    Workers(usize),
+}
+
+impl Parallelism {
+    /// Whether this request routes through the distributed worker pool.
+    /// `Workers(1)` does (one worker thread — the numerical baseline the
+    /// N-worker parity test compares against); `Single` does not.
+    pub fn uses_pool(self) -> bool {
+        self != Parallelism::Single
+    }
+
+    /// Resolve to a concrete worker-thread count. `Workers(0)` and
+    /// counts above [`MAX_WORKERS`] are typed errors, never a panic.
+    pub fn worker_threads(self) -> Result<usize> {
+        match self {
+            Parallelism::Single => Ok(1),
+            Parallelism::Auto => Ok(detected_cpus().min(AUTO_WORKER_CAP)),
+            Parallelism::Workers(0) => bail!(
+                "worker count must be at least 1 (got 0); pass a positive count or 'auto'"
+            ),
+            Parallelism::Workers(n) if n > MAX_WORKERS => bail!(
+                "worker count {n} exceeds the maximum of {MAX_WORKERS} threads"
+            ),
+            Parallelism::Workers(n) => Ok(n),
+        }
+    }
+}
+
+impl FromStr for Parallelism {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "single" => Ok(Parallelism::Single),
+            "auto" => Ok(Parallelism::Auto),
+            other => match other.parse::<usize>() {
+                Ok(0) => bail!(
+                    "worker count must be at least 1 (got 0); pass a positive count or 'auto'"
+                ),
+                Ok(n) => Ok(Parallelism::Workers(n)),
+                Err(_) => bail!(
+                    "unknown parallelism '{other}' (valid: single, auto, or a positive integer)"
+                ),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Single => f.write_str("single"),
+            Parallelism::Auto => f.write_str("auto"),
+            Parallelism::Workers(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// The resolved execution request a backend receives alongside the
+/// physical batch: how many workers, where noise is generated, and the
+/// generator family/seed the per-worker noise streams derive from
+/// (mirroring the engine's `NoiseSource` flags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecSpec {
+    pub parallelism: Parallelism,
+    pub noise_division: NoiseDivision,
+    /// Use the ChaCha20 CSPRNG for per-worker noise shares.
+    pub secure_mode: bool,
+    /// Base seed the per-worker streams are derived from.
+    pub seed: u64,
+    /// Seed the secure generator too (tests / replay) instead of OS
+    /// entropy.
+    pub deterministic: bool,
+}
+
+impl Default for ExecSpec {
+    fn default() -> Self {
+        ExecSpec {
+            parallelism: Parallelism::Single,
+            noise_division: NoiseDivision::Root,
+            secure_mode: false,
+            seed: 0,
+            deterministic: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_resolution() {
+        assert_eq!(Parallelism::Single.worker_threads().unwrap(), 1);
+        assert_eq!(Parallelism::Workers(4).worker_threads().unwrap(), 4);
+        let auto = Parallelism::Auto.worker_threads().unwrap();
+        assert!((1..=AUTO_WORKER_CAP).contains(&auto));
+        assert!(!Parallelism::Single.uses_pool());
+        assert!(Parallelism::Workers(1).uses_pool());
+        assert!(Parallelism::Auto.uses_pool());
+    }
+
+    #[test]
+    fn zero_workers_is_a_typed_error() {
+        let err = Parallelism::Workers(0).worker_threads().unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        let err = "0".parse::<Parallelism>().unwrap_err().to_string();
+        assert!(err.contains("at least 1") && err.contains("auto"), "{err}");
+    }
+
+    #[test]
+    fn absurd_worker_counts_are_a_typed_error() {
+        assert_eq!(Parallelism::Workers(MAX_WORKERS).worker_threads().unwrap(), MAX_WORKERS);
+        let err = Parallelism::Workers(500_000).worker_threads().unwrap_err().to_string();
+        assert!(err.contains("maximum"), "{err}");
+    }
+
+    #[test]
+    fn parallelism_parses() {
+        assert_eq!("single".parse::<Parallelism>().unwrap(), Parallelism::Single);
+        assert_eq!("auto".parse::<Parallelism>().unwrap(), Parallelism::Auto);
+        assert_eq!("4".parse::<Parallelism>().unwrap(), Parallelism::Workers(4));
+        let err = "many".parse::<Parallelism>().unwrap_err().to_string();
+        assert!(err.contains("many") && err.contains("auto"), "{err}");
+    }
+
+    #[test]
+    fn detected_cpus_is_positive() {
+        assert!(detected_cpus() >= 1);
+    }
+
+    #[test]
+    fn default_exec_spec_is_single_rooted() {
+        let spec = ExecSpec::default();
+        assert_eq!(spec.parallelism, Parallelism::Single);
+        assert_eq!(spec.noise_division, NoiseDivision::Root);
+        assert!(!spec.parallelism.uses_pool());
+    }
+}

@@ -1,0 +1,330 @@
+//! The persistent worker pool — N threads serving shard-scoped jobs.
+//!
+//! Each worker owns a clone of the shared read-only
+//! [`NativeModel`](NativeModel) handle plus a private noise generator,
+//! and blocks on its job channel. Per-step parameters are shared as one
+//! `Arc<Vec<f32>>` snapshot per dispatched step call (fused: one per
+//! logical step; virtual/eval: one per physical chunk) — never one per
+//! worker. All gradient scratch (activation traces, `[shard, P]`
+//! per-sample matrices) lives inside the job execution, so nothing
+//! mutable is ever shared between threads.
+//!
+//! The pool is deliberately dumb: it knows nothing about DP semantics.
+//! Sharding, reduction and noise placement live in
+//! [`DistributedStep`](super::DistributedStep).
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::rng::{gaussian, Rng};
+use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
+use crate::runtime::tensor::HostTensor;
+
+use super::noise::worker_rng;
+use super::ExecSpec;
+
+/// One unit of worker work (a shard of a step, or a noise share).
+pub(crate) enum Job {
+    /// Clipped per-sample-gradient partial of one shard.
+    Grad {
+        params: Arc<Vec<f32>>,
+        x: HostTensor,
+        y: Vec<i32>,
+        mask: Vec<f32>,
+        clip: f32,
+    },
+    /// Plain summed-gradient partial of one shard (the no-DP baseline).
+    GradSum {
+        params: Arc<Vec<f32>>,
+        x: HostTensor,
+        y: Vec<i32>,
+        mask: Vec<f32>,
+    },
+    /// Masked eval partial of one shard.
+    Eval {
+        params: Arc<Vec<f32>>,
+        x: HostTensor,
+        y: Vec<i32>,
+        mask: Vec<f32>,
+    },
+    /// One standard-normal share of length `len` from this worker's
+    /// private generator (per-worker noise splitting).
+    Noise { len: usize },
+}
+
+/// A job's result, sent back over the step's reply channel.
+pub(crate) enum JobOut {
+    Grad(DpGradPartial),
+    GradSum {
+        gsum: Vec<f64>,
+        loss_sum: f64,
+        real: usize,
+    },
+    Eval {
+        loss_sum: f64,
+        correct: f64,
+    },
+    Noise(Vec<f32>),
+}
+
+struct Envelope {
+    slot: usize,
+    job: Job,
+    reply: mpsc::Sender<(usize, Result<JobOut>)>,
+}
+
+/// N persistent worker threads with per-worker job channels. Dropping
+/// the pool closes the channels and joins every thread.
+pub struct WorkerPool {
+    senders: Vec<mpsc::Sender<Envelope>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn the pool `spec.parallelism` resolves to, sharing `model`,
+    /// with per-rank noise generators derived from `spec` (see
+    /// [`worker_rng`](super::noise::worker_rng)). The spec is the single
+    /// source of truth for the worker count; spawn failures (OS thread
+    /// exhaustion) surface as errors, and any threads already started
+    /// shut down when the partial pool is dropped.
+    pub fn spawn(model: Arc<NativeModel>, spec: &ExecSpec) -> Result<WorkerPool> {
+        let workers = spec.parallelism.worker_threads()?;
+        let mut pool = WorkerPool {
+            senders: Vec::with_capacity(workers),
+            handles: Vec::with_capacity(workers),
+        };
+        for rank in 0..workers {
+            let (tx, rx) = mpsc::channel::<Envelope>();
+            let model = model.clone();
+            let rng = worker_rng(spec, rank);
+            let handle = thread::Builder::new()
+                .name(format!("opacus-worker-{rank}"))
+                .spawn(move || worker_loop(model, rng, rx))
+                .map_err(|e| anyhow!("spawning worker thread {rank}/{workers}: {e}"))?;
+            pool.handles.push(handle);
+            pool.senders.push(tx);
+        }
+        Ok(pool)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Dispatch `(rank, job)` pairs and collect results in dispatch
+    /// order. Fails fast if any job errors or a worker thread died.
+    pub(crate) fn run(&self, jobs: Vec<(usize, Job)>) -> Result<Vec<JobOut>> {
+        let total = jobs.len();
+        let (tx, rx) = mpsc::channel();
+        for (slot, (rank, job)) in jobs.into_iter().enumerate() {
+            if rank >= self.senders.len() {
+                return Err(anyhow!("rank {rank} out of range ({} workers)", self.workers()));
+            }
+            let env = Envelope {
+                slot,
+                job,
+                reply: tx.clone(),
+            };
+            self.senders[rank]
+                .send(env)
+                .map_err(|_| anyhow!("worker {rank} terminated before accepting work"))?;
+        }
+        drop(tx);
+        let mut outs: Vec<Option<JobOut>> = std::iter::repeat_with(|| None).take(total).collect();
+        for _ in 0..total {
+            let (slot, res) = rx
+                .recv()
+                .map_err(|_| anyhow!("a worker terminated before replying"))?;
+            outs[slot] = Some(res?);
+        }
+        Ok(outs
+            .into_iter()
+            .map(|o| o.expect("every slot received a reply"))
+            .collect())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes every job channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(model: Arc<NativeModel>, mut rng: Box<dyn Rng>, rx: mpsc::Receiver<Envelope>) {
+    while let Ok(env) = rx.recv() {
+        let out = match env.job {
+            Job::Grad {
+                params,
+                x,
+                y,
+                mask,
+                clip,
+            } => model
+                .dp_grad_partial(&params, &x, &y, &mask, clip)
+                .map(JobOut::Grad),
+            Job::GradSum { params, x, y, mask } => model
+                .grad_sum(&params, &x, &y, &mask)
+                .map(|(gsum, loss_sum, real)| JobOut::GradSum {
+                    gsum: gsum.iter().map(|&g| g as f64).collect(),
+                    loss_sum,
+                    real,
+                }),
+            Job::Eval { params, x, y, mask } => model
+                .eval(&params, &x, &y, &mask)
+                .map(|(loss_sum, correct)| JobOut::Eval { loss_sum, correct }),
+            Job::Noise { len } => {
+                let mut v = vec![0f32; len];
+                gaussian::fill_standard_normal(rng.as_mut(), &mut v);
+                Ok(JobOut::Noise(v))
+            }
+        };
+        // a dropped reply channel means the step bailed early; keep serving
+        let _ = env.reply.send((env.slot, out));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::Parallelism;
+    use crate::runtime::backend::native::layers::Linear;
+    use crate::runtime::backend::native::model::Op;
+
+    fn spec_n(workers: usize) -> ExecSpec {
+        ExecSpec {
+            parallelism: Parallelism::Workers(workers),
+            ..Default::default()
+        }
+    }
+
+    fn tiny_model() -> Arc<NativeModel> {
+        Arc::new(
+            NativeModel::new(
+                "pool_tiny",
+                vec![3],
+                "f32",
+                2,
+                None,
+                vec![Op::Layer(Box::new(Linear::new(3, 2)))],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn batch() -> (HostTensor, Vec<i32>, Vec<f32>) {
+        (
+            HostTensor::f32(vec![2, 3], vec![0.4, -0.2, 0.9, 1.0, 0.1, -0.5]),
+            vec![1, 0],
+            vec![1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn grad_jobs_match_inline_execution() {
+        let model = tiny_model();
+        let pool = WorkerPool::spawn(model.clone(), &spec_n(2)).unwrap();
+        assert_eq!(pool.workers(), 2);
+        let params = Arc::new(model.init_params(3));
+        let (x, y, mask) = batch();
+        let jobs = vec![
+            (
+                0,
+                Job::Grad {
+                    params: params.clone(),
+                    x: x.slice_rows(0, 1).unwrap(),
+                    y: y[..1].to_vec(),
+                    mask: mask[..1].to_vec(),
+                    clip: 1.0,
+                },
+            ),
+            (
+                1,
+                Job::Grad {
+                    params: params.clone(),
+                    x: x.slice_rows(1, 2).unwrap(),
+                    y: y[1..].to_vec(),
+                    mask: mask[1..].to_vec(),
+                    clip: 1.0,
+                },
+            ),
+        ];
+        let outs = pool.run(jobs).unwrap();
+        let full = model.dp_grad_partial(&params, &x, &y, &mask, 1.0).unwrap();
+        let mut gsum = vec![0f64; full.gsum.len()];
+        let mut loss = 0.0;
+        for out in outs {
+            let JobOut::Grad(p) = out else { panic!("expected grad output") };
+            for (a, g) in gsum.iter_mut().zip(p.gsum.iter()) {
+                *a += g;
+            }
+            loss += p.loss_sum;
+        }
+        for (a, b) in gsum.iter().zip(full.gsum.iter()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        assert!((loss - full.loss_sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_errors_propagate() {
+        let model = tiny_model();
+        let pool = WorkerPool::spawn(model.clone(), &spec_n(1)).unwrap();
+        let bad_params = Arc::new(vec![0f32; 1]); // wrong length
+        let (x, y, mask) = batch();
+        let err = pool
+            .run(vec![(
+                0,
+                Job::Grad {
+                    params: bad_params,
+                    x,
+                    y,
+                    mask,
+                    clip: 1.0,
+                },
+            )])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("params length"), "{err}");
+        // the pool survives a failed job
+        let outs = pool.run(vec![(0, Job::Noise { len: 4 })]).unwrap();
+        assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn noise_jobs_are_deterministic_per_rank() {
+        let model = tiny_model();
+        let spec = ExecSpec {
+            seed: 9,
+            ..spec_n(2)
+        };
+        let draw = |pool: &WorkerPool, rank: usize| -> Vec<f32> {
+            let out = pool.run(vec![(rank, Job::Noise { len: 6 })]).unwrap();
+            match out.into_iter().next().unwrap() {
+                JobOut::Noise(v) => v,
+                _ => panic!("expected noise"),
+            }
+        };
+        let pool_a = WorkerPool::spawn(model.clone(), &spec).unwrap();
+        let pool_b = WorkerPool::spawn(model, &spec).unwrap();
+        assert_eq!(draw(&pool_a, 0), draw(&pool_b, 0), "same rank, same stream");
+        assert_ne!(draw(&pool_a, 0), draw(&pool_a, 1), "ranks differ");
+    }
+
+    #[test]
+    fn out_of_range_rank_is_an_error() {
+        let pool = WorkerPool::spawn(tiny_model(), &spec_n(1)).unwrap();
+        assert!(pool.run(vec![(3, Job::Noise { len: 1 })]).is_err());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::spawn(tiny_model(), &spec_n(4)).unwrap();
+        pool.run(vec![(2, Job::Noise { len: 8 })]).unwrap();
+        drop(pool); // must not hang or panic
+    }
+}

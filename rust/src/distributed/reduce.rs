@@ -1,0 +1,124 @@
+//! Gradient reduction — combining per-shard partials into the root sum.
+//!
+//! Partials arrive as f64 vectors (see
+//! [`DpGradPartial`](crate::runtime::backend::native::model::DpGradPartial)),
+//! and are combined pairwise in rank order. Because every per-sample
+//! contribution is exact in f64 and f64 addition errors sit ~9 decimal
+//! digits below f32 resolution, the final f32 cast is insensitive to how
+//! many shards the batch was split into — which is what makes the
+//! N-worker vs single-worker parity guarantee possible.
+
+use crate::runtime::backend::native::model::DpGradPartial;
+
+/// Pairwise tree reduction of equal-length f64 partial vectors, in rank
+/// order: (0+1), (2+3), … then recursively. Deterministic for a given
+/// shard count; returns an empty vector for no partials.
+pub fn tree_reduce(mut parts: Vec<Vec<f64>>) -> Vec<f64> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                debug_assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x += *y;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap_or_default()
+}
+
+/// Reduce per-shard DP gradient partials (rank order) into one root
+/// partial: tree-reduced gradient sum plus summed loss/norm/count
+/// statistics. `num_params` sizes the result when zero shards ran
+/// (an empty Poisson batch still needs a zero gradient of full width).
+pub fn reduce_grads(parts: Vec<DpGradPartial>, num_params: usize) -> DpGradPartial {
+    let mut loss_sum = 0.0;
+    let mut snorm_sum = 0.0;
+    let mut real = 0;
+    let mut gsums = Vec::with_capacity(parts.len());
+    for p in parts {
+        loss_sum += p.loss_sum;
+        snorm_sum += p.snorm_sum;
+        real += p.real;
+        gsums.push(p.gsum);
+    }
+    let mut gsum = tree_reduce(gsums);
+    if gsum.is_empty() {
+        gsum = vec![0f64; num_params];
+    }
+    DpGradPartial {
+        gsum,
+        loss_sum,
+        snorm_sum,
+        real,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_reduce_sums_any_count() {
+        for n in 1..=9usize {
+            let parts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64, 1.0]).collect();
+            let out = tree_reduce(parts);
+            let expect = (0..n).sum::<usize>() as f64;
+            assert_eq!(out, vec![expect, n as f64], "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_empty_is_empty() {
+        assert!(tree_reduce(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn reduce_grads_merges_stats() {
+        let parts = vec![
+            DpGradPartial {
+                gsum: vec![1.0, 2.0],
+                loss_sum: 0.5,
+                snorm_sum: 1.5,
+                real: 3,
+            },
+            DpGradPartial {
+                gsum: vec![-0.5, 4.0],
+                loss_sum: 0.25,
+                snorm_sum: 0.5,
+                real: 2,
+            },
+        ];
+        let r = reduce_grads(parts, 2);
+        assert_eq!(r.gsum, vec![0.5, 6.0]);
+        assert_eq!(r.loss_sum, 0.75);
+        assert_eq!(r.snorm_sum, 2.0);
+        assert_eq!(r.real, 5);
+    }
+
+    #[test]
+    fn reduce_grads_zero_shards_yields_zero_gradient() {
+        let r = reduce_grads(Vec::new(), 3);
+        assert_eq!(r.gsum, vec![0.0, 0.0, 0.0]);
+        assert_eq!(r.real, 0);
+    }
+
+    #[test]
+    fn grouping_changes_nothing_beyond_f64_rounding() {
+        // the same 12 values summed as 1, 2, 3, 4 and 6 shards
+        let vals: Vec<f64> = (0..12).map(|i| (i as f64 + 0.3) * 0.017).collect();
+        let total_direct: f64 = vals.iter().sum();
+        for shards in [1, 2, 3, 4, 6] {
+            let width = 12 / shards;
+            let parts: Vec<Vec<f64>> = (0..shards)
+                .map(|s| vec![vals[s * width..(s + 1) * width].iter().sum::<f64>()])
+                .collect();
+            let got = tree_reduce(parts)[0];
+            assert!((got - total_direct).abs() < 1e-12, "{shards} shards: {got}");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Shard planning — how one physical batch is split across workers.
+//!
+//! Shards are contiguous row ranges, balanced to within one sample
+//! (the first `batch % workers` shards take the extra row). Contiguity
+//! keeps every shard a single memcpy out of the gathered batch and makes
+//! the reduction order deterministic: partials are always combined in
+//! rank order.
+
+/// The shard layout of one physical batch over a worker pool. Empty
+/// shards (worker count above the batch size) are dropped at planning
+/// time, so every planned range carries at least one row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    ranges: Vec<(usize, usize)>,
+    batch: usize,
+}
+
+impl ShardPlan {
+    /// Plan `batch` rows over at most `workers` shards.
+    pub fn contiguous(batch: usize, workers: usize) -> ShardPlan {
+        let workers = workers.max(1);
+        let base = batch / workers;
+        let rem = batch % workers;
+        let mut ranges = Vec::with_capacity(workers.min(batch));
+        let mut start = 0;
+        for rank in 0..workers {
+            let width = base + usize::from(rank < rem);
+            if width == 0 {
+                break; // ranks are filled front-to-back; the rest are empty
+            }
+            ranges.push((start, start + width));
+            start += width;
+        }
+        ShardPlan { ranges, batch }
+    }
+
+    /// `(start, end)` row ranges, one per non-empty shard, in rank order.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Rows in the widest shard — the per-worker peak batch, which is
+    /// what bounds per-worker live memory (`[shard, P]` per-sample
+    /// gradients instead of `[B, P]`).
+    pub fn widest(&self) -> usize {
+        self.ranges.iter().map(|(s, e)| e - s).max().unwrap_or(0)
+    }
+
+    /// The planned batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let p = ShardPlan::contiguous(64, 4);
+        assert_eq!(p.ranges(), &[(0, 16), (16, 32), (32, 48), (48, 64)]);
+        assert_eq!(p.num_shards(), 4);
+        assert_eq!(p.widest(), 16);
+    }
+
+    #[test]
+    fn ragged_split_balances_within_one() {
+        let p = ShardPlan::contiguous(10, 4);
+        assert_eq!(p.ranges(), &[(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(p.widest(), 3);
+    }
+
+    #[test]
+    fn more_workers_than_rows_drops_empty_shards() {
+        let p = ShardPlan::contiguous(3, 8);
+        assert_eq!(p.ranges(), &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(p.num_shards(), 3);
+    }
+
+    #[test]
+    fn single_worker_is_one_shard() {
+        let p = ShardPlan::contiguous(17, 1);
+        assert_eq!(p.ranges(), &[(0, 17)]);
+    }
+
+    #[test]
+    fn empty_batch_has_no_shards() {
+        let p = ShardPlan::contiguous(0, 4);
+        assert_eq!(p.num_shards(), 0);
+        assert_eq!(p.widest(), 0);
+    }
+
+    #[test]
+    fn shards_partition_the_batch() {
+        for batch in [1, 2, 7, 63, 64, 65, 200] {
+            for workers in [1, 2, 3, 4, 8] {
+                let p = ShardPlan::contiguous(batch, workers);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for &(s, e) in p.ranges() {
+                    assert_eq!(s, prev_end, "b{batch}/w{workers}: gap at {s}");
+                    assert!(e > s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, batch, "b{batch}/w{workers}");
+            }
+        }
+    }
+}

@@ -1,0 +1,499 @@
+//! `DistributedStep` — the data-parallel implementation of the four
+//! step-family traits the trainer consumes.
+//!
+//! One struct serves fused/accum/apply/eval so the whole step pipeline
+//! shares a single worker pool and a single sharding + reduction
+//! discipline:
+//!
+//! 1. the physical batch is split into balanced contiguous shards
+//!    ([`ShardPlan`]);
+//! 2. each worker runs the per-sample-gradient + clipping pipeline on
+//!    its shard against a shared read-only parameter snapshot
+//!    (`Arc<Vec<f32>>`, one copy per step);
+//! 3. per-shard f64 partials are tree-reduced in rank order
+//!    ([`reduce_grads`]);
+//! 4. noise is added exactly once per logical step — at the root by
+//!    default, or as summed σ/√N per-worker shares under
+//!    [`NoiseDivision::PerWorker`] — and the root applies one SGD
+//!    update.
+//!
+//! ε accounting is byte-identical to single-worker execution, and under
+//! the deterministic noise source the *parameters* match across worker
+//! counts too (to f64-reduction precision; see the `distributed`
+//! integration tests).
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
+use crate::runtime::backend::native::steps::{noisy_sgd_update, noisy_sgd_update_f64};
+use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
+use crate::runtime::step::{AccumOut, DpStepOut, HyperParams};
+use crate::runtime::tensor::HostTensor;
+
+use super::noise::{combine_shares, NoiseDivision};
+use super::pool::{Job, JobOut, WorkerPool};
+use super::reduce::{reduce_grads, tree_reduce};
+use super::shard::ShardPlan;
+use super::ExecSpec;
+
+/// A data-parallel step executor over a shared worker pool. Cheap to
+/// clone: clones share the pool and model, so one launch serves all
+/// four step families.
+#[derive(Clone)]
+pub struct DistributedStep {
+    model: Arc<NativeModel>,
+    pool: Arc<WorkerPool>,
+    batch: usize,
+    noise_division: NoiseDivision,
+}
+
+impl DistributedStep {
+    /// Spawn the worker pool `spec.parallelism` resolves to and wrap it
+    /// as a step executor for physical batches of `batch` samples. The
+    /// spec is the single source of truth for the worker count and the
+    /// noise policy.
+    pub fn launch(
+        model: Arc<NativeModel>,
+        batch: usize,
+        spec: &ExecSpec,
+    ) -> Result<DistributedStep> {
+        let pool = Arc::new(WorkerPool::spawn(model.clone(), spec)?);
+        Ok(DistributedStep {
+            model,
+            pool,
+            batch,
+            noise_division: spec.noise_division,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn noise_division(&self) -> NoiseDivision {
+        self.noise_division
+    }
+
+    fn check_batch(&self, kind: &str, x: &HostTensor, y: &[i32], mask: &[f32]) -> Result<()> {
+        let b = *x.shape.first().unwrap_or(&0);
+        if b != self.batch || y.len() != self.batch || mask.len() != self.batch {
+            bail!(
+                "distributed {kind} step: expected batch {}, got x[{b}], {} labels, {} mask",
+                self.batch,
+                y.len(),
+                mask.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Shard the batch and run one clipped-gradient (or, with
+    /// `clip = None`, plain summed-gradient) job per worker.
+    fn shard_jobs(
+        &self,
+        params: &Arc<Vec<f32>>,
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: Option<f32>,
+    ) -> Result<Vec<(usize, Job)>> {
+        let plan = ShardPlan::contiguous(self.batch, self.pool.workers());
+        let mut jobs = Vec::with_capacity(plan.num_shards());
+        for (rank, &(s, e)) in plan.ranges().iter().enumerate() {
+            let shard_x = x.slice_rows(s, e)?;
+            let shard_y = y[s..e].to_vec();
+            let shard_mask = mask[s..e].to_vec();
+            let job = match clip {
+                Some(clip) => Job::Grad {
+                    params: params.clone(),
+                    x: shard_x,
+                    y: shard_y,
+                    mask: shard_mask,
+                    clip,
+                },
+                None => Job::GradSum {
+                    params: params.clone(),
+                    x: shard_x,
+                    y: shard_y,
+                    mask: shard_mask,
+                },
+            };
+            jobs.push((rank, job));
+        }
+        Ok(jobs)
+    }
+
+    /// Full sharded clipped-gradient computation: dispatch, collect,
+    /// tree-reduce.
+    fn reduced_grad(
+        &self,
+        params: &Arc<Vec<f32>>,
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<DpGradPartial> {
+        let jobs = self.shard_jobs(params, x, y, mask, Some(clip))?;
+        let outs = self.pool.run(jobs)?;
+        let mut parts = Vec::with_capacity(outs.len());
+        for out in outs {
+            match out {
+                JobOut::Grad(p) => parts.push(p),
+                _ => bail!("distributed step: unexpected worker output for a grad job"),
+            }
+        }
+        Ok(reduce_grads(parts, self.model.num_params()))
+    }
+
+    /// One standard-normal noise vector composed from per-worker σ/√N
+    /// shares (every worker contributes, whatever the shard plan).
+    fn composed_noise(&self, len: usize) -> Result<Vec<f32>> {
+        let jobs = (0..self.pool.workers())
+            .map(|rank| (rank, Job::Noise { len }))
+            .collect();
+        let outs = self.pool.run(jobs)?;
+        let mut shares = Vec::with_capacity(outs.len());
+        for out in outs {
+            match out {
+                JobOut::Noise(v) => shares.push(v),
+                _ => bail!("distributed step: unexpected worker output for a noise job"),
+            }
+        }
+        let mut combined = vec![0f32; len];
+        combine_shares(&shares, &mut combined);
+        Ok(combined)
+    }
+
+    /// The noise vector a noisy update should use: the root draw the
+    /// trainer passed in (default), or the per-worker composition.
+    fn select_noise<'a>(&self, root: &'a [f32]) -> Result<std::borrow::Cow<'a, [f32]>> {
+        match self.noise_division {
+            NoiseDivision::Root => Ok(std::borrow::Cow::Borrowed(root)),
+            NoiseDivision::PerWorker => Ok(std::borrow::Cow::Owned(
+                self.composed_noise(root.len())?,
+            )),
+        }
+    }
+}
+
+impl FusedStep for DistributedStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn dp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<DpStepOut> {
+        self.check_batch("fused dp", &x, y, mask)?;
+        if noise.len() != params.len() {
+            bail!(
+                "distributed fused dp step: noise length {} != params {}",
+                noise.len(),
+                params.len()
+            );
+        }
+        let snapshot = Arc::new(params.to_vec());
+        let g = self.reduced_grad(&snapshot, &x, y, mask, hp.clip)?;
+        let noise = self.select_noise(noise)?;
+        let new_params = noisy_sgd_update_f64(params, &g.gsum, &noise, hp);
+        let (loss, snorm_mean) = if g.real > 0 {
+            (g.loss_sum / g.real as f64, g.snorm_sum / g.real as f64)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        Ok(DpStepOut {
+            params: new_params,
+            loss,
+            snorm_mean,
+        })
+    }
+
+    fn nodp_step(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        denom: f32,
+    ) -> Result<(Vec<f32>, f64)> {
+        self.check_batch("nodp", &x, y, mask)?;
+        let snapshot = Arc::new(params.to_vec());
+        let jobs = self.shard_jobs(&snapshot, &x, y, mask, None)?;
+        let outs = self.pool.run(jobs)?;
+        let mut gsums = Vec::with_capacity(outs.len());
+        let mut loss_sum = 0.0;
+        let mut real = 0usize;
+        for out in outs {
+            match out {
+                JobOut::GradSum {
+                    gsum,
+                    loss_sum: l,
+                    real: r,
+                } => {
+                    gsums.push(gsum);
+                    loss_sum += l;
+                    real += r;
+                }
+                _ => bail!("distributed step: unexpected worker output for a nodp job"),
+            }
+        }
+        let mut gsum = tree_reduce(gsums);
+        if gsum.is_empty() {
+            gsum = vec![0f64; params.len()];
+        }
+        let lr = lr as f64;
+        let inv_denom = 1.0 / denom as f64;
+        let new_params: Vec<f32> = params
+            .iter()
+            .zip(gsum.iter())
+            .map(|(&p, &gs)| (p as f64 - lr * gs * inv_denom) as f32)
+            .collect();
+        let loss = if real > 0 {
+            loss_sum / real as f64
+        } else {
+            f64::NAN
+        };
+        Ok((new_params, loss))
+    }
+}
+
+impl AccumExec for DistributedStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run(
+        &self,
+        params: &[f32],
+        x: HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<AccumOut> {
+        self.check_batch("accum", &x, y, mask)?;
+        let snapshot = Arc::new(params.to_vec());
+        let g = self.reduced_grad(&snapshot, &x, y, mask, clip)?;
+        Ok(AccumOut {
+            gsum: g.gsum.iter().map(|&v| v as f32).collect(),
+            loss_sum: g.loss_sum,
+            snorm_sum: g.snorm_sum,
+        })
+    }
+}
+
+impl ApplyExec for DistributedStep {
+    fn run(
+        &self,
+        params: &[f32],
+        gsum: &[f32],
+        noise: &[f32],
+        hp: HyperParams,
+    ) -> Result<Vec<f32>> {
+        let p = self.model.num_params();
+        if params.len() != p || gsum.len() != p || noise.len() != p {
+            bail!(
+                "distributed apply step: lengths p={} g={} n={} != num_params {p}",
+                params.len(),
+                gsum.len(),
+                noise.len()
+            );
+        }
+        let noise = self.select_noise(noise)?;
+        Ok(noisy_sgd_update(params, gsum, &noise, hp))
+    }
+}
+
+impl EvalExec for DistributedStep {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run(&self, params: &[f32], x: HostTensor, y: &[i32], mask: &[f32]) -> Result<(f64, f64)> {
+        self.check_batch("eval", &x, y, mask)?;
+        let snapshot = Arc::new(params.to_vec());
+        let plan = ShardPlan::contiguous(self.batch, self.pool.workers());
+        let mut jobs = Vec::with_capacity(plan.num_shards());
+        for (rank, &(s, e)) in plan.ranges().iter().enumerate() {
+            jobs.push((
+                rank,
+                Job::Eval {
+                    params: snapshot.clone(),
+                    x: x.slice_rows(s, e)?,
+                    y: y[s..e].to_vec(),
+                    mask: mask[s..e].to_vec(),
+                },
+            ));
+        }
+        let outs = self.pool.run(jobs)?;
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        for out in outs {
+            match out {
+                JobOut::Eval {
+                    loss_sum: l,
+                    correct: c,
+                } => {
+                    loss_sum += l;
+                    correct += c;
+                }
+                _ => bail!("distributed step: unexpected worker output for an eval job"),
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::Parallelism;
+    use crate::runtime::backend::native::steps::{NativeAccumStep, NativeEvalStep, NativeFusedStep};
+    use crate::runtime::backend::native::{model_for_task, NativeBackend};
+    use crate::runtime::backend::ExecutionBackend;
+
+    fn mnist_setup(batch: usize) -> (Arc<NativeModel>, Vec<f32>, HostTensor, Vec<i32>, Vec<f32>) {
+        let model = Arc::new(model_for_task("mnist").unwrap());
+        let backend = NativeBackend::for_task("mnist").unwrap();
+        let params = backend.init_params().unwrap();
+        let ds = crate::data::synth::synth_mnist(batch, 3);
+        let idx: Vec<usize> = (0..batch).collect();
+        let b = ds.gather(&idx, batch).unwrap();
+        (model, params, b.x, b.y, b.mask)
+    }
+
+    fn spec(workers: usize, seed: u64) -> ExecSpec {
+        ExecSpec {
+            parallelism: Parallelism::Workers(workers),
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn distributed_fused_matches_single_thread_native() {
+        let (model, params, x, y, mask) = mnist_setup(8);
+        let native = NativeFusedStep::new(model.clone(), 8);
+        let dist = DistributedStep::launch(model, 8, &spec(3, 1)).unwrap();
+        let noise = vec![0.01f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.1,
+            clip: 1.0,
+            sigma: 0.7,
+            denom: 8.0,
+        };
+        let a = native
+            .dp_step(&params, x.clone(), &y, &mask, &noise, hp)
+            .unwrap();
+        let b = dist.dp_step(&params, x, &y, &mask, &noise, hp).unwrap();
+        assert!((a.loss - b.loss).abs() < 1e-9);
+        assert!((a.snorm_mean - b.snorm_mean).abs() < 1e-9);
+        let mut worst = 0.0f64;
+        for (pa, pb) in a.params.iter().zip(b.params.iter()) {
+            worst = worst.max((*pa as f64 - *pb as f64).abs());
+        }
+        assert!(worst < 1e-6, "fused vs distributed params differ by {worst:.3e}");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_step() {
+        let (model, params, x, y, mask) = mnist_setup(8);
+        let noise = vec![0.0f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.2,
+            clip: 0.5,
+            sigma: 0.0,
+            denom: 8.0,
+        };
+        let run = |workers: usize| {
+            let dist = DistributedStep::launch(model.clone(), 8, &spec(workers, 2)).unwrap();
+            dist.dp_step(&params, x.clone(), &y, &mask, &noise, hp).unwrap()
+        };
+        let one = run(1);
+        for workers in [2, 4, 8] {
+            let many = run(workers);
+            assert!(
+                (one.loss - many.loss).abs() < 1e-12,
+                "workers={workers}: loss {} vs {}",
+                one.loss,
+                many.loss
+            );
+            let mut worst = 0.0f64;
+            for (a, b) in one.params.iter().zip(many.params.iter()) {
+                worst = worst.max((*a as f64 - *b as f64).abs());
+            }
+            assert!(worst < 1e-6, "workers={workers}: params differ by {worst:.3e}");
+        }
+    }
+
+    #[test]
+    fn distributed_accum_and_eval_match_native() {
+        let (model, params, x, y, mask) = mnist_setup(6);
+        let dist = DistributedStep::launch(model.clone(), 6, &spec(4, 3)).unwrap();
+        let accum_native = NativeAccumStep::new(model.clone(), 6);
+        let a = AccumExec::run(&accum_native, &params, x.clone(), &y, &mask, 1.0).unwrap();
+        let d = AccumExec::run(&dist, &params, x.clone(), &y, &mask, 1.0).unwrap();
+        assert!((a.loss_sum - d.loss_sum).abs() < 1e-9);
+        assert!((a.snorm_sum - d.snorm_sum).abs() < 1e-9);
+        for (ga, gd) in a.gsum.iter().zip(d.gsum.iter()) {
+            assert!((*ga as f64 - *gd as f64).abs() < 1e-6);
+        }
+
+        let eval_native = NativeEvalStep::new(model, 6);
+        let (la, ca) = EvalExec::run(&eval_native, &params, x.clone(), &y, &mask).unwrap();
+        let (ld, cd) = EvalExec::run(&dist, &params, x, &y, &mask).unwrap();
+        assert!((la - ld).abs() < 1e-9);
+        assert_eq!(ca, cd, "correct counts are exact");
+    }
+
+    #[test]
+    fn per_worker_noise_is_used_when_opted_in() {
+        let (model, params, x, y, mask) = mnist_setup(4);
+        let mut s = spec(2, 4);
+        s.noise_division = NoiseDivision::PerWorker;
+        let dist = DistributedStep::launch(model, 4, &s).unwrap();
+        let hp = HyperParams {
+            lr: 1.0,
+            clip: 1.0,
+            sigma: 1.0,
+            denom: 4.0,
+        };
+        // root noise of zeros: any parameter movement beyond the clipped
+        // gradient must come from the per-worker shares
+        let zero_noise = vec![0f32; params.len()];
+        let with_shares = dist
+            .dp_step(&params, x.clone(), &y, &mask, &zero_noise, hp)
+            .unwrap();
+        let mut root = s;
+        root.noise_division = NoiseDivision::Root;
+        let dist_root =
+            DistributedStep::launch(Arc::new(model_for_task("mnist").unwrap()), 4, &root)
+                .unwrap();
+        let without = dist_root
+            .dp_step(&params, x, &y, &mask, &zero_noise, hp)
+            .unwrap();
+        assert_ne!(
+            with_shares.params, without.params,
+            "per-worker shares must inject noise the root draw did not"
+        );
+    }
+
+    #[test]
+    fn batch_mismatch_is_an_error() {
+        let (model, params, x, y, mask) = mnist_setup(4);
+        let dist = DistributedStep::launch(model, 8, &spec(2, 5)).unwrap();
+        let noise = vec![0f32; params.len()];
+        let err = dist
+            .dp_step(&params, x, &y, &mask, &noise, HyperParams::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected batch 8"), "{err}");
+    }
+}

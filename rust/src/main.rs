@@ -19,6 +19,7 @@ use std::path::Path;
 
 use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
+use opacus_rs::distributed::{detected_cpus, NoiseDivision, Parallelism};
 use opacus_rs::privacy::validator::validate_model;
 use opacus_rs::privacy::{
     AccountantKind, Backend, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine,
@@ -58,7 +59,9 @@ SUBCOMMANDS
              [--clip C] [--lr L] [--batch B] [--physical B] [--train N]
              [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
              [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
-             [--backend auto|xla|native] [--artifacts DIR] [--out metrics.json]
+             [--backend auto|xla|native] [--workers N|auto]
+             [--noise-division root|perworker] [--artifacts DIR]
+             [--out metrics.json]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
   validate   --task T [--backend auto|xla|native] [--artifacts DIR]
@@ -67,6 +70,11 @@ SUBCOMMANDS
 The default --backend auto runs on AOT XLA artifacts when `make
 artifacts` output exists for the task, and otherwise on the pure-Rust
 native per-sample-gradient engine (no artifacts needed).
+
+--workers shards every step across N worker threads (native backend;
+`auto` sizes the pool from the CPU count). Noise is added once at the
+root by default; --noise-division perworker opts into DPDDP-style
+sigma/sqrt(N) per-worker splitting (same distribution, same epsilon).
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -88,6 +96,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     let backend = args.get_or("backend", "auto").parse::<Backend>()?;
+    let parallelism = args.get_or("workers", "single").parse::<Parallelism>()?;
+    let noise_division = args
+        .get_or("noise-division", "root")
+        .parse::<NoiseDivision>()?;
     let sys = Opacus::load_with_backend(
         &artifacts,
         &task,
@@ -101,6 +113,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // every CLI flag maps onto one typed builder method
     let mut builder = PrivacyEngine::private()
         .backend(backend)
+        .parallelism(parallelism)
+        .noise_division(noise_division)
         .accountant(args.get_or("accountant", "rdp").parse::<AccountantKind>()?)
         .clipping(args.get_or("clipping", "flat").parse::<ClippingStrategy>()?)
         .noise(if args.has_flag("secure") {
@@ -132,13 +146,14 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     println!(
         "task={task} σ={:.3} C={clip} ({}, eff {:.3}) lr={lr} q={:.4} steps/epoch={} \
-         sampler={:?}",
+         sampler={:?} workers={} noise-division={noise_division}",
         trainer.current_sigma(),
         optimizer.clipping.as_str(),
         optimizer.effective_clip,
         loader.sample_rate,
         loader.steps_per_epoch,
         loader.sampling,
+        trainer.workers(),
     );
     for epoch in 0..epochs {
         let loss = trainer.train_epoch()?;
@@ -146,6 +161,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             "epoch {epoch:>3}: loss = {loss:.4}  ε = {:.3}  σ(t) = {:.3}",
             trainer.epsilon(delta)?,
             trainer.current_sigma(),
+        );
+    }
+    if let Some(bmm) = trainer.memory_manager() {
+        println!(
+            "virtual steps: {} logical / {} micro ({:.1}x amplification), chunk {} rows \
+             over {} worker(s), peak per-worker shard {} rows",
+            bmm.logical_steps(),
+            bmm.micro_steps(),
+            bmm.amplification(),
+            bmm.chunk_size(),
+            bmm.workers(),
+            bmm.shard_width(),
         );
     }
     let (eval_loss, acc) = trainer.evaluate()?;
@@ -306,6 +333,16 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             Ok(p) => println!("pjrt platform : {p}"),
             Err(_) => println!("pjrt platform : unavailable (native engine only)"),
         }
+        let cpus = detected_cpus();
+        let auto_workers = Parallelism::Auto
+            .worker_threads()
+            .expect("auto parallelism always resolves");
+        println!("cpus detected : {cpus}");
+        println!(
+            "parallelism   : --workers auto would run {auto_workers} worker thread(s) \
+             (cap {})",
+            opacus_rs::distributed::AUTO_WORKER_CAP
+        );
         let mut t = Table::new(
             "backend auto-selection",
             Table::header_from(&["task", "active backend"]),

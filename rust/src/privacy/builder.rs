@@ -37,6 +37,7 @@ use std::str::FromStr;
 
 use crate::accounting::{calibration, CalibKind, VALID_ACCOUNTANTS};
 use crate::coordinator::Opacus;
+use crate::distributed::{NoiseDivision, Parallelism};
 use crate::privacy::engine::{EngineConfig, PrivacyEngine, PrivacyParams};
 use crate::runtime::backend::Backend;
 use crate::trainer::trainer::PrivateTrainer;
@@ -267,6 +268,8 @@ pub struct PrivateBuilder {
     noise_source: NoiseSource,
     sampling: SamplingMode,
     backend: Backend,
+    parallelism: Parallelism,
+    noise_division: NoiseDivision,
     noise_multiplier: f64,
     max_grad_norm: f64,
     lr: f64,
@@ -284,6 +287,8 @@ impl Default for PrivateBuilder {
             noise_source: NoiseSource::Standard,
             sampling: SamplingMode::Poisson,
             backend: Backend::Auto,
+            parallelism: Parallelism::Single,
+            noise_division: NoiseDivision::Root,
             noise_multiplier: 1.0,
             max_grad_norm: 1.0,
             lr: 0.05,
@@ -334,6 +339,34 @@ impl PrivateBuilder {
     /// note). Load with `Opacus::load_with_backend` to avoid the reload.
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Shard every step across `n` worker threads — data-parallel
+    /// DP-SGD on the native backend (shorthand for
+    /// `.parallelism(Parallelism::Workers(n))`). `n = 0` is a build-time
+    /// error; under the deterministic noise source, ε and parameters are
+    /// stable across worker counts (rank-0 noise, f64 reduction). With
+    /// the default [`Backend::Auto`], a pool request resolves to the
+    /// native engine — the XLA path has no worker pool and rejects
+    /// explicit `Backend::Xla` + workers with a typed error.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.parallelism = Parallelism::Workers(n);
+        self
+    }
+
+    /// Choose the worker-parallelism policy (default: single-threaded;
+    /// [`Parallelism::Auto`] sizes the pool from the detected CPU count).
+    pub fn parallelism(mut self, p: Parallelism) -> Self {
+        self.parallelism = p;
+        self
+    }
+
+    /// Where each logical step's noise is generated (default: one draw
+    /// at the root; [`NoiseDivision::PerWorker`] opts into DPDDP-style
+    /// σ/√N splitting — same distribution and ε, N-dependent stream).
+    pub fn noise_division(mut self, d: NoiseDivision) -> Self {
+        self.noise_division = d;
         self
     }
 
@@ -407,6 +440,14 @@ impl PrivateBuilder {
         if self.max_grad_norm <= 0.0 {
             bail!("max_grad_norm must be positive, got {}", self.max_grad_norm);
         }
+        // surfaces Workers(0) as a typed error before any backend work
+        self.parallelism.worker_threads()?;
+        if self.noise_division == NoiseDivision::PerWorker && !self.parallelism.uses_pool() {
+            bail!(
+                "per-worker noise splitting requires a worker pool; \
+                 set .workers(n) or .parallelism(Parallelism::Auto)"
+            );
+        }
         let q = (self.logical_batch as f64 / n_train as f64).min(1.0);
         let steps_per_epoch = (1.0 / q).ceil() as u64;
         match self.target {
@@ -461,7 +502,17 @@ impl PrivateBuilder {
     /// resolve the plan, build step executables, and return the
     /// three-object bundle.
     pub fn build(self, sys: Opacus) -> Result<Private<PrivateTrainer>> {
-        let sys = sys.with_backend(self.backend)?;
+        // worker pools are a native-engine capability: under Auto, a
+        // pool request must not strand on the XLA path (which would
+        // reject it), so Auto + workers resolves to the native backend.
+        // An explicit .backend(Backend::Xla) + workers stays a typed
+        // error from the XLA backend itself.
+        let requested = if self.backend == Backend::Auto && self.parallelism.uses_pool() {
+            Backend::Native
+        } else {
+            self.backend
+        };
+        let sys = sys.with_backend(requested)?;
         let engine = PrivacyEngine::try_new(self.engine_config())?;
         let plan = self.plan(sys.train.len())?;
         let num_layers = sys.model.layer_kinds.len().max(1);
@@ -474,6 +525,8 @@ impl PrivateBuilder {
             poisson: self.sampling == SamplingMode::Poisson,
             clipping: self.clipping,
             num_layers,
+            parallelism: self.parallelism,
+            noise_division: self.noise_division,
         };
         let optimizer = OptimizerHandle {
             noise_multiplier: plan.sigma,
@@ -554,6 +607,33 @@ mod tests {
             .target_epsilon(3.0, 1e-5, 0)
             .plan(100)
             .is_err());
+    }
+
+    #[test]
+    fn zero_workers_is_a_typed_plan_error() {
+        let err = PrivateBuilder::new().workers(0).plan(100).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        assert!(PrivateBuilder::new().workers(4).plan(100).is_ok());
+        assert!(PrivateBuilder::new()
+            .parallelism(Parallelism::Auto)
+            .noise_division(NoiseDivision::PerWorker)
+            .plan(100)
+            .is_ok());
+    }
+
+    #[test]
+    fn per_worker_noise_without_a_pool_is_a_typed_plan_error() {
+        let err = PrivateBuilder::new()
+            .noise_division(NoiseDivision::PerWorker)
+            .plan(100)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("worker pool"), "{err}");
+        assert!(PrivateBuilder::new()
+            .workers(2)
+            .noise_division(NoiseDivision::PerWorker)
+            .plan(100)
+            .is_ok());
     }
 
     /// Satellite: calibration round-trip. For every accountant kind and

@@ -15,6 +15,7 @@ use std::cell::RefCell;
 use crate::accounting::{
     self, accountant::Accountant, calibration, CalibKind,
 };
+use crate::distributed::{NoiseDivision, Parallelism};
 use crate::rng::{gaussian, make_rng, Rng, RngKind};
 use crate::runtime::artifact::ModelMeta;
 
@@ -69,6 +70,11 @@ pub struct PrivacyParams {
     /// Trainable layer count, used by per-layer clipping (set from the
     /// model metadata when wrapping; 1 means "treat as one layer").
     pub num_layers: usize,
+    /// Worker threads per step (native backend; `Single` = no pool).
+    pub parallelism: Parallelism,
+    /// Where the Gaussian noise of each logical step is generated
+    /// (root draw, or per-worker σ/√N shares).
+    pub noise_division: NoiseDivision,
 }
 
 impl PrivacyParams {
@@ -82,6 +88,8 @@ impl PrivacyParams {
             poisson: true,
             clipping: ClippingStrategy::Flat,
             num_layers: 1,
+            parallelism: Parallelism::Single,
+            noise_division: NoiseDivision::Root,
         }
     }
 
@@ -103,6 +111,12 @@ impl PrivacyParams {
 
     pub fn with_clipping(mut self, strategy: ClippingStrategy) -> Self {
         self.clipping = strategy;
+        self
+    }
+
+    /// Shard every step across `n` worker threads (native backend).
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.parallelism = Parallelism::Workers(n);
         self
     }
 

@@ -24,3 +24,7 @@ pub use validator::{validate_model, ValidationError};
 
 /// Re-exported for builder users: `.backend(Backend::Native)`.
 pub use crate::runtime::backend::{Backend, BackendKind};
+
+/// Re-exported for builder users: `.workers(4)` /
+/// `.parallelism(Parallelism::Auto)` / `.noise_division(..)`.
+pub use crate::distributed::{NoiseDivision, Parallelism};

@@ -167,6 +167,9 @@ pub trait EvalExec {
 /// backend always provides all four.
 pub struct TrainerSteps {
     pub backend: BackendKind,
+    /// Worker threads executing each step (1 = single-threaded; > 1 means
+    /// the steps run on the distributed pool).
+    pub workers: usize,
     pub fused_dp: Option<Box<dyn FusedStep>>,
     pub accum: Option<Box<dyn AccumExec>>,
     pub apply: Option<Box<dyn ApplyExec>>,
@@ -188,6 +191,32 @@ pub trait ExecutionBackend {
 
     /// Build the step set at the given physical batch size.
     fn trainer_steps(&self, physical_batch: usize) -> Result<TrainerSteps>;
+
+    /// Build the step set for a parallel-execution request. The default
+    /// serves single-threaded requests through [`Self::trainer_steps`]
+    /// and rejects pool requests — only the native backend implements
+    /// the distributed worker pool.
+    fn trainer_steps_parallel(
+        &self,
+        physical_batch: usize,
+        exec: &crate::distributed::ExecSpec,
+    ) -> Result<TrainerSteps> {
+        if exec.parallelism.uses_pool() {
+            bail!(
+                "backend '{}' does not support worker parallelism; use the native backend \
+                 (`--backend native` / `.backend(Backend::Native)`) for data-parallel DP-SGD",
+                self.name()
+            );
+        }
+        if exec.noise_division == crate::distributed::NoiseDivision::PerWorker {
+            bail!(
+                "backend '{}' generates noise at the root; per-worker σ/√N splitting \
+                 requires the native worker pool (set workers > 1 or auto)",
+                self.name()
+            );
+        }
+        self.trainer_steps(physical_batch)
+    }
 
     /// The artifact registry (XLA backend only).
     fn registry(&self) -> Option<&Registry> {
@@ -263,6 +292,63 @@ mod tests {
         assert_eq!(auto_backend_kind(&dir, "mnist"), BackendKind::Native);
         let b = resolve(&dir, "mnist", Backend::Auto).unwrap();
         assert_eq!(b.kind(), BackendKind::Native);
+    }
+
+    #[test]
+    fn default_parallel_steps_reject_pool_requests() {
+        use crate::distributed::{ExecSpec, Parallelism};
+
+        /// A backend that keeps the trait's default `trainer_steps_parallel`.
+        struct NoPool(ModelMeta);
+        impl ExecutionBackend for NoPool {
+            fn kind(&self) -> BackendKind {
+                BackendKind::Xla
+            }
+            fn name(&self) -> &'static str {
+                "no-pool"
+            }
+            fn model_meta(&self) -> &ModelMeta {
+                &self.0
+            }
+            fn init_params(&self) -> Result<Vec<f32>> {
+                Ok(vec![0.0; 3])
+            }
+            fn trainer_steps(&self, _physical_batch: usize) -> Result<TrainerSteps> {
+                Ok(TrainerSteps {
+                    backend: BackendKind::Xla,
+                    workers: 1,
+                    fused_dp: None,
+                    accum: None,
+                    apply: None,
+                    eval: None,
+                })
+            }
+            fn describe(&self) -> String {
+                "no-pool".into()
+            }
+        }
+
+        let meta = ModelMeta {
+            task: "t".into(),
+            num_params: 3,
+            input_shape: vec![1],
+            input_dtype: "f32".into(),
+            num_classes: 2,
+            layer_kinds: vec!["linear".into()],
+            vocab: None,
+            init_file: String::new(),
+        };
+        let b = NoPool(meta);
+        let mut spec = ExecSpec::default();
+        assert!(b.trainer_steps_parallel(8, &spec).is_ok(), "single passes through");
+        spec.parallelism = Parallelism::Workers(4);
+        let err = b.trainer_steps_parallel(8, &spec).unwrap_err().to_string();
+        assert!(err.contains("no-pool") && err.contains("native"), "{err}");
+        // an explicitly configured noise policy must never be silently dropped
+        spec.parallelism = Parallelism::Single;
+        spec.noise_division = crate::distributed::NoiseDivision::PerWorker;
+        let err = b.trainer_steps_parallel(8, &spec).unwrap_err().to_string();
+        assert!(err.contains("worker pool"), "{err}");
     }
 
     #[test]

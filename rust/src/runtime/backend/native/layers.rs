@@ -57,7 +57,12 @@ impl<'a> GradSink<'a> {
 }
 
 /// A layer with a batched per-sample gradient rule.
-pub trait GradSampleLayer {
+///
+/// `Send + Sync` is part of the contract: the distributed subsystem
+/// shares one immutable model across worker threads, so kernels must
+/// keep all mutable scratch local to each call (shard-scoped buffers,
+/// never interior mutability on the layer itself).
+pub trait GradSampleLayer: Send + Sync {
     /// Kind string as used by the validator (`linear`, `conv2d`, …).
     fn kind(&self) -> &'static str;
 

@@ -25,8 +25,9 @@ pub mod model;
 pub mod steps;
 
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
+use crate::distributed::{DistributedStep, ExecSpec};
 use crate::runtime::artifact::ModelMeta;
 
 use self::layers::{Conv2d, Embedding, LayerNorm, Linear};
@@ -116,15 +117,17 @@ pub fn model_for_task(task: &str) -> Result<NativeModel> {
     }
 }
 
-/// The pure-Rust execution backend for one task.
+/// The pure-Rust execution backend for one task. The model is held in
+/// an `Arc` (and every stacked layer is `Send + Sync`), so one immutable
+/// parameter-free model snapshot can serve any number of worker threads.
 pub struct NativeBackend {
-    model: Rc<NativeModel>,
+    model: Arc<NativeModel>,
     meta: ModelMeta,
 }
 
 impl NativeBackend {
     pub fn for_task(task: &str) -> Result<NativeBackend> {
-        let model = Rc::new(model_for_task(task)?);
+        let model = Arc::new(model_for_task(task)?);
         let meta = ModelMeta {
             task: task.to_string(),
             num_params: model.num_params(),
@@ -138,7 +141,7 @@ impl NativeBackend {
         Ok(NativeBackend { model, meta })
     }
 
-    pub fn model(&self) -> &Rc<NativeModel> {
+    pub fn model(&self) -> &Arc<NativeModel> {
         &self.model
     }
 }
@@ -166,6 +169,7 @@ impl ExecutionBackend for NativeBackend {
         }
         Ok(TrainerSteps {
             backend: BackendKind::Native,
+            workers: 1,
             fused_dp: Some(Box::new(NativeFusedStep::new(
                 self.model.clone(),
                 physical_batch,
@@ -179,6 +183,38 @@ impl ExecutionBackend for NativeBackend {
                 self.model.clone(),
                 physical_batch,
             ))),
+        })
+    }
+
+    /// The native backend is the distributed execution engine: any pool
+    /// request shards every step across `DistributedStep` worker threads
+    /// (per-sample gradients + clipping per shard, f64 tree reduction,
+    /// one noise addition per logical step).
+    fn trainer_steps_parallel(
+        &self,
+        physical_batch: usize,
+        exec: &ExecSpec,
+    ) -> Result<TrainerSteps> {
+        if !exec.parallelism.uses_pool() {
+            if exec.noise_division == crate::distributed::NoiseDivision::PerWorker {
+                return Err(anyhow!(
+                    "per-worker noise splitting requires a worker pool; \
+                     set workers > 1 or auto (noise would silently fall back to the root draw)"
+                ));
+            }
+            return self.trainer_steps(physical_batch);
+        }
+        if physical_batch == 0 {
+            return Err(anyhow!("native backend: physical batch must be positive"));
+        }
+        let dist = DistributedStep::launch(self.model.clone(), physical_batch, exec)?;
+        Ok(TrainerSteps {
+            backend: BackendKind::Native,
+            workers: dist.workers(),
+            fused_dp: Some(Box::new(dist.clone())),
+            accum: Some(Box::new(dist.clone())),
+            apply: Some(Box::new(dist.clone())),
+            eval: Some(Box::new(dist)),
         })
     }
 
@@ -228,6 +264,34 @@ mod tests {
         assert!(steps.eval.is_some());
         assert_eq!(steps.fused_dp.unwrap().batch(), 16);
         assert!(b.trainer_steps(0).is_err());
+    }
+
+    #[test]
+    fn parallel_steps_route_through_the_pool() {
+        use crate::distributed::Parallelism;
+        let b = NativeBackend::for_task("embed").unwrap();
+        let spec = ExecSpec {
+            parallelism: Parallelism::Workers(3),
+            ..Default::default()
+        };
+        let steps = b.trainer_steps_parallel(16, &spec).unwrap();
+        assert_eq!(steps.workers, 3);
+        assert!(steps.fused_dp.is_some());
+        assert!(steps.accum.is_some());
+        assert!(steps.apply.is_some());
+        assert!(steps.eval.is_some());
+        assert_eq!(steps.fused_dp.unwrap().batch(), 16);
+        // a single request bypasses the pool entirely
+        let single = b.trainer_steps_parallel(16, &ExecSpec::default()).unwrap();
+        assert_eq!(single.workers, 1);
+        assert!(b.trainer_steps_parallel(0, &spec).is_err());
+        // per-worker noise without a pool must error, not silently drop
+        let bad = ExecSpec {
+            noise_division: crate::distributed::NoiseDivision::PerWorker,
+            ..Default::default()
+        };
+        let err = b.trainer_steps_parallel(16, &bad).unwrap_err().to_string();
+        assert!(err.contains("worker pool"), "{err}");
     }
 
     #[test]

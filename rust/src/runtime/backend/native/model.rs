@@ -48,6 +48,20 @@ pub struct DpGrad {
     pub real: usize,
 }
 
+/// A shard's clipped-gradient partial with an **f64** accumulator — the
+/// wire format of the distributed reduction. Products of f32 clip factor
+/// × f32 gradient are exact in f64, so regrouping the sum across any
+/// worker count perturbs it only at f64 rounding (~1e-16 relative): the
+/// final f32 cast lands on the same value whether one worker or eight
+/// computed the batch.
+pub struct DpGradPartial {
+    /// Σ_b clip_C(g_b) over the shard's real samples, in f64.
+    pub gsum: Vec<f64>,
+    pub loss_sum: f64,
+    pub snorm_sum: f64,
+    pub real: usize,
+}
+
 /// A sequential native model with a classification head.
 pub struct NativeModel {
     pub task: String,
@@ -249,7 +263,9 @@ impl NativeModel {
 
     /// The DP gradient of one physical batch: per-sample grads, per-sample
     /// L2 norms, clip to `clip`, sum. `clip` is the *effective* scalar the
-    /// caller resolved (C for flat clipping, C/√L for per-layer).
+    /// caller resolved (C for flat clipping, C/√L for per-layer). One f32
+    /// cast of [`dp_grad_partial`](Self::dp_grad_partial), so single-
+    /// worker and sharded execution share one clipping definition.
     pub fn dp_grad(
         &self,
         params: &[f32],
@@ -258,10 +274,31 @@ impl NativeModel {
         mask: &[f32],
         clip: f32,
     ) -> Result<DpGrad> {
+        let p = self.dp_grad_partial(params, x, y, mask, clip)?;
+        Ok(DpGrad {
+            gsum: p.gsum.iter().map(|&g| g as f32).collect(),
+            loss_sum: p.loss_sum,
+            snorm_sum: p.snorm_sum,
+            real: p.real,
+        })
+    }
+
+    /// The shard-level DP gradient partial: identical pipeline to
+    /// [`dp_grad`](Self::dp_grad) but accumulated in f64 (see
+    /// [`DpGradPartial`]). This is what distributed workers compute per
+    /// shard and what the tree reduction sums.
+    pub fn dp_grad_partial(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<DpGradPartial> {
         let ps = self.per_sample_grads(params, x, y, mask)?;
         let b = mask.len();
         let p = ps.num_params;
-        let mut gsum = vec![0f32; p];
+        let mut gsum = vec![0f64; p];
         let mut loss_sum = 0.0;
         let mut snorm_sum = 0.0;
         let mut real = 0;
@@ -274,12 +311,12 @@ impl NativeModel {
             let row = &ps.gsample[s * p..(s + 1) * p];
             let norm = l2_norm(row);
             snorm_sum += norm;
-            let factor = clip_factor(norm, clip);
+            let factor = clip_factor(norm, clip) as f64;
             for (acc, &g) in gsum.iter_mut().zip(row.iter()) {
-                *acc += factor * g;
+                *acc += factor * g as f64;
             }
         }
-        Ok(DpGrad {
+        Ok(DpGradPartial {
             gsum,
             loss_sum,
             snorm_sum,
@@ -622,6 +659,22 @@ mod tests {
                 "param {idx}: fd {fd} vs analytic {got}"
             );
         }
+    }
+
+    #[test]
+    fn dp_grad_is_the_f32_cast_of_the_partial() {
+        let m = tiny_model();
+        let params = m.init_params(21);
+        let x = HostTensor::f32(vec![2, 3], vec![0.3, -0.8, 1.2, 0.0, 0.6, -0.1]);
+        let y = [1, 0];
+        let mask = [1.0, 1.0];
+        let full = m.dp_grad(&params, &x, &y, &mask, 0.7).unwrap();
+        let part = m.dp_grad_partial(&params, &x, &y, &mask, 0.7).unwrap();
+        assert_eq!(full.real, part.real);
+        assert_eq!(full.loss_sum, part.loss_sum);
+        assert_eq!(full.snorm_sum, part.snorm_sum);
+        let cast: Vec<f32> = part.gsum.iter().map(|&g| g as f32).collect();
+        assert_eq!(full.gsum, cast);
     }
 
     #[test]

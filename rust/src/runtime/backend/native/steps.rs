@@ -11,7 +11,7 @@
 //! any batch size — no registry discovery, no artifact-missing skips.
 
 use anyhow::{bail, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::rng::Rng;
 use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
@@ -35,8 +35,14 @@ fn check_batch(kind: &str, x: &HostTensor, y: &[i32], mask: &[f32], batch: usize
 
 /// The noisy SGD update both the fused step and the apply step perform:
 /// `p' = p − lr · (Σ clip_C(g_b) + σ·C·noise) / denom`. One definition so
-/// fused and virtual execution cannot drift apart.
-fn noisy_sgd_update(params: &[f32], gsum: &[f32], noise: &[f32], hp: HyperParams) -> Vec<f32> {
+/// fused and virtual execution cannot drift apart. `pub(crate)` because
+/// the distributed apply step performs the identical root update.
+pub(crate) fn noisy_sgd_update(
+    params: &[f32],
+    gsum: &[f32],
+    noise: &[f32],
+    hp: HyperParams,
+) -> Vec<f32> {
     let scale = hp.sigma * hp.clip;
     let inv_denom = 1.0 / hp.denom;
     params
@@ -46,14 +52,33 @@ fn noisy_sgd_update(params: &[f32], gsum: &[f32], noise: &[f32], hp: HyperParams
         .collect()
 }
 
+/// The same update over an f64 gradient sum (the distributed reduction's
+/// wire format). Arithmetic is carried in f64 and cast once, so the
+/// result is insensitive to how the sum was regrouped across workers.
+pub(crate) fn noisy_sgd_update_f64(
+    params: &[f32],
+    gsum: &[f64],
+    noise: &[f32],
+    hp: HyperParams,
+) -> Vec<f32> {
+    let scale = hp.sigma as f64 * hp.clip as f64;
+    let inv_denom = 1.0 / hp.denom as f64;
+    let lr = hp.lr as f64;
+    params
+        .iter()
+        .zip(gsum.iter().zip(noise.iter()))
+        .map(|(&p, (&gs, &n))| (p as f64 - lr * (gs + scale * n as f64) * inv_denom) as f32)
+        .collect()
+}
+
 /// Fused DP train step (and the plain-SGD baseline variant).
 pub struct NativeFusedStep {
-    model: Rc<NativeModel>,
+    model: Arc<NativeModel>,
     batch: usize,
 }
 
 impl NativeFusedStep {
-    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+    pub fn new(model: Arc<NativeModel>, batch: usize) -> Self {
         NativeFusedStep { model, batch }
     }
 }
@@ -122,12 +147,12 @@ impl FusedStep for NativeFusedStep {
 
 /// Clipped-gradient accumulation over one physical chunk.
 pub struct NativeAccumStep {
-    model: Rc<NativeModel>,
+    model: Arc<NativeModel>,
     batch: usize,
 }
 
 impl NativeAccumStep {
-    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+    pub fn new(model: Arc<NativeModel>, batch: usize) -> Self {
         NativeAccumStep { model, batch }
     }
 }
@@ -192,12 +217,12 @@ impl ApplyExec for NativeApplyStep {
 
 /// Masked evaluation over one physical chunk.
 pub struct NativeEvalStep {
-    model: Rc<NativeModel>,
+    model: Arc<NativeModel>,
     batch: usize,
 }
 
 impl NativeEvalStep {
-    pub fn new(model: Rc<NativeModel>, batch: usize) -> Self {
+    pub fn new(model: Arc<NativeModel>, batch: usize) -> Self {
         NativeEvalStep { model, batch }
     }
 }

@@ -115,6 +115,7 @@ impl ExecutionBackend for XlaBackend {
             .map(|s| Box::new(s) as Box<dyn EvalExec>);
         Ok(TrainerSteps {
             backend: BackendKind::Xla,
+            workers: 1,
             fused_dp,
             accum,
             apply,

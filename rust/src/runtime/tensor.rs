@@ -132,6 +132,23 @@ impl HostTensor {
             TensorData::I32(_) => "i32",
         }
     }
+
+    /// Rows `[start, end)` along the batch (first) axis, as an owned
+    /// tensor — the shard extraction primitive of the distributed data
+    /// plane (rows are row-major contiguous, so this is one memcpy).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Result<HostTensor> {
+        let b = *self.shape.first().unwrap_or(&0);
+        if start > end || end > b {
+            bail!("slice_rows [{start}, {end}) out of range for batch {b}");
+        }
+        let per: usize = self.shape[1..].iter().product();
+        let mut shape = vec![end - start];
+        shape.extend_from_slice(&self.shape[1..]);
+        Ok(match &self.data {
+            TensorData::F32(v) => HostTensor::f32(shape, v[start * per..end * per].to_vec()),
+            TensorData::I32(v) => HostTensor::i32(shape, v[start * per..end * per].to_vec()),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +176,21 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn slice_rows_extracts_contiguous_shards() {
+        let t = HostTensor::f32(vec![4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let s = t.slice_rows(1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[2., 3., 4., 5.]);
+        // empty shard is legal (worker count above batch size)
+        let e = t.slice_rows(4, 4).unwrap();
+        assert_eq!(e.shape, vec![0, 2]);
+        assert!(t.slice_rows(3, 5).is_err());
+        assert!(t.slice_rows(2, 1).is_err());
+        let ti = HostTensor::i32(vec![3, 1], vec![7, 8, 9]);
+        assert_eq!(ti.slice_rows(0, 2).unwrap().as_i32().unwrap(), &[7, 8]);
     }
 
     #[test]

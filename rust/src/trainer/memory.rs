@@ -21,6 +21,9 @@ pub struct BatchMemoryManager {
     compiled_batch: usize,
     /// User-requested physical cap (`.physical_batch(n)` on the builder).
     physical_limit: usize,
+    /// Worker threads each physical chunk is sharded across (1 = the
+    /// whole chunk runs in one thread).
+    workers: usize,
     logical_steps: u64,
     micro_steps: u64,
     peak_logical: usize,
@@ -28,11 +31,20 @@ pub struct BatchMemoryManager {
 
 impl BatchMemoryManager {
     pub fn new(compiled_batch: usize, physical_limit: usize) -> Self {
+        Self::with_workers(compiled_batch, physical_limit, 1)
+    }
+
+    /// A shard-aware manager: chunking is unchanged (the physical batch
+    /// is still what bounds one executable call), but the manager knows
+    /// each chunk is split across `workers` threads, so per-worker peak
+    /// memory is reported per shard, not per chunk.
+    pub fn with_workers(compiled_batch: usize, physical_limit: usize, workers: usize) -> Self {
         assert!(compiled_batch > 0, "compiled batch must be positive");
         assert!(physical_limit > 0, "physical limit must be positive");
         BatchMemoryManager {
             compiled_batch,
             physical_limit,
+            workers: workers.max(1),
             logical_steps: 0,
             micro_steps: 0,
             peak_logical: 0,
@@ -47,6 +59,18 @@ impl BatchMemoryManager {
     /// The batch size chunks are padded to (the executable's shape).
     pub fn compiled_batch(&self) -> usize {
         self.compiled_batch
+    }
+
+    /// Worker threads each chunk is sharded across.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Rows of the widest per-worker shard of a full chunk — what bounds
+    /// each worker's live `[shard, P]` per-sample-gradient buffer (the
+    /// Eq (2) memory term shrinks by ~`workers`× under data parallelism).
+    pub fn shard_width(&self) -> usize {
+        self.chunk_size().div_ceil(self.workers)
     }
 
     /// Micro-steps a logical batch of `logical` samples will take (an
@@ -169,5 +193,23 @@ mod tests {
         let mut m = BatchMemoryManager::new(64, 16);
         let batch = lb(64);
         assert_eq!(m.split(&batch).len(), 4);
+    }
+
+    #[test]
+    fn shard_awareness_reports_per_worker_width() {
+        let m = BatchMemoryManager::with_workers(64, 64, 4);
+        assert_eq!(m.workers(), 4);
+        assert_eq!(m.shard_width(), 16);
+        // ragged: 64-row chunks over 3 workers peak at ⌈64/3⌉ = 22 rows
+        assert_eq!(BatchMemoryManager::with_workers(64, 64, 3).shard_width(), 22);
+        // single-worker managers report the whole chunk
+        assert_eq!(BatchMemoryManager::new(64, 32).shard_width(), 32);
+        // chunking itself is worker-independent
+        let mut a = BatchMemoryManager::with_workers(64, 64, 4);
+        let mut b = BatchMemoryManager::new(64, 64);
+        let batch = lb(200);
+        assert_eq!(a.split(&batch).len(), b.split(&batch).len());
+        // degenerate worker count clamps to 1
+        assert_eq!(BatchMemoryManager::with_workers(8, 8, 0).workers(), 1);
     }
 }

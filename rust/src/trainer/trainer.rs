@@ -19,6 +19,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{Dataset, LogicalBatch, PoissonLoader, UniformLoader};
+use crate::distributed::NoiseDivision;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::privacy::scheduler::NoiseScheduler;
 use crate::runtime::backend::BackendKind;
@@ -98,7 +99,8 @@ impl PrivateTrainer {
                     pp.physical_batch
                 );
             };
-            let bmm = BatchMemoryManager::new(accum.batch(), pp.physical_batch);
+            let bmm =
+                BatchMemoryManager::with_workers(accum.batch(), pp.physical_batch, steps.workers);
             let loader = if pp.poisson {
                 Loader::Poisson(PoissonLoader::with_expected_batch(n, pp.logical_batch))
             } else {
@@ -162,6 +164,11 @@ impl PrivateTrainer {
         self.steps.backend
     }
 
+    /// Worker threads executing each step (1 = single-threaded).
+    pub fn workers(&self) -> usize {
+        self.steps.workers
+    }
+
     pub fn global_step(&self) -> u64 {
         self.global_step
     }
@@ -194,7 +201,13 @@ impl PrivateTrainer {
                     bail!("fused mode: logical batch exceeds physical batch");
                 }
                 let batch = self.train.gather(&lb.indices, phys)?;
-                self.engine.sample_noise(&mut self.noise_buf);
+                // under per-worker noise division the pool composes its
+                // own σ/√N shares and the root draw would be discarded —
+                // skip the O(P) generation (the buffer is still passed
+                // for its length check; stale contents are never read)
+                if self.pp.noise_division == NoiseDivision::Root {
+                    self.engine.sample_noise(&mut self.noise_buf);
+                }
                 let out = step.dp_step(
                     &self.params,
                     batch.x,
@@ -227,7 +240,10 @@ impl PrivateTrainer {
                 let snorm = opt.mean_snorm();
                 let samples = opt.samples();
                 let gsum = opt.take();
-                self.engine.sample_noise(&mut self.noise_buf);
+                // see the fused branch: no root draw under PerWorker
+                if self.pp.noise_division == NoiseDivision::Root {
+                    self.engine.sample_noise(&mut self.noise_buf);
+                }
                 self.params = apply.run(&self.params, &gsum, &self.noise_buf, hp)?;
                 (loss, snorm, samples)
             }

@@ -165,6 +165,60 @@ fn parity_full_task_models() {
     assert_microbatch_parity(&m, &b.x, &b.y, 1e-5);
 }
 
+/// Per-layer clipping on the native backend against the microbatch
+/// oracle: the builder resolves `ClippingStrategy::PerLayer` to the one
+/// effective scalar C/√L, and the batched pipeline at that scalar must
+/// equal a batch-of-1 loop at the same scalar — while every clipped
+/// sample respects the per-layer budget (‖clip(g)‖ ≤ C/√L, so the total
+/// L2 sensitivity stays ≤ C).
+#[test]
+fn per_layer_clipping_matches_microbatch_oracle() {
+    use opacus_rs::runtime::backend::native::model::l2_norm;
+    use opacus_rs::runtime::backend::native::model_for_task;
+
+    let m = model_for_task("lstm").unwrap(); // 4 trainable layers
+    let num_layers = m.layer_kinds().len();
+    assert!(num_layers >= 2, "needs a genuinely multi-layer stack");
+    let c = 1.0f64;
+    let eff = ClippingStrategy::PerLayer.effective_clip(c, num_layers) as f32;
+    // the budget split preserves sensitivity: √(L · (C/√L)²) = C
+    assert!((eff as f64 * (num_layers as f64).sqrt() - c).abs() < 1e-6);
+
+    let b = 5;
+    let ds = opacus_rs::data::synth::synth_imdb(b, 3, 4000, 64);
+    let idx: Vec<usize> = (0..b).collect();
+    let batch = ds.gather(&idx, b).unwrap();
+    let params = m.init_params(42);
+    let full = m.dp_grad(&params, &batch.x, &batch.y, &batch.mask, eff).unwrap();
+    assert_eq!(full.real, b);
+
+    let p = m.num_params();
+    let mut oracle = vec![0f64; p];
+    for s in 0..b {
+        let xs = sample_of(&batch.x, s);
+        let one = m
+            .dp_grad(&params, &xs, &batch.y[s..s + 1], &[1.0], eff)
+            .unwrap();
+        // each clipped per-sample gradient obeys the per-layer budget
+        assert!(
+            l2_norm(&one.gsum) <= eff as f64 + 1e-6,
+            "sample {s}: clipped norm {} above C/√L = {eff}",
+            l2_norm(&one.gsum)
+        );
+        for (acc, &g) in oracle.iter_mut().zip(one.gsum.iter()) {
+            *acc += g as f64;
+        }
+    }
+    let mut worst = 0.0f64;
+    for (got, want) in full.gsum.iter().zip(oracle.iter()) {
+        worst = worst.max((*got as f64 - want).abs());
+    }
+    assert!(
+        worst <= 1e-5,
+        "per-layer batched vs microbatch oracle differ by {worst:.3e}"
+    );
+}
+
 /// Fused (one 512-wide step) and virtual (8 × 64 accumulation chunks)
 /// native execution must spend the identical ε and land on near-identical
 /// parameters — the BatchMemoryManager decomposition is semantics-free.
