@@ -3,11 +3,10 @@
 //! `BatchMemoryManager` virtualizing a logical batch of 128 over
 //! physical batches of 64.
 //!
-//! On the XLA backend this is the true recurrent LSTM from the AOT
-//! artifacts; the native backend serves the task with its text-classifier
-//! substitute stack (embedding → meanpool → layernorm → linear×2 — no
-//! native recurrent per-sample kernel yet), visible in the printed
-//! layer kinds.
+//! Both backends run a true recurrent LSTM: the XLA path executes the
+//! AOT artifacts, and the native engine runs its own time-unrolled
+//! per-sample-BPTT kernel (embedding → lstm → meanpool → linear) — the
+//! printed layer kinds name the recurrent layer either way.
 //!
 //! Run: cargo run --release --example imdb_lstm_dp [-- --epochs 4
 //!      --train 512 --sigma 0.8 --backend native]

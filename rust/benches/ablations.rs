@@ -133,7 +133,7 @@ fn main() -> anyhow::Result<()> {
         "uniform shuffle".into(),
         format!("{:.2}", stats::median(&times) * 1e3),
     ]);
-    let poi = PoissonLoader::with_expected_batch(n_data, 256);
+    let poi = PoissonLoader::with_expected_batch(n_data, 256)?;
     let times = stats::sample_runtimes(1, 10, || {
         let t0 = Instant::now();
         let _ = poi.epoch(&mut rng);

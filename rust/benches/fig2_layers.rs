@@ -12,8 +12,9 @@
 //!        --backend auto|xla|native]
 //!
 //! `--backend native` (or `auto` with no artifacts) times the native
-//! GradSampleLayer kernels for the four natively-supported kinds
-//! (linear, conv, embedding, layernorm); the remaining rows print "-".
+//! GradSampleLayer kernels (linear, conv, embedding, layernorm, and —
+//! since the recurrent/attention kernels landed — lstm, gru, mha); the
+//! remaining rows (groupnorm, instancenorm, rnn) print "-".
 
 use anyhow::anyhow;
 
@@ -62,6 +63,9 @@ fn main() -> anyhow::Result<()> {
             "linear" => Some("linear"),
             "embedding" => Some("embedding"),
             "layernorm" => Some("layernorm"),
+            "lstm" => Some("lstm"),
+            "gru" => Some("gru"),
+            "mha" => Some("mha"),
             _ => None,
         }
     };

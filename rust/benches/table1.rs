@@ -1,6 +1,6 @@
 //! Table 1 — median per-epoch runtime of DP-SGD variants vs batch size,
-//! for all four end-to-end tasks (paper §3.1), on either execution
-//! backend.
+//! for the five end-to-end tasks (paper §3.1; `attn` adds the
+//! multi-head-attention row), on either execution backend.
 //!
 //! Rows (framework substitutions per DESIGN.md §2):
 //!   jax-style fused (DP)  ≙ JAX (DP)          (XLA backend only)
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let samples = args.get_usize("samples", 256)?;
     let epochs = args.get_usize("epochs", 3)?;
     let tasks: Vec<String> = args
-        .get_or("tasks", "mnist,cifar,embed,lstm")
+        .get_or("tasks", "mnist,cifar,embed,lstm,attn")
         .split(',')
         .map(|s| s.trim().to_string())
         .collect();

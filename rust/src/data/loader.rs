@@ -8,6 +8,8 @@
 //! mask-padded physical batches — precisely the paper's "virtual steps"
 //! decoupling of physical and logical batch sizes.
 
+use anyhow::{bail, Result};
+
 use crate::rng::{shuffle, Rng};
 
 /// One sampled logical batch (indices into the dataset).
@@ -85,14 +87,26 @@ pub struct PoissonLoader {
 }
 
 impl PoissonLoader {
-    pub fn new(n: usize, sample_rate: f64) -> Self {
-        assert!(n > 0 && sample_rate > 0.0 && sample_rate <= 1.0);
-        PoissonLoader { n, q: sample_rate }
+    /// Build a Poisson sampler over `n` samples at rate `sample_rate` ∈
+    /// (0, 1]. Invalid configurations are typed errors (PR-2 posture):
+    /// both values come straight from user input (`--batch`, `--train`,
+    /// `.logical_batch(..)`), so the loader must not panic on them.
+    pub fn new(n: usize, sample_rate: f64) -> Result<Self> {
+        if n == 0 {
+            bail!("poisson loader: dataset must be non-empty");
+        }
+        if sample_rate.is_nan() || sample_rate <= 0.0 || sample_rate > 1.0 {
+            bail!("poisson loader: sample rate must be in (0, 1], got {sample_rate}");
+        }
+        Ok(PoissonLoader { n, q: sample_rate })
     }
 
     /// Convenience: rate chosen so the *expected* batch is `expected_batch`.
-    pub fn with_expected_batch(n: usize, expected_batch: usize) -> Self {
-        Self::new(n, (expected_batch as f64 / n as f64).min(1.0))
+    pub fn with_expected_batch(n: usize, expected_batch: usize) -> Result<Self> {
+        if expected_batch == 0 {
+            bail!("poisson loader: expected batch must be positive");
+        }
+        Self::new(n, (expected_batch as f64 / n.max(1) as f64).min(1.0))
     }
 
     pub fn sample_rate(&self) -> f64 {
@@ -170,7 +184,7 @@ mod tests {
     #[test]
     fn poisson_mean_batch_size() {
         let mut rng = Xoshiro256pp::seed_from_u64(4);
-        let loader = PoissonLoader::new(1000, 0.064);
+        let loader = PoissonLoader::new(1000, 0.064).unwrap();
         let total: usize = (0..200).map(|_| loader.sample(&mut rng).indices.len()).sum();
         let mean = total as f64 / 200.0;
         assert!((mean - 64.0).abs() < 3.0, "mean={mean}");
@@ -179,7 +193,7 @@ mod tests {
     #[test]
     fn poisson_batch_sizes_vary() {
         let mut rng = Xoshiro256pp::seed_from_u64(5);
-        let loader = PoissonLoader::with_expected_batch(1000, 64);
+        let loader = PoissonLoader::with_expected_batch(1000, 64).unwrap();
         let sizes: Vec<usize> = (0..50).map(|_| loader.sample(&mut rng).indices.len()).collect();
         let distinct: std::collections::BTreeSet<_> = sizes.iter().collect();
         assert!(distinct.len() > 5, "Poisson sizes did not vary: {sizes:?}");
@@ -188,7 +202,7 @@ mod tests {
     #[test]
     fn poisson_indices_sorted_unique() {
         let mut rng = Xoshiro256pp::seed_from_u64(6);
-        let b = PoissonLoader::new(500, 0.1).sample(&mut rng);
+        let b = PoissonLoader::new(500, 0.1).unwrap().sample(&mut rng);
         let mut sorted = b.indices.clone();
         sorted.sort_unstable();
         sorted.dedup();
@@ -199,7 +213,7 @@ mod tests {
     fn poisson_membership_independent_rate() {
         // each specific index appears with frequency ≈ q
         let mut rng = Xoshiro256pp::seed_from_u64(7);
-        let loader = PoissonLoader::new(100, 0.2);
+        let loader = PoissonLoader::new(100, 0.2).unwrap();
         let mut count7 = 0;
         for _ in 0..1000 {
             if loader.sample(&mut rng).indices.contains(&7) {
@@ -222,9 +236,30 @@ mod tests {
         assert_eq!(empty.chunks(4).len(), 1); // noise-only step still runs
     }
 
+    /// Satellite (PR 4): invalid sampler configs are typed errors, not
+    /// panics — `n` and the rate derive from user CLI/builder input.
+    #[test]
+    fn poisson_invalid_configs_are_typed_errors() {
+        let err = PoissonLoader::new(0, 0.1).unwrap_err().to_string();
+        assert!(err.contains("non-empty"), "{err}");
+        for bad_rate in [0.0, -0.5, 1.5, f64::NAN] {
+            let err = PoissonLoader::new(100, bad_rate).unwrap_err().to_string();
+            assert!(err.contains("(0, 1]"), "rate {bad_rate}: {err}");
+        }
+        assert!(PoissonLoader::new(100, 1.0).is_ok());
+        let err = PoissonLoader::with_expected_batch(100, 0).unwrap_err().to_string();
+        assert!(err.contains("expected batch"), "{err}");
+        assert!(PoissonLoader::with_expected_batch(0, 10).is_err());
+        // oversized expected batch caps q at 1 instead of erroring
+        assert_eq!(
+            PoissonLoader::with_expected_batch(10, 100).unwrap().sample_rate(),
+            1.0
+        );
+    }
+
     #[test]
     fn steps_per_epoch_poisson() {
-        assert_eq!(PoissonLoader::new(1000, 0.01).steps_per_epoch(), 100);
-        assert_eq!(PoissonLoader::new(1000, 0.064).steps_per_epoch(), 16);
+        assert_eq!(PoissonLoader::new(1000, 0.01).unwrap().steps_per_epoch(), 100);
+        assert_eq!(PoissonLoader::new(1000, 0.064).unwrap().steps_per_epoch(), 16);
     }
 }

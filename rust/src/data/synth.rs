@@ -13,8 +13,10 @@ use crate::rng::{gaussian, pcg::Xoshiro256pp, Rng};
 
 use super::dataset::Dataset;
 
-/// Tasks with a synthetic-corpus generator (one per paper benchmark).
-pub const VALID_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm"];
+/// Tasks with a synthetic-corpus generator (one per paper benchmark;
+/// `embed`, `lstm` and `attn` share the IMDb-shaped token generator and
+/// differ in the model stack that consumes them).
+pub const VALID_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn"];
 
 /// MNIST-shaped: [28, 28, 1] f32, 10 classes.
 ///
@@ -127,7 +129,7 @@ pub fn for_task(
     match task {
         "mnist" => Ok(synth_mnist(n, seed)),
         "cifar" => Ok(synth_cifar(n, seed)),
-        "embed" | "lstm" => {
+        "embed" | "lstm" | "attn" => {
             let seq = *input_shape.first().ok_or_else(|| {
                 anyhow!("task '{task}': empty input shape (expected [seq_len])")
             })?;
@@ -219,6 +221,10 @@ mod tests {
         assert_eq!(
             for_task("lstm", 4, 0, &[64], Some(10_000)).unwrap().sample_shape,
             vec![64]
+        );
+        assert_eq!(
+            for_task("attn", 4, 0, &[32], Some(2000)).unwrap().sample_shape,
+            vec![32]
         );
     }
 

@@ -16,9 +16,10 @@
 //! * **Native backend** — the same DP step pipeline in pure Rust:
 //!   batched per-sample-gradient kernels per layer kind
 //!   ([`runtime::backend::native::GradSampleLayer`] — linear, conv2d,
-//!   embedding, layernorm), per-sample L2 norms, flat or per-layer
-//!   clipping, Gaussian noise, SGD. No artifacts, no bindings — `cargo
-//!   test` runs the full integration path anywhere.
+//!   embedding, layernorm, time-unrolled lstm/gru, multi-head
+//!   attention), per-sample L2 norms, flat or per-layer clipping,
+//!   Gaussian noise, SGD. No artifacts, no bindings — `cargo test` runs
+//!   the full integration path anywhere.
 //!
 //! The native backend also scales out: the [`distributed`] subsystem
 //! shards every physical batch across a pool of worker threads

@@ -10,6 +10,7 @@
 //!
 //! Examples:
 //!   opacus train --task mnist --epochs 5 --sigma 1.1 --clip 1.0
+//!   opacus train --task attn --backend native --epochs 3 --sigma 1.0
 //!   opacus train --task embed --eps 3.0 --delta 1e-5 --epochs 8 --secure
 //!   opacus epsilon --q 0.004 --sigma 1.1 --steps 2344 --compare
 //!   opacus calibrate --eps 3 --delta 1e-5 --q 0.01 --steps 5000
@@ -55,7 +56,7 @@ opacus-rs: differentially private training (Opacus reproduction)
 USAGE: opacus <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS
-  train      --task mnist|cifar|embed|lstm [--epochs N] [--sigma S | --eps E]
+  train      --task mnist|cifar|embed|lstm|attn [--epochs N] [--sigma S | --eps E]
              [--clip C] [--lr L] [--batch B] [--physical B] [--train N]
              [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
              [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
@@ -69,7 +70,9 @@ SUBCOMMANDS
 
 The default --backend auto runs on AOT XLA artifacts when `make
 artifacts` output exists for the task, and otherwise on the pure-Rust
-native per-sample-gradient engine (no artifacts needed).
+native per-sample-gradient engine (no artifacts needed). The lstm task
+runs a true time-unrolled LSTM (per-sample BPTT); attn is sequence
+classification through multi-head self-attention — both native.
 
 --workers shards every step across N worker threads (native backend;
 `auto` sizes the pool from the CPU count). Noise is added once at the

@@ -12,9 +12,10 @@
 //! * [`native::NativeBackend`] — a pure-Rust batched per-sample-gradient
 //!   engine over flat [`HostTensor`] buffers: a
 //!   [`GradSampleLayer`](native::GradSampleLayer) kernel per layer kind
-//!   (linear, conv2d, embedding, layernorm), per-sample L2 norms,
-//!   clipping, Gaussian noise and SGD apply. Runs anywhere `cargo test`
-//!   runs — no artifacts, no bindings.
+//!   (linear, conv2d, embedding, layernorm, plus time-unrolled
+//!   lstm/gru and multi-head attention), per-sample L2 norms, clipping,
+//!   Gaussian noise and SGD apply. Runs anywhere `cargo test` runs — no
+//!   artifacts, no bindings.
 //!
 //! [`Backend::Auto`] (the default) picks XLA when the artifact registry
 //! has a matching model with at least one compiled step on disk AND a

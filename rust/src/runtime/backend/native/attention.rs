@@ -1,0 +1,479 @@
+//! Multi-head self-attention [`GradSampleLayer`] — QKV projections +
+//! scaled-dot-product attention with per-sample gradients through the
+//! softmax (paper §4's `mha` row).
+//!
+//! Input `[B, T, D]` (embedded tokens), output `[B, T, D]`. Per head of
+//! width `D/heads`:
+//!
+//! ```text
+//! S = Q Kᵀ / √(D/heads)        P = softmax_rows(S)        O = P V
+//! ```
+//!
+//! followed by the output projection. The backward pass uses the exact
+//! softmax Jacobian product `dS = P ⊙ (dP − rowsum(P ⊙ dP))` — the same
+//! identity flash-attention kernels rearrange around (the `dP·P` row
+//! reduction is their `delta` term); at native sequence lengths the
+//! `[T, T]` probability matrix fits in cache, so we materialize it per
+//! sample instead of tiling.
+//!
+//! Per-sample gradients: each sample's attention is independent of every
+//! other row of the batch (softmax normalizes over *keys of the same
+//! sample*, never across the batch), so the per-sample parameter
+//! gradients are the per-sample outer products of the projection layers
+//! — accumulated directly into the sample's [`GradSink`] row. All
+//! scratch is call-local; the layer itself is stateless (`Send + Sync`).
+
+use anyhow::{bail, Result};
+
+use crate::rng::{gaussian, Rng};
+use crate::runtime::tensor::HostTensor;
+
+use super::layers::{matvec_acc, matvec_t_acc, outer_acc, GradSampleLayer, GradSink};
+
+/// Multi-head self-attention over `[B, T, D]` sequences.
+///
+/// Flat parameter layout: `[W_q (D·D), b_q (D), W_k, b_k, W_v, b_v,
+/// W_o, b_o]`, every `W` row-major `[out, in]`.
+pub struct MultiHeadAttention {
+    pub dim: usize,
+    pub heads: usize,
+}
+
+impl MultiHeadAttention {
+    pub fn new(dim: usize, heads: usize) -> Result<Self> {
+        if heads == 0 || dim % heads != 0 {
+            bail!("mha: model dim {dim} must be divisible by heads {heads}");
+        }
+        Ok(MultiHeadAttention { dim, heads })
+    }
+
+    fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// (weight offset, bias offset) of projection `p` ∈ {0: q, 1: k,
+    /// 2: v, 3: o} in the flat layout.
+    fn proj_offsets(&self, p: usize) -> (usize, usize) {
+        let block = self.dim * self.dim + self.dim;
+        (p * block, p * block + self.dim * self.dim)
+    }
+
+    /// `y[T, D] = x[T, D] · Wᵀ + b` for one sample.
+    fn project(&self, params: &[f32], p: usize, x: &[f32], t_len: usize, y: &mut [f32]) {
+        let d = self.dim;
+        let (wo, bo) = self.proj_offsets(p);
+        let w = &params[wo..wo + d * d];
+        let b = &params[bo..bo + d];
+        for t in 0..t_len {
+            let xr = &x[t * d..(t + 1) * d];
+            let yr = &mut y[t * d..(t + 1) * d];
+            yr.copy_from_slice(b);
+            matvec_acc(w, xr, d, d, yr);
+        }
+    }
+
+    /// Backward of one projection for one sample: given `dyp[T, D]`,
+    /// accumulate `dW += Σ_t dyp_t ⊗ x_t`, `db += Σ_t dyp_t` into the
+    /// sample's gradient row and (optionally) `dx_t += Wᵀ dyp_t`.
+    #[allow(clippy::too_many_arguments)]
+    fn project_backward(
+        &self,
+        params: &[f32],
+        p: usize,
+        x: &[f32],
+        dyp: &[f32],
+        t_len: usize,
+        g: &mut [f32],
+        dx: Option<&mut [f32]>,
+    ) {
+        let d = self.dim;
+        let (wo, bo) = self.proj_offsets(p);
+        let w = &params[wo..wo + d * d];
+        for t in 0..t_len {
+            let xr = &x[t * d..(t + 1) * d];
+            let dyr = &dyp[t * d..(t + 1) * d];
+            outer_acc(&mut g[wo..wo + d * d], dyr, xr, d, d);
+            for o in 0..d {
+                g[bo + o] += dyr[o];
+            }
+        }
+        if let Some(dx) = dx {
+            for t in 0..t_len {
+                let dyr = &dyp[t * d..(t + 1) * d];
+                let dxr = &mut dx[t * d..(t + 1) * d];
+                matvec_t_acc(w, dyr, d, d, dxr);
+            }
+        }
+    }
+
+    /// One sample's attention given its `q/k/v [T, D]`: fills the
+    /// per-head row-softmax probabilities `probs[heads, T, T]` and the
+    /// pre-projection context `ctx[T, D]`.
+    fn attend(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t_len: usize,
+        probs: &mut [f32],
+        ctx: &mut [f32],
+    ) {
+        let d = self.dim;
+        let hd = self.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        ctx.fill(0.0);
+        for head in 0..self.heads {
+            let off = head * hd; // column offset of this head's slice
+            let pm = &mut probs[head * t_len * t_len..(head + 1) * t_len * t_len];
+            for i in 0..t_len {
+                let qi = &q[i * d + off..i * d + off + hd];
+                let row = &mut pm[i * t_len..(i + 1) * t_len];
+                let mut max = f32::NEG_INFINITY;
+                for (j, rj) in row.iter_mut().enumerate() {
+                    let kj = &k[j * d + off..j * d + off + hd];
+                    let mut s = 0.0f32;
+                    for c in 0..hd {
+                        s += qi[c] * kj[c];
+                    }
+                    let s = s * scale;
+                    *rj = s;
+                    max = max.max(s);
+                }
+                let mut z = 0.0f32;
+                for rj in row.iter_mut() {
+                    *rj = (*rj - max).exp();
+                    z += *rj;
+                }
+                let inv = 1.0 / z;
+                for rj in row.iter_mut() {
+                    *rj *= inv;
+                }
+                let ci = &mut ctx[i * d + off..i * d + off + hd];
+                for j in 0..t_len {
+                    let pij = row[j];
+                    if pij == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[j * d + off..j * d + off + hd];
+                    for c in 0..hd {
+                        ci[c] += pij * vj[c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl GradSampleLayer for MultiHeadAttention {
+    fn kind(&self) -> &'static str {
+        "mha"
+    }
+
+    fn num_params(&self) -> usize {
+        4 * (self.dim * self.dim + self.dim)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [t, d] = in_shape else {
+            bail!("mha: expected [T, {}] input, got {in_shape:?}", self.dim);
+        };
+        if *d != self.dim {
+            bail!("mha: input feature dim {d} != model dim {}", self.dim);
+        }
+        Ok(vec![*t, self.dim])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let &[b, t_len, d] = x.shape.as_slice() else {
+            bail!("mha forward: expected [B, T, D] input, got {:?}", x.shape);
+        };
+        if d != self.dim {
+            bail!("mha forward: input feature dim {d} != {}", self.dim);
+        }
+        let xs = x.as_f32()?;
+        let per = t_len * d;
+        let mut y = vec![0f32; b * per];
+        let mut q = vec![0f32; per];
+        let mut k = vec![0f32; per];
+        let mut v = vec![0f32; per];
+        let mut ctx = vec![0f32; per];
+        let mut probs = vec![0f32; self.heads * t_len * t_len];
+        for s in 0..b {
+            let xr = &xs[s * per..(s + 1) * per];
+            self.project(params, 0, xr, t_len, &mut q);
+            self.project(params, 1, xr, t_len, &mut k);
+            self.project(params, 2, xr, t_len, &mut v);
+            self.attend(&q, &k, &v, t_len, &mut probs, &mut ctx);
+            self.project(params, 3, &ctx, t_len, &mut y[s * per..(s + 1) * per]);
+        }
+        Ok(HostTensor::f32(vec![b, t_len, d], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let &[b, t_len, d] = x.shape.as_slice() else {
+            bail!("mha backward: expected [B, T, D] input, got {:?}", x.shape);
+        };
+        if d != self.dim {
+            bail!("mha backward: input feature dim {d} != {}", self.dim);
+        }
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let hd = self.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let per = t_len * d;
+        let mut dx = if need_dx { vec![0f32; b * per] } else { Vec::new() };
+        // per-sample scratch, reused across the batch
+        let mut q = vec![0f32; per];
+        let mut k = vec![0f32; per];
+        let mut v = vec![0f32; per];
+        let mut ctx = vec![0f32; per];
+        let mut probs = vec![0f32; self.heads * t_len * t_len];
+        let mut dctx = vec![0f32; per];
+        let mut dq = vec![0f32; per];
+        let mut dk = vec![0f32; per];
+        let mut dv = vec![0f32; per];
+        let mut ds_row = vec![0f32; t_len];
+        for s in 0..b {
+            let xr = &xs[s * per..(s + 1) * per];
+            let dyr = &dys[s * per..(s + 1) * per];
+            // recompute this sample's forward intermediates
+            self.project(params, 0, xr, t_len, &mut q);
+            self.project(params, 1, xr, t_len, &mut k);
+            self.project(params, 2, xr, t_len, &mut v);
+            self.attend(&q, &k, &v, t_len, &mut probs, &mut ctx);
+            let g = gs.row(s);
+            // output projection: dW_o/db_o, and dctx = dy · W_o
+            dctx.fill(0.0);
+            self.project_backward(params, 3, &ctx, dyr, t_len, g, Some(&mut dctx));
+            // attention core: dV, softmax Jacobian, dQ, dK per head
+            dq.fill(0.0);
+            dk.fill(0.0);
+            dv.fill(0.0);
+            for head in 0..self.heads {
+                let off = head * hd;
+                let pm = &probs[head * t_len * t_len..(head + 1) * t_len * t_len];
+                for i in 0..t_len {
+                    let prow = &pm[i * t_len..(i + 1) * t_len];
+                    let dci = &dctx[i * d + off..i * d + off + hd];
+                    // dP[i, j] = dctx_i · v_j ; delta = Σ_j P dP (the
+                    // flash-attention `delta` row reduction)
+                    let mut delta = 0.0f32;
+                    for j in 0..t_len {
+                        let vj = &v[j * d + off..j * d + off + hd];
+                        let mut dp = 0.0f32;
+                        for c in 0..hd {
+                            dp += dci[c] * vj[c];
+                        }
+                        ds_row[j] = dp;
+                        delta += prow[j] * dp;
+                    }
+                    // dS = P ⊙ (dP − delta), scaled into dQ/dK; dV = Pᵀ dctx
+                    let qi = &q[i * d + off..i * d + off + hd];
+                    for j in 0..t_len {
+                        let pij = prow[j];
+                        if pij == 0.0 {
+                            continue;
+                        }
+                        let dsij = pij * (ds_row[j] - delta) * scale;
+                        let kj = &k[j * d + off..j * d + off + hd];
+                        let dqi = &mut dq[i * d + off..i * d + off + hd];
+                        for c in 0..hd {
+                            dqi[c] += dsij * kj[c];
+                        }
+                        let dkj = &mut dk[j * d + off..j * d + off + hd];
+                        let dvj = &mut dv[j * d + off..j * d + off + hd];
+                        for c in 0..hd {
+                            dkj[c] += dsij * qi[c];
+                            dvj[c] += pij * dci[c];
+                        }
+                    }
+                }
+            }
+            // input projections: per-sample dW/db plus dx contributions
+            if need_dx {
+                let dxr = &mut dx[s * per..(s + 1) * per];
+                self.project_backward(params, 0, xr, &dq, t_len, g, Some(&mut *dxr));
+                self.project_backward(params, 1, xr, &dk, t_len, g, Some(&mut *dxr));
+                self.project_backward(params, 2, xr, &dv, t_len, g, Some(dxr));
+            } else {
+                self.project_backward(params, 0, xr, &dq, t_len, g, None);
+                self.project_backward(params, 1, xr, &dk, t_len, g, None);
+                self.project_backward(params, 2, xr, &dv, t_len, g, None);
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(x.shape.clone(), dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let d = self.dim;
+        let scale = (1.0 / d as f64).sqrt() as f32;
+        for p in 0..4 {
+            let (wo, bo) = self.proj_offsets(p);
+            gaussian::fill_standard_normal(rng, &mut params[wo..wo + d * d]);
+            for w in params[wo..wo + d * d].iter_mut() {
+                *w *= scale;
+            }
+            params[bo..bo + d].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::Linear;
+    use super::super::model::{NativeModel, Op};
+    use super::super::test_util::{fd_check, init_layer_params as init_params};
+    use super::*;
+    use crate::rng::pcg::Xoshiro256pp;
+
+    #[test]
+    fn shape_and_param_accounting() {
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        assert_eq!(m.num_params(), 4 * (64 + 8));
+        assert_eq!(m.out_shape(&[5, 8]).unwrap(), vec![5, 8]);
+        assert!(m.out_shape(&[5, 4]).is_err());
+        assert!(m.out_shape(&[5]).is_err());
+        assert!(MultiHeadAttention::new(8, 3).is_err(), "8 % 3 != 0");
+        assert!(MultiHeadAttention::new(8, 0).is_err());
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // with W_o = identity and b = 0, every output row lies inside the
+        // convex hull of the value rows: max|y| ≤ max|v| per head column
+        let m = MultiHeadAttention::new(4, 2).unwrap();
+        let mut params = vec![0f32; m.num_params()];
+        // W_q = W_k = 0 (uniform attention), W_v = identity, W_o = identity
+        let (wv, _) = m.proj_offsets(2);
+        let (wo, _) = m.proj_offsets(3);
+        for i in 0..4 {
+            params[wv + i * 4 + i] = 1.0;
+            params[wo + i * 4 + i] = 1.0;
+        }
+        let x = HostTensor::f32(vec![1, 3, 4], (0..12).map(|i| i as f32 / 4.0).collect());
+        let y = m.forward(&params, &x).unwrap();
+        // uniform attention (all scores 0): each row is the mean of V = x
+        let xs = x.as_f32().unwrap();
+        let ys = y.as_f32().unwrap();
+        for c in 0..4 {
+            let mean = (xs[c] + xs[4 + c] + xs[8 + c]) / 3.0;
+            for t in 0..3 {
+                assert!(
+                    (ys[t * 4 + c] - mean).abs() < 1e-6,
+                    "uniform attention row {t} col {c}: {} vs mean {mean}",
+                    ys[t * 4 + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let m = MultiHeadAttention::new(6, 3).unwrap();
+        let params = init_params(&m, 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let mut xv = vec![0f32; 5 * 6];
+        crate::rng::gaussian::fill_standard_normal(&mut rng, &mut xv);
+        let mut q = vec![0f32; 5 * 6];
+        let mut k = vec![0f32; 5 * 6];
+        let mut v = vec![0f32; 5 * 6];
+        let mut ctx = vec![0f32; 5 * 6];
+        let mut probs = vec![0f32; 3 * 5 * 5];
+        m.project(&params, 0, &xv, 5, &mut q);
+        m.project(&params, 1, &xv, 5, &mut k);
+        m.project(&params, 2, &xv, 5, &mut v);
+        m.attend(&q, &k, &v, 5, &mut probs, &mut ctx);
+        for head in 0..3 {
+            for i in 0..5 {
+                let row = &probs[(head * 5 + i) * 5..(head * 5 + i + 1) * 5];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "head {head} row {i}: Σ = {sum}");
+                assert!(row.iter().all(|&p| p >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_gradient_check() {
+        let m = NativeModel::new(
+            "fd_mha",
+            vec![3, 4], // T = 3, D = 4
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(MultiHeadAttention::new(4, 2).unwrap())),
+                Op::MeanPool,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let x = HostTensor::f32(
+            vec![1, 3, 4],
+            vec![0.8, -0.3, 0.5, 1.1, -0.7, 0.2, 0.4, -1.0, 0.1, 0.9, -0.2, 0.6],
+        );
+        fd_check(&m, x);
+    }
+
+    #[test]
+    fn backward_need_dx_false_keeps_param_grads() {
+        let m = MultiHeadAttention::new(4, 2).unwrap();
+        let params = init_params(&m, 5);
+        let p = m.num_params();
+        let x = HostTensor::f32(vec![2, 3, 4], (0..24).map(|i| (i as f32 * 0.17).sin()).collect());
+        let dy = HostTensor::f32(vec![2, 3, 4], vec![0.2; 24]);
+        let mut a = vec![0f32; 2 * p];
+        let mut ga = GradSink::new(&mut a, p, 0, p);
+        let dx = m.backward(&params, &x, &dy, &mut ga, true).unwrap();
+        assert_eq!(dx.shape, vec![2, 3, 4]);
+        let mut b = vec![0f32; 2 * p];
+        let mut gb = GradSink::new(&mut b, p, 0, p);
+        let dx2 = m.backward(&params, &x, &dy, &mut gb, false).unwrap();
+        assert!(dx2.is_empty());
+        assert_eq!(a, b, "param grads must not depend on need_dx");
+        assert!(a.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn per_sample_rows_are_independent() {
+        // softmax normalizes within a sample: perturbing sample 1 must
+        // not change sample 0's gradients (the DP prerequisite)
+        let m = MultiHeadAttention::new(4, 2).unwrap();
+        let params = init_params(&m, 9);
+        let p = m.num_params();
+        let base: Vec<f32> = (0..24).map(|i| (i as f32 * 0.23).cos()).collect();
+        let mut perturbed = base.clone();
+        for v in perturbed[12..].iter_mut() {
+            *v += 1.5;
+        }
+        let dy = HostTensor::f32(vec![2, 3, 4], vec![0.3; 24]);
+        let run = |data: Vec<f32>| {
+            let x = HostTensor::f32(vec![2, 3, 4], data);
+            let mut buf = vec![0f32; 2 * p];
+            let mut gs = GradSink::new(&mut buf, p, 0, p);
+            m.backward(&params, &x, &dy, &mut gs, false).unwrap();
+            buf
+        };
+        let a = run(base);
+        let b = run(perturbed);
+        assert_eq!(&a[..p], &b[..p], "sample 0 grads changed with sample 1's data");
+        assert_ne!(&a[p..], &b[p..], "sample 1 grads must respond to its own data");
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        assert_eq!(init_params(&m, 7), init_params(&m, 7));
+        assert_ne!(init_params(&m, 7), init_params(&m, 8));
+    }
+}

@@ -106,6 +106,54 @@ fn per_sample_elems(t: &HostTensor) -> usize {
     t.shape[1..].iter().product()
 }
 
+// Dense inner kernels shared by every projection-style layer (Linear
+// here, plus the recurrent and attention modules): one definition so a
+// future blocked / SIMD rewrite lands everywhere at once. Conv2d keeps
+// its own windowed loops — they are not plain matvecs.
+
+/// `out[0..rows] += W[rows, cols] · v[cols]` (row-major `W`).
+#[inline]
+pub(super) fn matvec_acc(w: &[f32], v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        let mut acc = 0.0f32;
+        for c in 0..cols {
+            acc += wr[c] * v[c];
+        }
+        out[r] += acc;
+    }
+}
+
+/// `out[0..cols] += Wᵀ[cols, rows] · v[rows]` for row-major `W[rows, cols]`.
+#[inline]
+pub(super) fn matvec_t_acc(w: &[f32], v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let d = v[r];
+        if d == 0.0 {
+            continue;
+        }
+        let wr = &w[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            out[c] += d * wr[c];
+        }
+    }
+}
+
+/// `G[rows, cols] += u[rows] ⊗ v[cols]` (row-major `G`).
+#[inline]
+pub(super) fn outer_acc(g: &mut [f32], u: &[f32], v: &[f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let d = u[r];
+        if d == 0.0 {
+            continue;
+        }
+        let gr = &mut g[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            gr[c] += d * v[c];
+        }
+    }
+}
+
 // ---------------------------------------------------------------- Linear
 
 /// Fully connected layer, `y = W x + b`. Accepts any input whose
@@ -154,14 +202,8 @@ impl GradSampleLayer for Linear {
         for s in 0..b {
             let xr = &xs[s * ind..(s + 1) * ind];
             let yr = &mut y[s * outd..(s + 1) * outd];
-            for o in 0..outd {
-                let wr = &w[o * ind..(o + 1) * ind];
-                let mut acc = bias[o];
-                for i in 0..ind {
-                    acc += wr[i] * xr[i];
-                }
-                yr[o] = acc;
-            }
+            yr.copy_from_slice(bias);
+            matvec_acc(w, xr, outd, ind, yr);
         }
         Ok(HostTensor::f32(vec![b, outd], y))
     }
@@ -184,22 +226,10 @@ impl GradSampleLayer for Linear {
             let xr = &xs[s * ind..(s + 1) * ind];
             let dyr = &dys[s * outd..(s + 1) * outd];
             let g = gs.row(s);
-            for o in 0..outd {
-                let d = dyr[o];
-                let gw = &mut g[o * ind..(o + 1) * ind];
-                for i in 0..ind {
-                    gw[i] += d * xr[i];
-                }
-            }
+            outer_acc(&mut g[..outd * ind], dyr, xr, outd, ind);
             if need_dx {
                 let dxr = &mut dx[s * ind..(s + 1) * ind];
-                for o in 0..outd {
-                    let d = dyr[o];
-                    let wr = &w[o * ind..(o + 1) * ind];
-                    for i in 0..ind {
-                        dxr[i] += d * wr[i];
-                    }
-                }
+                matvec_t_acc(w, dyr, outd, ind, dxr);
             }
             let gb = &mut g[outd * ind..];
             for o in 0..outd {
@@ -613,15 +643,8 @@ fn row_stats(xr: &[f32], eps: f64) -> (f64, f64) {
 
 #[cfg(test)]
 mod tests {
+    use super::super::test_util::init_layer_params as init_params;
     use super::*;
-    use crate::rng::pcg::Xoshiro256pp;
-
-    fn init_params(layer: &dyn GradSampleLayer, seed: u64) -> Vec<f32> {
-        let mut p = vec![0f32; layer.num_params()];
-        let mut rng = Xoshiro256pp::seed_from_u64(seed);
-        layer.init(&mut p, &mut rng);
-        p
-    }
 
     #[test]
     fn linear_forward_matches_manual() {

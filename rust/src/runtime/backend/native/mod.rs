@@ -8,20 +8,27 @@
 //! into always-on coverage and gives the benches a baseline to compare
 //! the XLA path against.
 //!
-//! * [`layers`] — the [`GradSampleLayer`] kernels (linear, conv2d,
+//! * [`layers`] — the core [`GradSampleLayer`] kernels (linear, conv2d,
 //!   embedding, layernorm) and the extension point for custom kinds
+//! * [`recurrent`] — time-unrolled LSTM / GRU kernels with per-sample
+//!   BPTT
+//! * [`attention`] — multi-head self-attention with per-sample
+//!   gradients through the softmax
 //! * [`model`] — sequential stacks + softmax-CE head + clipping pipeline
 //! * [`steps`] — the step-family adapters the trainer consumes
 //!
-//! Tasks served natively: `mnist`, `cifar`, `embed`, `lstm`. The `lstm`
-//! task is served by a text-classifier *substitute* stack (embedding →
-//! meanpool → layernorm → linear×2): there is no native recurrent
-//! per-sample kernel yet, and the XLA artifacts remain the only true
-//! LSTM execution path. The substitution is visible in
-//! `ModelMeta::layer_kinds`.
+//! Tasks served natively: `mnist`, `cifar`, `embed`, `lstm`, `attn`.
+//! The `lstm` task runs a *true* time-unrolled recurrent model
+//! (embedding → LSTM → meanpool → linear); the `attn` task runs
+//! embedding → multi-head attention → meanpool → linear. Every paper
+//! layer row (linear, conv, embedding, layernorm, LSTM, GRU, MHA) now
+//! has a native per-sample-gradient kernel — the XLA artifacts are a
+//! performance path, not a coverage one.
 
+pub mod attention;
 pub mod layers;
 pub mod model;
+pub mod recurrent;
 pub mod steps;
 
 use anyhow::{anyhow, Result};
@@ -30,15 +37,17 @@ use std::sync::Arc;
 use crate::distributed::{DistributedStep, ExecSpec};
 use crate::runtime::artifact::ModelMeta;
 
-use self::layers::{Conv2d, Embedding, LayerNorm, Linear};
+use self::layers::{Conv2d, Embedding, Linear};
 use self::model::{NativeModel, Op};
 use self::steps::{NativeAccumStep, NativeApplyStep, NativeEvalStep, NativeFusedStep};
 use super::{BackendKind, ExecutionBackend, TrainerSteps};
 
+pub use self::attention::MultiHeadAttention;
 pub use self::layers::{GradSampleLayer, GradSink};
+pub use self::recurrent::{Gru, Lstm};
 
 /// Tasks the native backend can serve (matches `data::synth::VALID_TASKS`).
-pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm"];
+pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn"];
 
 /// Per-task deterministic parameter-init seed (stable across runs so
 /// checkpoints and parity tests are reproducible).
@@ -93,8 +102,8 @@ pub fn model_for_task(task: &str) -> Result<NativeModel> {
                 Op::Layer(Box::new(Linear::new(16, 2))),
             ],
         ),
-        // LSTM-task substitute: no native recurrent per-sample kernel yet
-        // (XLA artifacts carry the real LSTM); see the module docs.
+        // the paper's IMDb recurrent row: a true time-unrolled LSTM
+        // with per-sample BPTT (the pre-PR-4 meanpool substitute is gone)
         "lstm" => NativeModel::new(
             task,
             vec![64],
@@ -103,11 +112,23 @@ pub fn model_for_task(task: &str) -> Result<NativeModel> {
             Some(4000),
             vec![
                 Op::Layer(Box::new(Embedding::new(4000, 32))), // [64,32]
+                Op::Layer(Box::new(Lstm::new(32, 32))),        // [64,32]
                 Op::MeanPool,                                  // [32]
-                Op::Layer(Box::new(LayerNorm::new(32))),
-                Op::Layer(Box::new(Linear::new(32, 32))),
-                Op::Relu,
                 Op::Layer(Box::new(Linear::new(32, 2))),
+            ],
+        ),
+        // sequence classification through multi-head self-attention
+        "attn" => NativeModel::new(
+            task,
+            vec![32],
+            "i32",
+            2,
+            Some(2000),
+            vec![
+                Op::Layer(Box::new(Embedding::new(2000, 16))), // [32,16]
+                Op::Layer(Box::new(MultiHeadAttention::new(16, 2)?)), // [32,16]
+                Op::MeanPool,                                  // [16]
+                Op::Layer(Box::new(Linear::new(16, 2))),
             ],
         ),
         other => Err(anyhow!(
@@ -226,6 +247,54 @@ impl ExecutionBackend for NativeBackend {
     }
 }
 
+/// Test-only helpers shared by the kernel modules' unit tests.
+#[cfg(test)]
+pub(super) mod test_util {
+    use super::layers::GradSampleLayer;
+    use super::model::NativeModel;
+    use crate::rng::pcg::Xoshiro256pp;
+    use crate::runtime::tensor::HostTensor;
+
+    /// Deterministically initialized flat parameters of one layer.
+    pub(crate) fn init_layer_params(layer: &dyn GradSampleLayer, seed: u64) -> Vec<f32> {
+        let mut p = vec![0f32; layer.num_params()];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        layer.init(&mut p, &mut rng);
+        p
+    }
+
+    /// Central-difference gradient check: analytic per-sample gradients
+    /// of `m`'s softmax-CE loss vs finite differences, at a spread of
+    /// parameter indices covering every region of the flat layout. One
+    /// driver for every kernel's FD test so the probe strategy and
+    /// tolerance cannot drift between layer kinds.
+    pub(crate) fn fd_check(m: &NativeModel, x: HostTensor) {
+        let mut params = m.init_params(11);
+        let y = [1];
+        let mask = [1.0];
+        let ps = m.per_sample_grads(&params, &x, &y, &mask).unwrap();
+        let h = 1e-3f32;
+        let n = params.len();
+        // probe every region of the layout: first/mid/last plus a stride
+        let mut idxs = vec![0, 1, n / 3, n / 2, 2 * n / 3, n - 1];
+        idxs.extend((0..n).step_by((n / 13).max(1)));
+        for idx in idxs {
+            let orig = params[idx];
+            params[idx] = orig + h;
+            let up = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
+            params[idx] = orig - h;
+            let dn = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
+            params[idx] = orig;
+            let fd = (up - dn) / (2.0 * h as f64);
+            let got = ps.gsample[idx] as f64;
+            assert!(
+                (fd - got).abs() < 1e-2 * fd.abs().max(1.0) + 1e-3,
+                "param {idx}: fd {fd} vs analytic {got}"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +369,23 @@ mod tests {
         assert_eq!(
             b.model_meta().layer_kinds,
             vec!["conv2d", "conv2d", "linear", "linear"]
+        );
+    }
+
+    #[test]
+    fn recurrent_and_attention_tasks_use_true_kernels() {
+        // the lstm task's meanpool substitute is gone: layer_kinds must
+        // advertise the real recurrent kernel (same convention as the
+        // XLA manifest: ["embedding", "lstm", "linear"])
+        let b = NativeBackend::for_task("lstm").unwrap();
+        assert_eq!(
+            b.model_meta().layer_kinds,
+            vec!["embedding", "lstm", "linear"]
+        );
+        let b = NativeBackend::for_task("attn").unwrap();
+        assert_eq!(
+            b.model_meta().layer_kinds,
+            vec!["embedding", "mha", "linear"]
         );
     }
 }

@@ -624,7 +624,8 @@ mod tests {
     #[test]
     fn finite_difference_gradient_check() {
         // d(loss)/d(param) by central differences vs the analytic
-        // per-sample gradient, through linear + relu + linear + layernorm
+        // per-sample gradient, through linear + layernorm + relu + linear
+        // (shared driver: super::super::test_util::fd_check)
         let m = NativeModel::new(
             "fd",
             vec![3],
@@ -639,26 +640,8 @@ mod tests {
             ],
         )
         .unwrap();
-        let mut params = m.init_params(11);
         let x = HostTensor::f32(vec![1, 3], vec![0.8, -0.3, 0.5]);
-        let y = [1];
-        let mask = [1.0];
-        let ps = m.per_sample_grads(&params, &x, &y, &mask).unwrap();
-        let h = 1e-3f32;
-        for idx in [0, 3, 7, 12, 15, params.len() - 1] {
-            let orig = params[idx];
-            params[idx] = orig + h;
-            let up = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
-            params[idx] = orig - h;
-            let dn = m.per_sample_grads(&params, &x, &y, &mask).unwrap().losses[0];
-            params[idx] = orig;
-            let fd = (up - dn) / (2.0 * h as f64);
-            let got = ps.gsample[idx] as f64;
-            assert!(
-                (fd - got).abs() < 1e-2 * fd.abs().max(1.0) * 1.0 + 1e-3,
-                "param {idx}: fd {fd} vs analytic {got}"
-            );
-        }
+        super::super::test_util::fd_check(&m, x);
     }
 
     #[test]

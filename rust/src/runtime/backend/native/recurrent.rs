@@ -1,0 +1,673 @@
+//! Recurrent [`GradSampleLayer`] kernels — time-unrolled LSTM and GRU
+//! with per-sample BPTT (paper §4: "multi-head attention, convolution,
+//! LSTM, GRU (and generic RNN), and embedding").
+//!
+//! Both layers consume a batched sequence `[B, T, D]` (typically the
+//! output of an [`Embedding`](super::layers::Embedding)) and emit the
+//! full hidden-state sequence `[B, T, H]`, so they compose with the
+//! existing structural ops (`MeanPool` for classification heads).
+//!
+//! Execution shape (einsum-style, after Lee & Kifer 2020):
+//! * **forward** — the input projections `x_t · W_xᵀ` for every `(b, t)`
+//!   are computed in one batched pass (they have no sequential
+//!   dependency), then the `O(T)` recurrence runs per sample on top of
+//!   the precomputed activations.
+//! * **backward** — per-sample truncated-nothing BPTT: the forward
+//!   recurrence is replayed (caching gate activations and states for
+//!   every timestep of that sample only, `O(T·H)` scratch — not
+//!   `O(B·T·H)`), then gradients flow from `t = T−1` down to `0`,
+//!   accumulating this sample's parameter gradients straight into its
+//!   [`GradSink`] row. Rows are fully independent, which is exactly what
+//!   per-sample clipping needs and why the kernels stay `Send + Sync`
+//!   (no interior mutability; all scratch is call-local).
+//!
+//! Parameter-layout notes (documented deviations from `torch.nn`):
+//! * `Lstm` folds the redundant pair (`b_ih`, `b_hh`) into a single bias
+//!   `[4H]` — their gradients are identical, so per-sample gradient rows
+//!   would just duplicate.
+//! * `Gru` keeps both biases (`b_x`, `b_h`, each `[3H]`) because the
+//!   PyTorch "new" gate applies `r ⊙ (W_h h + b_h)` — the hidden bias of
+//!   the `n` gate is *not* redundant.
+
+use anyhow::{bail, Result};
+
+use crate::rng::{gaussian, Rng};
+use crate::runtime::tensor::HostTensor;
+
+use super::layers::{matvec_acc, matvec_t_acc, outer_acc, GradSampleLayer, GradSink};
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Shape-check a `[B, T, D]` recurrent input and return `(B, T)`.
+fn seq_dims(kind: &str, x: &HostTensor, in_dim: usize) -> Result<(usize, usize)> {
+    let &[b, t, d] = x.shape.as_slice() else {
+        bail!("{kind}: expected [B, T, {in_dim}] input, got {:?}", x.shape);
+    };
+    if d != in_dim {
+        bail!("{kind}: input feature dim {d} != {in_dim}");
+    }
+    Ok((b, t))
+}
+
+/// Batched input projections `xp[b, t, gh] = Σ_d W[gh, d]·x[b, t, d] + bias[gh]`
+/// for all `(b, t)` at once — the non-sequential half of the recurrence.
+fn input_projections(
+    xs: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize, // gates·H
+    in_dim: usize,
+    steps: usize, // B·T
+) -> Vec<f32> {
+    let mut xp = vec![0f32; steps * rows];
+    for s in 0..steps {
+        let xr = &xs[s * in_dim..(s + 1) * in_dim];
+        let out = &mut xp[s * rows..(s + 1) * rows];
+        out.copy_from_slice(&bias[..rows]);
+        matvec_acc(w, xr, rows, in_dim, out);
+    }
+    xp
+}
+
+// ------------------------------------------------------------------ LSTM
+
+/// Time-unrolled LSTM: `[B, T, D]` → `[B, T, H]` hidden-state sequence.
+///
+/// Gate order is PyTorch's `i, f, g, o`. Parameters are laid out flat as
+/// `[W_x (4H·D), W_h (4H·H), b (4H)]` with a single folded bias (see the
+/// module docs).
+pub struct Lstm {
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+impl Lstm {
+    pub fn new(in_dim: usize, hidden: usize) -> Self {
+        Lstm { in_dim, hidden }
+    }
+
+    fn wx_len(&self) -> usize {
+        4 * self.hidden * self.in_dim
+    }
+
+    fn wh_len(&self) -> usize {
+        4 * self.hidden * self.hidden
+    }
+
+    /// One sample's forward recurrence over its precomputed input
+    /// projections, recording gate activations and states per timestep:
+    /// `gates[t] = [i, f, g, o]` (post-nonlinearity, each `[H]`),
+    /// `cells[t] = c_t`, `hs[t] = h_t`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_forward(
+        &self,
+        xp: &[f32], // this sample's [T, 4H] input projections
+        wh: &[f32],
+        t_len: usize,
+        gates: &mut [f32], // [T, 4H]
+        cells: &mut [f32], // [T, H]
+        hs: &mut [f32],    // [T, H]
+    ) {
+        let h = self.hidden;
+        let mut prev_h = vec![0f32; h];
+        let mut prev_c = vec![0f32; h];
+        let mut a = vec![0f32; 4 * h];
+        for t in 0..t_len {
+            a.copy_from_slice(&xp[t * 4 * h..(t + 1) * 4 * h]);
+            matvec_acc(wh, &prev_h, 4 * h, h, &mut a);
+            let gt = &mut gates[t * 4 * h..(t + 1) * 4 * h];
+            let ct = &mut cells[t * h..(t + 1) * h];
+            let ht = &mut hs[t * h..(t + 1) * h];
+            for j in 0..h {
+                let i = sigmoid(a[j]);
+                let f = sigmoid(a[h + j]);
+                let g = a[2 * h + j].tanh();
+                let o = sigmoid(a[3 * h + j]);
+                let c = f * prev_c[j] + i * g;
+                gt[j] = i;
+                gt[h + j] = f;
+                gt[2 * h + j] = g;
+                gt[3 * h + j] = o;
+                ct[j] = c;
+                ht[j] = o * c.tanh();
+            }
+            prev_h.copy_from_slice(ht);
+            prev_c.copy_from_slice(ct);
+        }
+    }
+}
+
+impl GradSampleLayer for Lstm {
+    fn kind(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn num_params(&self) -> usize {
+        self.wx_len() + self.wh_len() + 4 * self.hidden
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [t, d] = in_shape else {
+            bail!("lstm: expected [T, {}] input, got {in_shape:?}", self.in_dim);
+        };
+        if *d != self.in_dim {
+            bail!("lstm: input feature dim {d} != {}", self.in_dim);
+        }
+        Ok(vec![*t, self.hidden])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("lstm forward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let h = self.hidden;
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bias = &params[self.wx_len() + self.wh_len()..];
+        let xp = input_projections(xs, wx, bias, 4 * h, self.in_dim, b * t_len);
+        let mut y = vec![0f32; b * t_len * h];
+        let mut gates = vec![0f32; t_len * 4 * h];
+        let mut cells = vec![0f32; t_len * h];
+        for s in 0..b {
+            self.run_forward(
+                &xp[s * t_len * 4 * h..(s + 1) * t_len * 4 * h],
+                wh,
+                t_len,
+                &mut gates,
+                &mut cells,
+                &mut y[s * t_len * h..(s + 1) * t_len * h],
+            );
+        }
+        Ok(HostTensor::f32(vec![b, t_len, h], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("lstm backward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (h, d) = (self.hidden, self.in_dim);
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bias = &params[self.wx_len() + self.wh_len()..];
+        let (wx_off, wh_off, b_off) = (0, self.wx_len(), self.wx_len() + self.wh_len());
+        let xp = input_projections(xs, wx, bias, 4 * h, d, b * t_len);
+        let mut dx = if need_dx {
+            vec![0f32; b * t_len * d]
+        } else {
+            Vec::new()
+        };
+        // per-sample scratch, reused across samples
+        let mut gates = vec![0f32; t_len * 4 * h];
+        let mut cells = vec![0f32; t_len * h];
+        let mut hs = vec![0f32; t_len * h];
+        let mut da = vec![0f32; 4 * h];
+        let mut dh = vec![0f32; h];
+        let mut dc = vec![0f32; h];
+        for s in 0..b {
+            self.run_forward(
+                &xp[s * t_len * 4 * h..(s + 1) * t_len * 4 * h],
+                wh,
+                t_len,
+                &mut gates,
+                &mut cells,
+                &mut hs,
+            );
+            let g = gs.row(s);
+            dh.fill(0.0);
+            dc.fill(0.0);
+            for t in (0..t_len).rev() {
+                let gt = &gates[t * 4 * h..(t + 1) * 4 * h];
+                let ct = &cells[t * h..(t + 1) * h];
+                let dyt = &dys[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                for j in 0..h {
+                    let (i, f, gg, o) = (gt[j], gt[h + j], gt[2 * h + j], gt[3 * h + j]);
+                    let tc = ct[j].tanh();
+                    let c_prev = if t > 0 { cells[(t - 1) * h + j] } else { 0.0 };
+                    let dhj = dh[j] + dyt[j];
+                    let dcj = dc[j] + dhj * o * (1.0 - tc * tc);
+                    da[j] = dcj * gg * i * (1.0 - i); // d a_i
+                    da[h + j] = dcj * c_prev * f * (1.0 - f); // d a_f
+                    da[2 * h + j] = dcj * i * (1.0 - gg * gg); // d a_g
+                    da[3 * h + j] = dhj * tc * o * (1.0 - o); // d a_o
+                    dc[j] = dcj * f; // carried to t−1
+                }
+                // parameter grads: W_x, W_h, b rows of this sample
+                let xt = &xs[(s * t_len + t) * d..(s * t_len + t + 1) * d];
+                outer_acc(&mut g[wx_off..wx_off + 4 * h * d], &da, xt, 4 * h, d);
+                if t > 0 {
+                    let h_prev = &hs[(t - 1) * h..t * h];
+                    outer_acc(&mut g[wh_off..wh_off + 4 * h * h], &da, h_prev, 4 * h, h);
+                }
+                for j in 0..4 * h {
+                    g[b_off + j] += da[j];
+                }
+                // carried hidden gradient and (optionally) input gradient
+                dh.fill(0.0);
+                matvec_t_acc(wh, &da, 4 * h, h, &mut dh);
+                if need_dx {
+                    let dxt = &mut dx[(s * t_len + t) * d..(s * t_len + t + 1) * d];
+                    matvec_t_acc(wx, &da, 4 * h, d, dxt);
+                }
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(x.shape.clone(), dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+        // forget-gate bias at 1: the standard trick for gradient flow
+        // through early training (Jozefowicz et al. 2015)
+        let h = self.hidden;
+        params[nw + h..nw + 2 * h].fill(1.0);
+    }
+}
+
+// ------------------------------------------------------------------- GRU
+
+/// Time-unrolled GRU: `[B, T, D]` → `[B, T, H]`, sharing the recurrent
+/// scaffolding (batched input projections + per-sample BPTT) with
+/// [`Lstm`].
+///
+/// Gate order is PyTorch's `r, z, n`; parameters are
+/// `[W_x (3H·D), W_h (3H·H), b_x (3H), b_h (3H)]` and the new gate is
+/// `n = tanh(W_xn x + b_xn + r ⊙ (W_hn h + b_hn))` (PyTorch semantics —
+/// the hidden bias is inside the reset product).
+pub struct Gru {
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+impl Gru {
+    pub fn new(in_dim: usize, hidden: usize) -> Self {
+        Gru { in_dim, hidden }
+    }
+
+    fn wx_len(&self) -> usize {
+        3 * self.hidden * self.in_dim
+    }
+
+    fn wh_len(&self) -> usize {
+        3 * self.hidden * self.hidden
+    }
+
+    /// One sample's forward recurrence. Caches, per timestep:
+    /// `gates[t] = [r, z, n]` (post-nonlinearity) and `hp[t]`, the raw
+    /// hidden-side pre-activation of the new gate
+    /// `u_n = W_hn h_{t−1} + b_hn` (needed for `dr` in BPTT); `hs[t] = h_t`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_forward(
+        &self,
+        xp: &[f32], // this sample's [T, 3H] input projections (incl. b_x)
+        wh: &[f32],
+        bh: &[f32],
+        t_len: usize,
+        gates: &mut [f32], // [T, 3H]
+        un: &mut [f32],    // [T, H]
+        hs: &mut [f32],    // [T, H]
+    ) {
+        let h = self.hidden;
+        let mut prev_h = vec![0f32; h];
+        let mut hv = vec![0f32; 3 * h]; // W_h·h_{t−1} + b_h, all gates
+        for t in 0..t_len {
+            hv.copy_from_slice(&bh[..3 * h]);
+            matvec_acc(wh, &prev_h, 3 * h, h, &mut hv);
+            let xt = &xp[t * 3 * h..(t + 1) * 3 * h];
+            let gt = &mut gates[t * 3 * h..(t + 1) * 3 * h];
+            let ut = &mut un[t * h..(t + 1) * h];
+            let ht = &mut hs[t * h..(t + 1) * h];
+            for j in 0..h {
+                let r = sigmoid(xt[j] + hv[j]);
+                let z = sigmoid(xt[h + j] + hv[h + j]);
+                let u = hv[2 * h + j];
+                let n = (xt[2 * h + j] + r * u).tanh();
+                gt[j] = r;
+                gt[h + j] = z;
+                gt[2 * h + j] = n;
+                ut[j] = u;
+                ht[j] = (1.0 - z) * n + z * prev_h[j];
+            }
+            prev_h.copy_from_slice(ht);
+        }
+    }
+}
+
+impl GradSampleLayer for Gru {
+    fn kind(&self) -> &'static str {
+        "gru"
+    }
+
+    fn num_params(&self) -> usize {
+        self.wx_len() + self.wh_len() + 6 * self.hidden
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [t, d] = in_shape else {
+            bail!("gru: expected [T, {}] input, got {in_shape:?}", self.in_dim);
+        };
+        if *d != self.in_dim {
+            bail!("gru: input feature dim {d} != {}", self.in_dim);
+        }
+        Ok(vec![*t, self.hidden])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("gru forward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let h = self.hidden;
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bx = &params[self.wx_len() + self.wh_len()..self.wx_len() + self.wh_len() + 3 * h];
+        let bh = &params[self.wx_len() + self.wh_len() + 3 * h..];
+        let xp = input_projections(xs, wx, bx, 3 * h, self.in_dim, b * t_len);
+        let mut y = vec![0f32; b * t_len * h];
+        let mut gates = vec![0f32; t_len * 3 * h];
+        let mut un = vec![0f32; t_len * h];
+        for s in 0..b {
+            self.run_forward(
+                &xp[s * t_len * 3 * h..(s + 1) * t_len * 3 * h],
+                wh,
+                bh,
+                t_len,
+                &mut gates,
+                &mut un,
+                &mut y[s * t_len * h..(s + 1) * t_len * h],
+            );
+        }
+        Ok(HostTensor::f32(vec![b, t_len, h], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("gru backward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (h, d) = (self.hidden, self.in_dim);
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bx = &params[self.wx_len() + self.wh_len()..self.wx_len() + self.wh_len() + 3 * h];
+        let bh = &params[self.wx_len() + self.wh_len() + 3 * h..];
+        let (wx_off, wh_off) = (0, self.wx_len());
+        let bx_off = self.wx_len() + self.wh_len();
+        let bh_off = bx_off + 3 * h;
+        let xp = input_projections(xs, wx, bx, 3 * h, d, b * t_len);
+        let mut dx = if need_dx {
+            vec![0f32; b * t_len * d]
+        } else {
+            Vec::new()
+        };
+        let mut gates = vec![0f32; t_len * 3 * h];
+        let mut un = vec![0f32; t_len * h];
+        let mut hs = vec![0f32; t_len * h];
+        // d a_x (input-side pre-activations, all gates) and d u (the
+        // hidden-side pre-activations W_h·h + b_h, all gates) — they
+        // differ only in the n gate, where du_n = da_n ⊙ r
+        let mut dax = vec![0f32; 3 * h];
+        let mut du = vec![0f32; 3 * h];
+        let mut dh = vec![0f32; h];
+        for s in 0..b {
+            self.run_forward(
+                &xp[s * t_len * 3 * h..(s + 1) * t_len * 3 * h],
+                wh,
+                bh,
+                t_len,
+                &mut gates,
+                &mut un,
+                &mut hs,
+            );
+            let g = gs.row(s);
+            dh.fill(0.0);
+            for t in (0..t_len).rev() {
+                let gt = &gates[t * 3 * h..(t + 1) * 3 * h];
+                let ut = &un[t * h..(t + 1) * h];
+                let dyt = &dys[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                for j in 0..h {
+                    let (r, z, n) = (gt[j], gt[h + j], gt[2 * h + j]);
+                    let h_prev = if t > 0 { hs[(t - 1) * h + j] } else { 0.0 };
+                    let dhj = dh[j] + dyt[j];
+                    let dan = dhj * (1.0 - z) * (1.0 - n * n);
+                    let daz = dhj * (h_prev - n) * z * (1.0 - z);
+                    let dar = dan * ut[j] * r * (1.0 - r);
+                    dax[j] = dar;
+                    dax[h + j] = daz;
+                    dax[2 * h + j] = dan;
+                    du[j] = dar;
+                    du[h + j] = daz;
+                    du[2 * h + j] = dan * r;
+                    // the direct carry h_t = … + z ⊙ h_{t−1}
+                    dh[j] = dhj * z;
+                }
+                let xt = &xs[(s * t_len + t) * d..(s * t_len + t + 1) * d];
+                outer_acc(&mut g[wx_off..wx_off + 3 * h * d], &dax, xt, 3 * h, d);
+                if t > 0 {
+                    let h_prev = &hs[(t - 1) * h..t * h];
+                    outer_acc(&mut g[wh_off..wh_off + 3 * h * h], &du, h_prev, 3 * h, h);
+                }
+                for j in 0..3 * h {
+                    g[bx_off + j] += dax[j];
+                    g[bh_off + j] += du[j];
+                }
+                matvec_t_acc(wh, &du, 3 * h, h, &mut dh);
+                if need_dx {
+                    let dxt = &mut dx[(s * t_len + t) * d..(s * t_len + t + 1) * d];
+                    matvec_t_acc(wx, &dax, 3 * h, d, dxt);
+                }
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(x.shape.clone(), dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::Linear;
+    use super::super::model::{NativeModel, Op};
+    use super::super::test_util::{fd_check, init_layer_params as init_params};
+    use super::*;
+
+    #[test]
+    fn lstm_shapes_and_param_count() {
+        let l = Lstm::new(3, 5);
+        assert_eq!(l.num_params(), 4 * 5 * 3 + 4 * 5 * 5 + 4 * 5);
+        assert_eq!(l.out_shape(&[7, 3]).unwrap(), vec![7, 5]);
+        assert!(l.out_shape(&[7, 4]).is_err());
+        assert!(l.out_shape(&[7]).is_err());
+    }
+
+    #[test]
+    fn gru_shapes_and_param_count() {
+        let g = Gru::new(3, 5);
+        assert_eq!(g.num_params(), 3 * 5 * 3 + 3 * 5 * 5 + 6 * 5);
+        assert_eq!(g.out_shape(&[7, 3]).unwrap(), vec![7, 5]);
+        assert!(g.out_shape(&[7, 4]).is_err());
+    }
+
+    #[test]
+    fn lstm_single_step_matches_manual() {
+        // T = 1, H = 1, D = 1 with hand-picked params: the recurrence
+        // reduces to one closed-form cell update from h0 = c0 = 0.
+        let l = Lstm::new(1, 1);
+        // W_x = [wi, wf, wg, wo], W_h = [.., .., .., ..] (unused at t=0
+        // for the output value but still multiplied by h0 = 0), b = 0
+        let params = vec![0.5, 0.25, 1.0, -0.5, 0.1, 0.2, 0.3, 0.4, 0.0, 0.0, 0.0, 0.0];
+        let x = HostTensor::f32(vec![1, 1, 1], vec![2.0]);
+        let y = l.forward(&params, &x).unwrap();
+        let i = 1.0 / (1.0 + (-1.0f64).exp()); // σ(0.5·2)
+        let g = (2.0f64).tanh(); // tanh(1·2)
+        let o = 1.0 / (1.0 + (1.0f64).exp()); // σ(−0.5·2)
+        let c = i * g;
+        let want = (o * c.tanh()) as f32;
+        let got = y.as_f32().unwrap()[0];
+        assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn gru_single_step_matches_manual() {
+        let g = Gru::new(1, 1);
+        // W_x = [wr, wz, wn], W_h = [..], b_x = 0, b_h = [0, 0, bhn]
+        let params = vec![0.5, -0.25, 1.0, 0.1, 0.2, 0.3, 0.0, 0.0, 0.0, 0.0, 0.0, 0.7];
+        let x = HostTensor::f32(vec![1, 1, 1], vec![2.0]);
+        let y = g.forward(&params, &x).unwrap();
+        let r = 1.0 / (1.0 + (-1.0f64).exp()); // σ(0.5·2)
+        let z = 1.0 / (1.0 + (0.5f64).exp()); // σ(−0.25·2)
+        let n = (2.0 + r * 0.7).tanh(); // u_n = W_hn·0 + b_hn = 0.7
+        let want = ((1.0 - z) * n) as f32; // h0 = 0
+        let got = y.as_f32().unwrap()[0];
+        assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn lstm_depends_on_sequence_order() {
+        // a recurrent kernel must NOT be a bag-of-timesteps: permuting
+        // the sequence changes the output (this is what separates the
+        // true kernel from the old meanpool substitute)
+        let l = Lstm::new(2, 3);
+        let params = init_params(&l, 1);
+        let fwd = HostTensor::f32(vec![1, 3, 2], vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.5]);
+        let rev = HostTensor::f32(vec![1, 3, 2], vec![-1.0, 0.5, 0.0, 1.0, 1.0, 0.0]);
+        let yf = l.forward(&params, &fwd).unwrap();
+        let yr = l.forward(&params, &rev).unwrap();
+        let lf = &yf.as_f32().unwrap()[6..]; // last timestep, [H]
+        let lr = &yr.as_f32().unwrap()[6..];
+        assert!(
+            lf.iter().zip(lr).any(|(a, b)| (a - b).abs() > 1e-4),
+            "final state identical under sequence reversal: {lf:?}"
+        );
+    }
+
+    /// Central-difference gradient check through an
+    /// embedding-free stack: Lstm → MeanPool → Linear → softmax-CE.
+    #[test]
+    fn lstm_finite_difference_gradient_check() {
+        let m = NativeModel::new(
+            "fd_lstm",
+            vec![3, 2], // T = 3, D = 2
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Lstm::new(2, 4))),
+                Op::MeanPool,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let x = HostTensor::f32(vec![1, 3, 2], vec![0.8, -0.3, 0.5, 1.1, -0.7, 0.2]);
+        fd_check(&m, x);
+    }
+
+    #[test]
+    fn gru_finite_difference_gradient_check() {
+        let m = NativeModel::new(
+            "fd_gru",
+            vec![3, 2],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Gru::new(2, 4))),
+                Op::MeanPool,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let x = HostTensor::f32(vec![1, 3, 2], vec![0.8, -0.3, 0.5, 1.1, -0.7, 0.2]);
+        fd_check(&m, x);
+    }
+
+    #[test]
+    fn backward_need_dx_false_keeps_param_grads() {
+        for layer in [
+            Box::new(Lstm::new(2, 3)) as Box<dyn GradSampleLayer>,
+            Box::new(Gru::new(2, 3)),
+        ] {
+            let params = init_params(layer.as_ref(), 5);
+            let p = layer.num_params();
+            let x = HostTensor::f32(vec![2, 3, 2], vec![0.4; 12]);
+            let dy = HostTensor::f32(vec![2, 3, 3], vec![0.25; 18]);
+            let mut a = vec![0f32; 2 * p];
+            let mut ga = GradSink::new(&mut a, p, 0, p);
+            let dx = layer.backward(&params, &x, &dy, &mut ga, true).unwrap();
+            assert_eq!(dx.shape, vec![2, 3, 2]);
+            let mut b = vec![0f32; 2 * p];
+            let mut gb = GradSink::new(&mut b, p, 0, p);
+            let dx2 = layer.backward(&params, &x, &dy, &mut gb, false).unwrap();
+            assert!(dx2.is_empty());
+            assert_eq!(a, b, "{}: param grads must not depend on need_dx", layer.kind());
+            assert!(a.iter().any(|&v| v != 0.0));
+        }
+    }
+
+    #[test]
+    fn stride0_sink_sums_per_sample_rows() {
+        let l = Lstm::new(2, 2);
+        let params = init_params(&l, 9);
+        let p = l.num_params();
+        let x = HostTensor::f32(
+            vec![3, 2, 2],
+            vec![0.3, -0.2, 0.8, 0.1, -0.5, 0.9, 0.0, 0.4, 0.6, -0.1, 0.2, 0.7],
+        );
+        let dy = HostTensor::f32(vec![3, 2, 2], vec![0.5; 12]);
+        let mut rows = vec![0f32; 3 * p];
+        let mut gs = GradSink::new(&mut rows, p, 0, p);
+        l.backward(&params, &x, &dy, &mut gs, false).unwrap();
+        let mut summed = vec![0f32; p];
+        let mut shared = GradSink::new(&mut summed, 0, 0, p);
+        l.backward(&params, &x, &dy, &mut shared, false).unwrap();
+        for j in 0..p {
+            let want: f32 = (0..3).map(|s| rows[s * p + j]).sum();
+            assert!(
+                (summed[j] - want).abs() < 1e-5,
+                "param {j}: stride-0 {} vs row sum {want}",
+                summed[j]
+            );
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_forget_bias_set() {
+        let l = Lstm::new(4, 4);
+        let a = init_params(&l, 3);
+        assert_eq!(a, init_params(&l, 3));
+        // folded bias block: i zeros, f ones, g zeros, o zeros
+        let b_off = l.wx_len() + l.wh_len();
+        assert!(a[b_off..b_off + 4].iter().all(|&v| v == 0.0));
+        assert!(a[b_off + 4..b_off + 8].iter().all(|&v| v == 1.0));
+    }
+}

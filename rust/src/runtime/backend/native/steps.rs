@@ -18,8 +18,10 @@ use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
 use crate::runtime::step::{AccumOut, DpStepOut, HyperParams};
 use crate::runtime::tensor::HostTensor;
 
+use super::attention::MultiHeadAttention;
 use super::layers::{Conv2d, Embedding, GradSampleLayer, GradSink, LayerNorm, Linear};
 use super::model::{clip_factor, l2_norm, NativeModel};
+use super::recurrent::{Gru, Lstm};
 
 fn check_batch(kind: &str, x: &HostTensor, y: &[i32], mask: &[f32], batch: usize) -> Result<()> {
     let b = *x.shape.first().unwrap_or(&0);
@@ -260,7 +262,15 @@ pub struct NativeLayerBench {
 }
 
 /// Layer kinds `NativeLayerBench` knows canonical workloads for.
-pub const BENCH_KINDS: &[&str] = &["linear", "conv2d", "embedding", "layernorm"];
+pub const BENCH_KINDS: &[&str] = &[
+    "linear",
+    "conv2d",
+    "embedding",
+    "layernorm",
+    "lstm",
+    "gru",
+    "mha",
+];
 
 impl NativeLayerBench {
     /// Canonical per-kind workload at the requested batch. `variant` is
@@ -297,6 +307,24 @@ impl NativeLayerBench {
                 let mut v = vec![0f32; batch * 512];
                 crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
                 (Box::new(l), HostTensor::f32(vec![batch, 512], v))
+            }
+            "lstm" => {
+                let l = Lstm::new(32, 32);
+                let mut v = vec![0f32; batch * 16 * 32];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 16, 32], v))
+            }
+            "gru" => {
+                let l = Gru::new(32, 32);
+                let mut v = vec![0f32; batch * 16 * 32];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 16, 32], v))
+            }
+            "mha" => {
+                let l = MultiHeadAttention::new(64, 4)?;
+                let mut v = vec![0f32; batch * 16 * 64];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 16, 64], v))
             }
             other => bail!(
                 "no native layer bench for kind '{other}' (valid kinds: {})",
@@ -473,8 +501,8 @@ mod tests {
                 assert!(w.live_buffer_bytes() > 0);
             }
         }
-        let err = NativeLayerBench::new("lstm", "dp", 4).unwrap_err().to_string();
-        assert!(err.contains("linear"), "{err}");
+        let err = NativeLayerBench::new("rnn_relu", "dp", 4).unwrap_err().to_string();
+        assert!(err.contains("linear") && err.contains("lstm"), "{err}");
         assert!(NativeLayerBench::new("linear", "fast", 4).is_err());
     }
 

@@ -12,6 +12,8 @@
 //! one logical batch is still exactly one noise addition and one ledger
 //! entry, no matter how many chunks it was executed in.
 
+use anyhow::{bail, Result};
+
 use crate::data::LogicalBatch;
 
 /// Splits logical batches into physical chunks and tracks usage.
@@ -30,7 +32,10 @@ pub struct BatchMemoryManager {
 }
 
 impl BatchMemoryManager {
-    pub fn new(compiled_batch: usize, physical_limit: usize) -> Self {
+    /// Build a manager. A zero compiled batch or physical limit is a
+    /// typed error (PR-2 posture: configuration problems are `Result`s
+    /// the builder propagates, never panics inside the training stack).
+    pub fn new(compiled_batch: usize, physical_limit: usize) -> Result<Self> {
         Self::with_workers(compiled_batch, physical_limit, 1)
     }
 
@@ -38,17 +43,25 @@ impl BatchMemoryManager {
     /// is still what bounds one executable call), but the manager knows
     /// each chunk is split across `workers` threads, so per-worker peak
     /// memory is reported per shard, not per chunk.
-    pub fn with_workers(compiled_batch: usize, physical_limit: usize, workers: usize) -> Self {
-        assert!(compiled_batch > 0, "compiled batch must be positive");
-        assert!(physical_limit > 0, "physical limit must be positive");
-        BatchMemoryManager {
+    pub fn with_workers(
+        compiled_batch: usize,
+        physical_limit: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        if compiled_batch == 0 {
+            bail!("batch memory manager: compiled batch must be positive");
+        }
+        if physical_limit == 0 {
+            bail!("batch memory manager: physical batch limit must be positive");
+        }
+        Ok(BatchMemoryManager {
             compiled_batch,
             physical_limit,
             workers: workers.max(1),
             logical_steps: 0,
             micro_steps: 0,
             peak_logical: 0,
-        }
+        })
     }
 
     /// Indices per chunk: the compiled batch, tightened by the user cap.
@@ -132,14 +145,14 @@ mod tests {
 
     #[test]
     fn chunk_size_is_min_of_compiled_and_cap() {
-        assert_eq!(BatchMemoryManager::new(64, 64).chunk_size(), 64);
-        assert_eq!(BatchMemoryManager::new(64, 32).chunk_size(), 32);
-        assert_eq!(BatchMemoryManager::new(16, 512).chunk_size(), 16);
+        assert_eq!(BatchMemoryManager::new(64, 64).unwrap().chunk_size(), 64);
+        assert_eq!(BatchMemoryManager::new(64, 32).unwrap().chunk_size(), 32);
+        assert_eq!(BatchMemoryManager::new(16, 512).unwrap().chunk_size(), 16);
     }
 
     #[test]
     fn logical_512_over_physical_64_takes_8_micro_steps() {
-        let mut m = BatchMemoryManager::new(64, 64);
+        let mut m = BatchMemoryManager::new(64, 64).unwrap();
         assert_eq!(m.micro_steps_for(512), 8);
         let batch = lb(512);
         let chunks = m.split(&batch);
@@ -153,7 +166,7 @@ mod tests {
 
     #[test]
     fn ragged_logical_batch_keeps_partial_tail() {
-        let mut m = BatchMemoryManager::new(64, 64);
+        let mut m = BatchMemoryManager::new(64, 64).unwrap();
         let batch = lb(100);
         let chunks = m.split(&batch);
         assert_eq!(chunks.len(), 2);
@@ -167,7 +180,7 @@ mod tests {
     #[test]
     fn empty_logical_batch_still_takes_one_step() {
         // Poisson can select zero samples; noise must still be added
-        let mut m = BatchMemoryManager::new(64, 64);
+        let mut m = BatchMemoryManager::new(64, 64).unwrap();
         assert_eq!(m.micro_steps_for(0), 1);
         let batch = lb(0);
         let chunks = m.split(&batch);
@@ -178,7 +191,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate_across_logical_steps() {
-        let mut m = BatchMemoryManager::new(64, 64);
+        let mut m = BatchMemoryManager::new(64, 64).unwrap();
         for n in [512, 0, 64, 70] {
             let batch = lb(n);
             m.split(&batch);
@@ -190,26 +203,38 @@ mod tests {
 
     #[test]
     fn user_cap_below_compiled_batch_tightens_chunks() {
-        let mut m = BatchMemoryManager::new(64, 16);
+        let mut m = BatchMemoryManager::new(64, 16).unwrap();
         let batch = lb(64);
         assert_eq!(m.split(&batch).len(), 4);
     }
 
     #[test]
     fn shard_awareness_reports_per_worker_width() {
-        let m = BatchMemoryManager::with_workers(64, 64, 4);
+        let m = BatchMemoryManager::with_workers(64, 64, 4).unwrap();
         assert_eq!(m.workers(), 4);
         assert_eq!(m.shard_width(), 16);
         // ragged: 64-row chunks over 3 workers peak at ⌈64/3⌉ = 22 rows
-        assert_eq!(BatchMemoryManager::with_workers(64, 64, 3).shard_width(), 22);
+        assert_eq!(BatchMemoryManager::with_workers(64, 64, 3).unwrap().shard_width(), 22);
         // single-worker managers report the whole chunk
-        assert_eq!(BatchMemoryManager::new(64, 32).shard_width(), 32);
+        assert_eq!(BatchMemoryManager::new(64, 32).unwrap().shard_width(), 32);
         // chunking itself is worker-independent
-        let mut a = BatchMemoryManager::with_workers(64, 64, 4);
-        let mut b = BatchMemoryManager::new(64, 64);
+        let mut a = BatchMemoryManager::with_workers(64, 64, 4).unwrap();
+        let mut b = BatchMemoryManager::new(64, 64).unwrap();
         let batch = lb(200);
         assert_eq!(a.split(&batch).len(), b.split(&batch).len());
         // degenerate worker count clamps to 1
-        assert_eq!(BatchMemoryManager::with_workers(8, 8, 0).workers(), 1);
+        assert_eq!(BatchMemoryManager::with_workers(8, 8, 0).unwrap().workers(), 1);
+    }
+
+    /// Satellite (PR 4): zero batch sizes are typed errors, not panics —
+    /// they reach this type straight from user builder input.
+    #[test]
+    fn zero_batch_configs_are_typed_errors() {
+        let err = BatchMemoryManager::new(0, 64).unwrap_err().to_string();
+        assert!(err.contains("compiled batch"), "{err}");
+        let err = BatchMemoryManager::new(64, 0).unwrap_err().to_string();
+        assert!(err.contains("physical batch limit"), "{err}");
+        let err = BatchMemoryManager::with_workers(0, 0, 2).unwrap_err().to_string();
+        assert!(err.contains("compiled batch"), "{err}");
     }
 }

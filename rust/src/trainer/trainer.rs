@@ -100,9 +100,9 @@ impl PrivateTrainer {
                 );
             };
             let bmm =
-                BatchMemoryManager::with_workers(accum.batch(), pp.physical_batch, steps.workers);
+                BatchMemoryManager::with_workers(accum.batch(), pp.physical_batch, steps.workers)?;
             let loader = if pp.poisson {
-                Loader::Poisson(PoissonLoader::with_expected_batch(n, pp.logical_batch))
+                Loader::Poisson(PoissonLoader::with_expected_batch(n, pp.logical_batch)?)
             } else {
                 Loader::Uniform(UniformLoader::new(n, pp.logical_batch, false))
             };

@@ -64,12 +64,13 @@ fn worst_param_diff(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// The acceptance criterion: 4 workers vs 1 worker, deterministic noise,
-/// 3 epochs, all four native tasks — identical ε, params within 1e-6.
-/// Uniform sampling keeps logical == physical, so this exercises the
-/// fused distributed path.
+/// 3 epochs, all five native tasks (the lstm row is now the true
+/// recurrent kernel, and attn is the new attention task) — identical ε,
+/// params within 1e-6. Uniform sampling keeps logical == physical, so
+/// this exercises the fused distributed path.
 #[test]
 fn workers4_matches_workers1_fused_all_tasks() {
-    for task in ["mnist", "cifar", "embed", "lstm"] {
+    for task in ["mnist", "cifar", "embed", "lstm", "attn"] {
         let (e1, p1, s1) = run_task(task, 1, 3, SamplingMode::Uniform);
         let (e4, p4, s4) = run_task(task, 4, 3, SamplingMode::Uniform);
         assert_eq!(s1, s4, "{task}: step counts must match");
@@ -87,7 +88,7 @@ fn workers4_matches_workers1_fused_all_tasks() {
 /// BatchMemoryManager decomposition must stay worker-invariant too.
 #[test]
 fn workers4_matches_workers1_virtual_path() {
-    for task in ["mnist", "embed"] {
+    for task in ["mnist", "embed", "attn"] {
         let (e1, p1, _) = run_task(task, 1, 3, SamplingMode::Poisson);
         let (e4, p4, _) = run_task(task, 4, 3, SamplingMode::Poisson);
         assert_eq!(e1, e4, "{task}: ε must be identical");
@@ -116,6 +117,81 @@ fn auto_backend_with_workers_resolves_native() {
         .unwrap();
     assert_eq!(private.backend_kind(), BackendKind::Native);
     assert_eq!(private.workers(), 2);
+}
+
+/// Satellite (PR 4): the noise-only logical step under data parallelism.
+/// Poisson can select zero samples; the empty logical batch still runs
+/// exactly one micro step (`micro_steps_for(0) == 1`), and driving it
+/// through a 4-worker `DistributedStep` must add noise exactly once and
+/// land on the same parameters as the single-worker path.
+#[test]
+fn empty_poisson_batch_noise_only_step_matches_single_worker() {
+    use opacus_rs::data::LogicalBatch;
+    use opacus_rs::distributed::{DistributedStep, ExecSpec, Parallelism};
+    use opacus_rs::runtime::backend::native::model_for_task;
+    use opacus_rs::runtime::backend::native::steps::{NativeAccumStep, NativeApplyStep};
+    use opacus_rs::runtime::backend::{AccumExec, ApplyExec};
+    use opacus_rs::runtime::step::HyperParams;
+    use opacus_rs::trainer::BatchMemoryManager;
+    use std::sync::Arc;
+
+    let phys = 32;
+    let mut bmm = BatchMemoryManager::with_workers(phys, phys, 4).unwrap();
+    assert_eq!(bmm.micro_steps_for(0), 1, "empty batch still takes one step");
+    let empty = LogicalBatch { indices: vec![] };
+    let chunks = bmm.split(&empty);
+    assert_eq!(chunks.len(), 1);
+    assert!(chunks[0].is_empty());
+
+    // mask-padded physical batch for the empty chunk
+    let ds = opacus_rs::data::synth::synth_imdb(64, 3, 2000, 32);
+    let batch = ds.gather(chunks[0], phys).unwrap();
+    assert_eq!(batch.logical_size, 0);
+    assert!(batch.mask.iter().all(|&m| m == 0.0));
+
+    let model = Arc::new(model_for_task("embed").unwrap());
+    let p = model.num_params();
+    let params = model.init_params(5);
+    let spec = ExecSpec {
+        parallelism: Parallelism::Workers(4),
+        seed: 2,
+        ..Default::default()
+    };
+    let dist = DistributedStep::launch(model.clone(), phys, &spec).unwrap();
+
+    // accumulation over an all-masked shard set must be exactly zero
+    let out4 = AccumExec::run(&dist, &params, batch.x.clone(), &batch.y, &batch.mask, 1.0)
+        .unwrap();
+    assert!(out4.gsum.iter().all(|&g| g == 0.0), "masked grads must be zero");
+    assert_eq!(out4.loss_sum, 0.0);
+    assert_eq!(out4.snorm_sum, 0.0);
+    let single = NativeAccumStep::new(model.clone(), phys);
+    let out1 = AccumExec::run(&single, &params, batch.x, &batch.y, &batch.mask, 1.0).unwrap();
+    assert_eq!(out1.gsum, out4.gsum);
+
+    // one apply with the same root noise draw: the update is pure noise
+    // and must be byte-identical across worker counts
+    let noise: Vec<f32> = (0..p).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+    let hp = HyperParams {
+        lr: 0.5,
+        clip: 1.0,
+        sigma: 1.1,
+        denom: 32.0,
+    };
+    let p4 = ApplyExec::run(&dist, &params, &out4.gsum, &noise, hp).unwrap();
+    let p1 = NativeApplyStep::new(p)
+        .run(&params, &out1.gsum, &noise, hp)
+        .unwrap();
+    assert_eq!(p1, p4, "noise-only update must match the single-worker path");
+    // noise was applied exactly once: p' = p − lr·σ·C·noise/denom
+    for j in [0usize, 1, p / 2, p - 1] {
+        let want = params[j] - 0.5 * (1.1 * 1.0 * noise[j]) / 32.0;
+        assert!(
+            (p4[j] - want).abs() < 1e-12,
+            "param {j}: {} vs single noise application {want}",
+            p4[j]
+        );
+    }
 }
 
 /// Satellite: `NoiseSource::Secure` must give fresh draws per engine

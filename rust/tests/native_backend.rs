@@ -159,10 +159,95 @@ fn parity_full_task_models() {
     let b = ds.gather(&[0, 1, 2], 3).unwrap();
     assert_microbatch_parity(&m, &b.x, &b.y, 1e-5);
 
+    // the true recurrent LSTM stack: per-sample BPTT vs batch-of-1 oracle
     let m = model_for_task("lstm").unwrap();
     let ds = opacus_rs::data::synth::synth_imdb(3, 9, 4000, 64);
     let b = ds.gather(&[0, 1, 2], 3).unwrap();
     assert_microbatch_parity(&m, &b.x, &b.y, 1e-5);
+
+    // the attention stack: per-sample grads through the softmax
+    let m = model_for_task("attn").unwrap();
+    let ds = opacus_rs::data::synth::synth_imdb(3, 9, 2000, 32);
+    let b = ds.gather(&[0, 1, 2], 3).unwrap();
+    assert_microbatch_parity(&m, &b.x, &b.y, 1e-5);
+}
+
+/// GRU has no synth task of its own; its microbatch-oracle parity runs
+/// on a hand-built stack (the acceptance criterion covers all three new
+/// kernels: lstm, gru, mha).
+#[test]
+fn parity_gru_batched_vs_microbatch() {
+    use opacus_rs::runtime::backend::native::Gru;
+    let m = NativeModel::new(
+        "parity_gru",
+        vec![5, 3], // T = 5, D = 3
+        "f32",
+        2,
+        None,
+        vec![
+            Op::Layer(Box::new(Gru::new(3, 4))),
+            Op::MeanPool,
+            Op::Layer(Box::new(Linear::new(4, 2))),
+        ],
+    )
+    .unwrap();
+    let x = f32_batch(vec![4, 5, 3], 5);
+    assert_microbatch_parity(&m, &x, &[0, 1, 1, 0], 1e-5);
+}
+
+/// Acceptance (PR 4): fused-native vs virtual-native ε/param parity for
+/// the recurrent and attention tasks, single-threaded AND on a 4-worker
+/// pool — the new kernels must be decomposition- and shard-invariant.
+#[test]
+fn fused_vs_virtual_parity_lstm_attn_across_workers() {
+    use opacus_rs::privacy::NoiseSource;
+    for task in ["lstm", "attn"] {
+        for workers in [1usize, 4] {
+            let run = |physical: usize| {
+                let sys = Opacus::load_with_backend(
+                    "artifacts_that_do_not_exist",
+                    task,
+                    Backend::Native,
+                    256,
+                    32,
+                    7,
+                )
+                .unwrap();
+                let mut private = PrivacyEngine::private()
+                    .backend(Backend::Native)
+                    .noise(NoiseSource::Deterministic)
+                    .workers(workers)
+                    .sampling(SamplingMode::Uniform)
+                    .noise_multiplier(0.8)
+                    .max_grad_norm(1.0)
+                    .lr(0.2)
+                    .logical_batch(128)
+                    .physical_batch(physical)
+                    .seed(13)
+                    .build(sys)
+                    .unwrap();
+                assert_eq!(private.workers(), workers);
+                private.train_epoch().unwrap(); // 256/128 = 2 logical steps
+                let eps = private.epsilon(1e-5).unwrap();
+                let (trainer, _, _) = private.into_parts();
+                (eps, trainer.params)
+            };
+            let (eps_fused, p_fused) = run(128); // logical == physical
+            let (eps_virtual, p_virtual) = run(32); // 4 micro-steps/logical
+            assert_eq!(
+                eps_fused, eps_virtual,
+                "{task} w={workers}: ε must be identical"
+            );
+            let mut worst = 0.0f64;
+            for (a, b) in p_fused.iter().zip(p_virtual.iter()) {
+                worst = worst.max((*a as f64 - *b as f64).abs());
+            }
+            assert!(
+                worst < 1e-4,
+                "{task} w={workers}: fused vs virtual params diverged by {worst:.3e}"
+            );
+        }
+    }
 }
 
 /// Per-layer clipping on the native backend against the microbatch
@@ -176,7 +261,7 @@ fn per_layer_clipping_matches_microbatch_oracle() {
     use opacus_rs::runtime::backend::native::model::l2_norm;
     use opacus_rs::runtime::backend::native::model_for_task;
 
-    let m = model_for_task("lstm").unwrap(); // 4 trainable layers
+    let m = model_for_task("lstm").unwrap(); // embedding + lstm + linear
     let num_layers = m.layer_kinds().len();
     assert!(num_layers >= 2, "needs a genuinely multi-layer stack");
     let c = 1.0f64;
