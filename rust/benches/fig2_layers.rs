@@ -13,8 +13,8 @@
 //!
 //! `--backend native` (or `auto` with no artifacts) times the native
 //! GradSampleLayer kernels (linear, conv, embedding, layernorm, and —
-//! since the recurrent/attention kernels landed — lstm, gru, mha); the
-//! remaining rows (groupnorm, instancenorm, rnn) print "-".
+//! since the recurrent/attention kernels landed — lstm, gru, rnn, mha);
+//! the remaining rows (groupnorm, instancenorm) print "-".
 
 use anyhow::anyhow;
 
@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             "layernorm" => Some("layernorm"),
             "lstm" => Some("lstm"),
             "gru" => Some("gru"),
+            "rnn" => Some("rnn"),
             "mha" => Some("mha"),
             _ => None,
         }

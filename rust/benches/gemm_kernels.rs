@@ -1,0 +1,232 @@
+//! GEMM micro-kernel bench — blocked vs scalar reference at the dense
+//! shapes the five native tasks actually run (PR-5 acceptance gate).
+//!
+//! Each row times one contraction with the blocked engine
+//! (`runtime::backend::native::gemm`) and with the scalar reference
+//! loops (`gemm::reference`, the pre-blocked engine's loop structure)
+//! and reports GFLOP/s plus the speedup. Shapes marked `acceptance` are
+//! the ISSUE-5 criteria: the LSTM input projection and the MHA QKV
+//! projection must show ≥ 2× over scalar.
+//!
+//! Usage: cargo bench --bench gemm_kernels [-- --iters-scale 1.0
+//!        --bench-out BENCH_pr5.json --check]
+//!
+//! `--check` turns the report into a gate: exit non-zero if any shape
+//! runs the blocked path slower than scalar, or an acceptance shape
+//! below 2×. CI runs with `--check` on every push and uploads
+//! `BENCH_pr5_ci.json`.
+
+use anyhow::{bail, Result};
+use std::hint::black_box;
+
+use opacus_rs::runtime::backend::native::gemm;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::stats;
+use opacus_rs::util::table::Table;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum OpKind {
+    Nn,
+    Nt,
+    Tn,
+}
+
+impl OpKind {
+    fn label(self) -> &'static str {
+        match self {
+            OpKind::Nn => "nn",
+            OpKind::Nt => "nt",
+            OpKind::Tn => "tn",
+        }
+    }
+}
+
+struct Shape {
+    name: &'static str,
+    op: OpKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    /// ISSUE-5 acceptance shape: must clear 2× under `--check`.
+    acceptance: bool,
+}
+
+const fn shape(name: &'static str, op: OpKind, m: usize, n: usize, k: usize) -> Shape {
+    Shape { name, op, m, n, k, acceptance: false }
+}
+
+const fn accept(name: &'static str, op: OpKind, m: usize, n: usize, k: usize) -> Shape {
+    Shape { name, op, m, n, k, acceptance: true }
+}
+
+/// Contraction shapes drawn from the five tasks' layers at the
+/// canonical physical batch 64 (see `native::model_for_task` and
+/// `NativeLayerBench`): forward projections (nt), input gradients (nn)
+/// and per-sample / summed weight gradients (tn).
+fn shapes() -> Vec<Shape> {
+    vec![
+        // mnist head: [B, 784] × [784, 32] and its dx / dW forms
+        shape("mnist_linear_fwd", OpKind::Nt, 64, 32, 784),
+        shape("mnist_linear_dx", OpKind::Nn, 64, 784, 32),
+        shape("mnist_linear_dw_sum", OpKind::Tn, 32, 784, 64),
+        // mnist conv1 im2col per sample: [14·14, 9] × [9, 8]
+        shape("mnist_conv_im2col", OpKind::Nt, 196, 8, 9),
+        // lstm task (B = 64, T = 64, D = H = 32): the ROADMAP-named
+        // input projection [B·T, D] × [D, 4H], the per-step recurrent
+        // projection, one sample's dW_x, and the batched dx
+        accept("lstm_input_proj", OpKind::Nt, 4096, 128, 32),
+        shape("lstm_recurrent_step", OpKind::Nt, 64, 128, 32),
+        shape("lstm_dwx_per_sample", OpKind::Tn, 128, 32, 64),
+        shape("lstm_dx", OpKind::Nn, 4096, 32, 128),
+        // gru input projection [B·T, D] × [D, 3H]
+        shape("gru_input_proj", OpKind::Nt, 4096, 96, 32),
+        // attn task (B = 64, T = 32, D = 16): QKV / output projections
+        // over B·T rows, per-(sample, head) scores, per-sample dW
+        accept("mha_qkv_proj", OpKind::Nt, 2048, 16, 16),
+        shape("mha_scores_head", OpKind::Nt, 32, 32, 8),
+        shape("mha_dw_per_sample", OpKind::Tn, 16, 16, 32),
+    ]
+}
+
+fn filled(n: usize, seed: usize) -> Vec<f32> {
+    (0..n).map(|i| (((i + seed) % 37) as f32 - 18.0) * 0.05).collect()
+}
+
+/// Mean seconds per call of `f` (after warmup).
+fn time_mean(warmup: usize, iters: usize, f: impl FnMut()) -> f64 {
+    let times = stats::sample_runtimes(warmup, iters, f);
+    stats::mean(&times)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench", "check"])?; // cargo bench passes --bench
+    let check = args.has_flag("check");
+    let iters_scale = args.get_f64("iters-scale", 1.0)?;
+    if iters_scale <= 0.0 {
+        bail!("--iters-scale must be positive, got {iters_scale}");
+    }
+
+    let header = vec![
+        "shape".to_string(),
+        "op".to_string(),
+        "m".to_string(),
+        "n".to_string(),
+        "k".to_string(),
+        "scalar GF/s".to_string(),
+        "blocked GF/s".to_string(),
+        "speedup".to_string(),
+    ];
+    let bs = gemm::block_sizes();
+    let tiling = format!(
+        "MR={} NR={} MC={} KC={} NC={}",
+        gemm::MR,
+        gemm::NR,
+        bs.mc,
+        bs.kc,
+        bs.nc,
+    );
+    let title = format!("gemm_kernels: blocked ({tiling}) vs scalar reference");
+    let mut table = Table::new(&title, header);
+
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for s in shapes() {
+        let (m, n, k) = (s.m, s.n, s.k);
+        let (a, b) = match s.op {
+            OpKind::Nn => (filled(m * k, 1), filled(k * n, 2)),
+            OpKind::Nt => (filled(m * k, 1), filled(n * k, 2)),
+            OpKind::Tn => (filled(k * m, 1), filled(k * n, 2)),
+        };
+        let (lda, ldb) = match s.op {
+            OpKind::Nn => (k, n),
+            OpKind::Nt => (k, k),
+            OpKind::Tn => (m, n),
+        };
+        let mut c = vec![0f32; m * n];
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let iters = ((4e8 / flops) * iters_scale).clamp(10.0, 20_000.0) as usize;
+        let warmup = iters / 10 + 1;
+        let run = |blocked: bool, c: &mut [f32]| match (s.op, blocked) {
+            (OpKind::Nn, true) => gemm::sgemm(m, n, k, &a, lda, &b, ldb, c, n),
+            (OpKind::Nt, true) => gemm::sgemm_nt(m, n, k, &a, lda, &b, ldb, c, n),
+            (OpKind::Tn, true) => gemm::sgemm_tn(m, n, k, &a, lda, &b, ldb, c, n),
+            (OpKind::Nn, false) => gemm::reference::sgemm(m, n, k, &a, lda, &b, ldb, c, n),
+            (OpKind::Nt, false) => gemm::reference::sgemm_nt(m, n, k, &a, lda, &b, ldb, c, n),
+            (OpKind::Tn, false) => gemm::reference::sgemm_tn(m, n, k, &a, lda, &b, ldb, c, n),
+        };
+        let t_scalar = time_mean(warmup, iters, || {
+            c.fill(0.0);
+            run(false, &mut c);
+            black_box(c[0]);
+        });
+        let t_blocked = time_mean(warmup, iters, || {
+            c.fill(0.0);
+            run(true, &mut c);
+            black_box(c[0]);
+        });
+        let gf_scalar = flops / t_scalar / 1e9;
+        let gf_blocked = flops / t_blocked / 1e9;
+        let speedup = t_scalar / t_blocked;
+        table.add_row(vec![
+            s.name.to_string(),
+            s.op.label().to_string(),
+            m.to_string(),
+            n.to_string(),
+            k.to_string(),
+            format!("{gf_scalar:.2}"),
+            format!("{gf_blocked:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push((
+            s.name.to_string(),
+            Json::obj(vec![
+                ("op", Json::str(s.op.label())),
+                ("m", Json::num(m as f64)),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(k as f64)),
+                ("scalar_gflops", Json::num(gf_scalar)),
+                ("blocked_gflops", Json::num(gf_blocked)),
+                ("speedup", Json::num(speedup)),
+                ("acceptance", Json::Bool(s.acceptance)),
+            ]),
+        ));
+        if speedup < 1.0 {
+            failures.push(format!("{}: blocked is slower than scalar ({speedup:.2}x)", s.name));
+        } else if s.acceptance && speedup < 2.0 {
+            failures.push(format!("{}: acceptance shape below 2x ({speedup:.2}x)", s.name));
+        }
+    }
+    table.print();
+
+    if let Some(bench_out) = args.get("bench-out") {
+        let command = format!(
+            "cd rust && cargo bench --bench gemm_kernels -- --check --bench-out {bench_out}"
+        );
+        let metric = "GFLOP/s of the blocked gemm engine vs the scalar reference per shape; \
+                      speedup = scalar_time / blocked_time";
+        let j = Json::obj(vec![
+            ("bench", Json::str("rust/benches/gemm_kernels.rs")),
+            ("metric", Json::str(metric)),
+            ("command", Json::str(&command)),
+            ("block_mr", Json::num(gemm::MR as f64)),
+            ("block_nr", Json::num(gemm::NR as f64)),
+            ("block_mc", Json::num(bs.mc as f64)),
+            ("block_kc", Json::num(bs.kc as f64)),
+            ("block_nc", Json::num(bs.nc as f64)),
+            ("status", Json::str("recorded")),
+            ("shapes", Json::Obj(rows.into_iter().collect())),
+        ]);
+        std::fs::write(bench_out, j.to_string())?;
+        println!("gemm baseline -> {bench_out}");
+    }
+
+    if check && !failures.is_empty() {
+        for f in &failures {
+            eprintln!("gemm_kernels check failed: {f}");
+        }
+        bail!("{} shape(s) failed the blocked-vs-scalar gate", failures.len());
+    }
+    Ok(())
+}

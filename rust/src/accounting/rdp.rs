@@ -272,6 +272,49 @@ mod tests {
         }
     }
 
+    /// Satellite (PR 5): property test over a (q, σ, α) grid — the
+    /// fractional-order two-series path must be continuous with the
+    /// integer binomial path at every integer order, from both sides.
+    /// Tolerance 1e-2 relative: the fractional series truncates at an
+    /// absolute log-term cutoff, so its residual grows toward the
+    /// tiny-signal corners of the grid (see
+    /// `frac_continuous_with_int_at_tiny_q` for the scale analysis) —
+    /// the PR-4 class of bug this pins missed by ~1e7×.
+    #[test]
+    fn frac_int_continuity_property_grid() {
+        for &q in &[1e-4, 1e-3, 0.01, 0.1, 0.3] {
+            for &sigma in &[0.7, 1.1, 2.0, 5.0] {
+                let mut prev_hi = 0.0f64;
+                for &k in &[2.0f64, 3.0, 5.0, 8.0, 13.0, 21.0, 32.0] {
+                    let at = compute_rdp_single(q, sigma, k);
+                    let lo = compute_rdp_single(q, sigma, k - 1e-6);
+                    let hi = compute_rdp_single(q, sigma, k + 1e-6);
+                    assert!(at.is_finite() && at > 0.0, "q={q} σ={sigma} α={k}: int {at}");
+                    let tol = 1e-2 * at;
+                    assert!(
+                        (lo - at).abs() < tol,
+                        "q={q} σ={sigma} α={k}: frac below {lo:.6e} vs int {at:.6e}"
+                    );
+                    assert!(
+                        (hi - at).abs() < tol,
+                        "q={q} σ={sigma} α={k}: frac above {hi:.6e} vs int {at:.6e}"
+                    );
+                    // RDP is nondecreasing in α, so the fractional
+                    // samples must respect the grid ordering too
+                    assert!(
+                        lo <= hi + tol,
+                        "q={q} σ={sigma} α={k}: frac not monotone across the integer"
+                    );
+                    assert!(
+                        prev_hi <= lo + tol,
+                        "q={q} σ={sigma} α={k}: frac not monotone between integers"
+                    );
+                    prev_hi = hi;
+                }
+            }
+        }
+    }
+
     #[test]
     fn epsilon_monotone_in_steps() {
         let orders = default_orders();

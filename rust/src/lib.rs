@@ -16,10 +16,13 @@
 //! * **Native backend** — the same DP step pipeline in pure Rust:
 //!   batched per-sample-gradient kernels per layer kind
 //!   ([`runtime::backend::native::GradSampleLayer`] — linear, conv2d,
-//!   embedding, layernorm, time-unrolled lstm/gru, multi-head
+//!   embedding, layernorm, time-unrolled lstm/gru/rnn, multi-head
 //!   attention), per-sample L2 norms, flat or per-layer clipping,
 //!   Gaussian noise, SGD. No artifacts, no bindings — `cargo test` runs
-//!   the full integration path anywhere.
+//!   the full integration path anywhere. Every dense contraction runs
+//!   on the blocked, register-tiled batched-GEMM engine in
+//!   [`runtime::backend::native::gemm`] (cache blocking autodetected,
+//!   `OPACUS_BLOCK="MC,KC[,NC]"` overrides it).
 //!
 //! The native backend also scales out: the [`distributed`] subsystem
 //! shards every physical batch across a pool of worker threads
@@ -72,6 +75,21 @@
 //! the kind string with
 //! [`privacy::validator::validate_model_with_custom`]. Clipping, noise,
 //! virtual steps and accounting are layer-agnostic.
+//!
+//! Custom kernels should lower their dense contractions to the shared
+//! blocked GEMM engine instead of hand-rolled loops:
+//! [`runtime::backend::native::gemm::sgemm`] (`C += A·B`, e.g. input
+//! gradients `dY·W`), [`gemm::sgemm_nt`](runtime::backend::native::gemm::sgemm_nt)
+//! (`C += A·Bᵀ`, forward projections against row-major `[out, in]`
+//! weights) and [`gemm::sgemm_tn`](runtime::backend::native::gemm::sgemm_tn)
+//! (`C += Aᵀ·B`, summed weight gradients `dYᵀ·X`). All three take
+//! leading strides for sub-matrix views, accumulate in a fixed
+//! `k`-order, and guarantee each output row is bitwise independent of
+//! the batch dimension — which is exactly the property that keeps a
+//! custom kernel's per-sample gradients invariant under
+//! `BatchMemoryManager` decomposition and distributed sharding. See
+//! `Conv2d` for the im2col pattern that lowers windowed ops onto the
+//! same engine.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables

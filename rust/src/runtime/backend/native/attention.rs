@@ -16,19 +16,29 @@
 //! `[T, T]` probability matrix fits in cache, so we materialize it per
 //! sample instead of tiling.
 //!
+//! Every dense contraction routes through the blocked [`gemm`] engine:
+//! the four projections run as single `[B·T, D] × [D, D]` GEMMs over the
+//! whole batch, the attention core (`Q Kᵀ`, `P V`, and the four backward
+//! products `dP = dO Vᵀ`, `dQ = dS K`, `dK = dSᵀ Q`, `dV = Pᵀ dO`) as
+//! per-(sample, head) GEMMs on strided head slices, and each sample's
+//! projection weight gradients as `[D, T] × [T, D]` GEMMs instead of T
+//! rank-1 outer products.
+//!
 //! Per-sample gradients: each sample's attention is independent of every
 //! other row of the batch (softmax normalizes over *keys of the same
-//! sample*, never across the batch), so the per-sample parameter
-//! gradients are the per-sample outer products of the projection layers
-//! — accumulated directly into the sample's [`GradSink`] row. All
-//! scratch is call-local; the layer itself is stateless (`Send + Sync`).
+//! sample*, never across the batch), and the `gemm` engine guarantees
+//! row results are bitwise independent of the batch dimension — so the
+//! per-sample rows match the microbatch oracle and are invariant to
+//! distributed shard width. All scratch is call-local; the layer itself
+//! is stateless (`Send + Sync`).
 
 use anyhow::{bail, Result};
 
 use crate::rng::{gaussian, Rng};
 use crate::runtime::tensor::HostTensor;
 
-use super::layers::{matvec_acc, matvec_t_acc, outer_acc, GradSampleLayer, GradSink};
+use super::gemm;
+use super::layers::{GradSampleLayer, GradSink};
 
 /// Multi-head self-attention over `[B, T, D]` sequences.
 ///
@@ -58,57 +68,37 @@ impl MultiHeadAttention {
         (p * block, p * block + self.dim * self.dim)
     }
 
-    /// `y[T, D] = x[T, D] · Wᵀ + b` for one sample.
-    fn project(&self, params: &[f32], p: usize, x: &[f32], t_len: usize, y: &mut [f32]) {
+    /// `y[rows, D] = x[rows, D] · Wᵀ + b` — one GEMM over any number of
+    /// rows (callers pass `B·T` to project the whole batch at once).
+    fn project(&self, params: &[f32], p: usize, x: &[f32], rows: usize, y: &mut [f32]) {
         let d = self.dim;
         let (wo, bo) = self.proj_offsets(p);
         let w = &params[wo..wo + d * d];
-        let b = &params[bo..bo + d];
-        for t in 0..t_len {
-            let xr = &x[t * d..(t + 1) * d];
-            let yr = &mut y[t * d..(t + 1) * d];
-            yr.copy_from_slice(b);
-            matvec_acc(w, xr, d, d, yr);
+        let bias = &params[bo..bo + d];
+        for r in 0..rows {
+            y[r * d..(r + 1) * d].copy_from_slice(bias);
         }
+        gemm::sgemm_nt(rows, d, d, x, d, w, d, y, d);
     }
 
-    /// Backward of one projection for one sample: given `dyp[T, D]`,
-    /// accumulate `dW += Σ_t dyp_t ⊗ x_t`, `db += Σ_t dyp_t` into the
-    /// sample's gradient row and (optionally) `dx_t += Wᵀ dyp_t`.
-    #[allow(clippy::too_many_arguments)]
-    fn project_backward(
-        &self,
-        params: &[f32],
-        p: usize,
-        x: &[f32],
-        dyp: &[f32],
-        t_len: usize,
-        g: &mut [f32],
-        dx: Option<&mut [f32]>,
-    ) {
+    /// One sample's weight/bias gradients of projection `p`:
+    /// `dW += dypᵀ[D, T] · x[T, D]` (one GEMM), `db += Σ_t dyp_t`.
+    fn project_param_grads(&self, p: usize, x: &[f32], dyp: &[f32], t_len: usize, g: &mut [f32]) {
         let d = self.dim;
         let (wo, bo) = self.proj_offsets(p);
-        let w = &params[wo..wo + d * d];
+        gemm::sgemm_tn(d, d, t_len, dyp, d, x, d, &mut g[wo..wo + d * d], d);
         for t in 0..t_len {
-            let xr = &x[t * d..(t + 1) * d];
             let dyr = &dyp[t * d..(t + 1) * d];
-            outer_acc(&mut g[wo..wo + d * d], dyr, xr, d, d);
             for o in 0..d {
                 g[bo + o] += dyr[o];
-            }
-        }
-        if let Some(dx) = dx {
-            for t in 0..t_len {
-                let dyr = &dyp[t * d..(t + 1) * d];
-                let dxr = &mut dx[t * d..(t + 1) * d];
-                matvec_t_acc(w, dyr, d, d, dxr);
             }
         }
     }
 
     /// One sample's attention given its `q/k/v [T, D]`: fills the
     /// per-head row-softmax probabilities `probs[heads, T, T]` and the
-    /// pre-projection context `ctx[T, D]`.
+    /// pre-projection context `ctx[T, D]`. The score and context
+    /// products are per-head GEMMs on strided `[T, hd]` column slices.
     fn attend(
         &self,
         q: &[f32],
@@ -125,19 +115,15 @@ impl MultiHeadAttention {
         for head in 0..self.heads {
             let off = head * hd; // column offset of this head's slice
             let pm = &mut probs[head * t_len * t_len..(head + 1) * t_len * t_len];
+            // S = Q_h · K_hᵀ
+            pm.fill(0.0);
+            gemm::sgemm_nt(t_len, t_len, hd, &q[off..], d, &k[off..], d, pm, t_len);
             for i in 0..t_len {
-                let qi = &q[i * d + off..i * d + off + hd];
                 let row = &mut pm[i * t_len..(i + 1) * t_len];
                 let mut max = f32::NEG_INFINITY;
-                for (j, rj) in row.iter_mut().enumerate() {
-                    let kj = &k[j * d + off..j * d + off + hd];
-                    let mut s = 0.0f32;
-                    for c in 0..hd {
-                        s += qi[c] * kj[c];
-                    }
-                    let s = s * scale;
-                    *rj = s;
-                    max = max.max(s);
+                for rj in row.iter_mut() {
+                    *rj *= scale;
+                    max = max.max(*rj);
                 }
                 let mut z = 0.0f32;
                 for rj in row.iter_mut() {
@@ -148,18 +134,9 @@ impl MultiHeadAttention {
                 for rj in row.iter_mut() {
                     *rj *= inv;
                 }
-                let ci = &mut ctx[i * d + off..i * d + off + hd];
-                for j in 0..t_len {
-                    let pij = row[j];
-                    if pij == 0.0 {
-                        continue;
-                    }
-                    let vj = &v[j * d + off..j * d + off + hd];
-                    for c in 0..hd {
-                        ci[c] += pij * vj[c];
-                    }
-                }
             }
+            // ctx_h = P · V_h
+            gemm::sgemm(t_len, hd, t_len, pm, t_len, &v[off..], d, &mut ctx[off..], d);
         }
     }
 }
@@ -191,21 +168,32 @@ impl GradSampleLayer for MultiHeadAttention {
             bail!("mha forward: input feature dim {d} != {}", self.dim);
         }
         let xs = x.as_f32()?;
+        let bt = b * t_len;
         let per = t_len * d;
-        let mut y = vec![0f32; b * per];
-        let mut q = vec![0f32; per];
-        let mut k = vec![0f32; per];
-        let mut v = vec![0f32; per];
-        let mut ctx = vec![0f32; per];
+        // batched QKV: three [B·T, D] × [D, D] GEMMs
+        let mut q = vec![0f32; bt * d];
+        let mut k = vec![0f32; bt * d];
+        let mut v = vec![0f32; bt * d];
+        self.project(params, 0, xs, bt, &mut q);
+        self.project(params, 1, xs, bt, &mut k);
+        self.project(params, 2, xs, bt, &mut v);
+        // per-sample attention core into the batched context buffer
+        let mut ctx = vec![0f32; bt * d];
         let mut probs = vec![0f32; self.heads * t_len * t_len];
         for s in 0..b {
-            let xr = &xs[s * per..(s + 1) * per];
-            self.project(params, 0, xr, t_len, &mut q);
-            self.project(params, 1, xr, t_len, &mut k);
-            self.project(params, 2, xr, t_len, &mut v);
-            self.attend(&q, &k, &v, t_len, &mut probs, &mut ctx);
-            self.project(params, 3, &ctx, t_len, &mut y[s * per..(s + 1) * per]);
+            let span = s * per..(s + 1) * per;
+            self.attend(
+                &q[span.clone()],
+                &k[span.clone()],
+                &v[span.clone()],
+                t_len,
+                &mut probs,
+                &mut ctx[span],
+            );
         }
+        // batched output projection
+        let mut y = vec![0f32; bt * d];
+        self.project(params, 3, &ctx, bt, &mut y);
         Ok(HostTensor::f32(vec![b, t_len, d], y))
     }
 
@@ -227,90 +215,79 @@ impl GradSampleLayer for MultiHeadAttention {
         let dys = dy.as_f32()?;
         let hd = self.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();
+        let bt = b * t_len;
         let per = t_len * d;
-        let mut dx = if need_dx { vec![0f32; b * per] } else { Vec::new() };
-        // per-sample scratch, reused across the batch
-        let mut q = vec![0f32; per];
-        let mut k = vec![0f32; per];
-        let mut v = vec![0f32; per];
-        let mut ctx = vec![0f32; per];
+        let (wq_off, _) = self.proj_offsets(0);
+        let (wk_off, _) = self.proj_offsets(1);
+        let (wv_off, _) = self.proj_offsets(2);
+        let (wo_off, _) = self.proj_offsets(3);
+        // recompute the batched projections
+        let mut q = vec![0f32; bt * d];
+        let mut k = vec![0f32; bt * d];
+        let mut v = vec![0f32; bt * d];
+        self.project(params, 0, xs, bt, &mut q);
+        self.project(params, 1, xs, bt, &mut k);
+        self.project(params, 2, xs, bt, &mut v);
+        // per-sample scratch + batched dq/dk/dv accumulators
         let mut probs = vec![0f32; self.heads * t_len * t_len];
+        let mut ctx = vec![0f32; per];
         let mut dctx = vec![0f32; per];
-        let mut dq = vec![0f32; per];
-        let mut dk = vec![0f32; per];
-        let mut dv = vec![0f32; per];
-        let mut ds_row = vec![0f32; t_len];
+        let mut ds = vec![0f32; t_len * t_len];
+        let mut dq = vec![0f32; bt * d];
+        let mut dk = vec![0f32; bt * d];
+        let mut dv = vec![0f32; bt * d];
         for s in 0..b {
-            let xr = &xs[s * per..(s + 1) * per];
-            let dyr = &dys[s * per..(s + 1) * per];
-            // recompute this sample's forward intermediates
-            self.project(params, 0, xr, t_len, &mut q);
-            self.project(params, 1, xr, t_len, &mut k);
-            self.project(params, 2, xr, t_len, &mut v);
-            self.attend(&q, &k, &v, t_len, &mut probs, &mut ctx);
+            let q_s = &q[s * per..(s + 1) * per];
+            let k_s = &k[s * per..(s + 1) * per];
+            let v_s = &v[s * per..(s + 1) * per];
+            let x_s = &xs[s * per..(s + 1) * per];
+            let dy_s = &dys[s * per..(s + 1) * per];
+            self.attend(q_s, k_s, v_s, t_len, &mut probs, &mut ctx);
             let g = gs.row(s);
             // output projection: dW_o/db_o, and dctx = dy · W_o
+            self.project_param_grads(3, &ctx, dy_s, t_len, g);
             dctx.fill(0.0);
-            self.project_backward(params, 3, &ctx, dyr, t_len, g, Some(&mut dctx));
-            // attention core: dV, softmax Jacobian, dQ, dK per head
-            dq.fill(0.0);
-            dk.fill(0.0);
-            dv.fill(0.0);
+            gemm::sgemm(t_len, d, d, dy_s, d, &params[wo_off..wo_off + d * d], d, &mut dctx, d);
+            // attention core per head: softmax Jacobian, dQ/dK/dV
             for head in 0..self.heads {
                 let off = head * hd;
                 let pm = &probs[head * t_len * t_len..(head + 1) * t_len * t_len];
+                // dP = dctx_h · V_hᵀ
+                ds.fill(0.0);
+                gemm::sgemm_nt(t_len, t_len, hd, &dctx[off..], d, &v_s[off..], d, &mut ds, t_len);
+                // dS = P ⊙ (dP − delta) · scale, in place (the `delta`
+                // row reduction is flash-attention's recomputation term)
                 for i in 0..t_len {
                     let prow = &pm[i * t_len..(i + 1) * t_len];
-                    let dci = &dctx[i * d + off..i * d + off + hd];
-                    // dP[i, j] = dctx_i · v_j ; delta = Σ_j P dP (the
-                    // flash-attention `delta` row reduction)
+                    let drow = &mut ds[i * t_len..(i + 1) * t_len];
                     let mut delta = 0.0f32;
-                    for j in 0..t_len {
-                        let vj = &v[j * d + off..j * d + off + hd];
-                        let mut dp = 0.0f32;
-                        for c in 0..hd {
-                            dp += dci[c] * vj[c];
-                        }
-                        ds_row[j] = dp;
-                        delta += prow[j] * dp;
+                    for (pj, dj) in prow.iter().zip(drow.iter()) {
+                        delta += pj * dj;
                     }
-                    // dS = P ⊙ (dP − delta), scaled into dQ/dK; dV = Pᵀ dctx
-                    let qi = &q[i * d + off..i * d + off + hd];
-                    for j in 0..t_len {
-                        let pij = prow[j];
-                        if pij == 0.0 {
-                            continue;
-                        }
-                        let dsij = pij * (ds_row[j] - delta) * scale;
-                        let kj = &k[j * d + off..j * d + off + hd];
-                        let dqi = &mut dq[i * d + off..i * d + off + hd];
-                        for c in 0..hd {
-                            dqi[c] += dsij * kj[c];
-                        }
-                        let dkj = &mut dk[j * d + off..j * d + off + hd];
-                        let dvj = &mut dv[j * d + off..j * d + off + hd];
-                        for c in 0..hd {
-                            dkj[c] += dsij * qi[c];
-                            dvj[c] += pij * dci[c];
-                        }
+                    for (pj, dj) in prow.iter().zip(drow.iter_mut()) {
+                        *dj = pj * (*dj - delta) * scale;
                     }
                 }
+                let dq_h = &mut dq[s * per + off..];
+                gemm::sgemm(t_len, hd, t_len, &ds, t_len, &k_s[off..], d, dq_h, d);
+                let dk_h = &mut dk[s * per + off..];
+                gemm::sgemm_tn(t_len, hd, t_len, &ds, t_len, &q_s[off..], d, dk_h, d);
+                let dv_h = &mut dv[s * per + off..];
+                gemm::sgemm_tn(t_len, hd, t_len, pm, t_len, &dctx[off..], d, dv_h, d);
             }
-            // input projections: per-sample dW/db plus dx contributions
-            if need_dx {
-                let dxr = &mut dx[s * per..(s + 1) * per];
-                self.project_backward(params, 0, xr, &dq, t_len, g, Some(&mut *dxr));
-                self.project_backward(params, 1, xr, &dk, t_len, g, Some(&mut *dxr));
-                self.project_backward(params, 2, xr, &dv, t_len, g, Some(dxr));
-            } else {
-                self.project_backward(params, 0, xr, &dq, t_len, g, None);
-                self.project_backward(params, 1, xr, &dk, t_len, g, None);
-                self.project_backward(params, 2, xr, &dv, t_len, g, None);
-            }
+            // input projections: this sample's dW/db from its dq/dk/dv
+            self.project_param_grads(0, x_s, &dq[s * per..(s + 1) * per], t_len, g);
+            self.project_param_grads(1, x_s, &dk[s * per..(s + 1) * per], t_len, g);
+            self.project_param_grads(2, x_s, &dv[s * per..(s + 1) * per], t_len, g);
         }
         if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
         }
+        // dx = dq·W_q + dk·W_k + dv·W_v, three batched [B·T, D] GEMMs
+        let mut dx = vec![0f32; bt * d];
+        gemm::sgemm(bt, d, d, &dq, d, &params[wq_off..wq_off + d * d], d, &mut dx, d);
+        gemm::sgemm(bt, d, d, &dk, d, &params[wk_off..wk_off + d * d], d, &mut dx, d);
+        gemm::sgemm(bt, d, d, &dv, d, &params[wv_off..wv_off + d * d], d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
     }
 

@@ -1,0 +1,670 @@
+//! Blocked batched-GEMM micro-kernels — the shared dense contraction
+//! engine of the native per-sample-gradient hot path.
+//!
+//! Every projection-style layer ([`Linear`](super::layers::Linear), the
+//! recurrent input projections, QKV / attention×V / output projection in
+//! [`MultiHeadAttention`](super::attention::MultiHeadAttention), and the
+//! im2col lowering of [`Conv2d`](super::layers::Conv2d)) routes its
+//! batched contractions through the three kernels here instead of
+//! per-sample matvec loops:
+//!
+//! * [`sgemm`]     — `C[m,n] += A[m,k] · B[k,n]`
+//! * [`sgemm_nt`]  — `C[m,n] += A[m,k] · B[n,k]ᵀ` (row-major weights)
+//! * [`sgemm_tn`]  — `C[m,n] += A[k,m]ᵀ · B[k,n]` (outer-product sums)
+//!
+//! All three are accumulate-only (`+=`, matching the `GradSink`
+//! contract), take explicit leading strides so sub-matrices (e.g. one
+//! attention head's column slice) cost nothing, and share one BLIS-style
+//! implementation: an `MR×NR` register tile driven over packed A/B
+//! panels, with `KC`/`MC` blocking sized to L1/L2 (autodetected from
+//! sysfs, overridable via `OPACUS_BLOCK="MC,KC[,NC]"`). Pack buffers
+//! live in a thread-local [`Scratch`] arena, so steady-state calls do
+//! zero allocation — each distributed worker thread owns its own arena,
+//! keeping every kernel `Send + Sync` with no shared mutable state.
+//!
+//! **Determinism contract** (what the DP parity tests rest on): the
+//! value of output row `i` depends only on row `i` of `A`, the whole
+//! `B`, and `(n, k)` — never on `m` or on which other rows ride in the
+//! call. Summation over `k` happens in a fixed order (ascending within
+//! each `KC` chunk, chunks ascending), so per-sample gradients are
+//! bitwise identical whether a sample is computed in a batch of 1, a
+//! full physical batch, or a distributed shard of any width. Do not add
+//! an `m`-dependent dispatch or a parallel-k reduction here without
+//! revisiting the microbatch-oracle and worker-parity tests.
+//!
+//! The [`reference`] module holds the naive row-by-row loops the blocked
+//! path is tested and benchmarked against (`benches/gemm_kernels.rs`).
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Register-tile rows: each micro-kernel call produces an `MR×NR` block
+/// of C held entirely in registers.
+pub const MR: usize = 8;
+/// Register-tile columns (one AVX2 f32 vector wide; the inner loop is
+/// written so LLVM keeps the `MR×NR` accumulator in vector registers).
+pub const NR: usize = 8;
+
+/// Cache-blocking parameters: `kc` sizes the packed panels for L1,
+/// `mc` the packed A block for L2, `nc` the column stripe for L3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSizes {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+/// Process-wide blocking, resolved once: the `OPACUS_BLOCK="MC,KC[,NC]"`
+/// override when set and parseable, else sysfs cache autodetection with
+/// 32 KiB L1d / 256 KiB L2 fallbacks.
+pub fn block_sizes() -> BlockSizes {
+    static BLOCKS: OnceLock<BlockSizes> = OnceLock::new();
+    *BLOCKS.get_or_init(|| {
+        if let Ok(spec) = std::env::var("OPACUS_BLOCK") {
+            if let Some(b) = parse_block_spec(&spec) {
+                return b;
+            }
+        }
+        autodetect()
+    })
+}
+
+/// Parse `"MC,KC"` or `"MC,KC,NC"`. Values are clamped to sane minima
+/// and `mc`/`nc` are rounded up to tile multiples; `None` (falling back
+/// to autodetection) on anything malformed.
+fn parse_block_spec(spec: &str) -> Option<BlockSizes> {
+    let mut parts = Vec::new();
+    for p in spec.split(',') {
+        parts.push(p.trim().parse::<usize>().ok()?);
+    }
+    let (mc, kc, nc) = match parts.as_slice() {
+        [mc, kc] => (*mc, *kc, 4096),
+        [mc, kc, nc] => (*mc, *kc, *nc),
+        _ => return None,
+    };
+    if mc == 0 || kc == 0 || nc == 0 {
+        return None;
+    }
+    Some(BlockSizes {
+        mc: mc.div_ceil(MR) * MR,
+        kc: kc.max(4),
+        nc: nc.div_ceil(NR) * NR,
+    })
+}
+
+/// Read one cache size (bytes) from sysfs by level, accepting only
+/// "Data" or "Unified" caches (skips L1i).
+fn sysfs_cache_bytes(level: u32) -> Option<usize> {
+    for idx in 0..8 {
+        let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+        let lv: u32 = std::fs::read_to_string(format!("{base}/level"))
+            .ok()?
+            .trim()
+            .parse()
+            .ok()?;
+        if lv != level {
+            continue;
+        }
+        let ty = std::fs::read_to_string(format!("{base}/type")).ok()?;
+        if !matches!(ty.trim(), "Data" | "Unified") {
+            continue;
+        }
+        let size = std::fs::read_to_string(format!("{base}/size")).ok()?;
+        return parse_size(size.trim());
+    }
+    None
+}
+
+/// Parse "32K" / "1024K" / "8M" / plain byte counts.
+fn parse_size(s: &str) -> Option<usize> {
+    if let Some(k) = s.strip_suffix(['K', 'k']) {
+        return k.parse::<usize>().ok().map(|v| v * 1024);
+    }
+    if let Some(m) = s.strip_suffix(['M', 'm']) {
+        return m.parse::<usize>().ok().map(|v| v * 1024 * 1024);
+    }
+    s.parse().ok()
+}
+
+/// BLIS-style sizing: one `MR×KC` A panel plus one `KC×NR` B panel
+/// stream through half of L1; the packed `MC×KC` A block fills half of
+/// L2. `NC` is a fixed wide stripe (column blocking only matters once
+/// `n` outgrows any cache level this engine targets).
+fn autodetect() -> BlockSizes {
+    let l1 = sysfs_cache_bytes(1).unwrap_or(32 * 1024);
+    let l2 = sysfs_cache_bytes(2).unwrap_or(256 * 1024);
+    let kc = ((l1 / 2) / ((MR + NR) * 4)).clamp(64, 512);
+    let mc = (((l2 / 2) / (kc * 4)) / MR * MR).clamp(MR, 1024);
+    BlockSizes { mc, kc, nc: 4096 }
+}
+
+/// Reusable pack buffers. One arena per thread (see [`with_scratch`]):
+/// buffers grow to the high-water mark of the shapes seen on that
+/// thread and are then reused allocation-free.
+struct Scratch {
+    apack: Vec<f32>,
+    bpack: Vec<f32>,
+}
+
+impl Scratch {
+    const fn empty() -> Scratch {
+        Scratch { apack: Vec::new(), bpack: Vec::new() }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = const { RefCell::new(Scratch::empty()) };
+}
+
+fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// `C[m,n] += A[m,k] · B[k,n]`, all row-major with leading strides
+/// `lda`/`ldb`/`ldc` (≥ the logical row width).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(m, n, k, a, lda, false, b, ldb, false, c, ldc);
+}
+
+/// `C[m,n] += A[m,k] · B[n,k]ᵀ` — `b` holds the row-major `[n, k]`
+/// matrix (the natural layout of this crate's `[out, in]` weights).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(m, n, k, a, lda, false, b, ldb, true, c, ldc);
+}
+
+/// `C[m,n] += A[k,m]ᵀ · B[k,n]` — `a` holds the row-major `[k, m]`
+/// matrix; with `k` the batch/time axis this is the summed outer
+/// product `Σ_k a_k ⊗ b_k` (weight-gradient form).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tn(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(m, n, k, a, lda, true, b, ldb, false, c, ldc);
+}
+
+/// The shared blocked driver. `a_trans`: A is stored `[k, m]` and used
+/// as `Aᵀ`; `b_trans`: B is stored `[n, k]` and used as `Bᵀ`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    a_trans: bool,
+    b: &[f32],
+    ldb: usize,
+    b_trans: bool,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if a_trans {
+        debug_assert!(lda >= m && a.len() >= (k - 1) * lda + m, "gemm: A out of bounds");
+    } else {
+        debug_assert!(lda >= k && a.len() >= (m - 1) * lda + k, "gemm: A out of bounds");
+    }
+    if b_trans {
+        debug_assert!(ldb >= k && b.len() >= (n - 1) * ldb + k, "gemm: B out of bounds");
+    } else {
+        debug_assert!(ldb >= n && b.len() >= (k - 1) * ldb + n, "gemm: B out of bounds");
+    }
+    debug_assert!(ldc >= n && c.len() >= (m - 1) * ldc + n, "gemm: C out of bounds");
+
+    let bs = block_sizes();
+    with_scratch(|scratch| {
+        for jc in (0..n).step_by(bs.nc) {
+            let ncb = bs.nc.min(n - jc);
+            for pc in (0..k).step_by(bs.kc) {
+                let kcb = bs.kc.min(k - pc);
+                pack_b(&mut scratch.bpack, b, ldb, b_trans, pc, kcb, jc, ncb);
+                for ic in (0..m).step_by(bs.mc) {
+                    let mcb = bs.mc.min(m - ic);
+                    pack_a(&mut scratch.apack, a, lda, a_trans, ic, mcb, pc, kcb);
+                    macro_kernel(&scratch.apack, &scratch.bpack, mcb, ncb, kcb, ic, jc, c, ldc);
+                }
+            }
+        }
+    });
+}
+
+/// Drive the register tile over one packed `[mcb × kcb] × [kcb × ncb]`
+/// block, accumulating into `C` at origin `(i0, j0)`.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    apack: &[f32],
+    bpack: &[f32],
+    mcb: usize,
+    ncb: usize,
+    kcb: usize,
+    i0: usize,
+    j0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let a_panels = mcb.div_ceil(MR);
+    let b_panels = ncb.div_ceil(NR);
+    for jp in 0..b_panels {
+        let nr_eff = NR.min(ncb - jp * NR);
+        let bp = &bpack[jp * kcb * NR..(jp + 1) * kcb * NR];
+        for ip in 0..a_panels {
+            let mr_eff = MR.min(mcb - ip * MR);
+            let ap = &apack[ip * kcb * MR..(ip + 1) * kcb * MR];
+            let mut acc = [[0f32; NR]; MR];
+            micro_kernel(ap, bp, &mut acc);
+            for (r, arow) in acc.iter().enumerate().take(mr_eff) {
+                let crow = &mut c[(i0 + ip * MR + r) * ldc + j0 + jp * NR..][..nr_eff];
+                for (cv, av) in crow.iter_mut().zip(arow.iter()) {
+                    *cv += *av;
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[MR][NR] += ap[kc, MR] ⊗ bp[kc, NR]` with `k`
+/// ascending — the one loop every FLOP of the engine runs through.
+#[inline]
+fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let av: &[f32; MR] = av.try_into().expect("chunk is MR wide");
+        let bv: &[f32; NR] = bv.try_into().expect("chunk is NR wide");
+        for r in 0..MR {
+            let ar = av[r];
+            let row = &mut acc[r];
+            for (rc, bc) in row.iter_mut().zip(bv.iter()) {
+                *rc += ar * *bc;
+            }
+        }
+    }
+}
+
+/// Pack the `[mcb × kcb]` A block at `(i0, p0)` into `[panel][kk][MR]`
+/// layout, zero-padding edge panels so the micro-kernel never branches.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    buf: &mut Vec<f32>,
+    a: &[f32],
+    lda: usize,
+    a_trans: bool,
+    i0: usize,
+    mcb: usize,
+    p0: usize,
+    kcb: usize,
+) {
+    let panels = mcb.div_ceil(MR);
+    let need = panels * kcb * MR;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    for ip in 0..panels {
+        let rbase = i0 + ip * MR;
+        let rows = MR.min(mcb - ip * MR);
+        let dst = &mut buf[ip * kcb * MR..(ip + 1) * kcb * MR];
+        if a_trans {
+            // A stored [k, m]: a packed k-slice is a contiguous read
+            for kk in 0..kcb {
+                let src = &a[(p0 + kk) * lda + rbase..][..rows];
+                let d = &mut dst[kk * MR..(kk + 1) * MR];
+                d[..rows].copy_from_slice(src);
+                d[rows..].fill(0.0);
+            }
+        } else {
+            // A stored [m, k]: read each row contiguously, scatter by MR
+            for r in 0..rows {
+                let src = &a[(rbase + r) * lda + p0..][..kcb];
+                for (kk, &v) in src.iter().enumerate() {
+                    dst[kk * MR + r] = v;
+                }
+            }
+            for r in rows..MR {
+                for kk in 0..kcb {
+                    dst[kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `[kcb × ncb]` B block at `(p0, j0)` into `[panel][kk][NR]`
+/// layout with zero-padded edge panels.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    buf: &mut Vec<f32>,
+    b: &[f32],
+    ldb: usize,
+    b_trans: bool,
+    p0: usize,
+    kcb: usize,
+    j0: usize,
+    ncb: usize,
+) {
+    let panels = ncb.div_ceil(NR);
+    let need = panels * kcb * NR;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    for jp in 0..panels {
+        let cbase = j0 + jp * NR;
+        let cols = NR.min(ncb - jp * NR);
+        let dst = &mut buf[jp * kcb * NR..(jp + 1) * kcb * NR];
+        if b_trans {
+            // B stored [n, k]: read each column's k-run contiguously
+            for cc in 0..cols {
+                let src = &b[(cbase + cc) * ldb + p0..][..kcb];
+                for (kk, &v) in src.iter().enumerate() {
+                    dst[kk * NR + cc] = v;
+                }
+            }
+            for cc in cols..NR {
+                for kk in 0..kcb {
+                    dst[kk * NR + cc] = 0.0;
+                }
+            }
+        } else {
+            // B stored [k, n]: a packed k-slice is a contiguous read
+            for kk in 0..kcb {
+                let src = &b[(p0 + kk) * ldb + cbase..][..cols];
+                let d = &mut dst[kk * NR..(kk + 1) * NR];
+                d[..cols].copy_from_slice(src);
+                d[cols..].fill(0.0);
+            }
+        }
+    }
+}
+
+/// The naive row-by-row loops the blocked path is validated and
+/// benchmarked against — the exact loop structure of the pre-blocked
+/// engine (`matvec` per output row, `k` ascending in one f32
+/// accumulator). Kept `pub` so `benches/gemm_kernels.rs` and external
+/// comparisons can time the honest scalar baseline.
+pub mod reference {
+    /// `C[m,n] += A[m,k] · B[k,n]` — scalar reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * lda + kk] * b[kk * ldb + j];
+                }
+                c[i * ldc + j] += acc;
+            }
+        }
+    }
+
+    /// `C[m,n] += A[m,k] · B[n,k]ᵀ` — scalar reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm_nt(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * lda + kk] * b[j * ldb + kk];
+                }
+                c[i * ldc + j] += acc;
+            }
+        }
+    }
+
+    /// `C[m,n] += A[k,m]ᵀ · B[k,n]` — scalar reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm_tn(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[kk * lda + i] * b[kk * ldb + j];
+                }
+                c[i * ldc + j] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::pcg::Xoshiro256pp;
+    use crate::rng::Rng;
+
+    /// Integer-valued f32 matrix: every product and partial sum is exact
+    /// in f32, so blocked and reference results must match *bitwise*
+    /// regardless of summation order.
+    fn int_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..rows * cols).map(|_| rng.gen_range(9) as f32 - 4.0).collect()
+    }
+
+    fn real_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0f32; rows * cols];
+        crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+        v
+    }
+
+    /// Shapes spanning every edge case: unit dims, K = 1, single row,
+    /// exact tile multiples, every non-multiple-of-tile remainder class,
+    /// and k crossing the KC chunk boundary.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 1),
+        (1, 13, 40),
+        (3, 5, 1),
+        (8, 8, 8),
+        (16, 24, 32),
+        (9, 17, 33),
+        (13, 9, 70),
+        (7, 64, 5),
+        (64, 3, 20),
+        (33, 31, 600),
+    ];
+
+    #[test]
+    fn blocked_matches_reference_exactly_nn() {
+        for &(m, n, k) in SHAPES {
+            let a = int_matrix(m, k, 1);
+            let b = int_matrix(k, n, 2);
+            let mut c_blk = int_matrix(m, n, 3);
+            let mut c_ref = c_blk.clone();
+            sgemm(m, n, k, &a, k, &b, n, &mut c_blk, n);
+            reference::sgemm(m, n, k, &a, k, &b, n, &mut c_ref, n);
+            assert_eq!(c_blk, c_ref, "nn {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_exactly_nt() {
+        for &(m, n, k) in SHAPES {
+            let a = int_matrix(m, k, 4);
+            let b = int_matrix(n, k, 5);
+            let mut c_blk = int_matrix(m, n, 6);
+            let mut c_ref = c_blk.clone();
+            sgemm_nt(m, n, k, &a, k, &b, k, &mut c_blk, n);
+            reference::sgemm_nt(m, n, k, &a, k, &b, k, &mut c_ref, n);
+            assert_eq!(c_blk, c_ref, "nt {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_exactly_tn() {
+        for &(m, n, k) in SHAPES {
+            let a = int_matrix(k, m, 7);
+            let b = int_matrix(k, n, 8);
+            let mut c_blk = int_matrix(m, n, 9);
+            let mut c_ref = c_blk.clone();
+            sgemm_tn(m, n, k, &a, m, &b, n, &mut c_blk, n);
+            reference::sgemm_tn(m, n, k, &a, m, &b, n, &mut c_ref, n);
+            assert_eq!(c_blk, c_ref, "tn {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn strided_submatrix_views_match_reference() {
+        // operate on an interior window of larger row-major buffers, the
+        // way attention slices one head's columns out of [T, D]
+        let (m, n, k) = (6, 5, 9);
+        let (lda, ldb, ldc) = (k + 4, n + 3, n + 2);
+        let a = int_matrix(m, lda, 10);
+        let b = int_matrix(k, ldb, 11);
+        let mut c_blk = int_matrix(m, ldc, 12);
+        let mut c_ref = c_blk.clone();
+        sgemm(m, n, k, &a[2..], lda, &b[1..], ldb, &mut c_blk[1..], ldc);
+        reference::sgemm(m, n, k, &a[2..], lda, &b[1..], ldb, &mut c_ref[1..], ldc);
+        assert_eq!(c_blk, c_ref);
+    }
+
+    #[test]
+    fn accumulates_instead_of_overwriting() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let mut c = vec![10.0f32];
+        sgemm(1, 1, 2, &a, 2, &b, 1, &mut c, 1);
+        // 10 (prior contents) + 1·3 + 2·4
+        assert_eq!(c, vec![21.0]);
+    }
+
+    #[test]
+    fn zero_sized_dims_are_noops() {
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut c = vec![7.0f32; 4];
+        sgemm(0, 2, 2, &a, 2, &b, 2, &mut c, 2);
+        sgemm(2, 0, 2, &a, 2, &b, 2, &mut c, 2);
+        sgemm(2, 2, 0, &a, 2, &b, 2, &mut c, 2);
+        assert_eq!(c, vec![7.0f32; 4]);
+    }
+
+    /// The determinism contract: a row's result is bitwise independent
+    /// of how many other rows ride in the same call. This is what makes
+    /// per-sample gradients invariant to physical-batch decomposition
+    /// and distributed shard width (real-valued data on purpose —
+    /// rounding must agree, not just exact integer arithmetic).
+    #[test]
+    fn row_results_are_bitwise_independent_of_m() {
+        let (m, n, k) = (21, 19, 333);
+        let a = real_matrix(m, k, 20);
+        let b = real_matrix(k, n, 21);
+        let mut full = vec![0f32; m * n];
+        sgemm(m, n, k, &a, k, &b, n, &mut full, n);
+        for i in [0usize, 1, 7, 8, 20] {
+            let mut row = vec![0f32; n];
+            sgemm(1, n, k, &a[i * k..], k, &b, n, &mut row, n);
+            assert_eq!(row, full[i * n..(i + 1) * n], "row {i} depends on m");
+        }
+        // same contract for the NT form (the projection layers' shape)
+        let bt = real_matrix(n, k, 22);
+        let mut full_nt = vec![0f32; m * n];
+        sgemm_nt(m, n, k, &a, k, &bt, k, &mut full_nt, n);
+        for i in [0usize, 5, 20] {
+            let mut row = vec![0f32; n];
+            sgemm_nt(1, n, k, &a[i * k..], k, &bt, k, &mut row, n);
+            assert_eq!(row, full_nt[i * n..(i + 1) * n], "nt row {i} depends on m");
+        }
+    }
+
+    #[test]
+    fn repeated_calls_reuse_scratch_and_agree() {
+        let (m, n, k) = (17, 9, 500);
+        let a = real_matrix(m, k, 30);
+        let b = real_matrix(k, n, 31);
+        let mut c1 = vec![0f32; m * n];
+        sgemm(m, n, k, &a, k, &b, n, &mut c1, n);
+        // a smaller call in between must not corrupt the grown buffers
+        let mut tiny = vec![0f32; 1];
+        sgemm(1, 1, 1, &a, 1, &b, 1, &mut tiny, 1);
+        let mut c2 = vec![0f32; m * n];
+        sgemm(m, n, k, &a, k, &b, n, &mut c2, n);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn block_spec_parsing() {
+        assert_eq!(parse_block_spec("128,256"), Some(BlockSizes { mc: 128, kc: 256, nc: 4096 }));
+        assert_eq!(
+            parse_block_spec(" 96 , 200 , 1000 "),
+            Some(BlockSizes { mc: 96, kc: 200, nc: 1000 })
+        );
+        // mc/nc round up to tile multiples
+        assert_eq!(parse_block_spec("100,64"), Some(BlockSizes { mc: 104, kc: 64, nc: 4096 }));
+        assert_eq!(parse_block_spec("0,64"), None);
+        assert_eq!(parse_block_spec("128"), None);
+        assert_eq!(parse_block_spec("a,b"), None);
+        assert_eq!(parse_block_spec(""), None);
+    }
+
+    #[test]
+    fn cache_size_parsing_and_detected_blocks_are_sane() {
+        assert_eq!(parse_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_size("1048576"), Some(1048576));
+        assert_eq!(parse_size("x"), None);
+        let bs = block_sizes();
+        assert!(bs.kc >= 4 && bs.mc >= MR && bs.nc >= NR);
+        assert_eq!(bs.mc % MR, 0);
+        // resolved once per process
+        assert_eq!(bs, block_sizes());
+    }
+}

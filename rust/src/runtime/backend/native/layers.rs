@@ -15,11 +15,19 @@
 //! ([`validate_model_with_custom`](crate::privacy::validator::validate_model_with_custom)).
 //! Built-in kinds mirror `privacy/validator.rs::SUPPORTED`: `linear`,
 //! `conv2d`, `embedding`, `layernorm`.
+//!
+//! Dense contractions (the forward projection, the input gradient, and
+//! the summed weight gradient) lower to the blocked [`gemm`] engine —
+//! custom layers should reuse [`gemm::sgemm`]/[`gemm::sgemm_nt`]/
+//! [`gemm::sgemm_tn`] rather than writing their own loops; `Conv2d`
+//! shows the im2col lowering pattern for windowed ops.
 
 use anyhow::{bail, Result};
 
 use crate::rng::{gaussian, Rng};
 use crate::runtime::tensor::HostTensor;
+
+use super::gemm;
 
 /// Writes one layer's per-sample parameter gradients into its column
 /// block of the model-wide `[B, P_total]` gradient matrix. Rows are
@@ -53,6 +61,15 @@ impl<'a> GradSink<'a> {
     pub fn row(&mut self, b: usize) -> &mut [f32] {
         let start = b * self.stride + self.offset;
         &mut self.buf[start..start + self.len]
+    }
+
+    /// True when the sink was built with stride 0 — every row aliases
+    /// one shared `[P]` buffer, i.e. the caller wants the *summed*
+    /// gradient. Kernels may then lower the whole batch's weight
+    /// gradient to a single `[out, B] × [B, in]` GEMM instead of B
+    /// per-sample outer products.
+    pub fn is_shared(&self) -> bool {
+        self.stride == 0
     }
 }
 
@@ -106,38 +123,13 @@ fn per_sample_elems(t: &HostTensor) -> usize {
     t.shape[1..].iter().product()
 }
 
-// Dense inner kernels shared by every projection-style layer (Linear
-// here, plus the recurrent and attention modules): one definition so a
-// future blocked / SIMD rewrite lands everywhere at once. Conv2d keeps
-// its own windowed loops — they are not plain matvecs.
-
-/// `out[0..rows] += W[rows, cols] · v[cols]` (row-major `W`).
-#[inline]
-pub(super) fn matvec_acc(w: &[f32], v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let wr = &w[r * cols..(r + 1) * cols];
-        let mut acc = 0.0f32;
-        for c in 0..cols {
-            acc += wr[c] * v[c];
-        }
-        out[r] += acc;
-    }
-}
-
-/// `out[0..cols] += Wᵀ[cols, rows] · v[rows]` for row-major `W[rows, cols]`.
-#[inline]
-pub(super) fn matvec_t_acc(w: &[f32], v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let d = v[r];
-        if d == 0.0 {
-            continue;
-        }
-        let wr = &w[r * cols..(r + 1) * cols];
-        for c in 0..cols {
-            out[c] += d * wr[c];
-        }
-    }
-}
+// Dense contractions shared by every projection-style layer (Linear
+// here, plus the recurrent and attention modules) route through the
+// blocked [`gemm`] micro-kernels: one engine so the register/cache
+// tiling lands everywhere at once. The only scalar kernel left is the
+// per-sample rank-1 outer product below — a sample's weight gradient
+// `dy_b ⊗ x_b` has no batch dimension to block over, and it is exactly
+// what the `[B, P]` per-sample materialization must write per row.
 
 /// `G[rows, cols] += u[rows] ⊗ v[cols]` (row-major `G`).
 #[inline]
@@ -198,13 +190,12 @@ impl GradSampleLayer for Linear {
         let (ind, outd) = (self.in_dim, self.out_dim);
         let w = &params[..outd * ind];
         let bias = &params[outd * ind..];
+        // one [B, in] × [in, out] GEMM over bias-initialized rows
         let mut y = vec![0f32; b * outd];
         for s in 0..b {
-            let xr = &xs[s * ind..(s + 1) * ind];
-            let yr = &mut y[s * outd..(s + 1) * outd];
-            yr.copy_from_slice(bias);
-            matvec_acc(w, xr, outd, ind, yr);
+            y[s * outd..(s + 1) * outd].copy_from_slice(bias);
         }
+        gemm::sgemm_nt(b, outd, ind, xs, ind, w, ind, &mut y, outd);
         Ok(HostTensor::f32(vec![b, outd], y))
     }
 
@@ -221,24 +212,36 @@ impl GradSampleLayer for Linear {
         let dys = dy.as_f32()?;
         let (ind, outd) = (self.in_dim, self.out_dim);
         let w = &params[..outd * ind];
-        let mut dx = if need_dx { vec![0f32; b * ind] } else { Vec::new() };
-        for s in 0..b {
-            let xr = &xs[s * ind..(s + 1) * ind];
-            let dyr = &dys[s * outd..(s + 1) * outd];
-            let g = gs.row(s);
-            outer_acc(&mut g[..outd * ind], dyr, xr, outd, ind);
-            if need_dx {
-                let dxr = &mut dx[s * ind..(s + 1) * ind];
-                matvec_t_acc(w, dyr, outd, ind, dxr);
-            }
+        if gs.is_shared() {
+            // summed gradient: one [out, B] × [B, in] outer-product GEMM
+            let g = gs.row(0);
+            gemm::sgemm_tn(outd, ind, b, dys, outd, xs, ind, &mut g[..outd * ind], ind);
             let gb = &mut g[outd * ind..];
-            for o in 0..outd {
-                gb[o] += dyr[o];
+            for s in 0..b {
+                let dyr = &dys[s * outd..(s + 1) * outd];
+                for o in 0..outd {
+                    gb[o] += dyr[o];
+                }
+            }
+        } else {
+            // per-sample gradient rows: one rank-1 outer product each
+            for s in 0..b {
+                let xr = &xs[s * ind..(s + 1) * ind];
+                let dyr = &dys[s * outd..(s + 1) * outd];
+                let g = gs.row(s);
+                outer_acc(&mut g[..outd * ind], dyr, xr, outd, ind);
+                let gb = &mut g[outd * ind..];
+                for o in 0..outd {
+                    gb[o] += dyr[o];
+                }
             }
         }
         if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
         }
+        // dX[B, in] = dY[B, out] · W[out, in] in one GEMM
+        let mut dx = vec![0f32; b * ind];
+        gemm::sgemm(b, ind, outd, dys, outd, w, ind, &mut dx, ind);
         let mut shape = vec![b];
         shape.extend_from_slice(&x.shape[1..]);
         Ok(HostTensor::f32(shape, dx))
@@ -288,6 +291,70 @@ impl Conv2d {
         };
         Ok((span(h)?, span(w)?))
     }
+
+    /// Columns of the im2col matrix: one `[ky][kx][ic]` patch per output
+    /// position — the same ordering as the flat weight layout, so the
+    /// convolution lowers to `col · Wᵀ` on the shared GEMM engine.
+    fn col_width(&self) -> usize {
+        self.k * self.k * self.in_c
+    }
+
+    /// im2col of one sample: `col[oh·ow, k·k·ic]` with out-of-image taps
+    /// left at zero (`col` is fully overwritten).
+    fn im2col(&self, xr: &[f32], h: usize, w: usize, oh: usize, ow: usize, col: &mut [f32]) {
+        let (ic, k, s, p) = (self.in_c, self.k, self.stride, self.pad);
+        let cw = self.col_width();
+        col.fill(0.0);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut col[(oy * ow + ox) * cw..(oy * ow + ox + 1) * cw];
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - p as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - p as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xbase = (iy as usize * w + ix as usize) * ic;
+                        let dbase = (ky * k + kx) * ic;
+                        dst[dbase..dbase + ic].copy_from_slice(&xr[xbase..xbase + ic]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Adjoint of [`im2col`](Self::im2col): scatter-add col-space
+    /// gradients back into image space (`dxr` accumulates).
+    fn col2im(&self, dcol: &[f32], h: usize, w: usize, oh: usize, ow: usize, dxr: &mut [f32]) {
+        let (ic, k, s, p) = (self.in_c, self.k, self.stride, self.pad);
+        let cw = self.col_width();
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &dcol[(oy * ow + ox) * cw..(oy * ow + ox + 1) * cw];
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - p as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - p as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xbase = (iy as usize * w + ix as usize) * ic;
+                        let sbase = (ky * k + kx) * ic;
+                        for c in 0..ic {
+                            dxr[xbase + c] += src[sbase + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl GradSampleLayer for Conv2d {
@@ -317,38 +384,21 @@ impl GradSampleLayer for Conv2d {
         };
         let (oh, ow) = self.out_hw(h, w)?;
         let xs = x.as_f32()?;
-        let (ic, oc, k, s, p) = (self.in_c, self.out_c, self.k, self.stride, self.pad);
-        let wts = &params[..oc * k * k * ic];
-        let bias = &params[oc * k * k * ic..];
+        let (ic, oc) = (self.in_c, self.out_c);
+        let cw = self.col_width();
+        let wts = &params[..oc * cw];
+        let bias = &params[oc * cw..];
+        // im2col lowering: per sample, y[oh·ow, oc] = col[oh·ow, cw] · Wᵀ
+        let mut col = vec![0f32; oh * ow * cw];
         let mut y = vec![0f32; b * oh * ow * oc];
         for smp in 0..b {
             let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
+            self.im2col(xr, h, w, oh, ow, &mut col);
             let yr = &mut y[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for o in 0..oc {
-                        let mut acc = bias[o];
-                        for ky in 0..k {
-                            let iy = (oy * s + ky) as isize - p as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            for kx in 0..k {
-                                let ix = (ox * s + kx) as isize - p as isize;
-                                if ix < 0 || ix >= w as isize {
-                                    continue;
-                                }
-                                let xbase = (iy as usize * w + ix as usize) * ic;
-                                let wbase = ((o * k + ky) * k + kx) * ic;
-                                for c in 0..ic {
-                                    acc += wts[wbase + c] * xr[xbase + c];
-                                }
-                            }
-                        }
-                        yr[(oy * ow + ox) * oc + o] = acc;
-                    }
-                }
+            for pos in 0..oh * ow {
+                yr[pos * oc..(pos + 1) * oc].copy_from_slice(bias);
             }
+            gemm::sgemm_nt(oh * ow, oc, cw, &col, cw, wts, cw, yr, oc);
         }
         Ok(HostTensor::f32(vec![b, oh, ow, oc], y))
     }
@@ -368,54 +418,40 @@ impl GradSampleLayer for Conv2d {
         let (oh, ow) = self.out_hw(h, w)?;
         let xs = x.as_f32()?;
         let dys = dy.as_f32()?;
-        let (ic, oc, k, s, p) = (self.in_c, self.out_c, self.k, self.stride, self.pad);
-        let wts = &params[..oc * k * k * ic];
-        let nw = oc * k * k * ic;
+        let (ic, oc) = (self.in_c, self.out_c);
+        let cw = self.col_width();
+        let wts = &params[..oc * cw];
+        let nw = oc * cw;
         let mut dx = if need_dx {
             vec![0f32; b * h * w * ic]
+        } else {
+            Vec::new()
+        };
+        let mut col = vec![0f32; oh * ow * cw];
+        let mut dcol = if need_dx {
+            vec![0f32; oh * ow * cw]
         } else {
             Vec::new()
         };
         for smp in 0..b {
             let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
             let dyr = &dys[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
-            let dx_start = smp * h * w * ic;
+            self.im2col(xr, h, w, oh, ow, &mut col);
             let g = gs.row(smp);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for o in 0..oc {
-                        let d = dyr[(oy * ow + ox) * oc + o];
-                        if d == 0.0 {
-                            continue;
-                        }
-                        g[nw + o] += d;
-                        for ky in 0..k {
-                            let iy = (oy * s + ky) as isize - p as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            for kx in 0..k {
-                                let ix = (ox * s + kx) as isize - p as isize;
-                                if ix < 0 || ix >= w as isize {
-                                    continue;
-                                }
-                                let xbase = (iy as usize * w + ix as usize) * ic;
-                                let wbase = ((o * k + ky) * k + kx) * ic;
-                                if need_dx {
-                                    let dxr = &mut dx[dx_start..dx_start + h * w * ic];
-                                    for c in 0..ic {
-                                        g[wbase + c] += d * xr[xbase + c];
-                                        dxr[xbase + c] += d * wts[wbase + c];
-                                    }
-                                } else {
-                                    for c in 0..ic {
-                                        g[wbase + c] += d * xr[xbase + c];
-                                    }
-                                }
-                            }
-                        }
-                    }
+            // dW[oc, cw] += dyᵀ[oc, oh·ow] · col[oh·ow, cw]
+            gemm::sgemm_tn(oc, cw, oh * ow, dyr, oc, &col, cw, &mut g[..nw], cw);
+            for pos in 0..oh * ow {
+                for o in 0..oc {
+                    g[nw + o] += dyr[pos * oc + o];
                 }
+            }
+            if need_dx {
+                // dcol[oh·ow, cw] = dy[oh·ow, oc] · W[oc, cw], then the
+                // col2im scatter-add back to image space
+                dcol.fill(0.0);
+                gemm::sgemm(oh * ow, cw, oc, dyr, oc, wts, cw, &mut dcol, cw);
+                let dxr = &mut dx[smp * h * w * ic..(smp + 1) * h * w * ic];
+                self.col2im(&dcol, h, w, oh, ow, dxr);
             }
         }
         if !need_dx {

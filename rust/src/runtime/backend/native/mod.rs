@@ -8,10 +8,14 @@
 //! into always-on coverage and gives the benches a baseline to compare
 //! the XLA path against.
 //!
-//! * [`layers`] — the core [`GradSampleLayer`] kernels (linear, conv2d,
-//!   embedding, layernorm) and the extension point for custom kinds
-//! * [`recurrent`] — time-unrolled LSTM / GRU kernels with per-sample
-//!   BPTT
+//! * [`gemm`] — the blocked, register-tiled batched-GEMM micro-kernels
+//!   every dense contraction below routes through (`OPACUS_BLOCK`
+//!   overrides the cache blocking)
+//! * [`layers`] — the core [`GradSampleLayer`] kernels (linear, conv2d
+//!   via im2col, embedding, layernorm) and the extension point for
+//!   custom kinds
+//! * [`recurrent`] — time-unrolled LSTM / GRU / tanh-RNN kernels with
+//!   batched-across-the-batch per-sample BPTT
 //! * [`attention`] — multi-head self-attention with per-sample
 //!   gradients through the softmax
 //! * [`model`] — sequential stacks + softmax-CE head + clipping pipeline
@@ -21,11 +25,12 @@
 //! The `lstm` task runs a *true* time-unrolled recurrent model
 //! (embedding → LSTM → meanpool → linear); the `attn` task runs
 //! embedding → multi-head attention → meanpool → linear. Every paper
-//! layer row (linear, conv, embedding, layernorm, LSTM, GRU, MHA) now
-//! has a native per-sample-gradient kernel — the XLA artifacts are a
-//! performance path, not a coverage one.
+//! layer row (linear, conv, embedding, layernorm, LSTM, GRU, generic
+//! RNN, MHA) now has a native per-sample-gradient kernel — the XLA
+//! artifacts are a performance path, not a coverage one.
 
 pub mod attention;
+pub mod gemm;
 pub mod layers;
 pub mod model;
 pub mod recurrent;
@@ -44,7 +49,7 @@ use super::{BackendKind, ExecutionBackend, TrainerSteps};
 
 pub use self::attention::MultiHeadAttention;
 pub use self::layers::{GradSampleLayer, GradSink};
-pub use self::recurrent::{Gru, Lstm};
+pub use self::recurrent::{Gru, Lstm, Rnn};
 
 /// Tasks the native backend can serve (matches `data::synth::VALID_TASKS`).
 pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn"];

@@ -6,7 +6,11 @@
 //! Users extend the native backend here (paper §4, custom layers):
 //! implement [`GradSampleLayer`] for the new kind and build a
 //! `NativeModel` stack containing it — the pipeline (clipping, noise,
-//! virtual steps, accounting) is layer-agnostic.
+//! virtual steps, accounting) is layer-agnostic. Custom kernels should
+//! lower their dense contractions to the blocked
+//! [`gemm`](super::gemm) micro-kernels like the built-in layers do; the
+//! pipeline inherits the engine's guarantee that per-sample gradient
+//! rows are bitwise independent of batch decomposition.
 
 use anyhow::{bail, Context, Result};
 

@@ -1,25 +1,36 @@
-//! Recurrent [`GradSampleLayer`] kernels — time-unrolled LSTM and GRU
-//! with per-sample BPTT (paper §4: "multi-head attention, convolution,
-//! LSTM, GRU (and generic RNN), and embedding").
+//! Recurrent [`GradSampleLayer`] kernels — time-unrolled LSTM, GRU and
+//! generic tanh RNN with per-sample BPTT (paper §4: "multi-head
+//! attention, convolution, LSTM, GRU (and generic RNN), and embedding").
 //!
-//! Both layers consume a batched sequence `[B, T, D]` (typically the
-//! output of an [`Embedding`](super::layers::Embedding)) and emit the
-//! full hidden-state sequence `[B, T, H]`, so they compose with the
+//! All three layers consume a batched sequence `[B, T, D]` (typically
+//! the output of an [`Embedding`](super::layers::Embedding)) and emit
+//! the full hidden-state sequence `[B, T, H]`, so they compose with the
 //! existing structural ops (`MeanPool` for classification heads).
 //!
-//! Execution shape (einsum-style, after Lee & Kifer 2020):
+//! Execution shape (einsum-style, after Lee & Kifer 2020), on the
+//! blocked [`gemm`] engine end to end:
 //! * **forward** — the input projections `x_t · W_xᵀ` for every `(b, t)`
-//!   are computed in one batched pass (they have no sequential
-//!   dependency), then the `O(T)` recurrence runs per sample on top of
-//!   the precomputed activations.
-//! * **backward** — per-sample truncated-nothing BPTT: the forward
-//!   recurrence is replayed (caching gate activations and states for
-//!   every timestep of that sample only, `O(T·H)` scratch — not
-//!   `O(B·T·H)`), then gradients flow from `t = T−1` down to `0`,
-//!   accumulating this sample's parameter gradients straight into its
-//!   [`GradSink`] row. Rows are fully independent, which is exactly what
-//!   per-sample clipping needs and why the kernels stay `Send + Sync`
-//!   (no interior mutability; all scratch is call-local).
+//!   are one `[B·T, D] × [D, gates·H]` GEMM (no sequential dependency),
+//!   then the `O(T)` recurrence runs over the whole batch in lockstep:
+//!   each timestep's hidden-side projections are one
+//!   `[B, H] × [H, gates·H]` GEMM followed by the per-sample gate
+//!   nonlinearities.
+//! * **backward** — batched BPTT: the forward recurrence is replayed
+//!   once with full `[B, T, ·]` gate/state caches, then gradients flow
+//!   from `t = T−1` down to `0` with the carried hidden gradient
+//!   `dh = da · W_h` again one `[B, gates·H] × [gates·H, H]` GEMM per
+//!   step. The per-timestep pre-activation gradients are accumulated
+//!   into `[B, T, gates·H]`, which turns each sample's weight gradients
+//!   into two `[gates·H, T] × [T, ·]` GEMMs (vs T rank-1 outer products)
+//!   and the whole batch's input gradient into a single
+//!   `[B·T, gates·H] × [gates·H, D]` GEMM.
+//!
+//! Per-sample independence is preserved by construction: every GEMM row
+//! belongs to exactly one sample and the `gemm` engine guarantees row
+//! results are bitwise independent of the batch dimension, so gradients
+//! match the microbatch oracle and are invariant to distributed shard
+//! width. Kernels stay `Send + Sync` (no interior mutability; all
+//! scratch is call-local).
 //!
 //! Parameter-layout notes (documented deviations from `torch.nn`):
 //! * `Lstm` folds the redundant pair (`b_ih`, `b_hh`) into a single bias
@@ -28,13 +39,15 @@
 //! * `Gru` keeps both biases (`b_x`, `b_h`, each `[3H]`) because the
 //!   PyTorch "new" gate applies `r ⊙ (W_h h + b_h)` — the hidden bias of
 //!   the `n` gate is *not* redundant.
+//! * `Rnn` (tanh) folds the bias pair like `Lstm`, for the same reason.
 
 use anyhow::{bail, Result};
 
 use crate::rng::{gaussian, Rng};
 use crate::runtime::tensor::HostTensor;
 
-use super::layers::{matvec_acc, matvec_t_acc, outer_acc, GradSampleLayer, GradSink};
+use super::gemm;
+use super::layers::{GradSampleLayer, GradSink};
 
 #[inline]
 fn sigmoid(x: f32) -> f32 {
@@ -53,7 +66,8 @@ fn seq_dims(kind: &str, x: &HostTensor, in_dim: usize) -> Result<(usize, usize)>
 }
 
 /// Batched input projections `xp[b, t, gh] = Σ_d W[gh, d]·x[b, t, d] + bias[gh]`
-/// for all `(b, t)` at once — the non-sequential half of the recurrence.
+/// for all `(b, t)` at once — one `[B·T, D] × [D, gates·H]` GEMM, the
+/// non-sequential half of the recurrence.
 fn input_projections(
     xs: &[f32],
     w: &[f32],
@@ -64,12 +78,36 @@ fn input_projections(
 ) -> Vec<f32> {
     let mut xp = vec![0f32; steps * rows];
     for s in 0..steps {
-        let xr = &xs[s * in_dim..(s + 1) * in_dim];
-        let out = &mut xp[s * rows..(s + 1) * rows];
-        out.copy_from_slice(&bias[..rows]);
-        matvec_acc(w, xr, rows, in_dim, out);
+        xp[s * rows..(s + 1) * rows].copy_from_slice(&bias[..rows]);
     }
+    gemm::sgemm_nt(steps, rows, in_dim, xs, in_dim, w, in_dim, &mut xp, rows);
     xp
+}
+
+/// Per-sample parameter gradients from the accumulated pre-activation
+/// gradients: `dW_x += da_sᵀ[gh, T] · x_s[T, D]`,
+/// `dW_h += da_s[1..]ᵀ[gh, T−1] · h_s[..T−1][T−1, H]`, `db += Σ_t da_t`
+/// — two GEMMs and a column sum per sample instead of T outer products.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_param_grads(
+    g: &mut [f32],
+    da_s: &[f32], // this sample's [T, gh] pre-activation grads (input side)
+    dh_s: &[f32], // hidden-side pre-activation grads (== da_s unless GRU)
+    x_s: &[f32],  // [T, D]
+    hs_s: &[f32], // [T, H] hidden states
+    t_len: usize,
+    gh: usize,
+    d: usize,
+    h: usize,
+    wx_off: usize,
+    wh_off: usize,
+) {
+    gemm::sgemm_tn(gh, d, t_len, da_s, gh, x_s, d, &mut g[wx_off..wx_off + gh * d], d);
+    if t_len > 1 {
+        let a = &dh_s[gh..]; // rows 1..T
+        let b = &hs_s[..(t_len - 1) * h]; // rows 0..T−1
+        gemm::sgemm_tn(gh, h, t_len - 1, a, gh, b, h, &mut g[wh_off..wh_off + gh * h], h);
+    }
 }
 
 // ------------------------------------------------------------------ LSTM
@@ -97,45 +135,56 @@ impl Lstm {
         4 * self.hidden * self.hidden
     }
 
-    /// One sample's forward recurrence over its precomputed input
-    /// projections, recording gate activations and states per timestep:
-    /// `gates[t] = [i, f, g, o]` (post-nonlinearity, each `[H]`),
-    /// `cells[t] = c_t`, `hs[t] = h_t`.
+    /// The whole batch's forward recurrence in lockstep over its
+    /// precomputed input projections `xp[B, T, 4H]`. Writes the hidden
+    /// sequence into `hs[B, T, H]`; when `gates`/`cells` are non-empty
+    /// (`[B, T, 4H]` / `[B, T, H]`) the post-nonlinearity gate
+    /// activations and cell states are cached for BPTT.
     #[allow(clippy::too_many_arguments)]
     fn run_forward(
         &self,
-        xp: &[f32], // this sample's [T, 4H] input projections
+        xp: &[f32],
         wh: &[f32],
+        b: usize,
         t_len: usize,
-        gates: &mut [f32], // [T, 4H]
-        cells: &mut [f32], // [T, H]
-        hs: &mut [f32],    // [T, H]
+        hs: &mut [f32],
+        gates: &mut [f32],
+        cells: &mut [f32],
     ) {
         let h = self.hidden;
-        let mut prev_h = vec![0f32; h];
-        let mut prev_c = vec![0f32; h];
-        let mut a = vec![0f32; 4 * h];
+        let cache = !gates.is_empty();
+        let mut hprev = vec![0f32; b * h];
+        let mut cprev = vec![0f32; b * h];
+        let mut hv = vec![0f32; b * 4 * h];
         for t in 0..t_len {
-            a.copy_from_slice(&xp[t * 4 * h..(t + 1) * 4 * h]);
-            matvec_acc(wh, &prev_h, 4 * h, h, &mut a);
-            let gt = &mut gates[t * 4 * h..(t + 1) * 4 * h];
-            let ct = &mut cells[t * h..(t + 1) * h];
-            let ht = &mut hs[t * h..(t + 1) * h];
-            for j in 0..h {
-                let i = sigmoid(a[j]);
-                let f = sigmoid(a[h + j]);
-                let g = a[2 * h + j].tanh();
-                let o = sigmoid(a[3 * h + j]);
-                let c = f * prev_c[j] + i * g;
-                gt[j] = i;
-                gt[h + j] = f;
-                gt[2 * h + j] = g;
-                gt[3 * h + j] = o;
-                ct[j] = c;
-                ht[j] = o * c.tanh();
+            // hidden-side projections for every sample at once
+            hv.fill(0.0);
+            gemm::sgemm_nt(b, 4 * h, h, &hprev, h, wh, h, &mut hv, 4 * h);
+            for s in 0..b {
+                let xpr = &xp[(s * t_len + t) * 4 * h..(s * t_len + t + 1) * 4 * h];
+                let hvr = &hv[s * 4 * h..(s + 1) * 4 * h];
+                let ht = &mut hs[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                for j in 0..h {
+                    let i = sigmoid(xpr[j] + hvr[j]);
+                    let f = sigmoid(xpr[h + j] + hvr[h + j]);
+                    let g = (xpr[2 * h + j] + hvr[2 * h + j]).tanh();
+                    let o = sigmoid(xpr[3 * h + j] + hvr[3 * h + j]);
+                    let c = f * cprev[s * h + j] + i * g;
+                    if cache {
+                        let gt = &mut gates[(s * t_len + t) * 4 * h..];
+                        gt[j] = i;
+                        gt[h + j] = f;
+                        gt[2 * h + j] = g;
+                        gt[3 * h + j] = o;
+                        cells[(s * t_len + t) * h + j] = c;
+                    }
+                    ht[j] = o * c.tanh();
+                    // consumed only by the next step's GEMM — safe to
+                    // overwrite in place after this step's projections
+                    cprev[s * h + j] = c;
+                    hprev[s * h + j] = ht[j];
+                }
             }
-            prev_h.copy_from_slice(ht);
-            prev_c.copy_from_slice(ct);
         }
     }
 }
@@ -168,18 +217,7 @@ impl GradSampleLayer for Lstm {
         let bias = &params[self.wx_len() + self.wh_len()..];
         let xp = input_projections(xs, wx, bias, 4 * h, self.in_dim, b * t_len);
         let mut y = vec![0f32; b * t_len * h];
-        let mut gates = vec![0f32; t_len * 4 * h];
-        let mut cells = vec![0f32; t_len * h];
-        for s in 0..b {
-            self.run_forward(
-                &xp[s * t_len * 4 * h..(s + 1) * t_len * 4 * h],
-                wh,
-                t_len,
-                &mut gates,
-                &mut cells,
-                &mut y[s * t_len * h..(s + 1) * t_len * h],
-            );
-        }
+        self.run_forward(&xp, wh, b, t_len, &mut y, &mut [], &mut []);
         Ok(HostTensor::f32(vec![b, t_len, h], y))
     }
 
@@ -200,68 +238,63 @@ impl GradSampleLayer for Lstm {
         let bias = &params[self.wx_len() + self.wh_len()..];
         let (wx_off, wh_off, b_off) = (0, self.wx_len(), self.wx_len() + self.wh_len());
         let xp = input_projections(xs, wx, bias, 4 * h, d, b * t_len);
-        let mut dx = if need_dx {
-            vec![0f32; b * t_len * d]
-        } else {
-            Vec::new()
-        };
-        // per-sample scratch, reused across samples
-        let mut gates = vec![0f32; t_len * 4 * h];
-        let mut cells = vec![0f32; t_len * h];
-        let mut hs = vec![0f32; t_len * h];
-        let mut da = vec![0f32; 4 * h];
-        let mut dh = vec![0f32; h];
-        let mut dc = vec![0f32; h];
-        for s in 0..b {
-            self.run_forward(
-                &xp[s * t_len * 4 * h..(s + 1) * t_len * 4 * h],
-                wh,
-                t_len,
-                &mut gates,
-                &mut cells,
-                &mut hs,
-            );
-            let g = gs.row(s);
-            dh.fill(0.0);
-            dc.fill(0.0);
-            for t in (0..t_len).rev() {
-                let gt = &gates[t * 4 * h..(t + 1) * 4 * h];
-                let ct = &cells[t * h..(t + 1) * h];
+        // replay the forward recurrence with full caches
+        let mut hs = vec![0f32; b * t_len * h];
+        let mut gates = vec![0f32; b * t_len * 4 * h];
+        let mut cells = vec![0f32; b * t_len * h];
+        self.run_forward(&xp, wh, b, t_len, &mut hs, &mut gates, &mut cells);
+        // reverse sweep, whole batch in lockstep: pre-activation grads
+        // land in da_all[B, T, 4H]; each step's dh GEMM reads its rows
+        // straight out of that buffer through the T·4H leading stride
+        let mut da_all = vec![0f32; b * t_len * 4 * h];
+        let mut dh = vec![0f32; b * h];
+        let mut dc = vec![0f32; b * h];
+        for t in (0..t_len).rev() {
+            for s in 0..b {
+                let row = (s * t_len + t) * 4 * h;
+                let gt = &gates[row..row + 4 * h];
                 let dyt = &dys[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                let dar = &mut da_all[row..row + 4 * h];
                 for j in 0..h {
                     let (i, f, gg, o) = (gt[j], gt[h + j], gt[2 * h + j], gt[3 * h + j]);
-                    let tc = ct[j].tanh();
-                    let c_prev = if t > 0 { cells[(t - 1) * h + j] } else { 0.0 };
-                    let dhj = dh[j] + dyt[j];
-                    let dcj = dc[j] + dhj * o * (1.0 - tc * tc);
-                    da[j] = dcj * gg * i * (1.0 - i); // d a_i
-                    da[h + j] = dcj * c_prev * f * (1.0 - f); // d a_f
-                    da[2 * h + j] = dcj * i * (1.0 - gg * gg); // d a_g
-                    da[3 * h + j] = dhj * tc * o * (1.0 - o); // d a_o
-                    dc[j] = dcj * f; // carried to t−1
+                    let c = cells[(s * t_len + t) * h + j];
+                    let tc = c.tanh();
+                    let c_prev = if t > 0 { cells[(s * t_len + t - 1) * h + j] } else { 0.0 };
+                    let dhj = dh[s * h + j] + dyt[j];
+                    let dcj = dc[s * h + j] + dhj * o * (1.0 - tc * tc);
+                    dar[j] = dcj * gg * i * (1.0 - i); // d a_i
+                    dar[h + j] = dcj * c_prev * f * (1.0 - f); // d a_f
+                    dar[2 * h + j] = dcj * i * (1.0 - gg * gg); // d a_g
+                    dar[3 * h + j] = dhj * tc * o * (1.0 - o); // d a_o
+                    dc[s * h + j] = dcj * f; // carried to t−1
                 }
-                // parameter grads: W_x, W_h, b rows of this sample
-                let xt = &xs[(s * t_len + t) * d..(s * t_len + t + 1) * d];
-                outer_acc(&mut g[wx_off..wx_off + 4 * h * d], &da, xt, 4 * h, d);
-                if t > 0 {
-                    let h_prev = &hs[(t - 1) * h..t * h];
-                    outer_acc(&mut g[wh_off..wh_off + 4 * h * h], &da, h_prev, 4 * h, h);
-                }
-                for j in 0..4 * h {
-                    g[b_off + j] += da[j];
-                }
-                // carried hidden gradient and (optionally) input gradient
+            }
+            // carried hidden gradient: dh[B, H] = da_t[B, 4H] · W_h[4H, H]
+            // (skipped at t = 0 — there is no earlier step to carry to)
+            if t > 0 {
                 dh.fill(0.0);
-                matvec_t_acc(wh, &da, 4 * h, h, &mut dh);
-                if need_dx {
-                    let dxt = &mut dx[(s * t_len + t) * d..(s * t_len + t + 1) * d];
-                    matvec_t_acc(wx, &da, 4 * h, d, dxt);
+                gemm::sgemm(b, h, 4 * h, &da_all[t * 4 * h..], t_len * 4 * h, wh, h, &mut dh, h);
+            }
+        }
+        // per-sample parameter gradients from the [B, T, 4H] buffer
+        for s in 0..b {
+            let g = gs.row(s);
+            let da_s = &da_all[s * t_len * 4 * h..(s + 1) * t_len * 4 * h];
+            let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
+            let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
+            accumulate_param_grads(g, da_s, da_s, x_s, hs_s, t_len, 4 * h, d, h, wx_off, wh_off);
+            for t in 0..t_len {
+                for j in 0..4 * h {
+                    g[b_off + j] += da_s[t * 4 * h + j];
                 }
             }
         }
         if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
         }
+        // dx[B·T, D] = da_all[B·T, 4H] · W_x[4H, D] in one GEMM
+        let mut dx = vec![0f32; b * t_len * d];
+        gemm::sgemm(b * t_len, d, 4 * h, &da_all, 4 * h, wx, d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
     }
 
@@ -283,7 +316,7 @@ impl GradSampleLayer for Lstm {
 // ------------------------------------------------------------------- GRU
 
 /// Time-unrolled GRU: `[B, T, D]` → `[B, T, H]`, sharing the recurrent
-/// scaffolding (batched input projections + per-sample BPTT) with
+/// scaffolding (batched input projections + lockstep batched BPTT) with
 /// [`Lstm`].
 ///
 /// Gate order is PyTorch's `r, z, n`; parameters are
@@ -308,43 +341,51 @@ impl Gru {
         3 * self.hidden * self.hidden
     }
 
-    /// One sample's forward recurrence. Caches, per timestep:
-    /// `gates[t] = [r, z, n]` (post-nonlinearity) and `hp[t]`, the raw
-    /// hidden-side pre-activation of the new gate
-    /// `u_n = W_hn h_{t−1} + b_hn` (needed for `dr` in BPTT); `hs[t] = h_t`.
+    /// Batched forward recurrence. Writes `hs[B, T, H]`; when caching,
+    /// `gates[B, T, 3H]` holds `[r, z, n]` (post-nonlinearity) and
+    /// `un[B, T, H]` the raw hidden-side pre-activation of the new gate
+    /// `u_n = W_hn h_{t−1} + b_hn` (needed for `dr` in BPTT).
     #[allow(clippy::too_many_arguments)]
     fn run_forward(
         &self,
-        xp: &[f32], // this sample's [T, 3H] input projections (incl. b_x)
+        xp: &[f32],
         wh: &[f32],
         bh: &[f32],
+        b: usize,
         t_len: usize,
-        gates: &mut [f32], // [T, 3H]
-        un: &mut [f32],    // [T, H]
-        hs: &mut [f32],    // [T, H]
+        hs: &mut [f32],
+        gates: &mut [f32],
+        un: &mut [f32],
     ) {
         let h = self.hidden;
-        let mut prev_h = vec![0f32; h];
-        let mut hv = vec![0f32; 3 * h]; // W_h·h_{t−1} + b_h, all gates
+        let cache = !gates.is_empty();
+        let mut hprev = vec![0f32; b * h];
+        let mut hv = vec![0f32; b * 3 * h]; // W_h·h_{t−1} + b_h, all gates
         for t in 0..t_len {
-            hv.copy_from_slice(&bh[..3 * h]);
-            matvec_acc(wh, &prev_h, 3 * h, h, &mut hv);
-            let xt = &xp[t * 3 * h..(t + 1) * 3 * h];
-            let gt = &mut gates[t * 3 * h..(t + 1) * 3 * h];
-            let ut = &mut un[t * h..(t + 1) * h];
-            let ht = &mut hs[t * h..(t + 1) * h];
-            for j in 0..h {
-                let r = sigmoid(xt[j] + hv[j]);
-                let z = sigmoid(xt[h + j] + hv[h + j]);
-                let u = hv[2 * h + j];
-                let n = (xt[2 * h + j] + r * u).tanh();
-                gt[j] = r;
-                gt[h + j] = z;
-                gt[2 * h + j] = n;
-                ut[j] = u;
-                ht[j] = (1.0 - z) * n + z * prev_h[j];
+            for s in 0..b {
+                hv[s * 3 * h..(s + 1) * 3 * h].copy_from_slice(&bh[..3 * h]);
             }
-            prev_h.copy_from_slice(ht);
+            gemm::sgemm_nt(b, 3 * h, h, &hprev, h, wh, h, &mut hv, 3 * h);
+            for s in 0..b {
+                let xpr = &xp[(s * t_len + t) * 3 * h..(s * t_len + t + 1) * 3 * h];
+                let hvr = &hv[s * 3 * h..(s + 1) * 3 * h];
+                let ht = &mut hs[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                for j in 0..h {
+                    let r = sigmoid(xpr[j] + hvr[j]);
+                    let z = sigmoid(xpr[h + j] + hvr[h + j]);
+                    let u = hvr[2 * h + j];
+                    let n = (xpr[2 * h + j] + r * u).tanh();
+                    if cache {
+                        let gt = &mut gates[(s * t_len + t) * 3 * h..];
+                        gt[j] = r;
+                        gt[h + j] = z;
+                        gt[2 * h + j] = n;
+                        un[(s * t_len + t) * h + j] = u;
+                    }
+                    ht[j] = (1.0 - z) * n + z * hprev[s * h + j];
+                    hprev[s * h + j] = ht[j];
+                }
+            }
         }
     }
 }
@@ -378,19 +419,7 @@ impl GradSampleLayer for Gru {
         let bh = &params[self.wx_len() + self.wh_len() + 3 * h..];
         let xp = input_projections(xs, wx, bx, 3 * h, self.in_dim, b * t_len);
         let mut y = vec![0f32; b * t_len * h];
-        let mut gates = vec![0f32; t_len * 3 * h];
-        let mut un = vec![0f32; t_len * h];
-        for s in 0..b {
-            self.run_forward(
-                &xp[s * t_len * 3 * h..(s + 1) * t_len * 3 * h],
-                wh,
-                bh,
-                t_len,
-                &mut gates,
-                &mut un,
-                &mut y[s * t_len * h..(s + 1) * t_len * h],
-            );
-        }
+        self.run_forward(&xp, wh, bh, b, t_len, &mut y, &mut [], &mut []);
         Ok(HostTensor::f32(vec![b, t_len, h], y))
     }
 
@@ -414,72 +443,210 @@ impl GradSampleLayer for Gru {
         let bx_off = self.wx_len() + self.wh_len();
         let bh_off = bx_off + 3 * h;
         let xp = input_projections(xs, wx, bx, 3 * h, d, b * t_len);
-        let mut dx = if need_dx {
-            vec![0f32; b * t_len * d]
-        } else {
-            Vec::new()
-        };
-        let mut gates = vec![0f32; t_len * 3 * h];
-        let mut un = vec![0f32; t_len * h];
-        let mut hs = vec![0f32; t_len * h];
+        let mut hs = vec![0f32; b * t_len * h];
+        let mut gates = vec![0f32; b * t_len * 3 * h];
+        let mut un = vec![0f32; b * t_len * h];
+        self.run_forward(&xp, wh, bh, b, t_len, &mut hs, &mut gates, &mut un);
         // d a_x (input-side pre-activations, all gates) and d u (the
         // hidden-side pre-activations W_h·h + b_h, all gates) — they
         // differ only in the n gate, where du_n = da_n ⊙ r
-        let mut dax = vec![0f32; 3 * h];
-        let mut du = vec![0f32; 3 * h];
-        let mut dh = vec![0f32; h];
-        for s in 0..b {
-            self.run_forward(
-                &xp[s * t_len * 3 * h..(s + 1) * t_len * 3 * h],
-                wh,
-                bh,
-                t_len,
-                &mut gates,
-                &mut un,
-                &mut hs,
-            );
-            let g = gs.row(s);
-            dh.fill(0.0);
-            for t in (0..t_len).rev() {
-                let gt = &gates[t * 3 * h..(t + 1) * 3 * h];
-                let ut = &un[t * h..(t + 1) * h];
+        let mut dax_all = vec![0f32; b * t_len * 3 * h];
+        let mut du_all = vec![0f32; b * t_len * 3 * h];
+        let mut dh = vec![0f32; b * h];
+        for t in (0..t_len).rev() {
+            for s in 0..b {
+                let row = (s * t_len + t) * 3 * h;
+                let gt = &gates[row..row + 3 * h];
                 let dyt = &dys[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                let daxr = &mut dax_all[row..row + 3 * h];
+                let dur = &mut du_all[row..row + 3 * h];
                 for j in 0..h {
                     let (r, z, n) = (gt[j], gt[h + j], gt[2 * h + j]);
-                    let h_prev = if t > 0 { hs[(t - 1) * h + j] } else { 0.0 };
-                    let dhj = dh[j] + dyt[j];
+                    let u = un[(s * t_len + t) * h + j];
+                    let h_prev = if t > 0 { hs[(s * t_len + t - 1) * h + j] } else { 0.0 };
+                    let dhj = dh[s * h + j] + dyt[j];
                     let dan = dhj * (1.0 - z) * (1.0 - n * n);
                     let daz = dhj * (h_prev - n) * z * (1.0 - z);
-                    let dar = dan * ut[j] * r * (1.0 - r);
-                    dax[j] = dar;
-                    dax[h + j] = daz;
-                    dax[2 * h + j] = dan;
-                    du[j] = dar;
-                    du[h + j] = daz;
-                    du[2 * h + j] = dan * r;
+                    let dar = dan * u * r * (1.0 - r);
+                    daxr[j] = dar;
+                    daxr[h + j] = daz;
+                    daxr[2 * h + j] = dan;
+                    dur[j] = dar;
+                    dur[h + j] = daz;
+                    dur[2 * h + j] = dan * r;
                     // the direct carry h_t = … + z ⊙ h_{t−1}
-                    dh[j] = dhj * z;
+                    dh[s * h + j] = dhj * z;
                 }
-                let xt = &xs[(s * t_len + t) * d..(s * t_len + t + 1) * d];
-                outer_acc(&mut g[wx_off..wx_off + 3 * h * d], &dax, xt, 3 * h, d);
-                if t > 0 {
-                    let h_prev = &hs[(t - 1) * h..t * h];
-                    outer_acc(&mut g[wh_off..wh_off + 3 * h * h], &du, h_prev, 3 * h, h);
-                }
+            }
+            // dh[B, H] += du_t[B, 3H] · W_h[3H, H] (on top of the z carry;
+            // skipped at t = 0 — there is no earlier step to carry to)
+            if t > 0 {
+                gemm::sgemm(b, h, 3 * h, &du_all[t * 3 * h..], t_len * 3 * h, wh, h, &mut dh, h);
+            }
+        }
+        for s in 0..b {
+            let g = gs.row(s);
+            let dax_s = &dax_all[s * t_len * 3 * h..(s + 1) * t_len * 3 * h];
+            let du_s = &du_all[s * t_len * 3 * h..(s + 1) * t_len * 3 * h];
+            let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
+            let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
+            accumulate_param_grads(g, dax_s, du_s, x_s, hs_s, t_len, 3 * h, d, h, wx_off, wh_off);
+            for t in 0..t_len {
                 for j in 0..3 * h {
-                    g[bx_off + j] += dax[j];
-                    g[bh_off + j] += du[j];
-                }
-                matvec_t_acc(wh, &du, 3 * h, h, &mut dh);
-                if need_dx {
-                    let dxt = &mut dx[(s * t_len + t) * d..(s * t_len + t + 1) * d];
-                    matvec_t_acc(wx, &dax, 3 * h, d, dxt);
+                    g[bx_off + j] += dax_s[t * 3 * h + j];
+                    g[bh_off + j] += du_s[t * 3 * h + j];
                 }
             }
         }
         if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
         }
+        let mut dx = vec![0f32; b * t_len * d];
+        gemm::sgemm(b * t_len, d, 3 * h, &dax_all, 3 * h, wx, d, &mut dx, d);
+        Ok(HostTensor::f32(x.shape.clone(), dx))
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+// ------------------------------------------------------------------- RNN
+
+/// Generic tanh RNN: `h_t = tanh(W_x x_t + W_h h_{t−1} + b)` — the
+/// ~100-line single-gate specialization of the GRU scaffolding
+/// (`torch.nn.RNN` with the default nonlinearity). `[B, T, D]` →
+/// `[B, T, H]`; parameters `[W_x (H·D), W_h (H·H), b (H)]` with the
+/// bias pair folded like [`Lstm`].
+pub struct Rnn {
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+impl Rnn {
+    pub fn new(in_dim: usize, hidden: usize) -> Self {
+        Rnn { in_dim, hidden }
+    }
+
+    fn wx_len(&self) -> usize {
+        self.hidden * self.in_dim
+    }
+
+    fn wh_len(&self) -> usize {
+        self.hidden * self.hidden
+    }
+
+    /// Batched forward recurrence; `hs[B, T, H]` is both output and the
+    /// only cache BPTT needs (`tanh' = 1 − h²`).
+    fn run_forward(&self, xp: &[f32], wh: &[f32], b: usize, t_len: usize, hs: &mut [f32]) {
+        let h = self.hidden;
+        let mut hprev = vec![0f32; b * h];
+        let mut hv = vec![0f32; b * h];
+        for t in 0..t_len {
+            hv.fill(0.0);
+            gemm::sgemm_nt(b, h, h, &hprev, h, wh, h, &mut hv, h);
+            for s in 0..b {
+                let xpr = &xp[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                let ht = &mut hs[(s * t_len + t) * h..(s * t_len + t + 1) * h];
+                for j in 0..h {
+                    ht[j] = (xpr[j] + hv[s * h + j]).tanh();
+                    hprev[s * h + j] = ht[j];
+                }
+            }
+        }
+    }
+}
+
+impl GradSampleLayer for Rnn {
+    fn kind(&self) -> &'static str {
+        "rnn"
+    }
+
+    fn num_params(&self) -> usize {
+        self.wx_len() + self.wh_len() + self.hidden
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        let [t, d] = in_shape else {
+            bail!("rnn: expected [T, {}] input, got {in_shape:?}", self.in_dim);
+        };
+        if *d != self.in_dim {
+            bail!("rnn: input feature dim {d} != {}", self.in_dim);
+        }
+        Ok(vec![*t, self.hidden])
+    }
+
+    fn forward(&self, params: &[f32], x: &HostTensor) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("rnn forward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let h = self.hidden;
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bias = &params[self.wx_len() + self.wh_len()..];
+        let xp = input_projections(xs, wx, bias, h, self.in_dim, b * t_len);
+        let mut y = vec![0f32; b * t_len * h];
+        self.run_forward(&xp, wh, b, t_len, &mut y);
+        Ok(HostTensor::f32(vec![b, t_len, h], y))
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let (b, t_len) = seq_dims("rnn backward", x, self.in_dim)?;
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (h, d) = (self.hidden, self.in_dim);
+        let wx = &params[..self.wx_len()];
+        let wh = &params[self.wx_len()..self.wx_len() + self.wh_len()];
+        let bias = &params[self.wx_len() + self.wh_len()..];
+        let (wx_off, wh_off, b_off) = (0, self.wx_len(), self.wx_len() + self.wh_len());
+        let xp = input_projections(xs, wx, bias, h, d, b * t_len);
+        let mut hs = vec![0f32; b * t_len * h];
+        self.run_forward(&xp, wh, b, t_len, &mut hs);
+        let mut da_all = vec![0f32; b * t_len * h];
+        let mut dh = vec![0f32; b * h];
+        for t in (0..t_len).rev() {
+            for s in 0..b {
+                let row = (s * t_len + t) * h;
+                let dar = &mut da_all[row..row + h];
+                for j in 0..h {
+                    let hval = hs[row + j];
+                    dar[j] = (dh[s * h + j] + dys[row + j]) * (1.0 - hval * hval);
+                }
+            }
+            if t > 0 {
+                dh.fill(0.0);
+                gemm::sgemm(b, h, h, &da_all[t * h..], t_len * h, wh, h, &mut dh, h);
+            }
+        }
+        for s in 0..b {
+            let g = gs.row(s);
+            let da_s = &da_all[s * t_len * h..(s + 1) * t_len * h];
+            let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
+            let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
+            accumulate_param_grads(g, da_s, da_s, x_s, hs_s, t_len, h, d, h, wx_off, wh_off);
+            for t in 0..t_len {
+                for j in 0..h {
+                    g[b_off + j] += da_s[t * h + j];
+                }
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
+        }
+        let mut dx = vec![0f32; b * t_len * d];
+        gemm::sgemm(b * t_len, d, h, &da_all, h, wx, d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
     }
 
@@ -519,6 +686,15 @@ mod tests {
     }
 
     #[test]
+    fn rnn_shapes_and_param_count() {
+        let r = Rnn::new(3, 5);
+        assert_eq!(r.num_params(), 5 * 3 + 5 * 5 + 5);
+        assert_eq!(r.out_shape(&[7, 3]).unwrap(), vec![7, 5]);
+        assert!(r.out_shape(&[7, 4]).is_err());
+        assert!(r.out_shape(&[7]).is_err());
+    }
+
+    #[test]
     fn lstm_single_step_matches_manual() {
         // T = 1, H = 1, D = 1 with hand-picked params: the recurrence
         // reduces to one closed-form cell update from h0 = c0 = 0.
@@ -550,6 +726,20 @@ mod tests {
         let want = ((1.0 - z) * n) as f32; // h0 = 0
         let got = y.as_f32().unwrap()[0];
         assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn rnn_two_steps_match_manual() {
+        // H = D = 1: h1 = tanh(wx·x1 + b), h2 = tanh(wx·x2 + wh·h1 + b)
+        let r = Rnn::new(1, 1);
+        let params = vec![0.8, -0.5, 0.1]; // [wx, wh, b]
+        let x = HostTensor::f32(vec![1, 2, 1], vec![1.0, -2.0]);
+        let y = r.forward(&params, &x).unwrap();
+        let h1 = (0.8f64 + 0.1).tanh();
+        let h2 = (0.8 * -2.0 + -0.5 * h1 + 0.1).tanh();
+        let ys = y.as_f32().unwrap();
+        assert!((ys[0] as f64 - h1).abs() < 1e-6, "h1 {} vs {h1}", ys[0]);
+        assert!((ys[1] as f64 - h2).abs() < 1e-6, "h2 {} vs {h2}", ys[1]);
     }
 
     #[test]
@@ -612,10 +802,30 @@ mod tests {
     }
 
     #[test]
+    fn rnn_finite_difference_gradient_check() {
+        let m = NativeModel::new(
+            "fd_rnn",
+            vec![3, 2],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Rnn::new(2, 4))),
+                Op::MeanPool,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let x = HostTensor::f32(vec![1, 3, 2], vec![0.8, -0.3, 0.5, 1.1, -0.7, 0.2]);
+        fd_check(&m, x);
+    }
+
+    #[test]
     fn backward_need_dx_false_keeps_param_grads() {
         for layer in [
             Box::new(Lstm::new(2, 3)) as Box<dyn GradSampleLayer>,
             Box::new(Gru::new(2, 3)),
+            Box::new(Rnn::new(2, 3)),
         ] {
             let params = init_params(layer.as_ref(), 5);
             let p = layer.num_params();
@@ -657,6 +867,39 @@ mod tests {
                 "param {j}: stride-0 {} vs row sum {want}",
                 summed[j]
             );
+        }
+    }
+
+    /// The batched lockstep recurrence must reproduce the batch-of-1
+    /// path bitwise — the kernel-level statement of the microbatch
+    /// parity the integration tests assert through the full model.
+    #[test]
+    fn batched_recurrence_matches_batch_of_one_bitwise() {
+        use crate::rng::{gaussian, pcg::Xoshiro256pp};
+        for layer in [
+            Box::new(Lstm::new(3, 4)) as Box<dyn GradSampleLayer>,
+            Box::new(Gru::new(3, 4)),
+            Box::new(Rnn::new(3, 4)),
+        ] {
+            let params = init_params(layer.as_ref(), 17);
+            let (b, t, d) = (5, 6, 3);
+            let mut rng = Xoshiro256pp::seed_from_u64(23);
+            let mut xv = vec![0f32; b * t * d];
+            gaussian::fill_standard_normal(&mut rng, &mut xv);
+            let x = HostTensor::f32(vec![b, t, d], xv.clone());
+            let y = layer.forward(&params, &x).unwrap();
+            let ys = y.as_f32().unwrap();
+            let per = t * layer.out_shape(&[t, d]).unwrap()[1];
+            for s in 0..b {
+                let xs1 = HostTensor::f32(vec![1, t, d], xv[s * t * d..(s + 1) * t * d].to_vec());
+                let y1 = layer.forward(&params, &xs1).unwrap();
+                assert_eq!(
+                    y1.as_f32().unwrap(),
+                    &ys[s * per..(s + 1) * per],
+                    "{} sample {s}: batched forward != batch-of-1",
+                    layer.kind()
+                );
+            }
         }
     }
 

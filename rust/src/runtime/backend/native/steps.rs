@@ -21,7 +21,7 @@ use crate::runtime::tensor::HostTensor;
 use super::attention::MultiHeadAttention;
 use super::layers::{Conv2d, Embedding, GradSampleLayer, GradSink, LayerNorm, Linear};
 use super::model::{clip_factor, l2_norm, NativeModel};
-use super::recurrent::{Gru, Lstm};
+use super::recurrent::{Gru, Lstm, Rnn};
 
 fn check_batch(kind: &str, x: &HostTensor, y: &[i32], mask: &[f32], batch: usize) -> Result<()> {
     let b = *x.shape.first().unwrap_or(&0);
@@ -269,6 +269,7 @@ pub const BENCH_KINDS: &[&str] = &[
     "layernorm",
     "lstm",
     "gru",
+    "rnn",
     "mha",
 ];
 
@@ -316,6 +317,12 @@ impl NativeLayerBench {
             }
             "gru" => {
                 let l = Gru::new(32, 32);
+                let mut v = vec![0f32; batch * 16 * 32];
+                crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
+                (Box::new(l), HostTensor::f32(vec![batch, 16, 32], v))
+            }
+            "rnn" => {
+                let l = Rnn::new(32, 32);
                 let mut v = vec![0f32; batch * 16 * 32];
                 crate::rng::gaussian::fill_standard_normal(&mut rng, &mut v);
                 (Box::new(l), HostTensor::f32(vec![batch, 16, 32], v))

@@ -174,7 +174,8 @@ fn parity_full_task_models() {
 
 /// GRU has no synth task of its own; its microbatch-oracle parity runs
 /// on a hand-built stack (the acceptance criterion covers all three new
-/// kernels: lstm, gru, mha).
+/// kernels: lstm, gru, mha). Since PR 5 this batch runs through the
+/// blocked gemm engine, so the oracle also pins the blocked path.
 #[test]
 fn parity_gru_batched_vs_microbatch() {
     use opacus_rs::runtime::backend::native::Gru;
@@ -193,6 +194,41 @@ fn parity_gru_batched_vs_microbatch() {
     .unwrap();
     let x = f32_batch(vec![4, 5, 3], 5);
     assert_microbatch_parity(&m, &x, &[0, 1, 1, 0], 1e-5);
+}
+
+/// Satellite (PR 5): the generic tanh RNN kernel rides the same batched
+/// projections as LSTM/GRU from day one — microbatch-oracle parity on a
+/// hand-built stack, like GRU.
+#[test]
+fn parity_rnn_batched_vs_microbatch() {
+    use opacus_rs::runtime::backend::native::Rnn;
+    let m = NativeModel::new(
+        "parity_rnn",
+        vec![5, 3], // T = 5, D = 3
+        "f32",
+        2,
+        None,
+        vec![
+            Op::Layer(Box::new(Rnn::new(3, 4))),
+            Op::MeanPool,
+            Op::Layer(Box::new(Linear::new(4, 2))),
+        ],
+    )
+    .unwrap();
+    let x = f32_batch(vec![4, 5, 3], 6);
+    assert_microbatch_parity(&m, &x, &[1, 0, 1, 0], 1e-5);
+    // the validator's rnn row accepts the kernel's kind string
+    let meta = opacus_rs::runtime::artifact::ModelMeta {
+        task: "parity_rnn".into(),
+        num_params: m.num_params(),
+        input_shape: vec![5, 3],
+        input_dtype: "f32".into(),
+        num_classes: 2,
+        layer_kinds: m.layer_kinds(),
+        vocab: None,
+        init_file: String::new(),
+    };
+    assert!(opacus_rs::privacy::validator::validate_model(&meta).is_empty());
 }
 
 /// Acceptance (PR 4): fused-native vs virtual-native ε/param parity for
