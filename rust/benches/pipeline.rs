@@ -1,0 +1,188 @@
+//! Step-pipeline throughput — sequential vs pipelined DP-SGD (PR 6).
+//!
+//! "Sequential" is the strict baseline: one worker thread, gather →
+//! compute → noise/update inline. "Pipelined" is the serve-mode hot
+//! path: batch gathers prefetched `depth` steps ahead on a producer
+//! thread (bounded channel) while the consumer runs sharded compute on
+//! the worker pool. Determinism is not traded away for the overlap —
+//! `cargo test --test serve` pins byte-identical ε and parameters — so
+//! this bench only measures wall-clock.
+//!
+//! Timing comes from the trainer's own [`PipelineStats`] (steps and
+//! wall seconds of the step loop only — dataset synthesis excluded),
+//! which also yields per-stage occupancy for the uploaded artifact.
+//!
+//! Usage: cargo bench --bench pipeline [-- --tasks lstm,mnist
+//!        --samples 256 --epochs 2 --depth 2 --workers 2
+//!        --bench-out BENCH_pr6.json --check]
+//!
+//! `--check` gates CI: the lstm row must show pipelined ≥ 1.2×
+//! sequential steps/sec (the PR-6 acceptance criterion).
+
+use anyhow::{bail, Result};
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::{Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use opacus_rs::trainer::{PipelineStats, PrivateTrainer};
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::Table;
+
+const BATCH: usize = 64;
+/// The acceptance threshold on the lstm row under `--check`.
+const MIN_LSTM_SPEEDUP: f64 = 1.2;
+
+fn build(
+    task: &str,
+    samples: usize,
+    workers: usize,
+    depth: Option<usize>,
+) -> Result<PrivateTrainer> {
+    let sys = Opacus::load_with_backend(
+        "artifacts_that_do_not_exist",
+        task,
+        Backend::Native,
+        samples,
+        32,
+        7,
+    )?;
+    let mut b = PrivacyEngine::private()
+        .backend(Backend::Native)
+        .noise(NoiseSource::Deterministic)
+        .sampling(SamplingMode::Uniform)
+        .noise_multiplier(1.1)
+        .max_grad_norm(1.0)
+        .lr(0.05)
+        .logical_batch(BATCH)
+        .physical_batch(BATCH)
+        .seed(7);
+    if workers > 1 {
+        b = b.workers(workers);
+    }
+    if let Some(d) = depth {
+        b = b.pipeline(d);
+    }
+    Ok(b.build(sys)?.into_trainer())
+}
+
+/// Train `epochs` epochs and return the trainer's own stage accounting.
+fn measure(
+    task: &str,
+    samples: usize,
+    epochs: usize,
+    workers: usize,
+    depth: Option<usize>,
+) -> Result<PipelineStats> {
+    let mut t = build(task, samples, workers, depth)?;
+    t.train_epochs(epochs)?;
+    t.metrics
+        .pipeline
+        .ok_or_else(|| anyhow::anyhow!("trainer recorded no pipeline stats"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench", "check"])?;
+    let samples = args.get_usize("samples", 256)?;
+    let epochs = args.get_usize("epochs", 2)?;
+    let depth = args.get_usize("depth", 2)?;
+    let workers = args.get_usize("workers", 2)?;
+    let tasks: Vec<String> = args
+        .get_or("tasks", "lstm,mnist,embed")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    let title = format!(
+        "step pipeline (native, batch {BATCH}, {samples} samples/epoch, {epochs} epochs): \
+         sequential (1 worker) vs pipelined (depth {depth}, {workers} workers), steps/sec"
+    );
+    let mut table = Table::new(
+        &title,
+        Table::header_from(&[
+            "task",
+            "sequential",
+            "pipelined",
+            "speedup",
+            "prefetch occ",
+            "compute occ",
+        ]),
+    );
+
+    // (task, sequential sps, pipelined sps, speedup)
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for task in &tasks {
+        let seq = measure(task, samples, epochs, 1, None)?;
+        let pip = measure(task, samples, epochs, workers, Some(depth))?;
+        let (s_sps, p_sps) = (seq.steps_per_sec(), pip.steps_per_sec());
+        let speedup = if s_sps > 0.0 { p_sps / s_sps } else { 0.0 };
+        table.add_row(vec![
+            task.clone(),
+            format!("{s_sps:.2}"),
+            format!("{p_sps:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", pip.prefetch_occupancy()),
+            format!("{:.2}", pip.compute_occupancy()),
+        ]);
+        rows.push((task.clone(), s_sps, p_sps, speedup));
+    }
+    table.print();
+
+    if let Some(bench_out) = args.get("bench-out") {
+        let tasks_flag = tasks.join(",");
+        let command = format!(
+            "cd rust && cargo bench --bench pipeline -- --samples {samples} --epochs {epochs} \
+             --depth {depth} --workers {workers} --tasks {tasks_flag} --bench-out {bench_out}"
+        );
+        let rows_json = Json::Obj(
+            rows.iter()
+                .map(|(t, s, p, sp)| {
+                    (
+                        t.clone(),
+                        Json::obj(vec![
+                            ("sequential_steps_per_sec", Json::num(*s)),
+                            ("pipelined_steps_per_sec", Json::num(*p)),
+                            ("speedup", Json::num(*sp)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("bench", Json::str("rust/benches/pipeline.rs")),
+            (
+                "metric",
+                Json::str(&format!(
+                    "steps_per_sec at physical batch {BATCH}: sequential (1 worker, inline \
+                     gather) vs pipelined (prefetch depth {depth}, {workers} workers)"
+                )),
+            ),
+            ("command", Json::str(&command)),
+            ("samples_per_epoch", Json::num(samples as f64)),
+            ("epochs", Json::num(epochs as f64)),
+            (
+                "acceptance",
+                Json::str(&format!(
+                    "lstm speedup >= {MIN_LSTM_SPEEDUP}x (enforced in CI via --check)"
+                )),
+            ),
+            ("status", Json::str("recorded")),
+            ("tasks", rows_json),
+        ]);
+        std::fs::write(bench_out, j.to_string())?;
+        println!("perf baseline -> {bench_out}");
+    }
+
+    if args.has_flag("check") {
+        let Some((_, s, p, speedup)) = rows.iter().find(|(t, ..)| t == "lstm") else {
+            bail!("--check needs the lstm task in --tasks");
+        };
+        if *speedup < MIN_LSTM_SPEEDUP {
+            bail!(
+                "pipeline acceptance FAILED: lstm pipelined {p:.2} steps/s vs sequential \
+                 {s:.2} steps/s = {speedup:.2}x < {MIN_LSTM_SPEEDUP}x"
+            );
+        }
+        println!("pipeline acceptance OK: lstm {speedup:.2}x >= {MIN_LSTM_SPEEDUP}x");
+    }
+    Ok(())
+}

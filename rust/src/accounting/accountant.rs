@@ -24,6 +24,13 @@ pub trait Accountant: Send {
 
     /// Mechanism name (for logs / validation messages).
     fn mechanism(&self) -> &'static str;
+
+    /// The recorded history, for checkpoint serialization. Replaying
+    /// these entries through [`Accountant::record`] on a fresh accountant
+    /// of the same kind reproduces ε bit-for-bit: both built-in
+    /// accountants compute ε purely from their history (RDP's
+    /// merge-on-identical-parameters is replay-stable).
+    fn history_entries(&self) -> Vec<HistoryEntry>;
 }
 
 /// History entry: a run of identical steps.
@@ -108,6 +115,10 @@ impl Accountant for RdpAccountant {
     fn mechanism(&self) -> &'static str {
         "rdp"
     }
+
+    fn history_entries(&self) -> Vec<HistoryEntry> {
+        self.history.clone()
+    }
 }
 
 /// Gaussian-DP (CLT) accountant. Composition across heterogeneous
@@ -156,6 +167,10 @@ impl Accountant for GdpAccountant {
 
     fn mechanism(&self) -> &'static str {
         "gdp"
+    }
+
+    fn history_entries(&self) -> Vec<HistoryEntry> {
+        self.history.clone()
     }
 }
 
@@ -265,6 +280,29 @@ mod tests {
         assert!(err.contains("prv"), "error should name the bad kind: {err}");
         for kind in VALID_ACCOUNTANTS {
             assert!(err.contains(kind), "error should list '{kind}': {err}");
+        }
+    }
+
+    #[test]
+    fn history_replay_is_epsilon_exact() {
+        // serialize → replay into a fresh accountant → ε bit-identical
+        for kind in VALID_ACCOUNTANTS {
+            let mut a = make_accountant(kind).unwrap();
+            a.record(1.1, 0.01, 120);
+            a.record(1.1, 0.01, 40); // merge path (rdp)
+            a.record(0.9, 0.02, 77); // schedule change
+            let mut b = make_accountant(kind).unwrap();
+            for h in a.history_entries() {
+                b.record(h.noise_multiplier, h.sample_rate, h.steps);
+            }
+            assert_eq!(a.steps(), b.steps());
+            for delta in [1e-5, 1e-6] {
+                assert_eq!(
+                    a.get_epsilon(delta).to_bits(),
+                    b.get_epsilon(delta).to_bits(),
+                    "{kind} replay must be bit-exact at δ={delta}"
+                );
+            }
         }
     }
 

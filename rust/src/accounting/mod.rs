@@ -13,6 +13,6 @@ pub mod rdp;
 pub mod special;
 
 pub use accountant::{
-    make_accountant, Accountant, GdpAccountant, RdpAccountant, VALID_ACCOUNTANTS,
+    make_accountant, Accountant, GdpAccountant, HistoryEntry, RdpAccountant, VALID_ACCOUNTANTS,
 };
 pub use calibration::{get_noise_multiplier, CalibKind};

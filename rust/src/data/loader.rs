@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::data::dataset::{Batch, Dataset};
 use crate::rng::{shuffle, Rng};
 
 /// One sampled logical batch (indices into the dataset).
@@ -28,6 +29,42 @@ impl LogicalBatch {
         }
         self.indices.chunks(phys).collect()
     }
+}
+
+/// One prefetched logical step: the logical batch plus its gathered,
+/// mask-padded physical chunks, ready for the compute stage. Produced by
+/// [`prefetch_batch`] — on the caller's thread (sequential path) or on a
+/// prefetch thread ahead of compute (pipelined path); the two are
+/// byte-identical because this is the only gather-side code path.
+#[derive(Debug, Clone)]
+pub struct PrefetchedBatch {
+    pub lb: LogicalBatch,
+    pub chunks: Vec<Batch>,
+    /// Wall-clock seconds the gathers took (prefetch-stage accounting).
+    pub gather_secs: f64,
+}
+
+/// Gather one logical batch's physical chunks from the dataset: split
+/// into at most `chunk_size` indices per chunk (matching
+/// `BatchMemoryManager::chunk_size`; an empty batch still yields one
+/// empty noise-only chunk), each padded to the `padded_batch` rows the
+/// step executable was compiled for.
+pub fn prefetch_batch(
+    data: &Dataset,
+    lb: LogicalBatch,
+    chunk_size: usize,
+    padded_batch: usize,
+) -> Result<PrefetchedBatch> {
+    let start = std::time::Instant::now();
+    let mut chunks = Vec::with_capacity(lb.indices.len().div_ceil(chunk_size.max(1)).max(1));
+    for chunk in lb.chunks(chunk_size) {
+        chunks.push(data.gather(chunk, padded_batch)?);
+    }
+    Ok(PrefetchedBatch {
+        lb,
+        chunks,
+        gather_secs: start.elapsed().as_secs_f64(),
+    })
 }
 
 /// Uniform loader: shuffles 0..n each epoch, emits fixed-size batches.

@@ -10,4 +10,4 @@ pub mod loader;
 pub mod synth;
 
 pub use dataset::{Batch, Dataset, SampleData};
-pub use loader::{LogicalBatch, PoissonLoader, UniformLoader};
+pub use loader::{prefetch_batch, LogicalBatch, PoissonLoader, PrefetchedBatch, UniformLoader};

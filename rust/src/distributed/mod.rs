@@ -41,7 +41,7 @@ use std::str::FromStr;
 
 pub use self::noise::{worker_seed, NoiseDivision};
 pub use self::pool::WorkerPool;
-pub use self::reduce::tree_reduce;
+pub use self::reduce::{tree_reduce, IncrementalReduce};
 pub use self::shard::ShardPlan;
 pub use self::step::DistributedStep;
 

@@ -117,6 +117,28 @@ impl WorkerPool {
     /// order. Fails fast if any job errors or a worker thread died.
     pub(crate) fn run(&self, jobs: Vec<(usize, Job)>) -> Result<Vec<JobOut>> {
         let total = jobs.len();
+        let mut outs: Vec<Option<JobOut>> = std::iter::repeat_with(|| None).take(total).collect();
+        self.run_streaming(jobs, |slot, out| {
+            outs[slot] = Some(out);
+            Ok(())
+        })?;
+        Ok(outs
+            .into_iter()
+            .map(|o| o.expect("every slot received a reply"))
+            .collect())
+    }
+
+    /// Dispatch `(rank, job)` pairs and hand each reply to `on_reply` in
+    /// *arrival* order (slots identify dispatch position) — the
+    /// overlapped-reduce entry point: the caller can start folding early
+    /// replies while slower shards are still computing. Fails fast if
+    /// any job errors, a worker thread died, or `on_reply` errors.
+    pub(crate) fn run_streaming(
+        &self,
+        jobs: Vec<(usize, Job)>,
+        mut on_reply: impl FnMut(usize, JobOut) -> Result<()>,
+    ) -> Result<()> {
+        let total = jobs.len();
         let (tx, rx) = mpsc::channel();
         for (slot, (rank, job)) in jobs.into_iter().enumerate() {
             if rank >= self.senders.len() {
@@ -132,17 +154,13 @@ impl WorkerPool {
                 .map_err(|_| anyhow!("worker {rank} terminated before accepting work"))?;
         }
         drop(tx);
-        let mut outs: Vec<Option<JobOut>> = std::iter::repeat_with(|| None).take(total).collect();
         for _ in 0..total {
             let (slot, res) = rx
                 .recv()
                 .map_err(|_| anyhow!("a worker terminated before replying"))?;
-            outs[slot] = Some(res?);
+            on_reply(slot, res?)?;
         }
-        Ok(outs
-            .into_iter()
-            .map(|o| o.expect("every slot received a reply"))
-            .collect())
+        Ok(())
     }
 }
 

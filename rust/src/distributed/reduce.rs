@@ -31,6 +31,101 @@ pub fn tree_reduce(mut parts: Vec<Vec<f64>>) -> Vec<f64> {
     parts.pop().unwrap_or_default()
 }
 
+/// Arrival-order incremental tree reduction (the overlapped-reduce
+/// entry point of the step pipeline): partials are pushed by *slot* as
+/// workers reply, and merged as soon as both members of a tree pair are
+/// present — so reduction work overlaps the stragglers' compute instead
+/// of waiting for every shard.
+///
+/// The tree shape is identical to [`tree_reduce`]'s (level-ℓ node `i`
+/// pairs with `i ^ 1`; an odd tail promotes unmerged), and each pair is
+/// accumulated lower-slot += higher-slot. IEEE-754 f64 addition is
+/// commutative, so within that fixed shape the arrival order cannot
+/// change a single bit of the result — `finish()` equals
+/// `tree_reduce(parts-in-slot-order)` exactly, pinned by tests.
+pub struct IncrementalReduce {
+    /// `levels[l][i]`: the level-ℓ node covering leaves
+    /// `[i·2^ℓ, (i+1)·2^ℓ)`, once both children have merged into it.
+    levels: Vec<Vec<Option<Vec<f64>>>>,
+    leaves: usize,
+    received: usize,
+}
+
+impl IncrementalReduce {
+    /// A reducer expecting `leaves` partial vectors (slots `0..leaves`).
+    pub fn new(leaves: usize) -> IncrementalReduce {
+        let mut levels = Vec::new();
+        let mut n = leaves;
+        if n > 0 {
+            loop {
+                levels.push(std::iter::repeat_with(|| None).take(n).collect());
+                if n == 1 {
+                    break;
+                }
+                n = n.div_ceil(2);
+            }
+        }
+        IncrementalReduce {
+            levels,
+            leaves,
+            received: 0,
+        }
+    }
+
+    /// Insert the partial for `slot`, merging up the tree as far as the
+    /// already-arrived partials allow.
+    pub fn push(&mut self, slot: usize, part: Vec<f64>) {
+        assert!(slot < self.leaves, "slot {slot} out of range ({} leaves)", self.leaves);
+        assert!(self.levels[0][slot].is_none(), "slot {slot} pushed twice");
+        self.received += 1;
+        let (mut level, mut i, mut node) = (0usize, slot, part);
+        loop {
+            if level + 1 == self.levels.len() {
+                // the root
+                self.levels[level][i] = Some(node);
+                return;
+            }
+            let width = self.levels[level].len();
+            let partner = i ^ 1;
+            if partner >= width {
+                // odd tail: promote unmerged
+                (level, i) = (level + 1, i / 2);
+                continue;
+            }
+            match self.levels[level][partner].take() {
+                Some(other) => {
+                    // fixed accumulation direction: lower slot += higher
+                    let (mut a, b) = if i < partner { (node, other) } else { (other, node) };
+                    debug_assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter_mut().zip(b.iter()) {
+                        *x += *y;
+                    }
+                    (level, i, node) = (level + 1, i / 2, a);
+                }
+                None => {
+                    self.levels[level][i] = Some(node);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// The fully reduced sum. Panics if any slot is missing (the caller
+    /// collects exactly one reply per dispatched job); empty reducers
+    /// return an empty vector, mirroring [`tree_reduce`].
+    pub fn finish(mut self) -> Vec<f64> {
+        assert_eq!(
+            self.received, self.leaves,
+            "incremental reduce finished early: {}/{} partials arrived",
+            self.received, self.leaves
+        );
+        match self.levels.last_mut() {
+            Some(root) => root[0].take().expect("root present once all slots arrived"),
+            None => Vec::new(),
+        }
+    }
+}
+
 /// Reduce per-shard DP gradient partials (rank order) into one root
 /// partial: tree-reduced gradient sum plus summed loss/norm/count
 /// statistics. `num_params` sizes the result when zero shards ran
@@ -105,6 +200,49 @@ mod tests {
         let r = reduce_grads(Vec::new(), 3);
         assert_eq!(r.gsum, vec![0.0, 0.0, 0.0]);
         assert_eq!(r.real, 0);
+    }
+
+    #[test]
+    fn incremental_matches_tree_reduce_in_any_arrival_order() {
+        // values chosen so f64 rounding differs between tree shapes —
+        // bit-equality below therefore proves the shape is preserved
+        for n in 1..=9usize {
+            let parts: Vec<Vec<f64>> = (0..n)
+                .map(|i| vec![(i as f64 + 0.3) * 0.017, 1.0 / (i as f64 + 1.7)])
+                .collect();
+            let want = tree_reduce(parts.clone());
+            // a few deterministic arrival permutations: forward,
+            // reverse, odd-slots-first
+            let orders: Vec<Vec<usize>> = vec![
+                (0..n).collect(),
+                (0..n).rev().collect(),
+                (0..n).filter(|i| i % 2 == 1).chain((0..n).filter(|i| i % 2 == 0)).collect(),
+            ];
+            for order in orders {
+                let mut red = IncrementalReduce::new(n);
+                for &slot in &order {
+                    red.push(slot, parts[slot].clone());
+                }
+                let got = red.finish();
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "n={n} order={order:?}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_empty_and_missing_slots() {
+        assert!(IncrementalReduce::new(0).finish().is_empty());
+        let mut red = IncrementalReduce::new(3);
+        red.push(1, vec![1.0]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| red.finish()));
+        assert!(r.is_err(), "finishing with missing slots must panic");
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::runtime::tensor::HostTensor;
 
 use super::noise::{combine_shares, NoiseDivision};
 use super::pool::{Job, JobOut, WorkerPool};
-use super::reduce::{reduce_grads, tree_reduce};
+use super::reduce::{tree_reduce, IncrementalReduce};
 use super::shard::ShardPlan;
 use super::ExecSpec;
 
@@ -124,8 +124,12 @@ impl DistributedStep {
         Ok(jobs)
     }
 
-    /// Full sharded clipped-gradient computation: dispatch, collect,
-    /// tree-reduce.
+    /// Full sharded clipped-gradient computation with overlapped
+    /// reduction: shard partials are folded into the pairwise tree as
+    /// workers reply (arrival order), so reduce work hides behind the
+    /// slowest shard's compute. The tree shape is fixed and f64 `+` is
+    /// commutative, so the result is bit-identical to the barriered
+    /// `reduce_grads` in rank order.
     fn reduced_grad(
         &self,
         params: &Arc<Vec<f32>>,
@@ -135,15 +139,35 @@ impl DistributedStep {
         clip: f32,
     ) -> Result<DpGradPartial> {
         let jobs = self.shard_jobs(params, x, y, mask, Some(clip))?;
-        let outs = self.pool.run(jobs)?;
-        let mut parts = Vec::with_capacity(outs.len());
-        for out in outs {
-            match out {
-                JobOut::Grad(p) => parts.push(p),
-                _ => bail!("distributed step: unexpected worker output for a grad job"),
+        let shards = jobs.len();
+        let mut red = IncrementalReduce::new(shards);
+        // scalar stats are summed in slot order after the fact so the
+        // metrics are as arrival-order-independent as the gradient
+        let mut stats = vec![(0.0f64, 0.0f64, 0usize); shards];
+        self.pool.run_streaming(jobs, |slot, out| match out {
+            JobOut::Grad(p) => {
+                stats[slot] = (p.loss_sum, p.snorm_sum, p.real);
+                red.push(slot, p.gsum);
+                Ok(())
             }
+            _ => bail!("distributed step: unexpected worker output for a grad job"),
+        })?;
+        let mut gsum = red.finish();
+        if gsum.is_empty() {
+            gsum = vec![0f64; self.model.num_params()];
         }
-        Ok(reduce_grads(parts, self.model.num_params()))
+        let (mut loss_sum, mut snorm_sum, mut real) = (0.0, 0.0, 0);
+        for &(l, s, r) in &stats {
+            loss_sum += l;
+            snorm_sum += s;
+            real += r;
+        }
+        Ok(DpGradPartial {
+            gsum,
+            loss_sum,
+            snorm_sum,
+            real,
+        })
     }
 
     /// One standard-normal noise vector composed from per-worker σ/√N

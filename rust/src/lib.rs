@@ -101,6 +101,8 @@
 //! * [`distributed`] — data-parallel DP-SGD: worker pool, shard planner,
 //!   tree reduction, DPDDP noise division
 //! * [`trainer`] — DP optimizer (virtual steps), training loop, metrics
+//! * [`serve`] — streaming service: step pipeline config, durable
+//!   checkpoints, multi-job scheduler, graceful shutdown
 //! * [`data`] — synthetic datasets, uniform + Poisson loaders
 //! * [`bench`] — the harness regenerating every paper table and figure
 //! * [`coordinator`] — the user-facing facade (`Opacus`)
@@ -119,5 +121,6 @@ pub mod distributed;
 pub mod privacy;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod trainer;
 pub mod util;

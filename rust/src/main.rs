@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      train a task with DP-SGD (σ given or calibrated from ε)
+//!   serve      run a multi-job training service with per-job ε budgets
 //!   epsilon    query the accountant for a hypothetical training run
 //!   calibrate  find σ for a target (ε, δ)
 //!   validate   run the DP-compatibility validator on a task's model
@@ -12,6 +13,8 @@
 //!   opacus train --task mnist --epochs 5 --sigma 1.1 --clip 1.0
 //!   opacus train --task attn --backend native --epochs 3 --sigma 1.0
 //!   opacus train --task embed --eps 3.0 --delta 1e-5 --epochs 8 --secure
+//!   opacus train --task lstm --pipeline 2 --checkpoint ckpt --resume
+//!   opacus serve --jobs a.json,b.json --out serve-out --resume
 //!   opacus epsilon --q 0.004 --sigma 1.1 --steps 2344 --compare
 //!   opacus calibrate --eps 3 --delta 1e-5 --q 0.01 --steps 5000
 
@@ -28,16 +31,25 @@ use opacus_rs::privacy::{
 };
 use opacus_rs::runtime::artifact::Registry;
 use opacus_rs::runtime::ExecutionBackend;
+use opacus_rs::serve::{
+    checkpoint_exists, shutdown, JobSpec, JobStatus, ServeConfig, Service, TrainerCheckpoint,
+};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::table::Table;
 
-const FLAGS: &[&str] = &["secure", "uniform", "compare", "help"];
+const FLAGS: &[&str] = &["secure", "uniform", "compare", "resume", "help"];
+
+/// Logical steps between shutdown-flag polls (and, under `serve`, per
+/// scheduling turn by default): small enough that Ctrl-C feels
+/// immediate, large enough to amortize the checkpoint/poll overhead.
+const STEP_QUANTUM: usize = 8;
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, FLAGS)?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
         Some("epsilon") => cmd_epsilon(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("validate") => cmd_validate(&args),
@@ -62,7 +74,9 @@ SUBCOMMANDS
              [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
              [--backend auto|xla|native] [--workers N|auto]
              [--noise-division root|perworker] [--artifacts DIR]
-             [--out metrics.json]
+             [--out metrics.json] [--pipeline N] [--checkpoint DIR] [--resume]
+  serve      --jobs spec.json[,spec2.json…] [--out DIR] [--quantum N]
+             [--kill-after STEPS] [--resume]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
   validate   --task T [--backend auto|xla|native] [--artifacts DIR]
@@ -78,6 +92,18 @@ classification through multi-head self-attention — both native.
 `auto` sizes the pool from the CPU count). Noise is added once at the
 root by default; --noise-division perworker opts into DPDDP-style
 sigma/sqrt(N) per-worker splitting (same distribution, same epsilon).
+
+--pipeline N overlaps batch prefetch with compute through a bounded
+N-deep pipeline — byte-identical results, better wall-clock. With
+--checkpoint DIR, train writes a durable checkpoint at every step
+quantum and on SIGINT/SIGTERM (metrics are flushed too); --resume picks
+the run back up from DIR with a byte-identical privacy ledger.
+
+serve runs many jobs concurrently, each declared in a JSON spec with
+its own (epsilon, delta) budget; a job whose next quantum would exceed
+its budget stops cleanly with a final checkpoint ('exhausted'), and an
+interrupted service resumes every job from its checkpoint with --resume.
+--kill-after N stops the service after N total steps (testing hook).
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -141,11 +167,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("calibrating σ for (ε={eps}, δ={delta}) over {epochs} epochs…");
         builder = builder.target_epsilon(eps, delta, epochs);
     }
+    if let Some(depth) = args.get("pipeline") {
+        builder = builder.pipeline(depth.parse()?);
+    }
     let private = builder.build(sys)?;
     let (mut trainer, optimizer, loader) = private.into_parts();
     if let Some(s) = args.get("schedule") {
         trainer.noise_scheduler = s.parse::<NoiseScheduler>()?;
     }
+
+    let ckpt_dir = args.get("checkpoint").map(Path::new);
+    if let Some(dir) = ckpt_dir {
+        if args.has_flag("resume") && checkpoint_exists(dir) {
+            TrainerCheckpoint::load(dir)?.apply(&mut trainer)?;
+            println!(
+                "resumed from {dir:?} at step {} (epoch {}, ε = {:.4})",
+                trainer.global_step(),
+                trainer.epoch(),
+                trainer.epsilon(delta)?,
+            );
+        }
+    }
+    shutdown::install();
 
     println!(
         "task={task} σ={:.3} C={clip} ({}, eff {:.3}) lr={lr} q={:.4} steps/epoch={} \
@@ -158,13 +201,57 @@ fn cmd_train(args: &Args) -> Result<()> {
         loader.sampling,
         trainer.workers(),
     );
-    for epoch in 0..epochs {
-        let loss = trainer.train_epoch()?;
+    // the epoch loop runs in step quanta so an interrupt (SIGINT/SIGTERM)
+    // lands at a step boundary: metrics are flushed and a final
+    // checkpoint written instead of the ledger being dropped
+    let mut interrupted = false;
+    while trainer.epoch() < epochs && !interrupted {
+        let epoch = trainer.epoch();
+        let first = trainer.metrics.len();
+        while trainer.epoch() == epoch {
+            if shutdown::requested() {
+                interrupted = true;
+                break;
+            }
+            // cap the quantum at the epoch boundary so each epoch's
+            // printed loss covers exactly its own steps
+            let k = STEP_QUANTUM.min(trainer.remaining_in_epoch().max(1));
+            trainer.train_steps(k)?;
+            if let Some(dir) = ckpt_dir {
+                TrainerCheckpoint::capture(&trainer).save(dir)?;
+            }
+        }
+        let losses: Vec<f64> = trainer.metrics.records[first..]
+            .iter()
+            .map(|r| r.loss)
+            .filter(|l| l.is_finite())
+            .collect();
         println!(
-            "epoch {epoch:>3}: loss = {loss:.4}  ε = {:.3}  σ(t) = {:.3}",
+            "epoch {epoch:>3}: loss = {:.4}  ε = {:.3}  σ(t) = {:.3}{}",
+            opacus_rs::util::stats::mean(&losses),
             trainer.epsilon(delta)?,
             trainer.current_sigma(),
+            if interrupted { "  (interrupted)" } else { "" },
         );
+    }
+    if interrupted {
+        if let Some(dir) = ckpt_dir {
+            TrainerCheckpoint::capture(&trainer).save(dir)?;
+            println!(
+                "interrupted at step {} — checkpoint -> {dir:?} (resume with --resume)",
+                trainer.global_step()
+            );
+        } else {
+            println!(
+                "interrupted at step {} (no --checkpoint dir; ε ledger is in the metrics)",
+                trainer.global_step()
+            );
+        }
+        if let Some(out) = args.get("out") {
+            trainer.metrics.save(Path::new(out))?;
+            println!("metrics -> {out}");
+        }
+        return Ok(());
     }
     if let Some(bmm) = trainer.memory_manager() {
         println!(
@@ -187,6 +274,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         trainer.metrics.save(std::path::Path::new(out))?;
         println!("metrics -> {out}");
+    }
+    if let Some(dir) = ckpt_dir {
+        TrainerCheckpoint::capture(&trainer).save(dir)?;
+        println!("final checkpoint -> {dir:?}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    shutdown::install();
+    let jobs_arg = args.require("jobs")?;
+    let out_dir = args.get_or("out", "serve-out").to_string();
+    let mut cfg = ServeConfig::new(&out_dir);
+    cfg.quantum = args.get_usize("quantum", STEP_QUANTUM)?;
+    cfg.resume = args.has_flag("resume");
+    if let Some(k) = args.get("kill-after") {
+        cfg.kill_after = Some(k.parse()?);
+    }
+    let mut service = Service::new(cfg);
+    for path in jobs_arg.split(',') {
+        let spec = JobSpec::load(Path::new(path.trim()))?;
+        println!(
+            "job {}: task={} σ={} batch={} budget={} δ={} pipeline={:?}",
+            spec.name,
+            spec.task,
+            spec.sigma,
+            spec.batch,
+            spec.epsilon
+                .map(|e| format!("ε≤{e}"))
+                .unwrap_or_else(|| format!("{:?} epochs", spec.max_epochs)),
+            spec.delta,
+            spec.pipeline,
+        );
+        service.submit(spec)?;
+    }
+    let reports = service.run()?;
+    let mut t = Table::new(
+        "serve summary",
+        Table::header_from(&["job", "status", "steps", "epochs", "eps spent"]),
+    );
+    for r in &reports {
+        t.add_row(vec![
+            r.name.clone(),
+            r.status.as_str().to_string(),
+            r.steps.to_string(),
+            r.epochs.to_string(),
+            format!("{:.4}", r.epsilon),
+        ]);
+    }
+    t.print();
+    if reports.iter().any(|r| r.status == JobStatus::Interrupted) {
+        println!("service interrupted — rerun with --resume to continue from {out_dir}/");
     }
     Ok(())
 }

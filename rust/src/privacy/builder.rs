@@ -277,6 +277,7 @@ pub struct PrivateBuilder {
     physical_batch: usize,
     seed: u64,
     target: Option<EpsilonTarget>,
+    pipeline: Option<usize>,
 }
 
 impl Default for PrivateBuilder {
@@ -296,6 +297,7 @@ impl Default for PrivateBuilder {
             physical_batch: 64,
             seed: 0,
             target: None,
+            pipeline: None,
         }
     }
 }
@@ -412,6 +414,20 @@ impl PrivateBuilder {
         self
     }
 
+    /// Overlap batch prefetch with compute through a bounded pipeline of
+    /// `depth` in-flight gathers (the `opacus serve` / `--pipeline` step
+    /// pipeline). Depth 0 is a build-time error; the default (no call)
+    /// is strict sequential execution. Determinism contract: the
+    /// pipelined path is byte-identical to the sequential one — sampling
+    /// randomness is consumed at epoch granularity and noise is drawn in
+    /// step order on the consumer, so ε and (under
+    /// [`NoiseSource::Deterministic`]) the parameters do not depend on
+    /// the depth.
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.pipeline = Some(depth);
+        self
+    }
+
     /// Calibrate σ at build time so training `epochs` epochs spends at
     /// most (ε, δ) — the `make_private_with_epsilon` path.
     pub fn target_epsilon(mut self, epsilon: f64, delta: f64, epochs: usize) -> Self {
@@ -442,6 +458,9 @@ impl PrivateBuilder {
         }
         // surfaces Workers(0) as a typed error before any backend work
         self.parallelism.worker_threads()?;
+        if self.pipeline == Some(0) {
+            bail!("pipeline depth must be at least 1 (omit .pipeline for sequential execution)");
+        }
         if self.noise_division == NoiseDivision::PerWorker && !self.parallelism.uses_pool() {
             bail!(
                 "per-worker noise splitting requires a worker pool; \
@@ -535,7 +554,8 @@ impl PrivateBuilder {
             effective_clip: self.clipping.effective_clip(self.max_grad_norm, num_layers),
             lr: self.lr,
         };
-        let trainer = crate::coordinator::build_with_engine(engine, sys, pp)?;
+        let mut trainer = crate::coordinator::build_with_engine(engine, sys, pp)?;
+        trainer.set_pipeline(self.pipeline)?;
         let loader = LoaderHandle {
             sampling: self.sampling,
             logical_batch: self.logical_batch,
@@ -671,6 +691,13 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn zero_pipeline_depth_is_a_typed_plan_error() {
+        let err = PrivateBuilder::new().pipeline(0).plan(100).unwrap_err().to_string();
+        assert!(err.contains("pipeline depth"), "{err}");
+        assert!(PrivateBuilder::new().pipeline(2).plan(100).is_ok());
     }
 
     #[test]

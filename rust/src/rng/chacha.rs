@@ -121,7 +121,48 @@ impl ChaCha20Rng {
     }
 }
 
+/// ChaCha state word count for [`Rng::save_state`]: 8 key + 3 nonce +
+/// counter + buffer index + 16 buffered keystream words.
+const CHACHA_STATE_WORDS: usize = 29;
+
 impl Rng for ChaCha20Rng {
+    /// Full state — key, nonce, block counter, buffer index and the
+    /// buffered keystream — so a restore resumes mid-block exactly.
+    /// Note the captured words include the cipher key; callers decide
+    /// whether persisting it is acceptable (the engine only checkpoints
+    /// RNG state for deterministic runs).
+    fn save_state(&self) -> Option<Vec<u64>> {
+        let mut w = Vec::with_capacity(CHACHA_STATE_WORDS);
+        w.extend(self.key.iter().map(|&x| x as u64));
+        w.extend(self.nonce.iter().map(|&x| x as u64));
+        w.push(self.counter as u64);
+        w.push(self.idx as u64);
+        w.extend(self.buf.iter().map(|&x| x as u64));
+        Some(w)
+    }
+
+    fn restore_state(&mut self, words: &[u64]) -> bool {
+        if words.len() != CHACHA_STATE_WORDS
+            || words[..13].iter().any(|&x| x > u32::MAX as u64)
+            || words[12] > 16
+            || words[13..].iter().any(|&x| x > u32::MAX as u64)
+        {
+            return false;
+        }
+        for (i, slot) in self.key.iter_mut().enumerate() {
+            *slot = words[i] as u32;
+        }
+        for (i, slot) in self.nonce.iter_mut().enumerate() {
+            *slot = words[8 + i] as u32;
+        }
+        self.counter = words[11] as u32;
+        self.idx = words[12] as usize;
+        for (i, slot) in self.buf.iter_mut().enumerate() {
+            *slot = words[13 + i] as u32;
+        }
+        true
+    }
+
     fn next_u64(&mut self) -> u64 {
         if self.idx >= 15 {
             // need two u32s; refill when fewer than 2 words remain
@@ -202,6 +243,34 @@ mod tests {
         let mut b = ChaCha20Rng::from_os_entropy();
         let same = (0..16).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    #[test]
+    fn save_restore_resumes_mid_block() {
+        let mut a = ChaCha20Rng::seed_from_u64(123);
+        // 3 draws leaves the buffer partially consumed (idx = 6)
+        for _ in 0..3 {
+            a.next_u64();
+        }
+        let words = Rng::save_state(&a).unwrap();
+        assert_eq!(words.len(), CHACHA_STATE_WORDS);
+        let tail: Vec<u64> = (0..40).map(|_| a.next_u64()).collect();
+        let mut b = ChaCha20Rng::seed_from_u64(0);
+        assert!(b.restore_state(&words));
+        let resumed: Vec<u64> = (0..40).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, resumed);
+    }
+
+    #[test]
+    fn restore_rejects_bad_state() {
+        let mut r = ChaCha20Rng::seed_from_u64(9);
+        assert!(!r.restore_state(&[0; 5])); // wrong length
+        let mut words = Rng::save_state(&r).unwrap();
+        words[12] = 17; // buffer index out of range
+        assert!(!r.restore_state(&words));
+        words[12] = 0;
+        words[0] = u64::MAX; // key word does not fit u32
+        assert!(!r.restore_state(&words));
     }
 
     #[test]

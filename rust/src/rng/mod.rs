@@ -39,6 +39,21 @@ pub trait Rng: Send {
     fn bernoulli(&mut self, p: f64) -> bool {
         self.next_f64() < p
     }
+
+    /// Serialize the generator's complete internal state as u64 words so
+    /// a checkpointed run can resume its stream byte-identically.
+    /// Generators that do not support checkpointing return `None`
+    /// (the default).
+    fn save_state(&self) -> Option<Vec<u64>> {
+        None
+    }
+
+    /// Restore a state captured by [`Rng::save_state`] from the same
+    /// generator type. Returns `false` (leaving the generator untouched)
+    /// when the words do not describe a valid state for this generator.
+    fn restore_state(&mut self, _words: &[u64]) -> bool {
+        false
+    }
 }
 
 /// Fisher–Yates shuffle (free function so `Rng` stays dyn-compatible).

@@ -1,0 +1,499 @@
+//! Durable, versioned training checkpoints.
+//!
+//! A checkpoint is a directory:
+//!
+//! ```text
+//! ckpt/
+//!   manifest.json   format id, version, task, step, file list w/ CRC-32
+//!   params.npy      model parameters (f32, .npy v1)
+//!   state.json      accountant history, RNG stream position, batch
+//!                   queue, memory-manager counters, config echoes
+//!   metrics.json    the full `MetricsLog` of the run so far
+//! ```
+//!
+//! The write is atomic at directory granularity (`<dir>.tmp` + rename),
+//! so a kill mid-save leaves the previous checkpoint intact. Every
+//! payload file carries its byte length and CRC-32 in the manifest;
+//! `load` verifies both before parsing anything.
+//!
+//! Resume guarantees:
+//! * **ε is byte-identical**: the accountant history round-trips as
+//!   plain f64 JSON numbers (the in-tree writer prints shortest
+//!   round-trip forms), and both accountants recompute ε purely from
+//!   replayed history — pinned by the serve integration tests.
+//! * **The parameter trajectory is byte-identical** for deterministic
+//!   noise sources: the engine RNG's full stream position is captured
+//!   (as hex words — u64 state must not pass through f64 JSON numbers),
+//!   along with the sampled-but-untrained batch queue. Note the
+//!   captured words include the generator key; for deterministic runs
+//!   that key already derives from the public seed. `NoiseSource::
+//!   Secure` runs checkpoint no RNG state and resume on fresh OS
+//!   entropy — ε replay is unaffected.
+//! * The SGD optimizer is stateless (no momentum buffers), so the
+//!   parameters *are* the optimizer state.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::accounting::accountant::HistoryEntry;
+use crate::data::LogicalBatch;
+use crate::trainer::{MetricsLog, PrivateTrainer};
+use crate::util::hash::{crc32, u64_from_hex, u64_to_hex};
+use crate::util::json::Json;
+use crate::util::npy::NpyArray;
+
+/// Format identifier written into every manifest.
+pub const CHECKPOINT_FORMAT: &str = "opacus-rs/checkpoint";
+/// Current format version. Readers reject other versions with a typed
+/// error naming both (no silent best-effort parsing of future layouts).
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+const PARAMS_FILE: &str = "params.npy";
+const STATE_FILE: &str = "state.json";
+const METRICS_FILE: &str = "metrics.json";
+
+/// A complete training snapshot (see module docs for what "complete"
+/// guarantees on resume).
+#[derive(Debug, Clone)]
+pub struct TrainerCheckpoint {
+    pub task: String,
+    pub epoch: usize,
+    pub global_step: u64,
+    pub params: Vec<f32>,
+    /// Accountant ledger: replaying into a fresh accountant of the same
+    /// mechanism reproduces ε bit-for-bit.
+    pub history: Vec<HistoryEntry>,
+    pub mechanism: String,
+    /// Engine RNG stream position (deterministic sources only).
+    pub rng_words: Option<Vec<u64>>,
+    /// Sampled-but-untrained batches of the current epoch, in order.
+    pub pending: Vec<LogicalBatch>,
+    /// Batch-memory-manager counters (virtual mode only):
+    /// (logical_steps, micro_steps, peak_logical).
+    pub memory_stats: Option<(u64, u64, usize)>,
+    /// Config echoes, validated on apply: a resume against a trainer
+    /// built from a different recipe is an error, not silent drift.
+    pub noise_multiplier: f64,
+    pub logical_batch: usize,
+    pub metrics: MetricsLog,
+}
+
+impl TrainerCheckpoint {
+    /// Snapshot a trainer. Call between step quanta — the pending queue
+    /// and RNG position are only consistent at step boundaries.
+    pub fn capture(t: &PrivateTrainer) -> TrainerCheckpoint {
+        let engine = t.engine();
+        let rng_words = if engine.config.deterministic {
+            engine.rng_state()
+        } else {
+            None
+        };
+        TrainerCheckpoint {
+            task: t.task.clone(),
+            epoch: t.epoch(),
+            global_step: t.global_step(),
+            params: t.params.clone(),
+            history: engine.accountant_history(),
+            mechanism: engine.accountant_mechanism().to_string(),
+            rng_words,
+            pending: t.pending_batches(),
+            memory_stats: t
+                .memory_manager()
+                .map(|m| (m.logical_steps(), m.micro_steps(), m.peak_logical_batch())),
+            noise_multiplier: t.privacy_params().noise_multiplier,
+            logical_batch: t.privacy_params().logical_batch,
+            metrics: t.metrics.clone(),
+        }
+    }
+
+    /// Restore this snapshot into a freshly built trainer of the same
+    /// recipe. Validates the config echoes first, then restores params,
+    /// ledger, RNG position, batch queue, manager counters and metrics.
+    pub fn apply(self, t: &mut PrivateTrainer) -> Result<()> {
+        if self.task != t.task {
+            bail!("checkpoint is for task '{}', trainer is '{}'", self.task, t.task);
+        }
+        if self.params.len() != t.params.len() {
+            bail!(
+                "checkpoint has {} parameters, trainer has {}",
+                self.params.len(),
+                t.params.len()
+            );
+        }
+        let pp = t.privacy_params();
+        if self.noise_multiplier != pp.noise_multiplier || self.logical_batch != pp.logical_batch {
+            bail!(
+                "checkpoint recipe mismatch: σ={} batch={} vs trainer σ={} batch={}",
+                self.noise_multiplier,
+                self.logical_batch,
+                pp.noise_multiplier,
+                pp.logical_batch
+            );
+        }
+        if self.mechanism != t.engine().accountant_mechanism() {
+            bail!(
+                "checkpoint accountant '{}' != trainer accountant '{}'",
+                self.mechanism,
+                t.engine().accountant_mechanism()
+            );
+        }
+        t.engine().restore_accounting(&self.history)?;
+        if let Some(words) = &self.rng_words {
+            t.engine().restore_rng_state(words)?;
+        }
+        t.params = self.params;
+        t.restore_progress(self.epoch, self.global_step, self.pending);
+        if let Some((l, m, p)) = self.memory_stats {
+            t.restore_memory_stats(l, m, p);
+        }
+        t.metrics = self.metrics;
+        Ok(())
+    }
+
+    fn state_json(&self) -> Json {
+        let history: Vec<Json> = self
+            .history
+            .iter()
+            .map(|h| {
+                Json::obj(vec![
+                    ("noise_multiplier", Json::num(h.noise_multiplier)),
+                    ("sample_rate", Json::num(h.sample_rate)),
+                    ("steps", Json::num(h.steps as f64)),
+                ])
+            })
+            .collect();
+        let pending: Vec<Json> = self
+            .pending
+            .iter()
+            .map(|lb| Json::Arr(lb.indices.iter().map(|&i| Json::num(i as f64)).collect()))
+            .collect();
+        let mut fields = vec![
+            ("task", Json::str(&self.task)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("global_step", Json::num(self.global_step as f64)),
+            ("mechanism", Json::str(&self.mechanism)),
+            ("noise_multiplier", Json::num(self.noise_multiplier)),
+            ("logical_batch", Json::num(self.logical_batch as f64)),
+            ("history", Json::Arr(history)),
+            ("pending", Json::Arr(pending)),
+        ];
+        if let Some(words) = &self.rng_words {
+            fields.push((
+                "rng",
+                Json::Arr(words.iter().map(|&w| Json::str(&u64_to_hex(w))).collect()),
+            ));
+        }
+        if let Some((l, m, p)) = self.memory_stats {
+            fields.push((
+                "memory",
+                Json::obj(vec![
+                    ("logical_steps", Json::num(l as f64)),
+                    ("micro_steps", Json::num(m as f64)),
+                    ("peak_logical", Json::num(p as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    fn state_from_json(j: &Json) -> Result<TrainerCheckpoint> {
+        let f = |j: &Json, key: &str| -> Result<f64> {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow!("checkpoint state: missing numeric field '{key}'"))
+        };
+        let s = |key: &str| -> Result<String> {
+            j.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("checkpoint state: missing string field '{key}'"))
+        };
+        let mut history = Vec::new();
+        for h in j.get("history").as_arr().unwrap_or(&[]) {
+            history.push(HistoryEntry {
+                noise_multiplier: f(h, "noise_multiplier")?,
+                sample_rate: f(h, "sample_rate")?,
+                steps: f(h, "steps")? as u64,
+            });
+        }
+        let mut pending = Vec::new();
+        for lb in j.get("pending").as_arr().unwrap_or(&[]) {
+            let idx = lb
+                .as_arr()
+                .ok_or_else(|| anyhow!("checkpoint state: pending entry is not an array"))?;
+            let mut indices = Vec::with_capacity(idx.len());
+            for i in idx {
+                indices.push(
+                    i.as_usize()
+                        .ok_or_else(|| anyhow!("checkpoint state: non-integer batch index"))?,
+                );
+            }
+            pending.push(LogicalBatch { indices });
+        }
+        let rng_words = match j.get("rng").as_arr() {
+            None => None,
+            Some(arr) => {
+                let mut words = Vec::with_capacity(arr.len());
+                for w in arr {
+                    let hex = w
+                        .as_str()
+                        .ok_or_else(|| anyhow!("checkpoint state: rng word is not a string"))?;
+                    words.push(u64_from_hex(hex)?);
+                }
+                Some(words)
+            }
+        };
+        let memory_stats = {
+            let m = j.get("memory");
+            if m.is_null() {
+                None
+            } else {
+                Some((
+                    f(m, "logical_steps")? as u64,
+                    f(m, "micro_steps")? as u64,
+                    f(m, "peak_logical")? as usize,
+                ))
+            }
+        };
+        Ok(TrainerCheckpoint {
+            task: s("task")?,
+            epoch: f(j, "epoch")? as usize,
+            global_step: f(j, "global_step")? as u64,
+            params: Vec::new(), // filled from params.npy by `load`
+            history,
+            mechanism: s("mechanism")?,
+            rng_words,
+            pending,
+            memory_stats,
+            noise_multiplier: f(j, "noise_multiplier")?,
+            logical_batch: f(j, "logical_batch")? as usize,
+            metrics: MetricsLog::new(), // filled from metrics.json by `load`
+        })
+    }
+
+    /// Write the checkpoint to `dir`, atomically: everything lands in
+    /// `<dir>.tmp` first, which then replaces `dir` in one rename.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp)
+                .with_context(|| format!("clearing stale checkpoint tmp {tmp:?}"))?;
+        }
+        std::fs::create_dir_all(&tmp)
+            .with_context(|| format!("creating checkpoint dir {tmp:?}"))?;
+
+        let params_bytes =
+            NpyArray::f32(vec![self.params.len()], self.params.clone()).to_bytes();
+        let state_bytes = self.state_json().to_string().into_bytes();
+        let metrics_bytes = self.metrics.to_json().to_string().into_bytes();
+        let files = [
+            (PARAMS_FILE, &params_bytes),
+            (STATE_FILE, &state_bytes),
+            (METRICS_FILE, &metrics_bytes),
+        ];
+        let mut entries = Vec::with_capacity(files.len());
+        for (name, bytes) in files {
+            std::fs::write(tmp.join(name), bytes)
+                .with_context(|| format!("writing checkpoint file {name}"))?;
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("bytes", Json::num(bytes.len() as f64)),
+                ("crc32", Json::str(&format!("{:08x}", crc32(bytes)))),
+            ]));
+        }
+        let manifest = Json::obj(vec![
+            ("format", Json::str(CHECKPOINT_FORMAT)),
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("task", Json::str(&self.task)),
+            ("global_step", Json::num(self.global_step as f64)),
+            ("mechanism", Json::str(&self.mechanism)),
+            ("files", Json::Arr(entries)),
+        ]);
+        std::fs::write(tmp.join("manifest.json"), manifest.to_string())
+            .with_context(|| "writing checkpoint manifest")?;
+
+        if dir.exists() {
+            std::fs::remove_dir_all(dir)
+                .with_context(|| format!("replacing old checkpoint {dir:?}"))?;
+        }
+        std::fs::rename(&tmp, dir)
+            .with_context(|| format!("publishing checkpoint {dir:?}"))?;
+        Ok(())
+    }
+
+    /// Read and fully verify a checkpoint: manifest format/version,
+    /// then byte length and CRC-32 of every payload file, then parse.
+    pub fn load(dir: &Path) -> Result<TrainerCheckpoint> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading checkpoint manifest in {dir:?}"))?;
+        let manifest = Json::parse(&manifest_text)
+            .map_err(|e| anyhow!("checkpoint manifest is not valid json: {e}"))?;
+        let format = manifest.get("format").as_str().unwrap_or("");
+        if format != CHECKPOINT_FORMAT {
+            bail!("not an opacus-rs checkpoint (format '{format}')");
+        }
+        let version = manifest.get("version").as_f64().unwrap_or(-1.0) as i64;
+        if version != CHECKPOINT_VERSION as i64 {
+            bail!("unsupported checkpoint version {version} (expected {CHECKPOINT_VERSION})");
+        }
+        let mut verified: std::collections::BTreeMap<String, Vec<u8>> = Default::default();
+        for entry in manifest.get("files").as_arr().unwrap_or(&[]) {
+            let name = entry
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("checkpoint manifest: file entry without a name"))?;
+            let bytes = std::fs::read(dir.join(name))
+                .with_context(|| format!("reading checkpoint file {name}"))?;
+            let want_len = entry.get("bytes").as_usize().unwrap_or(usize::MAX);
+            if bytes.len() != want_len {
+                bail!(
+                    "checkpoint file {name}: {} bytes on disk, manifest says {want_len}",
+                    bytes.len()
+                );
+            }
+            let got_crc = format!("{:08x}", crc32(&bytes));
+            let want_crc = entry.get("crc32").as_str().unwrap_or("");
+            if got_crc != want_crc {
+                bail!("checkpoint file {name} is corrupt: crc {got_crc} != manifest {want_crc}");
+            }
+            verified.insert(name.to_string(), bytes);
+        }
+        for required in [PARAMS_FILE, STATE_FILE, METRICS_FILE] {
+            if !verified.contains_key(required) {
+                bail!("checkpoint manifest lists no '{required}'");
+            }
+        }
+
+        let state = Json::parse(std::str::from_utf8(&verified[STATE_FILE])?)
+            .map_err(|e| anyhow!("checkpoint state.json: {e}"))?;
+        let mut ckpt = Self::state_from_json(&state)?;
+        ckpt.params = NpyArray::from_bytes(&verified[PARAMS_FILE])?.as_f32()?.to_vec();
+        let metrics = Json::parse(std::str::from_utf8(&verified[METRICS_FILE])?)
+            .map_err(|e| anyhow!("checkpoint metrics.json: {e}"))?;
+        ckpt.metrics = MetricsLog::from_json(&metrics)?;
+        Ok(ckpt)
+    }
+}
+
+/// Whether `dir` looks like a loadable checkpoint (manifest present).
+pub fn checkpoint_exists(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainerCheckpoint {
+        TrainerCheckpoint {
+            task: "mnist".into(),
+            epoch: 2,
+            global_step: 37,
+            params: vec![0.25, -1.5, 3.75e-5],
+            history: vec![
+                HistoryEntry {
+                    noise_multiplier: 1.1,
+                    sample_rate: 0.03125,
+                    steps: 30,
+                },
+                HistoryEntry {
+                    noise_multiplier: 0.9,
+                    sample_rate: 0.03125,
+                    steps: 7,
+                },
+            ],
+            mechanism: "rdp".into(),
+            rng_words: Some(vec![0, 1, u64::MAX, 1 << 63]),
+            pending: vec![
+                LogicalBatch { indices: vec![5, 2, 9] },
+                LogicalBatch { indices: vec![] },
+            ],
+            memory_stats: Some((37, 74, 128)),
+            noise_multiplier: 1.1,
+            logical_batch: 64,
+            metrics: MetricsLog::new(),
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("opacus_ckpt_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_round_trips_exactly() {
+        let dir = tmpdir("roundtrip");
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        assert!(checkpoint_exists(&dir));
+        let back = TrainerCheckpoint::load(&dir).unwrap();
+        assert_eq!(back.task, ck.task);
+        assert_eq!(back.epoch, ck.epoch);
+        assert_eq!(back.global_step, ck.global_step);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.history, ck.history);
+        assert_eq!(back.mechanism, ck.mechanism);
+        assert_eq!(back.rng_words, ck.rng_words);
+        assert_eq!(back.pending, ck.pending);
+        assert_eq!(back.memory_stats, ck.memory_stats);
+        // f64 fields must round-trip bit-exactly through the json layer
+        assert_eq!(
+            back.history[0].noise_multiplier.to_bits(),
+            ck.history[0].noise_multiplier.to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_is_atomic_replace() {
+        let dir = tmpdir("atomic");
+        let mut ck = sample();
+        ck.save(&dir).unwrap();
+        ck.global_step = 99;
+        ck.save(&dir).unwrap(); // replaces, never merges
+        let back = TrainerCheckpoint::load(&dir).unwrap();
+        assert_eq!(back.global_step, 99);
+        assert!(!PathBuf::from(format!("{}.tmp", dir.display())).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = tmpdir("corrupt");
+        sample().save(&dir).unwrap();
+        // flip one byte of the params payload
+        let p = dir.join(PARAMS_FILE);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&p, bytes).unwrap();
+        let err = TrainerCheckpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let dir = tmpdir("version");
+        sample().save(&dir).unwrap();
+        let m = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&m).unwrap();
+        std::fs::write(&m, text.replace("\"version\":1", "\"version\":2")).unwrap();
+        let err = TrainerCheckpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        let text = std::fs::read_to_string(&m).unwrap();
+        std::fs::write(&m, text.replace(CHECKPOINT_FORMAT, "something/else")).unwrap();
+        assert!(TrainerCheckpoint::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_files_are_an_error() {
+        let dir = tmpdir("missing");
+        sample().save(&dir).unwrap();
+        std::fs::remove_file(dir.join(METRICS_FILE)).unwrap();
+        assert!(TrainerCheckpoint::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,272 @@
+//! Job specifications for `opacus serve` — one JSON document per
+//! training job, declaring the task, the DP recipe, and the privacy
+//! budget the job is allowed to spend.
+//!
+//! A spec must bound its own lifetime: either a target `epsilon` (the
+//! scheduler stops the job *before* the ledger would exceed it) or
+//! `max_epochs` (or both). A spec with neither is rejected at load time
+//! — an unbounded job would never terminate.
+//!
+//! ```json
+//! {
+//!   "name": "mnist-a",
+//!   "task": "mnist",
+//!   "epsilon": 3.0, "delta": 1e-5,
+//!   "sigma": 1.1, "clip": 1.0, "lr": 0.25,
+//!   "batch": 64, "train": 1024,
+//!   "pipeline": 2, "workers": 2
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use crate::coordinator::Opacus;
+use crate::privacy::{AccountantKind, Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use crate::trainer::PrivateTrainer;
+use crate::util::json::Json;
+
+/// One serve job: a named training run with its own privacy budget.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub task: String,
+    /// Target privacy budget: the scheduler stops the job cleanly before
+    /// a step would push ε(δ) past this.
+    pub epsilon: Option<f64>,
+    pub delta: f64,
+    pub sigma: f64,
+    pub clip: f64,
+    pub lr: f64,
+    pub batch: usize,
+    pub physical: usize,
+    pub train_n: usize,
+    pub backend: Backend,
+    pub workers: Option<usize>,
+    pub seed: u64,
+    pub accountant: AccountantKind,
+    pub uniform: bool,
+    pub secure: bool,
+    /// Prefetch depth for the overlapped step pipeline (None = sequential).
+    pub pipeline: Option<usize>,
+    pub max_epochs: Option<usize>,
+    pub artifacts: String,
+}
+
+impl JobSpec {
+    /// Parse a spec from its JSON document. `name` and `task` are
+    /// required; everything else has the `opacus train` defaults.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let req_str = |key: &str| -> Result<String> {
+            j.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("job spec: required string field '{key}' is missing"))
+        };
+        let f64_or = |key: &str, default: f64| -> Result<f64> {
+            let v = j.get(key);
+            if v.is_null() {
+                Ok(default)
+            } else {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("job spec: field '{key}' must be a number"))
+            }
+        };
+        let usize_or = |key: &str, default: usize| -> Result<usize> {
+            let v = j.get(key);
+            if v.is_null() {
+                Ok(default)
+            } else {
+                v.as_usize().ok_or_else(|| {
+                    anyhow!("job spec: field '{key}' must be a non-negative integer")
+                })
+            }
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            let v = j.get(key);
+            if v.is_null() {
+                Ok(None)
+            } else {
+                v.as_usize().map(Some).ok_or_else(|| {
+                    anyhow!("job spec: field '{key}' must be a non-negative integer")
+                })
+            }
+        };
+        let bool_or = |key: &str, default: bool| -> bool {
+            j.get(key).as_bool().unwrap_or(default)
+        };
+
+        let name = req_str("name")?;
+        let task = req_str("task")?;
+        let epsilon = if j.get("epsilon").is_null() {
+            None
+        } else {
+            Some(
+                j.get("epsilon")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("job spec: 'epsilon' must be a number"))?,
+            )
+        };
+        let max_epochs = opt_usize("max_epochs")?;
+        if epsilon.is_none() && max_epochs.is_none() {
+            bail!(
+                "job spec '{name}': set 'epsilon' (budget) or 'max_epochs' (or both) — \
+                 a job with neither would never terminate"
+            );
+        }
+        if let Some(e) = epsilon {
+            if !(e > 0.0) {
+                bail!("job spec '{name}': 'epsilon' must be positive (got {e})");
+            }
+        }
+        let batch = usize_or("batch", 64)?;
+        let spec = JobSpec {
+            name,
+            task,
+            epsilon,
+            delta: f64_or("delta", 1e-5)?,
+            sigma: f64_or("sigma", 1.1)?,
+            clip: f64_or("clip", 1.0)?,
+            lr: f64_or("lr", 0.25)?,
+            batch,
+            // serve defaults to the fused path (physical == logical)
+            physical: usize_or("physical", batch)?,
+            train_n: usize_or("train", 1024)?,
+            backend: j
+                .get("backend")
+                .as_str()
+                .unwrap_or("auto")
+                .parse::<Backend>()?,
+            workers: opt_usize("workers")?,
+            seed: f64_or("seed", 42.0)? as u64,
+            accountant: j
+                .get("accountant")
+                .as_str()
+                .unwrap_or("rdp")
+                .parse::<AccountantKind>()?,
+            uniform: bool_or("uniform", true),
+            secure: bool_or("secure", false),
+            pipeline: opt_usize("pipeline")?,
+            max_epochs,
+            artifacts: j
+                .get("artifacts")
+                .as_str()
+                .unwrap_or("artifacts")
+                .to_string(),
+        };
+        if spec.pipeline == Some(0) {
+            bail!(
+                "job spec '{}': pipeline depth must be at least 1 (omit it for sequential)",
+                spec.name
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn load(path: &Path) -> Result<JobSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading job spec {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("job spec {path:?}: {e}"))?;
+        Self::from_json(&j).with_context(|| format!("in job spec {path:?}"))
+    }
+
+    /// Build a fresh trainer for this spec — the same wiring as `opacus
+    /// train`, with one serve-specific default: the noise source is
+    /// deterministic unless `secure` is set, so a kill/resume cycle
+    /// reproduces the parameter trajectory byte-for-byte (`secure` jobs
+    /// trade that for OS-entropy noise; their ε replay is unaffected).
+    pub fn build_trainer(&self) -> Result<PrivateTrainer> {
+        let sys = Opacus::load_with_backend(
+            &self.artifacts,
+            &self.task,
+            self.backend,
+            self.train_n,
+            (self.train_n / 8).max(32),
+            0,
+        )?;
+        let mut builder = PrivacyEngine::private()
+            .backend(self.backend)
+            .accountant(self.accountant)
+            .noise(if self.secure {
+                NoiseSource::Secure
+            } else {
+                NoiseSource::Deterministic
+            })
+            .sampling(if self.uniform {
+                SamplingMode::Uniform
+            } else {
+                SamplingMode::Poisson
+            })
+            .noise_multiplier(self.sigma)
+            .max_grad_norm(self.clip)
+            .lr(self.lr)
+            .logical_batch(self.batch)
+            .physical_batch(self.physical)
+            .seed(self.seed);
+        if let Some(w) = self.workers {
+            builder = builder.workers(w);
+        }
+        if let Some(d) = self.pipeline {
+            builder = builder.pipeline(d);
+        }
+        Ok(builder.build(sys)?.into_trainer())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<JobSpec> {
+        JobSpec::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn minimal_spec_gets_train_defaults() {
+        let s = parse(r#"{"name":"a","task":"mnist","epsilon":3.0}"#).unwrap();
+        assert_eq!(s.name, "a");
+        assert_eq!(s.task, "mnist");
+        assert_eq!(s.epsilon, Some(3.0));
+        assert_eq!(s.delta, 1e-5);
+        assert_eq!(s.sigma, 1.1);
+        assert_eq!(s.batch, 64);
+        assert_eq!(s.physical, 64);
+        assert!(s.uniform);
+        assert!(!s.secure);
+        assert_eq!(s.pipeline, None);
+        assert_eq!(s.max_epochs, None);
+    }
+
+    #[test]
+    fn physical_defaults_to_batch() {
+        let s = parse(r#"{"name":"a","task":"mnist","epsilon":1.0,"batch":32}"#).unwrap();
+        assert_eq!(s.physical, 32);
+        let s =
+            parse(r#"{"name":"a","task":"mnist","epsilon":1.0,"batch":32,"physical":16}"#).unwrap();
+        assert_eq!(s.physical, 16);
+    }
+
+    #[test]
+    fn unbounded_jobs_are_rejected() {
+        let err = parse(r#"{"name":"a","task":"mnist"}"#).unwrap_err().to_string();
+        assert!(err.contains("never terminate"), "{err}");
+        assert!(parse(r#"{"name":"a","task":"mnist","max_epochs":2}"#).is_ok());
+    }
+
+    #[test]
+    fn bad_fields_are_typed_errors() {
+        assert!(parse(r#"{"task":"mnist","epsilon":1.0}"#).is_err()); // no name
+        assert!(parse(r#"{"name":"a","epsilon":1.0}"#).is_err()); // no task
+        let err = parse(r#"{"name":"a","task":"m","epsilon":-1.0}"#).unwrap_err().to_string();
+        assert!(err.contains("positive"), "{err}");
+        let err = parse(r#"{"name":"a","task":"m","epsilon":1.0,"pipeline":0}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        let err = parse(r#"{"name":"a","task":"m","epsilon":1.0,"sigma":"big"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sigma"), "{err}");
+    }
+}

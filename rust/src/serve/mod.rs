@@ -1,0 +1,31 @@
+//! The streaming training service — `opacus serve` (PR 6).
+//!
+//! Three layers on top of the trainer:
+//!
+//! * **The step pipeline** lives in
+//!   [`trainer::trainer`](crate::trainer::trainer) (`.pipeline(depth)` /
+//!   `--pipeline N`): batch gathers are prefetched by a producer thread
+//!   over a *bounded* channel while the consumer runs compute and
+//!   noise/update — byte-identical to sequential execution by
+//!   construction (sampling randomness is consumed per-epoch, noise in
+//!   step order on the consumer).
+//! * [`checkpoint`] — durable, versioned, checksummed snapshots of a
+//!   whole training run: params, accountant ledger, RNG stream position,
+//!   mid-epoch batch queue, memory-manager counters and metrics. A
+//!   resumed run reports byte-identical ε.
+//! * [`job`] + [`service`] — the multi-job scheduler: round-robin step
+//!   quanta over concurrent jobs at distinct (ε, δ) budgets, a durable
+//!   checkpoint after every quantum, and graceful budget exhaustion (a
+//!   job stops *before* its target, never by erroring past it).
+//! * [`shutdown`] — SIGINT/SIGTERM → a polled flag, so an interrupted
+//!   `opacus train`/`serve` flushes metrics and writes a final
+//!   checkpoint instead of dropping the ledger.
+
+pub mod checkpoint;
+pub mod job;
+pub mod service;
+pub mod shutdown;
+
+pub use checkpoint::{checkpoint_exists, TrainerCheckpoint, CHECKPOINT_FORMAT, CHECKPOINT_VERSION};
+pub use job::JobSpec;
+pub use service::{JobReport, JobStatus, ServeConfig, Service};

@@ -1,0 +1,281 @@
+//! The `opacus serve` scheduler: a long-running service that trains
+//! multiple jobs concurrently under independent privacy budgets.
+//!
+//! Jobs are interleaved round-robin in quanta of a few logical steps.
+//! Before each quantum the scheduler asks the job's accountant what ε
+//! *would be* after the quantum ([`PrivacyEngine::epsilon_with_pending`]
+//! (crate::privacy::engine::PrivacyEngine::epsilon_with_pending)) and
+//! shrinks the quantum until it fits the job's budget — so a job stops
+//! **cleanly, before** its target is exceeded, with a final checkpoint,
+//! never by erroring past it. A durable checkpoint is written after
+//! every quantum, which is what makes the service kill-tolerant: on
+//! restart with `resume`, each job picks up at its last quantum boundary
+//! with a byte-identical ledger.
+//!
+//! Shutdown (SIGINT/SIGTERM via [`super::shutdown`], or the `kill_after`
+//! test hook) is handled at quantum granularity: every running job gets
+//! a final checkpoint and is reported `Interrupted`.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+use super::checkpoint::{checkpoint_exists, TrainerCheckpoint};
+use super::job::JobSpec;
+use super::shutdown;
+use crate::trainer::PrivateTrainer;
+
+/// Scheduler configuration (CLI flags of `opacus serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory holding one checkpoint subdirectory per job.
+    pub out_dir: PathBuf,
+    /// Logical steps per scheduling turn (before budget shrinking).
+    pub quantum: usize,
+    /// Test/CI hook: behave as if SIGTERM arrived once this many total
+    /// steps (across all jobs) have been served.
+    pub kill_after: Option<u64>,
+    /// Resume jobs from their checkpoints when present.
+    pub resume: bool,
+}
+
+impl ServeConfig {
+    pub fn new(out_dir: impl Into<PathBuf>) -> ServeConfig {
+        ServeConfig {
+            out_dir: out_dir.into(),
+            quantum: 8,
+            kill_after: None,
+            resume: false,
+        }
+    }
+}
+
+/// Terminal (and one live) state of a served job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Running,
+    /// Stopped cleanly because the next quantum would exceed the ε
+    /// budget — the graceful-exhaustion exit, not an error.
+    Exhausted,
+    /// Reached its `max_epochs` cap.
+    Completed,
+    /// Stopped by shutdown request; resumable from its checkpoint.
+    Interrupted,
+}
+
+impl JobStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Running => "running",
+            JobStatus::Exhausted => "exhausted",
+            JobStatus::Completed => "completed",
+            JobStatus::Interrupted => "interrupted",
+        }
+    }
+}
+
+/// Final per-job accounting returned by [`Service::run`].
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub status: JobStatus,
+    pub steps: u64,
+    pub epochs: usize,
+    /// ε spent at the job's δ.
+    pub epsilon: f64,
+    /// Whether the job started from a restored checkpoint.
+    pub resumed: bool,
+}
+
+struct JobState {
+    spec: JobSpec,
+    trainer: PrivateTrainer,
+    status: JobStatus,
+    resumed: bool,
+}
+
+/// The multi-job training service behind `opacus serve`.
+pub struct Service {
+    cfg: ServeConfig,
+    jobs: Vec<JobState>,
+    total_steps: u64,
+}
+
+impl Service {
+    pub fn new(cfg: ServeConfig) -> Service {
+        Service {
+            cfg,
+            jobs: Vec::new(),
+            total_steps: 0,
+        }
+    }
+
+    fn checkpoint_dir(&self, name: &str) -> PathBuf {
+        self.cfg.out_dir.join(name)
+    }
+
+    /// Add a job: build its trainer and, when resuming, restore the
+    /// latest checkpoint (the restored ledger replays into a fresh
+    /// accountant, so the reported ε is byte-identical to the run that
+    /// wrote the checkpoint).
+    pub fn submit(&mut self, spec: JobSpec) -> Result<()> {
+        let mut trainer = spec
+            .build_trainer()
+            .with_context(|| format!("building trainer for job '{}'", spec.name))?;
+        let dir = self.checkpoint_dir(&spec.name);
+        let mut resumed = false;
+        if self.cfg.resume && checkpoint_exists(&dir) {
+            TrainerCheckpoint::load(&dir)?
+                .apply(&mut trainer)
+                .with_context(|| format!("resuming job '{}' from {dir:?}", spec.name))?;
+            resumed = true;
+            println!(
+                "job {}: resumed at step {} (epoch {}, ε = {:.4} @ δ = {})",
+                spec.name,
+                trainer.global_step(),
+                trainer.epoch(),
+                trainer.epsilon(spec.delta)?,
+                spec.delta
+            );
+        }
+        self.jobs.push(JobState {
+            spec,
+            trainer,
+            status: JobStatus::Running,
+            resumed,
+        });
+        Ok(())
+    }
+
+    fn save_checkpoint(&self, idx: usize) -> Result<()> {
+        let job = &self.jobs[idx];
+        TrainerCheckpoint::capture(&job.trainer)
+            .save(&self.checkpoint_dir(&job.spec.name))
+            .with_context(|| format!("checkpointing job '{}'", job.spec.name))
+    }
+
+    /// Whether a shutdown condition holds (signal flag or the
+    /// `kill_after` step-count hook).
+    fn shutdown_due(&self) -> bool {
+        shutdown::requested()
+            || self
+                .cfg
+                .kill_after
+                .is_some_and(|k| self.total_steps >= k)
+    }
+
+    /// One scheduling turn for job `idx`. Returns the number of steps
+    /// run (0 when the job reached a terminal state this turn).
+    fn turn(&mut self, idx: usize) -> Result<u64> {
+        let quantum = self.cfg.quantum;
+        let job = &mut self.jobs[idx];
+        let mut k = quantum;
+
+        // epoch cap: finish exactly at the boundary, never past it
+        if let Some(me) = job.spec.max_epochs {
+            if job.trainer.epoch() >= me {
+                let (name, eps) = (job.spec.name.clone(), job.trainer.epsilon(job.spec.delta)?);
+                job.status = JobStatus::Completed;
+                self.save_checkpoint(idx)?;
+                println!("job {name}: completed (epoch cap), ε = {eps:.4}");
+                return Ok(0);
+            }
+            if job.trainer.epoch() + 1 == me {
+                k = k.min(job.trainer.remaining_in_epoch());
+            }
+        }
+
+        // budget gate: shrink the quantum until the post-quantum ε fits;
+        // a quantum of zero means even one more step would overspend
+        if let Some(target) = job.spec.epsilon {
+            let sigma = job.trainer.current_sigma();
+            let q = job.trainer.sample_rate();
+            while k > 0
+                && job
+                    .trainer
+                    .engine()
+                    .epsilon_with_pending(job.spec.delta, sigma, q, k as u64)?
+                    > target
+            {
+                k -= 1;
+            }
+            if k == 0 {
+                let name = job.spec.name.clone();
+                let eps = job.trainer.epsilon(job.spec.delta)?;
+                let steps = job.trainer.global_step();
+                job.status = JobStatus::Exhausted;
+                self.save_checkpoint(idx)?;
+                println!(
+                    "job {name}: budget exhausted after {steps} steps — \
+                     ε = {eps:.4} of target {target} @ δ = {} (final checkpoint written)",
+                    self.jobs[idx].spec.delta
+                );
+                return Ok(0);
+            }
+        }
+
+        let ran = job.trainer.train_steps(k)? as u64;
+        self.total_steps += ran;
+        self.save_checkpoint(idx)?;
+        Ok(ran)
+    }
+
+    /// Drive all submitted jobs to a terminal state (or to shutdown).
+    /// Every exit path leaves every job with a fresh durable checkpoint.
+    pub fn run(&mut self) -> Result<Vec<JobReport>> {
+        while self.jobs.iter().any(|j| j.status == JobStatus::Running) {
+            if self.shutdown_due() {
+                break;
+            }
+            for idx in 0..self.jobs.len() {
+                if self.jobs[idx].status != JobStatus::Running {
+                    continue;
+                }
+                if self.shutdown_due() {
+                    break;
+                }
+                self.turn(idx)?;
+            }
+        }
+        if self.shutdown_due() {
+            for idx in 0..self.jobs.len() {
+                if self.jobs[idx].status == JobStatus::Running {
+                    self.save_checkpoint(idx)?;
+                    let job = &mut self.jobs[idx];
+                    job.status = JobStatus::Interrupted;
+                    println!(
+                        "job {}: interrupted at step {} — checkpoint written, \
+                         resume with --resume",
+                        job.spec.name,
+                        job.trainer.global_step()
+                    );
+                }
+            }
+        }
+        self.report()
+    }
+
+    /// Per-job final accounting (also callable mid-run by tests).
+    pub fn report(&self) -> Result<Vec<JobReport>> {
+        self.jobs
+            .iter()
+            .map(|j| {
+                Ok(JobReport {
+                    name: j.spec.name.clone(),
+                    status: j.status,
+                    steps: j.trainer.global_step(),
+                    epochs: j.trainer.epoch(),
+                    epsilon: j.trainer.epsilon(j.spec.delta)?,
+                    resumed: j.resumed,
+                })
+            })
+            .collect()
+    }
+
+    /// Borrow a job's trainer by name (tests inspect params/ε directly).
+    pub fn trainer(&self, name: &str) -> Option<&PrivateTrainer> {
+        self.jobs
+            .iter()
+            .find(|j| j.spec.name == name)
+            .map(|j| &j.trainer)
+    }
+}

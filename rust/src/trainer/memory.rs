@@ -107,6 +107,16 @@ impl BatchMemoryManager {
         chunks
     }
 
+    /// Restore usage counters from a checkpoint, so a resumed run's
+    /// amplification stats continue where the interrupted run stopped.
+    /// Chunking configuration (compiled batch, cap, workers) is not
+    /// touched — it is re-derived from the job's own builder inputs.
+    pub fn restore_stats(&mut self, logical_steps: u64, micro_steps: u64, peak_logical: usize) {
+        self.logical_steps = logical_steps;
+        self.micro_steps = micro_steps;
+        self.peak_logical = peak_logical;
+    }
+
     /// Logical (privacy-accounted) batches split so far.
     pub fn logical_steps(&self) -> u64 {
         self.logical_steps
@@ -224,6 +234,20 @@ mod tests {
         assert_eq!(a.split(&batch).len(), b.split(&batch).len());
         // degenerate worker count clamps to 1
         assert_eq!(BatchMemoryManager::with_workers(8, 8, 0).unwrap().workers(), 1);
+    }
+
+    #[test]
+    fn restore_stats_resumes_counters() {
+        let mut m = BatchMemoryManager::new(64, 64).unwrap();
+        m.restore_stats(4, 12, 512);
+        assert_eq!(m.logical_steps(), 4);
+        assert_eq!(m.micro_steps(), 12);
+        assert_eq!(m.peak_logical_batch(), 512);
+        assert_eq!(m.amplification(), 3.0);
+        let batch = lb(64);
+        m.split(&batch);
+        assert_eq!(m.logical_steps(), 5);
+        assert_eq!(m.micro_steps(), 13);
     }
 
     /// Satellite (PR 4): zero batch sizes are typed errors, not panics —

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -25,11 +25,73 @@ pub struct StepRecord {
     pub epsilon: f64,
 }
 
+/// Wall-clock stage accounting for the step pipeline. Busy seconds are
+/// summed per stage (prefetch = host batch gathers, compute = gradient
+/// step executions, reduce = noise draw + parameter update); occupancy
+/// is busy/wall, so `1 - occupancy` is the stage's idle fraction. Under
+/// the overlapped pipeline the three busy fractions can sum past 1.0 —
+/// that surplus *is* the overlap win.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PipelineStats {
+    pub wall_secs: f64,
+    pub steps: u64,
+    pub prefetch_busy_secs: f64,
+    pub compute_busy_secs: f64,
+    pub reduce_busy_secs: f64,
+    /// Whether any contributing run used the overlapped (prefetching)
+    /// pipeline rather than the strict sequential path.
+    pub pipelined: bool,
+}
+
+impl PipelineStats {
+    /// Logical steps per wall-clock second.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.steps as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    fn occupancy(&self, busy: f64) -> f64 {
+        if self.wall_secs > 0.0 {
+            busy / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn prefetch_occupancy(&self) -> f64 {
+        self.occupancy(self.prefetch_busy_secs)
+    }
+
+    pub fn compute_occupancy(&self) -> f64 {
+        self.occupancy(self.compute_busy_secs)
+    }
+
+    pub fn reduce_occupancy(&self) -> f64 {
+        self.occupancy(self.reduce_busy_secs)
+    }
+
+    /// Fold another run's accounting into this one.
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.wall_secs += other.wall_secs;
+        self.steps += other.steps;
+        self.prefetch_busy_secs += other.prefetch_busy_secs;
+        self.compute_busy_secs += other.compute_busy_secs;
+        self.reduce_busy_secs += other.reduce_busy_secs;
+        self.pipelined |= other.pipelined;
+    }
+}
+
 /// Append-only metrics log.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct MetricsLog {
     pub records: Vec<StepRecord>,
     pub eval_points: Vec<(u64, f64, f64)>, // (step, loss, accuracy)
+    /// Aggregate wall-clock throughput + per-stage occupancy, filled by
+    /// the trainer as steps run (None until the first step).
+    pub pipeline: Option<PipelineStats>,
 }
 
 impl MetricsLog {
@@ -43,6 +105,14 @@ impl MetricsLog {
 
     pub fn push_eval(&mut self, step: u64, loss: f64, accuracy: f64) {
         self.eval_points.push((step, loss, accuracy));
+    }
+
+    /// Fold a run's stage accounting into the log.
+    pub fn add_pipeline(&mut self, stats: PipelineStats) {
+        match &mut self.pipeline {
+            Some(p) => p.merge(&stats),
+            None => self.pipeline = Some(stats),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -105,10 +175,65 @@ impl MetricsLog {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("records", Json::Arr(records)),
             ("evals", Json::Arr(evals)),
-        ])
+        ];
+        if let Some(p) = &self.pipeline {
+            fields.push((
+                "pipeline",
+                Json::obj(vec![
+                    ("wall_secs", Json::num(p.wall_secs)),
+                    ("steps", Json::num(p.steps as f64)),
+                    ("steps_per_sec", Json::num(p.steps_per_sec())),
+                    ("prefetch_busy_secs", Json::num(p.prefetch_busy_secs)),
+                    ("compute_busy_secs", Json::num(p.compute_busy_secs)),
+                    ("reduce_busy_secs", Json::num(p.reduce_busy_secs)),
+                    ("prefetch_occupancy", Json::num(p.prefetch_occupancy())),
+                    ("compute_occupancy", Json::num(p.compute_occupancy())),
+                    ("reduce_occupancy", Json::num(p.reduce_occupancy())),
+                    ("pipelined", Json::Bool(p.pipelined)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a log produced by [`MetricsLog::to_json`] (checkpoint
+    /// restore: a resumed run appends to the interrupted run's ledger).
+    pub fn from_json(j: &Json) -> Result<MetricsLog> {
+        let f = |j: &Json, key: &str| -> Result<f64> {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow!("metrics json: missing numeric field '{key}'"))
+        };
+        let mut out = MetricsLog::new();
+        for r in j.get("records").as_arr().unwrap_or(&[]) {
+            out.push(StepRecord {
+                step: f(r, "step")? as u64,
+                epoch: f(r, "epoch")? as usize,
+                loss: f(r, "loss")?,
+                snorm: f(r, "snorm")?,
+                sigma: f(r, "sigma")?,
+                logical_batch: f(r, "logical_batch")? as usize,
+                epsilon: f(r, "epsilon")?,
+            });
+        }
+        for e in j.get("evals").as_arr().unwrap_or(&[]) {
+            out.push_eval(f(e, "step")? as u64, f(e, "loss")?, f(e, "accuracy")?);
+        }
+        let p = j.get("pipeline");
+        if !p.is_null() {
+            out.pipeline = Some(PipelineStats {
+                wall_secs: f(p, "wall_secs")?,
+                steps: f(p, "steps")? as u64,
+                prefetch_busy_secs: f(p, "prefetch_busy_secs")?,
+                compute_busy_secs: f(p, "compute_busy_secs")?,
+                reduce_busy_secs: f(p, "reduce_busy_secs")?,
+                pipelined: p.get("pipelined").as_bool().unwrap_or(false),
+            });
+        }
+        Ok(out)
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -168,6 +293,55 @@ mod tests {
             Some(2.25)
         );
         assert_eq!(parsed.get("evals").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn pipeline_stats_occupancy_and_merge() {
+        let mut p = PipelineStats {
+            wall_secs: 2.0,
+            steps: 10,
+            prefetch_busy_secs: 0.5,
+            compute_busy_secs: 1.5,
+            reduce_busy_secs: 0.25,
+            pipelined: false,
+        };
+        assert_eq!(p.steps_per_sec(), 5.0);
+        assert_eq!(p.prefetch_occupancy(), 0.25);
+        assert_eq!(p.compute_occupancy(), 0.75);
+        assert_eq!(p.reduce_occupancy(), 0.125);
+        p.merge(&PipelineStats {
+            wall_secs: 2.0,
+            steps: 30,
+            pipelined: true,
+            ..Default::default()
+        });
+        assert_eq!(p.steps, 40);
+        assert_eq!(p.steps_per_sec(), 10.0);
+        assert!(p.pipelined);
+        assert_eq!(PipelineStats::default().steps_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trip_via_from_json() {
+        let mut m = MetricsLog::new();
+        m.push(rec(3, 1, 2.25));
+        m.push_eval(3, 2.0, 0.5);
+        m.add_pipeline(PipelineStats {
+            wall_secs: 1.0,
+            steps: 4,
+            prefetch_busy_secs: 0.125,
+            compute_busy_secs: 0.5,
+            reduce_busy_secs: 0.25,
+            pipelined: true,
+        });
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        let back = MetricsLog::from_json(&parsed).unwrap();
+        assert_eq!(back.records, m.records);
+        assert_eq!(back.eval_points, m.eval_points);
+        assert_eq!(back.pipeline, m.pipeline);
+        // a pre-PR-6 log without the pipeline section still parses
+        let legacy = Json::parse(r#"{"records": [], "evals": []}"#).unwrap();
+        assert!(MetricsLog::from_json(&legacy).unwrap().pipeline.is_none());
     }
 
     #[test]

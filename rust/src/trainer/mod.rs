@@ -12,6 +12,6 @@ pub mod optimizer;
 pub mod trainer;
 
 pub use memory::BatchMemoryManager;
-pub use metrics::{MetricsLog, StepRecord};
+pub use metrics::{MetricsLog, PipelineStats, StepRecord};
 pub use optimizer::DpOptimizer;
 pub use trainer::{PrivateTrainer, TrainerSteps};

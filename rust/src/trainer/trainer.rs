@@ -15,10 +15,34 @@
 //!
 //! Every logical step records `(σ_t, q)` into the engine's accountant,
 //! so ε is queryable mid-training (early stopping / monitoring).
+//!
+//! # The step pipeline (PR 6)
+//!
+//! Steps run through a single execution path in two configurations:
+//!
+//! * **Sequential** (default): gather → compute → noise/update inline.
+//! * **Pipelined** (`.pipeline(depth)` / `--pipeline N`): a producer
+//!   thread prefetches batch gathers `depth` steps ahead over a
+//!   *bounded* channel (backpressure: the producer parks when the
+//!   channel is full), while the consumer — this thread — runs the
+//!   compute and noise/update stages.
+//!
+//! Determinism contract: the pipelined path is byte-identical to the
+//! sequential one. Batch sampling consumes the engine RNG up front (one
+//! whole epoch per draw, same as always), gathers consume no randomness,
+//! and the consumer draws noise strictly in step order — so the noise
+//! stream, the ε ledger and (under [`NoiseSource::Deterministic`]
+//! (crate::privacy::NoiseSource)) the parameters cannot depend on the
+//! pipeline depth. Pinned by the `serve` integration tests.
 
 use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
 
-use crate::data::{Dataset, LogicalBatch, PoissonLoader, UniformLoader};
+use crate::data::{
+    prefetch_batch, Dataset, LogicalBatch, PoissonLoader, PrefetchedBatch, UniformLoader,
+};
 use crate::distributed::NoiseDivision;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::privacy::scheduler::NoiseScheduler;
@@ -26,13 +50,15 @@ use crate::runtime::backend::BackendKind;
 use crate::runtime::step::HyperParams;
 
 use super::memory::BatchMemoryManager;
-use super::metrics::{MetricsLog, StepRecord};
+use super::metrics::{MetricsLog, PipelineStats, StepRecord};
 use super::optimizer::DpOptimizer;
 
-/// The step set a trainer runs on — re-exported from the backend layer;
-/// obtained from [`ExecutionBackend::trainer_steps`](crate::runtime::backend::ExecutionBackend::trainer_steps).
+/// The step set a trainer runs on — re-exported from the backend
+/// layer; obtained from
+/// [`ExecutionBackend::trainer_steps`](crate::runtime::ExecutionBackend::trainer_steps).
 pub use crate::runtime::backend::TrainerSteps;
 
+#[derive(Clone, Copy)]
 enum Mode {
     Fused,
     Virtual,
@@ -62,6 +88,136 @@ pub struct PrivateTrainer {
     global_step: u64,
     noise_buf: Vec<f32>,
     num_params: usize,
+    /// Sampled-but-not-yet-trained batches of the current epoch. The
+    /// whole epoch is drawn in one RNG pass when the queue runs dry
+    /// (identical RNG consumption order to the pre-PR-6 loop), so a
+    /// checkpoint can capture mid-epoch progress exactly.
+    pending: VecDeque<LogicalBatch>,
+    /// Prefetch depth of the overlapped pipeline (None = sequential).
+    pipeline: Option<usize>,
+}
+
+/// The per-step execution context: disjoint borrows of the trainer's
+/// fields, split out so the compute/update consumer can run while a
+/// producer thread holds `&Dataset` for prefetching (a `&mut self`
+/// method would conflict with that borrow).
+struct StepCtx<'a> {
+    steps: &'a TrainerSteps,
+    engine: &'a PrivacyEngine,
+    pp: &'a PrivacyParams,
+    mode: Mode,
+    params: &'a mut Vec<f32>,
+    noise_buf: &'a mut Vec<f32>,
+    bmm: Option<&'a mut BatchMemoryManager>,
+    metrics: &'a mut MetricsLog,
+    global_step: &'a mut u64,
+    num_params: usize,
+    epoch: usize,
+    sample_rate: f64,
+    sigma: f64,
+    hp: HyperParams,
+}
+
+impl StepCtx<'_> {
+    /// Run one prefetched logical step (one noise addition, one
+    /// accountant entry) and record its metrics. Returns the busy
+    /// seconds of the (compute, reduce) stages — gather time travels
+    /// with the [`PrefetchedBatch`]. This is the *only* step-execution
+    /// path: sequential and pipelined runs differ solely in where the
+    /// gather happened, which is what makes them byte-identical.
+    fn exec(&mut self, pre: PrefetchedBatch) -> Result<(f64, f64)> {
+        let PrefetchedBatch { lb, chunks, .. } = pre;
+        let (loss, snorm, logical, compute_secs, reduce_secs) = match self.mode {
+            Mode::Fused => {
+                let step = self.steps.fused_dp.as_ref().expect("fused mode");
+                if chunks.len() != 1 {
+                    bail!("fused mode: logical batch exceeds physical batch");
+                }
+                let batch = chunks.into_iter().next().expect("one chunk");
+                // under per-worker noise division the pool composes its
+                // own σ/√N shares and the root draw would be discarded —
+                // skip the O(P) generation (the buffer is still passed
+                // for its length check; stale contents are never read)
+                let t = Instant::now();
+                if self.pp.noise_division == NoiseDivision::Root {
+                    self.engine.sample_noise(self.noise_buf);
+                }
+                let reduce_secs = t.elapsed().as_secs_f64();
+                let t = Instant::now();
+                let out = step.dp_step(
+                    self.params,
+                    batch.x,
+                    &batch.y,
+                    &batch.mask,
+                    self.noise_buf,
+                    self.hp,
+                )?;
+                let compute_secs = t.elapsed().as_secs_f64();
+                *self.params = out.params;
+                (
+                    out.loss,
+                    out.snorm_mean,
+                    batch.logical_size,
+                    compute_secs,
+                    reduce_secs,
+                )
+            }
+            Mode::Virtual => {
+                let accum = self.steps.accum.as_ref().expect("virtual mode");
+                let apply = self.steps.apply.as_ref().expect("virtual mode");
+                let bmm = self.bmm.as_deref_mut().expect("virtual mode");
+                // record the logical→physical stats; the producer used
+                // the same chunk size, so the counts must agree
+                let planned = bmm.split(&lb).len();
+                if chunks.len() != planned {
+                    bail!(
+                        "prefetch chunking mismatch: gathered {} chunks, manager planned {planned}",
+                        chunks.len()
+                    );
+                }
+                let mut opt = DpOptimizer::with_clipping(self.num_params, self.pp.clipping);
+                let t = Instant::now();
+                for batch in chunks {
+                    let out = accum.run(
+                        self.params,
+                        batch.x,
+                        &batch.y,
+                        &batch.mask,
+                        self.hp.clip,
+                    )?;
+                    opt.add(&out, batch.logical_size);
+                }
+                let compute_secs = t.elapsed().as_secs_f64();
+                let loss = opt.mean_loss();
+                let snorm = opt.mean_snorm();
+                let samples = opt.samples();
+                let gsum = opt.take();
+                // see the fused branch: no root draw under PerWorker
+                let t = Instant::now();
+                if self.pp.noise_division == NoiseDivision::Root {
+                    self.engine.sample_noise(self.noise_buf);
+                }
+                let new_params = apply.run(self.params, &gsum, self.noise_buf, self.hp)?;
+                let reduce_secs = t.elapsed().as_secs_f64();
+                *self.params = new_params;
+                (loss, snorm, samples, compute_secs, reduce_secs)
+            }
+        };
+        // ledger: one SGM invocation at (σ, q)
+        self.engine.record_steps(self.sigma, self.sample_rate, 1);
+        *self.global_step += 1;
+        let epsilon = self.engine.get_epsilon(1e-5);
+        self.metrics.push(StepRecord {
+            step: *self.global_step,
+            epoch: self.epoch,
+            loss,
+            snorm,
+            sigma: self.sigma,
+            logical_batch: logical,
+            epsilon,
+        });
+        Ok((compute_secs, reduce_secs))
+    }
 }
 
 impl PrivateTrainer {
@@ -126,6 +282,8 @@ impl PrivateTrainer {
             global_step: 0,
             noise_buf: vec![0.0; num_params],
             num_params,
+            pending: VecDeque::new(),
+            pipeline: None,
         })
     }
 
@@ -173,10 +331,64 @@ impl PrivateTrainer {
         self.global_step
     }
 
+    /// Epochs completed (the current epoch index while one is underway).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// The privacy parameters this trainer was built with (checkpoint
+    /// validation: a resumed job must re-build with the same recipe).
+    pub fn privacy_params(&self) -> &PrivacyParams {
+        &self.pp
+    }
+
     /// The batch memory manager (virtual mode only): logical→physical
     /// decomposition stats — micro steps, peak logical batch, amplification.
     pub fn memory_manager(&self) -> Option<&BatchMemoryManager> {
         self.bmm.as_ref()
+    }
+
+    /// Enable the overlapped prefetch pipeline with the given depth
+    /// (bounded channel capacity), or disable it with `None`.
+    pub fn set_pipeline(&mut self, depth: Option<usize>) -> Result<()> {
+        if depth == Some(0) {
+            bail!("pipeline depth must be at least 1 (omit it for the sequential path)");
+        }
+        self.pipeline = depth;
+        Ok(())
+    }
+
+    /// The configured prefetch depth (None = sequential execution).
+    pub fn pipeline_depth(&self) -> Option<usize> {
+        self.pipeline
+    }
+
+    /// Sampled-but-untrained batches of the current epoch, in training
+    /// order (checkpoint capture: a resume replays exactly these).
+    pub fn pending_batches(&self) -> Vec<LogicalBatch> {
+        self.pending.iter().cloned().collect()
+    }
+
+    /// Restore training position from a checkpoint: the epoch counter,
+    /// global step, and the current epoch's remaining batch queue. The
+    /// accountant and RNG are restored separately through the engine.
+    pub fn restore_progress(
+        &mut self,
+        epoch: usize,
+        global_step: u64,
+        pending: Vec<LogicalBatch>,
+    ) {
+        self.epoch = epoch;
+        self.global_step = global_step;
+        self.pending = pending.into();
+    }
+
+    /// Restore the batch-memory-manager usage counters (no-op in fused
+    /// mode, which has no manager).
+    pub fn restore_memory_stats(&mut self, logical: u64, micro: u64, peak: usize) {
+        if let Some(b) = self.bmm.as_mut() {
+            b.restore_stats(logical, micro, peak);
+        }
     }
 
     fn hp(&self, sigma: f64) -> HyperParams {
@@ -190,95 +402,202 @@ impl PrivateTrainer {
         }
     }
 
-    /// Run one logical step (one noise addition, one accountant entry).
-    fn logical_step(&mut self, lb: &LogicalBatch, sigma: f64) -> Result<(f64, f64, usize)> {
-        let hp = self.hp(sigma);
-        let (loss, snorm, logical) = match self.mode {
+    /// (indices per gathered chunk, rows each chunk is padded to).
+    fn chunk_geometry(&self) -> (usize, usize) {
+        match self.mode {
             Mode::Fused => {
-                let step = self.steps.fused_dp.as_ref().expect("fused mode");
-                let phys = step.batch();
-                if lb.indices.len() > phys {
-                    bail!("fused mode: logical batch exceeds physical batch");
-                }
-                let batch = self.train.gather(&lb.indices, phys)?;
-                // under per-worker noise division the pool composes its
-                // own σ/√N shares and the root draw would be discarded —
-                // skip the O(P) generation (the buffer is still passed
-                // for its length check; stale contents are never read)
-                if self.pp.noise_division == NoiseDivision::Root {
-                    self.engine.sample_noise(&mut self.noise_buf);
-                }
-                let out = step.dp_step(
-                    &self.params,
-                    batch.x,
-                    &batch.y,
-                    &batch.mask,
-                    &self.noise_buf,
-                    hp,
-                )?;
-                self.params = out.params;
-                (out.loss, out.snorm_mean, batch.logical_size)
+                let b = self.steps.fused_dp.as_ref().expect("fused mode").batch();
+                (b, b)
             }
             Mode::Virtual => {
-                let accum = self.steps.accum.as_ref().expect("virtual mode");
-                let apply = self.steps.apply.as_ref().expect("virtual mode");
-                let phys = accum.batch();
-                let bmm = self.bmm.as_mut().expect("virtual mode");
-                let mut opt = DpOptimizer::with_clipping(self.num_params, self.pp.clipping);
-                for chunk in bmm.split(lb) {
-                    let batch = self.train.gather(chunk, phys)?;
-                    let out = accum.run(
-                        &self.params,
-                        batch.x,
-                        &batch.y,
-                        &batch.mask,
-                        hp.clip,
-                    )?;
-                    opt.add(&out, batch.logical_size);
-                }
-                let loss = opt.mean_loss();
-                let snorm = opt.mean_snorm();
-                let samples = opt.samples();
-                let gsum = opt.take();
-                // see the fused branch: no root draw under PerWorker
-                if self.pp.noise_division == NoiseDivision::Root {
-                    self.engine.sample_noise(&mut self.noise_buf);
-                }
-                self.params = apply.run(&self.params, &gsum, &self.noise_buf, hp)?;
-                (loss, snorm, samples)
+                let bmm = self.bmm.as_ref().expect("virtual mode");
+                let padded = self.steps.accum.as_ref().expect("virtual mode").batch();
+                (bmm.chunk_size(), padded)
             }
-        };
-        // ledger: one SGM invocation at (σ, q)
-        self.engine.record_steps(sigma, self.sample_rate(), 1);
-        self.global_step += 1;
-        Ok((loss, snorm, logical))
+        }
     }
 
-    /// Train one epoch; returns the mean loss over the epoch.
-    pub fn train_epoch(&mut self) -> Result<f64> {
-        let sigma = self.current_sigma();
-        let batches: Vec<LogicalBatch> = match &self.loader {
-            Loader::Uniform(u) => self.engine.with_rng(|r| u.epoch(r)),
-            Loader::Poisson(p) => self.engine.with_rng(|r| p.epoch(r)),
-        };
-        let mut losses = Vec::with_capacity(batches.len());
-        for lb in &batches {
-            let (loss, snorm, logical) = self.logical_step(lb, sigma)?;
-            if loss.is_finite() {
-                losses.push(loss);
-            }
-            let epsilon = self.engine.get_epsilon(1e-5);
-            self.metrics.push(StepRecord {
-                step: self.global_step,
-                epoch: self.epoch,
-                loss,
-                snorm,
-                sigma,
-                logical_batch: logical,
-                epsilon,
-            });
+    /// Draw a fresh epoch of batches when the queue is empty. All of an
+    /// epoch's sampling randomness is consumed here, before any noise
+    /// draw of that epoch — the same RNG order as the original loop, and
+    /// the invariant that lets a checkpoint capture the queue verbatim.
+    fn ensure_pending(&mut self) {
+        if self.pending.is_empty() {
+            let batches = match &self.loader {
+                Loader::Uniform(u) => self.engine.with_rng(|r| u.epoch(r)),
+                Loader::Poisson(p) => self.engine.with_rng(|r| p.epoch(r)),
+            };
+            self.pending.extend(batches);
         }
+    }
+
+    /// Run a drained batch list through the step pipeline (sequential or
+    /// overlapped, per `self.pipeline`), accumulating stage occupancy
+    /// into the metrics log.
+    fn run_batches(&mut self, batches: Vec<LogicalBatch>, sigma: f64) -> Result<()> {
+        if batches.is_empty() {
+            return Ok(());
+        }
+        let hp = self.hp(sigma);
+        let (chunk_size, padded) = self.chunk_geometry();
+        let depth = self.pipeline;
+        let n = batches.len();
+        let q = self.sample_rate();
+        let wall = Instant::now();
+        let (mut prefetch_busy, mut compute_busy, mut reduce_busy) = (0.0, 0.0, 0.0);
+
+        // split the borrow: the producer thread only needs `&train`; the
+        // consumer mutates everything else through `StepCtx`
+        let PrivateTrainer {
+            train,
+            steps,
+            engine,
+            pp,
+            mode,
+            params,
+            noise_buf,
+            bmm,
+            metrics,
+            global_step,
+            num_params,
+            epoch,
+            ..
+        } = self;
+        let train: &Dataset = train;
+        let mut ctx = StepCtx {
+            steps,
+            engine,
+            pp,
+            mode: *mode,
+            params,
+            noise_buf,
+            bmm: bmm.as_mut(),
+            metrics: &mut *metrics,
+            global_step,
+            num_params: *num_params,
+            epoch: *epoch,
+            sample_rate: q,
+            sigma,
+            hp,
+        };
+
+        match depth {
+            None => {
+                for lb in batches {
+                    let pre = prefetch_batch(train, lb, chunk_size, padded)?;
+                    prefetch_busy += pre.gather_secs;
+                    let (c, r) = ctx.exec(pre)?;
+                    compute_busy += c;
+                    reduce_busy += r;
+                }
+            }
+            Some(depth) => {
+                let (tx, rx) = mpsc::sync_channel::<Result<PrefetchedBatch>>(depth);
+                std::thread::scope(|scope| -> Result<()> {
+                    let producer = scope.spawn(move || {
+                        for lb in batches {
+                            let out = prefetch_batch(train, lb, chunk_size, padded);
+                            let failed = out.is_err();
+                            // a closed channel means the consumer bailed:
+                            // stop prefetching and let it report its error
+                            if tx.send(out).is_err() || failed {
+                                break;
+                            }
+                        }
+                    });
+                    let mut result = Ok(());
+                    for _ in 0..n {
+                        match rx.recv() {
+                            Ok(Ok(pre)) => {
+                                prefetch_busy += pre.gather_secs;
+                                match ctx.exec(pre) {
+                                    Ok((c, r)) => {
+                                        compute_busy += c;
+                                        reduce_busy += r;
+                                    }
+                                    Err(e) => {
+                                        result = Err(e);
+                                        break;
+                                    }
+                                }
+                            }
+                            Ok(Err(e)) => {
+                                result = Err(e);
+                                break;
+                            }
+                            Err(_) => break, // producer gone (panic caught below)
+                        }
+                    }
+                    drop(rx); // unparks a producer blocked on a full channel
+                    if producer.join().is_err() && result.is_ok() {
+                        result = Err(anyhow!("prefetch thread panicked"));
+                    }
+                    result
+                })?;
+            }
+        }
+        drop(ctx);
+        metrics.add_pipeline(PipelineStats {
+            wall_secs: wall.elapsed().as_secs_f64(),
+            steps: n as u64,
+            prefetch_busy_secs: prefetch_busy,
+            compute_busy_secs: compute_busy,
+            reduce_busy_secs: reduce_busy,
+            pipelined: depth.is_some(),
+        });
+        Ok(())
+    }
+
+    /// Steps left in the current epoch, drawing the epoch's batches if
+    /// the queue is empty (the serve scheduler caps a final-epoch
+    /// quantum with this so an epoch-bounded job never overshoots).
+    pub fn remaining_in_epoch(&mut self) -> usize {
+        self.ensure_pending();
+        self.pending.len()
+    }
+
+    /// Run up to `max` logical steps, crossing epoch boundaries as
+    /// needed; returns the number run (`max`, except for degenerate
+    /// empty-epoch loaders). The serve scheduler's quantum — a
+    /// checkpoint taken between calls captures mid-epoch position
+    /// exactly.
+    pub fn train_steps(&mut self, max: usize) -> Result<usize> {
+        let mut done = 0;
+        while done < max {
+            self.ensure_pending();
+            if self.pending.is_empty() {
+                // a degenerate loader config produced an empty epoch;
+                // count the epoch and return short rather than spinning
+                self.epoch += 1;
+                break;
+            }
+            let sigma = self.current_sigma();
+            let k = (max - done).min(self.pending.len());
+            let chunk: Vec<LogicalBatch> = self.pending.drain(..k).collect();
+            self.run_batches(chunk, sigma)?;
+            done += k;
+            if self.pending.is_empty() {
+                self.epoch += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Train to the end of the current epoch (a full epoch when starting
+    /// at a boundary; the remainder after a mid-epoch resume); returns
+    /// the mean loss over the steps run.
+    pub fn train_epoch(&mut self) -> Result<f64> {
+        let first = self.metrics.len();
+        self.ensure_pending();
+        let sigma = self.current_sigma();
+        let batches: Vec<LogicalBatch> = self.pending.drain(..).collect();
+        self.run_batches(batches, sigma)?;
         self.epoch += 1;
+        let losses: Vec<f64> = self.metrics.records[first..]
+            .iter()
+            .map(|r| r.loss)
+            .filter(|l| l.is_finite())
+            .collect();
         Ok(crate::util::stats::mean(&losses))
     }
 

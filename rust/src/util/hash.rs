@@ -1,0 +1,93 @@
+//! CRC-32 (ISO-HDLC, the zlib/PNG polynomial) plus fixed-width hex
+//! helpers. Used by the checkpoint format to checksum payload files and
+//! to serialize 64-bit RNG state words through JSON (a `u64` does not
+//! survive an `f64`-backed JSON number above 2^53, so state words travel
+//! as hex strings).
+
+use anyhow::{bail, Result};
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// CRC-32 of a byte slice (poly 0xEDB88320, init/xorout 0xFFFFFFFF —
+/// the checksum zlib, gzip and PNG use).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Fixed-width lowercase hex of a u64 (always 16 digits, `0x` prefix).
+pub fn u64_to_hex(x: u64) -> String {
+    format!("0x{x:016x}")
+}
+
+/// Parse a u64 written by [`u64_to_hex`] (the `0x` prefix is optional).
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    let digits = s.strip_prefix("0x").unwrap_or(s);
+    if digits.is_empty() || digits.len() > 16 {
+        bail!("bad u64 hex literal '{s}'");
+    }
+    match u64::from_str_radix(digits, 16) {
+        Ok(x) => Ok(x),
+        Err(_) => bail!("bad u64 hex literal '{s}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the canonical CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flip() {
+        let mut data = vec![0u8; 256];
+        data.iter_mut().enumerate().for_each(|(i, b)| *b = i as u8);
+        let clean = crc32(&data);
+        data[100] ^= 0x01;
+        assert_ne!(crc32(&data), clean);
+    }
+
+    #[test]
+    fn u64_hex_round_trip() {
+        for x in [0u64, 1, 0x53, u64::MAX, 0x9E37_79B9_7F4A_7C15, 1u64 << 63] {
+            let s = u64_to_hex(x);
+            assert_eq!(s.len(), 18, "{s}");
+            assert_eq!(u64_from_hex(&s).unwrap(), x);
+        }
+        // prefix-free form parses too
+        assert_eq!(u64_from_hex("ff").unwrap(), 255);
+    }
+
+    #[test]
+    fn u64_hex_rejects_garbage() {
+        assert!(u64_from_hex("").is_err());
+        assert!(u64_from_hex("0x").is_err());
+        assert!(u64_from_hex("0xzz").is_err());
+        assert!(u64_from_hex("0x12345678123456789").is_err()); // 17 digits
+    }
+}

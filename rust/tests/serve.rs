@@ -1,0 +1,394 @@
+//! Streaming-service integration tests — the PR-6 acceptance criteria,
+//! on the always-on native backend:
+//!
+//! * pipeline determinism: `.pipeline(depth)` produces byte-identical
+//!   ε and parameters to strict sequential execution under the
+//!   deterministic noise source;
+//! * accountant durability: serializing accountant state through the
+//!   checkpoint format and replaying it reproduces ε bit-identically,
+//!   across both accountants and a (q, σ, steps) grid;
+//! * kill/resume parity: a run interrupted at an arbitrary step and
+//!   resumed from its checkpoint lands on byte-identical ε and
+//!   parameters within 1e-6 (bitwise, in fact) of the uninterrupted run;
+//! * the serve scheduler: concurrent jobs at distinct (ε, δ) budgets,
+//!   graceful budget exhaustion, and kill + `--resume` continuity.
+
+use std::path::PathBuf;
+
+use opacus_rs::accounting::{Accountant, GdpAccountant, RdpAccountant};
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::privacy::{Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use opacus_rs::serve::{
+    checkpoint_exists, JobSpec, JobStatus, ServeConfig, Service, TrainerCheckpoint,
+};
+use opacus_rs::trainer::{MetricsLog, PrivateTrainer};
+use opacus_rs::util::json::Json;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("opacus_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A small deterministic fused-path trainer (uniform sampling,
+/// logical == physical) with an optional prefetch pipeline.
+fn build_trainer(task: &str, pipeline: Option<usize>) -> PrivateTrainer {
+    let sys = Opacus::load_with_backend(
+        "artifacts_that_do_not_exist",
+        task,
+        Backend::Native,
+        192,
+        32,
+        11,
+    )
+    .unwrap();
+    let mut builder = PrivacyEngine::private()
+        .backend(Backend::Native)
+        .noise(NoiseSource::Deterministic)
+        .sampling(SamplingMode::Uniform)
+        .noise_multiplier(0.8)
+        .max_grad_norm(1.0)
+        .lr(0.2)
+        .logical_batch(32)
+        .physical_batch(32)
+        .seed(17);
+    if let Some(d) = pipeline {
+        builder = builder.pipeline(d);
+    }
+    builder.build(sys).unwrap().into_trainer()
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// tentpole layer 1: the step pipeline
+// ---------------------------------------------------------------------------
+
+/// The determinism contract: pipelined execution is byte-identical to
+/// sequential — same ε bits, same parameter bits — at several depths,
+/// on both a feed-forward and the recurrent task.
+#[test]
+fn pipelined_training_is_byte_identical_to_sequential() {
+    for task in ["mnist", "lstm"] {
+        let mut seq = build_trainer(task, None);
+        seq.train_epochs(2).unwrap();
+        let eps_seq = seq.epsilon(1e-5).unwrap();
+        for depth in [1, 3] {
+            let mut pip = build_trainer(task, Some(depth));
+            assert_eq!(pip.pipeline_depth(), Some(depth));
+            pip.train_epochs(2).unwrap();
+            let eps_pip = pip.epsilon(1e-5).unwrap();
+            assert_eq!(
+                eps_seq.to_bits(),
+                eps_pip.to_bits(),
+                "{task} depth {depth}: ε must be byte-identical"
+            );
+            assert_eq!(
+                bits(&seq.params),
+                bits(&pip.params),
+                "{task} depth {depth}: params must be byte-identical"
+            );
+        }
+    }
+}
+
+/// The pipeline reports stage occupancy into the metrics log, and the
+/// `pipelined` flag tracks which path ran.
+#[test]
+fn pipeline_stats_are_recorded() {
+    let mut seq = build_trainer("mnist", None);
+    seq.train_epochs(1).unwrap();
+    let s = seq.metrics.pipeline.expect("sequential run records stats");
+    assert!(!s.pipelined);
+    assert_eq!(s.steps, seq.global_step());
+    assert!(s.wall_secs > 0.0);
+
+    let mut pip = build_trainer("mnist", Some(2));
+    pip.train_epochs(1).unwrap();
+    let p = pip.metrics.pipeline.expect("pipelined run records stats");
+    assert!(p.pipelined);
+    assert_eq!(p.steps, pip.global_step());
+    assert!(p.steps_per_sec() > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// tentpole layer 2: durable checkpoints
+// ---------------------------------------------------------------------------
+
+/// Accountant-state durability over a (q, σ, steps) grid: history
+/// serialized through the on-disk checkpoint format and replayed into a
+/// fresh accountant reproduces ε bit-identically, for RDP and GDP.
+#[test]
+fn accountant_round_trips_epsilon_bit_identical() {
+    let dir = tmpdir("acct_grid");
+    let grid: Vec<(f64, f64, u64)> = vec![
+        (1.0 / 6.0, 0.8, 7),
+        (0.01, 1.1, 500),
+        (0.004, 1.0, 2344),
+        (0.05, 2.0, 91),
+    ];
+    for mech in ["rdp", "gdp"] {
+        let fresh = |hist: &[opacus_rs::accounting::HistoryEntry]| -> Box<dyn Accountant> {
+            let mut a: Box<dyn Accountant> = match mech {
+                "rdp" => Box::new(RdpAccountant::new()),
+                _ => Box::new(GdpAccountant::new()),
+            };
+            for h in hist {
+                a.record(h.noise_multiplier, h.sample_rate, h.steps);
+            }
+            a
+        };
+        for &(q, sigma, steps) in &grid {
+            // a composite ledger: two σ phases, as a noise schedule writes
+            let history = vec![
+                opacus_rs::accounting::HistoryEntry {
+                    noise_multiplier: sigma,
+                    sample_rate: q,
+                    steps,
+                },
+                opacus_rs::accounting::HistoryEntry {
+                    noise_multiplier: sigma * 1.5,
+                    sample_rate: q,
+                    steps: steps / 2 + 1,
+                },
+            ];
+            let want = fresh(&history).get_epsilon(1e-5);
+
+            // through the full on-disk checkpoint format
+            let ck = TrainerCheckpoint {
+                task: "grid".into(),
+                epoch: 0,
+                global_step: steps,
+                params: vec![0.0; 4],
+                history: history.clone(),
+                mechanism: mech.into(),
+                rng_words: None,
+                pending: Vec::new(),
+                memory_stats: None,
+                noise_multiplier: sigma,
+                logical_batch: 32,
+                metrics: MetricsLog::new(),
+            };
+            let path = dir.join(format!("{mech}_{steps}"));
+            ck.save(&path).unwrap();
+            let back = TrainerCheckpoint::load(&path).unwrap();
+            assert_eq!(back.history, history, "{mech} q={q} σ={sigma}");
+            let got = fresh(&back.history).get_epsilon(1e-5);
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "{mech} q={q} σ={sigma} steps={steps}: ε {want} != {got}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill/resume parity: a run checkpointed mid-epoch and resumed into a
+/// fresh trainer matches the uninterrupted run — ε byte-identical,
+/// params bitwise identical (comfortably within the 1e-6 criterion).
+#[test]
+fn kill_and_resume_matches_uninterrupted_run() {
+    let dir = tmpdir("kill_resume");
+    // reference: 2 epochs straight through
+    let mut reference = build_trainer("mnist", None);
+    reference.train_epochs(2).unwrap();
+    let eps_ref = reference.epsilon(1e-5).unwrap();
+    let total = reference.global_step() as usize;
+
+    // killed run: stop mid-epoch at an awkward step count, checkpoint
+    let mut killed = build_trainer("mnist", None);
+    killed.train_steps(5).unwrap();
+    let ckpt = dir.join("job");
+    TrainerCheckpoint::capture(&killed).save(&ckpt).unwrap();
+    drop(killed); // the process is gone
+
+    // resume into a freshly built trainer and finish the budgeted steps
+    let mut resumed = build_trainer("mnist", None);
+    TrainerCheckpoint::load(&ckpt)
+        .unwrap()
+        .apply(&mut resumed)
+        .unwrap();
+    assert_eq!(resumed.global_step(), 5);
+    resumed.train_steps(total - 5).unwrap();
+
+    let eps_res = resumed.epsilon(1e-5).unwrap();
+    assert_eq!(
+        eps_ref.to_bits(),
+        eps_res.to_bits(),
+        "ε after resume must be byte-identical ({eps_ref} vs {eps_res})"
+    );
+    assert_eq!(
+        bits(&reference.params),
+        bits(&resumed.params),
+        "params after resume must be byte-identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checkpoint refuses to restore into a trainer built from a different
+/// recipe (different σ or task) — config drift is an error, not silence.
+#[test]
+fn checkpoint_rejects_mismatched_trainer() {
+    let dir = tmpdir("mismatch");
+    let mut t = build_trainer("mnist", None);
+    t.train_steps(3).unwrap();
+    let ckpt = dir.join("job");
+    TrainerCheckpoint::capture(&t).save(&ckpt).unwrap();
+
+    let mut other_task = build_trainer("embed", None);
+    let err = TrainerCheckpoint::load(&ckpt)
+        .unwrap()
+        .apply(&mut other_task)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("task"), "{err}");
+
+    let mut tampered = TrainerCheckpoint::load(&ckpt).unwrap();
+    tampered.noise_multiplier = 9.9;
+    let mut same_task = build_trainer("mnist", None);
+    let err = tampered.apply(&mut same_task).unwrap_err().to_string();
+    assert!(err.contains("recipe"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// tentpole layer 3: the serve scheduler
+// ---------------------------------------------------------------------------
+
+fn spec(json: &str) -> JobSpec {
+    JobSpec::from_json(&Json::parse(json).unwrap()).unwrap()
+}
+
+fn tight_spec(name: &str, epsilon: f64) -> JobSpec {
+    spec(&format!(
+        r#"{{"name":"{name}","task":"mnist","backend":"native","epsilon":{epsilon},
+            "delta":1e-5,"sigma":1.0,"batch":32,"train":192,"lr":0.2,"seed":17}}"#
+    ))
+}
+
+fn epoch_spec(name: &str) -> JobSpec {
+    spec(&format!(
+        r#"{{"name":"{name}","task":"embed","backend":"native","max_epochs":1,
+            "sigma":1.1,"batch":32,"train":96,"seed":17}}"#
+    ))
+}
+
+/// Two concurrent jobs at distinct budgets: the ε-bounded job stops
+/// *before* its target (graceful exhaustion, never an error) and the
+/// epoch-bounded job completes exactly at its cap.
+#[test]
+fn serve_runs_jobs_to_graceful_termination() {
+    let out = tmpdir("serve_basic");
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 4;
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("budgeted", 5.0)).unwrap();
+    svc.submit(epoch_spec("epochy")).unwrap();
+    let reports = svc.run().unwrap();
+    assert_eq!(reports.len(), 2);
+
+    let budgeted = &reports[0];
+    assert_eq!(budgeted.status, JobStatus::Exhausted);
+    assert!(
+        budgeted.epsilon <= 5.0,
+        "exhausted job spent ε = {} past its budget",
+        budgeted.epsilon
+    );
+    assert!(budgeted.steps > 0, "budget admits at least a few steps");
+
+    let epochy = &reports[1];
+    assert_eq!(epochy.status, JobStatus::Completed);
+    assert_eq!(epochy.epochs, 1);
+
+    // both jobs left durable checkpoints behind
+    assert!(checkpoint_exists(&out.join("budgeted")));
+    assert!(checkpoint_exists(&out.join("epochy")));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// Kill the service mid-run (the `kill_after` hook — same code path as
+/// SIGTERM), resume it, and require the resumed service to finish with
+/// ε byte-identical to a never-killed service on the same specs.
+#[test]
+fn serve_kill_and_resume_reproduces_epsilon() {
+    // reference service: never killed
+    let ref_out = tmpdir("serve_ref");
+    let mut cfg = ServeConfig::new(&ref_out);
+    cfg.quantum = 2;
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 8.0)).unwrap();
+    let reference = svc.run().unwrap();
+    assert_eq!(reference[0].status, JobStatus::Exhausted);
+
+    // killed service: stops after 2 total steps (well before the budget
+    // is anywhere near spent) with a final checkpoint
+    let out = tmpdir("serve_killed");
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 2;
+    cfg.kill_after = Some(2);
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 8.0)).unwrap();
+    let killed = svc.run().unwrap();
+    assert_eq!(killed[0].status, JobStatus::Interrupted);
+    assert!(killed[0].steps >= 2);
+    assert!(checkpoint_exists(&out.join("job")));
+
+    // resumed service: picks the job up and exhausts the budget
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 2;
+    cfg.resume = true;
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 8.0)).unwrap();
+    let resumed = svc.run().unwrap();
+    assert_eq!(resumed[0].status, JobStatus::Exhausted);
+    assert!(resumed[0].resumed);
+
+    assert_eq!(
+        reference[0].epsilon.to_bits(),
+        resumed[0].epsilon.to_bits(),
+        "kill/resume must reproduce ε byte-identically ({} vs {})",
+        reference[0].epsilon,
+        resumed[0].epsilon
+    );
+    assert_eq!(reference[0].steps, resumed[0].steps);
+    // the deterministic noise source also pins the parameter bits
+    let p_ref = bits(&svc.trainer("job").unwrap().params);
+    let ref_trainer = {
+        let mut cfg = ServeConfig::new(&ref_out);
+        cfg.resume = true;
+        let mut s = Service::new(cfg);
+        s.submit(tight_spec("job", 8.0)).unwrap();
+        bits(&s.trainer("job").unwrap().params)
+    };
+    assert_eq!(p_ref, ref_trainer, "params after kill/resume must match");
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_dir_all(&ref_out);
+}
+
+/// A spec with neither a budget nor an epoch cap is rejected up front,
+/// and a pipelined job spec trains under the scheduler.
+#[test]
+fn serve_spec_validation_and_pipelined_jobs() {
+    let err = JobSpec::from_json(&Json::parse(r#"{"name":"x","task":"mnist"}"#).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("never terminate"), "{err}");
+
+    let out = tmpdir("serve_pipelined");
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 4;
+    let mut svc = Service::new(cfg);
+    svc.submit(spec(
+        r#"{"name":"p","task":"mnist","backend":"native","max_epochs":1,
+            "batch":32,"train":96,"pipeline":2,"seed":17}"#,
+    ))
+    .unwrap();
+    let reports = svc.run().unwrap();
+    assert_eq!(reports[0].status, JobStatus::Completed);
+    assert_eq!(reports[0].epochs, 1);
+    let _ = std::fs::remove_dir_all(&out);
+}
