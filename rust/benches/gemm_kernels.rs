@@ -1,25 +1,32 @@
-//! GEMM micro-kernel bench — blocked vs scalar reference at the dense
-//! shapes the five native tasks actually run (PR-5 acceptance gate).
+//! GEMM micro-kernel bench — blocked engine vs scalar reference at the
+//! dense shapes the five native tasks actually run (PR-5 acceptance
+//! gate, extended by PR-7 with the SIMD tile and intra-op parallelism).
 //!
-//! Each row times one contraction with the blocked engine
-//! (`runtime::backend::native::gemm`) and with the scalar reference
-//! loops (`gemm::reference`, the pre-blocked engine's loop structure)
-//! and reports GFLOP/s plus the speedup. Shapes marked `acceptance` are
-//! the ISSUE-5 criteria: the LSTM input projection and the MHA QKV
-//! projection must show ≥ 2× over scalar.
+//! Each row times one contraction three ways: the scalar reference
+//! loops (`gemm::reference`, the pre-blocked engine's loop structure),
+//! the blocked engine pinned to the portable scalar tile, and the
+//! blocked engine on the runtime-dispatched tile (AVX2+FMA where the
+//! CPU has it). Shapes marked `acceptance` are the ISSUE-5/ISSUE-7
+//! criteria: the LSTM input projection and the MHA QKV projection must
+//! show ≥ 2× over the scalar reference on the SIMD path. A second
+//! section times the largest acceptance shape at 1/2/4 intra-op
+//! threads (`OPACUS_GEMM_THREADS` semantics, pinned per call).
 //!
 //! Usage: cargo bench --bench gemm_kernels [-- --iters-scale 1.0
-//!        --bench-out BENCH_pr5.json --check]
+//!        --bench-out BENCH_pr7.json --check]
 //!
 //! `--check` turns the report into a gate: exit non-zero if any shape
-//! runs the blocked path slower than scalar, or an acceptance shape
-//! below 2×. CI runs with `--check` on every push and uploads
-//! `BENCH_pr5_ci.json`.
+//! runs the blocked path slower than scalar, an acceptance shape falls
+//! below 2×, the 4-thread run falls below 2× over 1-thread (only gated
+//! when ≥ 4 CPUs are present — logged as skipped otherwise), or any
+//! path diverges bitwise from the serial scalar reference (SIMD is
+//! compared on integer-valued data, where FMA rounding is exact). CI
+//! runs the gate on every push and uploads `BENCH_pr7_ci.json`.
 
 use anyhow::{bail, Result};
 use std::hint::black_box;
 
-use opacus_rs::runtime::backend::native::gemm;
+use opacus_rs::runtime::backend::native::gemm::{self, GemmOpts, TileKind};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
 use opacus_rs::util::stats;
@@ -48,7 +55,7 @@ struct Shape {
     m: usize,
     n: usize,
     k: usize,
-    /// ISSUE-5 acceptance shape: must clear 2× under `--check`.
+    /// Acceptance shape: must clear 2× under `--check`.
     acceptance: bool,
 }
 
@@ -93,10 +100,39 @@ fn filled(n: usize, seed: usize) -> Vec<f32> {
     (0..n).map(|i| (((i + seed) % 37) as f32 - 18.0) * 0.05).collect()
 }
 
+/// Small-integer-valued f32 data: products and short sums stay exact,
+/// so FMA's single rounding cannot diverge from scalar mul+add and the
+/// SIMD tile must match the scalar tile bit-for-bit.
+fn filled_int(n: usize, seed: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i * 7 + seed) % 9) as f32 - 4.0).collect()
+}
+
 /// Mean seconds per call of `f` (after warmup).
 fn time_mean(warmup: usize, iters: usize, f: impl FnMut()) -> f64 {
     let times = stats::sample_runtimes(warmup, iters, f);
     stats::mean(&times)
+}
+
+fn detected_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_shape(s: &Shape, opts: Option<GemmOpts>, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let (m, n, k) = (s.m, s.n, s.k);
+    let (lda, ldb) = match s.op {
+        OpKind::Nn => (k, n),
+        OpKind::Nt => (k, k),
+        OpKind::Tn => (m, n),
+    };
+    match (s.op, opts) {
+        (OpKind::Nn, Some(o)) => gemm::sgemm_with(o, m, n, k, a, lda, b, ldb, c, n),
+        (OpKind::Nt, Some(o)) => gemm::sgemm_nt_with(o, m, n, k, a, lda, b, ldb, c, n),
+        (OpKind::Tn, Some(o)) => gemm::sgemm_tn_with(o, m, n, k, a, lda, b, ldb, c, n),
+        (OpKind::Nn, None) => gemm::reference::sgemm(m, n, k, a, lda, b, ldb, c, n),
+        (OpKind::Nt, None) => gemm::reference::sgemm_nt(m, n, k, a, lda, b, ldb, c, n),
+        (OpKind::Tn, None) => gemm::reference::sgemm_tn(m, n, k, a, lda, b, ldb, c, n),
+    }
 }
 
 fn main() -> Result<()> {
@@ -107,6 +143,8 @@ fn main() -> Result<()> {
     if iters_scale <= 0.0 {
         bail!("--iters-scale must be positive, got {iters_scale}");
     }
+    let tile = gemm::detected_tile();
+    let cpus = detected_cpus();
 
     let header = vec![
         "shape".to_string(),
@@ -114,22 +152,26 @@ fn main() -> Result<()> {
         "m".to_string(),
         "n".to_string(),
         "k".to_string(),
-        "scalar GF/s".to_string(),
-        "blocked GF/s".to_string(),
+        "ref GF/s".to_string(),
+        "scalar-tile GF/s".to_string(),
+        format!("{} GF/s", tile.as_str()),
         "speedup".to_string(),
     ];
     let bs = gemm::block_sizes();
     let tiling = format!(
-        "MR={} NR={} MC={} KC={} NC={}",
+        "MR={} NR={} MC={} KC={} NC={} tile={}",
         gemm::MR,
         gemm::NR,
         bs.mc,
         bs.kc,
         bs.nc,
+        tile.as_str(),
     );
     let title = format!("gemm_kernels: blocked ({tiling}) vs scalar reference");
     let mut table = Table::new(&title, header);
 
+    let scalar_opts = GemmOpts::serial_scalar();
+    let simd_opts = GemmOpts::serial_scalar().with_tile(tile);
     let mut rows: Vec<(String, Json)> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for s in shapes() {
@@ -139,44 +181,76 @@ fn main() -> Result<()> {
             OpKind::Nt => (filled(m * k, 1), filled(n * k, 2)),
             OpKind::Tn => (filled(k * m, 1), filled(k * n, 2)),
         };
-        let (lda, ldb) = match s.op {
-            OpKind::Nn => (k, n),
-            OpKind::Nt => (k, k),
-            OpKind::Tn => (m, n),
-        };
         let mut c = vec![0f32; m * n];
         let flops = 2.0 * m as f64 * n as f64 * k as f64;
         let iters = ((4e8 / flops) * iters_scale).clamp(10.0, 20_000.0) as usize;
         let warmup = iters / 10 + 1;
-        let run = |blocked: bool, c: &mut [f32]| match (s.op, blocked) {
-            (OpKind::Nn, true) => gemm::sgemm(m, n, k, &a, lda, &b, ldb, c, n),
-            (OpKind::Nt, true) => gemm::sgemm_nt(m, n, k, &a, lda, &b, ldb, c, n),
-            (OpKind::Tn, true) => gemm::sgemm_tn(m, n, k, &a, lda, &b, ldb, c, n),
-            (OpKind::Nn, false) => gemm::reference::sgemm(m, n, k, &a, lda, &b, ldb, c, n),
-            (OpKind::Nt, false) => gemm::reference::sgemm_nt(m, n, k, &a, lda, &b, ldb, c, n),
-            (OpKind::Tn, false) => gemm::reference::sgemm_tn(m, n, k, &a, lda, &b, ldb, c, n),
-        };
-        let t_scalar = time_mean(warmup, iters, || {
+        let t_ref = time_mean(warmup, iters, || {
             c.fill(0.0);
-            run(false, &mut c);
+            run_shape(&s, None, &a, &b, &mut c);
             black_box(c[0]);
         });
-        let t_blocked = time_mean(warmup, iters, || {
+        let t_tile = time_mean(warmup, iters, || {
             c.fill(0.0);
-            run(true, &mut c);
+            run_shape(&s, Some(scalar_opts), &a, &b, &mut c);
             black_box(c[0]);
         });
-        let gf_scalar = flops / t_scalar / 1e9;
-        let gf_blocked = flops / t_blocked / 1e9;
-        let speedup = t_scalar / t_blocked;
+        let t_simd = time_mean(warmup, iters, || {
+            c.fill(0.0);
+            run_shape(&s, Some(simd_opts), &a, &b, &mut c);
+            black_box(c[0]);
+        });
+        let gf_ref = flops / t_ref / 1e9;
+        let gf_tile = flops / t_tile / 1e9;
+        let gf_simd = flops / t_simd / 1e9;
+        let speedup = t_ref / t_simd;
+
+        // correctness gates (cheap relative to the timing loops):
+        // every engine path must match the serial scalar reference
+        // bit-for-bit — SIMD on integer data, where FMA is exact
+        let mut c_ref = vec![0f32; m * n];
+        run_shape(&s, None, &a, &b, &mut c_ref);
+        let mut c_got = vec![0f32; m * n];
+        run_shape(&s, Some(scalar_opts), &a, &b, &mut c_got);
+        if c_got != c_ref {
+            failures.push(format!("{}: scalar tile != scalar reference (bitwise)", s.name));
+        }
+        c_got.fill(0.0);
+        run_shape(&s, Some(scalar_opts.with_threads(4)), &a, &b, &mut c_got);
+        if c_got != c_ref {
+            failures.push(format!("{}: 4-thread scalar != serial (bitwise)", s.name));
+        }
+        let mut c_simd_serial = vec![0f32; m * n];
+        run_shape(&s, Some(simd_opts), &a, &b, &mut c_simd_serial);
+        c_got.fill(0.0);
+        run_shape(&s, Some(simd_opts.with_threads(4)), &a, &b, &mut c_got);
+        if c_got != c_simd_serial {
+            failures.push(format!("{}: 4-thread {} != serial (bitwise)", s.name, tile.as_str()));
+        }
+        if tile == TileKind::Avx2 {
+            let (ai, bi) = match s.op {
+                OpKind::Nn => (filled_int(m * k, 1), filled_int(k * n, 2)),
+                OpKind::Nt => (filled_int(m * k, 1), filled_int(n * k, 2)),
+                OpKind::Tn => (filled_int(k * m, 1), filled_int(k * n, 2)),
+            };
+            let mut ci_scalar = vec![0f32; m * n];
+            run_shape(&s, Some(scalar_opts), &ai, &bi, &mut ci_scalar);
+            let mut ci_simd = vec![0f32; m * n];
+            run_shape(&s, Some(simd_opts), &ai, &bi, &mut ci_simd);
+            if ci_simd != ci_scalar {
+                failures.push(format!("{}: avx2 != scalar on integer data (bitwise)", s.name));
+            }
+        }
+
         table.add_row(vec![
             s.name.to_string(),
             s.op.label().to_string(),
             m.to_string(),
             n.to_string(),
             k.to_string(),
-            format!("{gf_scalar:.2}"),
-            format!("{gf_blocked:.2}"),
+            format!("{gf_ref:.2}"),
+            format!("{gf_tile:.2}"),
+            format!("{gf_simd:.2}"),
             format!("{speedup:.2}x"),
         ]);
         rows.push((
@@ -186,30 +260,114 @@ fn main() -> Result<()> {
                 ("m", Json::num(m as f64)),
                 ("n", Json::num(n as f64)),
                 ("k", Json::num(k as f64)),
-                ("scalar_gflops", Json::num(gf_scalar)),
-                ("blocked_gflops", Json::num(gf_blocked)),
+                ("scalar_gflops", Json::num(gf_ref)),
+                ("tile_scalar_gflops", Json::num(gf_tile)),
+                ("blocked_gflops", Json::num(gf_simd)),
                 ("speedup", Json::num(speedup)),
+                ("simd_vs_tile", Json::num(t_tile / t_simd)),
                 ("acceptance", Json::Bool(s.acceptance)),
             ]),
         ));
         if speedup < 1.0 {
             failures.push(format!("{}: blocked is slower than scalar ({speedup:.2}x)", s.name));
         } else if s.acceptance && speedup < 2.0 {
-            failures.push(format!("{}: acceptance shape below 2x ({speedup:.2}x)", s.name));
+            failures.push(format!(
+                "{}: acceptance shape below 2x on the {} path ({speedup:.2}x)",
+                s.name,
+                tile.as_str()
+            ));
         }
     }
     table.print();
+    if tile != TileKind::Avx2 {
+        println!(
+            "simd gates: skipped (detected tile is '{}'; no avx2+fma on this machine \
+             or OPACUS_SIMD=off)",
+            tile.as_str()
+        );
+    }
+
+    // intra-op scaling on the largest acceptance shape: same call, 1/2/4
+    // pinned threads, always bitwise-checked against the serial result
+    let par = shapes().into_iter().find(|s| s.name == "lstm_input_proj").unwrap();
+    let (m, n, k) = (par.m, par.n, par.k);
+    let a = filled(m * k, 1);
+    let b = filled(n * k, 2);
+    let mut c = vec![0f32; m * n];
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let iters = ((4e8 / flops) * iters_scale).clamp(10.0, 20_000.0) as usize;
+    let warmup = iters / 10 + 1;
+    let mut c_serial = vec![0f32; m * n];
+    run_shape(&par, Some(simd_opts), &a, &b, &mut c_serial);
+    let mut par_rows: Vec<(String, Json)> = Vec::new();
+    let mut t1 = 0.0f64;
+    let mut t4_speedup = 0.0f64;
+    let mut pt = Table::new(
+        &format!("intra-op scaling on {} ({cpus} cpu(s) detected)", par.name),
+        Table::header_from(&["threads", "GF/s", "speedup vs 1t", "bitwise"]),
+    );
+    for threads in [1usize, 2, 4] {
+        let opts = simd_opts.with_threads(threads);
+        c.fill(0.0);
+        run_shape(&par, Some(opts), &a, &b, &mut c);
+        let bitwise = c == c_serial;
+        if !bitwise {
+            failures.push(format!("{}: {threads}-thread output != serial (bitwise)", par.name));
+        }
+        let t = time_mean(warmup, iters, || {
+            c.fill(0.0);
+            run_shape(&par, Some(opts), &a, &b, &mut c);
+            black_box(c[0]);
+        });
+        if threads == 1 {
+            t1 = t;
+        }
+        let sp = t1 / t;
+        if threads == 4 {
+            t4_speedup = sp;
+        }
+        pt.add_row(vec![
+            threads.to_string(),
+            format!("{:.2}", flops / t / 1e9),
+            format!("{sp:.2}x"),
+            if bitwise { "ok" } else { "MISMATCH" }.to_string(),
+        ]);
+        par_rows.push((
+            format!("t{threads}"),
+            Json::obj(vec![
+                ("gflops", Json::num(flops / t / 1e9)),
+                ("speedup_vs_t1", Json::num(sp)),
+                ("bitwise", Json::Bool(bitwise)),
+            ]),
+        ));
+    }
+    pt.print();
+    if cpus >= 4 {
+        if t4_speedup < 2.0 {
+            failures.push(format!(
+                "{}: 4-thread intra-op below 2x over 1-thread ({t4_speedup:.2}x) on {cpus} cpus",
+                par.name
+            ));
+        }
+    } else {
+        println!(
+            "intra-op 4-thread >=2x gate: skipped ({cpus} cpu(s) < 4 — determinism still checked)"
+        );
+    }
 
     if let Some(bench_out) = args.get("bench-out") {
         let command = format!(
             "cd rust && cargo bench --bench gemm_kernels -- --check --bench-out {bench_out}"
         );
-        let metric = "GFLOP/s of the blocked gemm engine vs the scalar reference per shape; \
-                      speedup = scalar_time / blocked_time";
+        let metric = "GFLOP/s per shape: scalar reference loops, blocked scalar tile, blocked \
+                      runtime-dispatched tile; speedup = ref_time / dispatched_time; plus \
+                      intra-op thread scaling on the largest acceptance shape";
         let j = Json::obj(vec![
             ("bench", Json::str("rust/benches/gemm_kernels.rs")),
             ("metric", Json::str(metric)),
             ("command", Json::str(&command)),
+            ("tile", Json::str(tile.as_str())),
+            ("cpus", Json::num(cpus as f64)),
             ("block_mr", Json::num(gemm::MR as f64)),
             ("block_nr", Json::num(gemm::NR as f64)),
             ("block_mc", Json::num(bs.mc as f64)),
@@ -217,6 +375,7 @@ fn main() -> Result<()> {
             ("block_nc", Json::num(bs.nc as f64)),
             ("status", Json::str("recorded")),
             ("shapes", Json::Obj(rows.into_iter().collect())),
+            ("parallel", Json::Obj(par_rows.into_iter().collect())),
         ]);
         std::fs::write(bench_out, j.to_string())?;
         println!("gemm baseline -> {bench_out}");

@@ -12,13 +12,23 @@
 //! The pool is deliberately dumb: it knows nothing about DP semantics.
 //! Sharding, reduction and noise placement live in
 //! [`DistributedStep`](super::DistributedStep).
+//!
+//! This module also owns the **intra-op helper pool**
+//! ([`intra_op_run`]): a second, process-wide set of threads the GEMM
+//! engine fans a *single* kernel call out over. The two layers compose
+//! — each data-parallel worker's GEMM calls split across the helpers —
+//! and the engine's `auto` sizing divides the machine by the live
+//! worker count (reported via [`gemm::note_dp_workers_spawned`]) so the
+//! product of the two pools never oversubscribes the CPUs.
 
 use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 use crate::rng::{gaussian, Rng};
+use crate::runtime::backend::native::gemm;
 use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
 use crate::runtime::tensor::HostTensor;
 
@@ -80,6 +90,9 @@ struct Envelope {
 pub struct WorkerPool {
     senders: Vec<mpsc::Sender<Envelope>>,
     handles: Vec<thread::JoinHandle<()>>,
+    /// Worker count reported to the GEMM engine's `auto` intra-op
+    /// sizing (0 until spawn completed; subtracted back on drop).
+    noted_workers: usize,
 }
 
 impl WorkerPool {
@@ -94,6 +107,7 @@ impl WorkerPool {
         let mut pool = WorkerPool {
             senders: Vec::with_capacity(workers),
             handles: Vec::with_capacity(workers),
+            noted_workers: 0,
         };
         for rank in 0..workers {
             let (tx, rx) = mpsc::channel::<Envelope>();
@@ -106,6 +120,10 @@ impl WorkerPool {
             pool.handles.push(handle);
             pool.senders.push(tx);
         }
+        // tell the GEMM engine how many data-parallel threads are now
+        // live so its `auto` intra-op fan-out divides the machine
+        gemm::note_dp_workers_spawned(workers);
+        pool.noted_workers = workers;
         Ok(pool)
     }
 
@@ -169,6 +187,137 @@ impl Drop for WorkerPool {
         self.senders.clear(); // closes every job channel
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        if self.noted_workers > 0 {
+            gemm::note_dp_workers_exited(self.noted_workers);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Intra-op helper pool
+// ---------------------------------------------------------------------
+
+/// A queued intra-op part: a lifetime-erased closure plus its
+/// completion signal.
+type IntraTask = Box<dyn FnOnce() + Send>;
+
+/// The process-wide intra-op helper pool the GEMM engine fans single
+/// kernel calls out over. Helpers are detached threads sharing one
+/// injector queue; the pool is spawned lazily on first parallel call
+/// and grows to the largest fan-out ever requested (bounded by
+/// [`gemm::MAX_GEMM_THREADS`]). Idle helpers park on `recv`, so an
+/// unused pool costs nothing but stacks.
+struct IntraOpPool {
+    inject: Mutex<mpsc::Sender<IntraTask>>,
+    queue: Arc<Mutex<mpsc::Receiver<IntraTask>>>,
+    helpers: Mutex<usize>,
+}
+
+fn intra_pool() -> &'static IntraOpPool {
+    static POOL: OnceLock<IntraOpPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel();
+        IntraOpPool {
+            inject: Mutex::new(tx),
+            queue: Arc::new(Mutex::new(rx)),
+            helpers: Mutex::new(0),
+        }
+    })
+}
+
+/// Run `body(0..parts)` with part 0 on the calling thread and the rest
+/// on the shared helper pool, returning only after **every** part
+/// finished. Parts may run in any order and on any thread — callers
+/// must make part identity, not thread identity, determine what a part
+/// computes (the GEMM partition does exactly that). A panicking part
+/// panics the caller after all other parts completed.
+///
+/// `parts <= 1` (or an empty helper pool after a failed spawn) degrades
+/// to a plain serial loop on the caller.
+pub fn intra_op_run(parts: usize, body: &(dyn Fn(usize) + Sync)) {
+    if parts <= 1 {
+        body(0);
+        return;
+    }
+    intra_pool().run(parts, body);
+}
+
+impl IntraOpPool {
+    /// Grow the detached helper set to at least `want` threads. Spawn
+    /// failures are tolerated — `run` falls back to serial when no
+    /// helper exists at all.
+    fn ensure_helpers(&self, want: usize) -> usize {
+        let mut n = self.helpers.lock().expect("intra-op helper count lock");
+        while *n < want.min(gemm::MAX_GEMM_THREADS) {
+            let queue = self.queue.clone();
+            let idx = *n;
+            let spawned = thread::Builder::new()
+                .name(format!("opacus-gemm-{idx}"))
+                .spawn(move || helper_loop(queue));
+            if spawned.is_err() {
+                break;
+            }
+            *n += 1;
+        }
+        *n
+    }
+
+    fn run(&self, parts: usize, body: &(dyn Fn(usize) + Sync)) {
+        if self.ensure_helpers(parts - 1) == 0 {
+            for p in 0..parts {
+                body(p);
+            }
+            return;
+        }
+        // SAFETY: the 'static lifetime is a lie the blocking below makes
+        // true — this function does not return until every queued part
+        // has signalled completion (even when a part or the caller's own
+        // part panics), so no helper touches `body` (or anything it
+        // borrows) after this frame unwinds.
+        let body_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(body)
+        };
+        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        {
+            let inject = self.inject.lock().expect("intra-op injector lock");
+            for p in 1..parts {
+                let done = done_tx.clone();
+                let task: IntraTask = Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(|| body_static(p))).is_ok();
+                    let _ = done.send(ok);
+                });
+                inject.send(task).expect("intra-op queue never closes");
+            }
+        }
+        drop(done_tx);
+        // the caller is part 0 — run it inline while helpers work
+        let own = catch_unwind(AssertUnwindSafe(|| body_static(0)));
+        let mut helpers_ok = true;
+        for _ in 1..parts {
+            // a recv error would mean a task was dropped unexecuted,
+            // which the helper loop never does; treat it as a failure
+            helpers_ok &= done_rx.recv().unwrap_or(false);
+        }
+        if let Err(panic) = own {
+            std::panic::resume_unwind(panic);
+        }
+        assert!(helpers_ok, "an intra-op GEMM part panicked on a helper thread");
+    }
+}
+
+/// Helper thread body: pull one task at a time off the shared queue.
+/// Holding the queue lock only around `recv` serializes task *pickup*,
+/// never execution.
+fn helper_loop(queue: Arc<Mutex<mpsc::Receiver<IntraTask>>>) {
+    loop {
+        let task = {
+            let rx = queue.lock().expect("intra-op queue lock");
+            rx.recv()
+        };
+        match task {
+            Ok(task) => task(),
+            Err(_) => return, // process teardown
         }
     }
 }
@@ -344,5 +493,51 @@ mod tests {
         let pool = WorkerPool::spawn(tiny_model(), &spec_n(4)).unwrap();
         pool.run(vec![(2, Job::Noise { len: 8 })]).unwrap();
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn intra_op_run_executes_every_part_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for parts in [1usize, 2, 7, 16] {
+            let counts: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            intra_op_run(parts, &|p| {
+                counts[p].fetch_add(1, Ordering::SeqCst);
+            });
+            for (p, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::SeqCst), 1, "part {p} of {parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_op_run_blocks_until_all_parts_complete() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // slow helpers: if run() returned before every part finished,
+        // the borrow of `done` below would be a use-after-return — the
+        // count being exact on every iteration pins the barrier.
+        for _ in 0..20 {
+            let done = AtomicUsize::new(0);
+            intra_op_run(5, &|p| {
+                if p != 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(done.load(Ordering::SeqCst), 5);
+        }
+    }
+
+    #[test]
+    fn intra_op_run_propagates_helper_panics() {
+        let res = std::panic::catch_unwind(|| {
+            intra_op_run(4, &|p| {
+                if p == 2 {
+                    panic!("intra-op test panic (expected)");
+                }
+            });
+        });
+        assert!(res.is_err(), "helper panic must reach the caller");
+        // the pool survives a panicked part
+        intra_op_run(3, &|_| {});
     }
 }

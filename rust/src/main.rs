@@ -73,8 +73,9 @@ SUBCOMMANDS
              [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
              [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
              [--backend auto|xla|native] [--workers N|auto]
-             [--noise-division root|perworker] [--artifacts DIR]
-             [--out metrics.json] [--pipeline N] [--checkpoint DIR] [--resume]
+             [--gemm-threads N|auto] [--noise-division root|perworker]
+             [--artifacts DIR] [--out metrics.json] [--pipeline N]
+             [--checkpoint DIR] [--resume]
   serve      --jobs spec.json[,spec2.json…] [--out DIR] [--quantum N]
              [--kill-after STEPS] [--resume]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
@@ -92,6 +93,13 @@ classification through multi-head self-attention — both native.
 `auto` sizes the pool from the CPU count). Noise is added once at the
 root by default; --noise-division perworker opts into DPDDP-style
 sigma/sqrt(N) per-worker splitting (same distribution, same epsilon).
+
+--gemm-threads N splits each large GEMM's macro-panels across N
+intra-op threads with static panel ownership — output bits are
+identical to the serial path (env equivalent: OPACUS_GEMM_THREADS).
+The default `auto` resolves to cpus / data-parallel workers, so
+--workers and intra-op threads compose without oversubscription. See
+`opacus inspect` for the detected CPU features and resolved counts.
 
 --pipeline N overlaps batch prefetch with compute through a bounded
 N-deep pipeline — byte-identical results, better wall-clock. With
@@ -169,6 +177,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(depth) = args.get("pipeline") {
         builder = builder.pipeline(depth.parse()?);
+    }
+    if let Some(spec) = args.get("gemm-threads") {
+        if spec != "auto" {
+            builder = builder.gemm_threads(spec.parse()?);
+        }
     }
     let private = builder.build(sys)?;
     let (mut trainer, optimizer, loader) = private.into_parts();
@@ -485,6 +498,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
              (cap {})",
             opacus_rs::distributed::AUTO_WORKER_CAP
         );
+        {
+            use opacus_rs::runtime::backend::native::gemm;
+            let bs = gemm::block_sizes();
+            println!("cpu features  : {}", gemm::cpu_feature_summary());
+            println!("gemm tile     : {} micro-kernel", gemm::detected_tile().as_str());
+            println!(
+                "gemm blocking : MR×NR = {}×{}, MC={} KC={} NC={}",
+                gemm::MR,
+                gemm::NR,
+                bs.mc,
+                bs.kc,
+                bs.nc
+            );
+            println!("gemm threads  : {}", gemm::gemm_threads_explain());
+        }
         let mut t = Table::new(
             "backend auto-selection",
             Table::header_from(&["task", "active backend"]),

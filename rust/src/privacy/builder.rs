@@ -278,6 +278,7 @@ pub struct PrivateBuilder {
     seed: u64,
     target: Option<EpsilonTarget>,
     pipeline: Option<usize>,
+    gemm_threads: Option<usize>,
 }
 
 impl Default for PrivateBuilder {
@@ -298,6 +299,7 @@ impl Default for PrivateBuilder {
             seed: 0,
             target: None,
             pipeline: None,
+            gemm_threads: None,
         }
     }
 }
@@ -361,6 +363,19 @@ impl PrivateBuilder {
     /// [`Parallelism::Auto`] sizes the pool from the detected CPU count).
     pub fn parallelism(mut self, p: Parallelism) -> Self {
         self.parallelism = p;
+        self
+    }
+
+    /// Intra-op GEMM threads: split each large dense contraction's
+    /// macro-panels across `n` threads with static panel ownership —
+    /// bitwise identical to the serial result (see
+    /// `runtime::backend::native::gemm`). `n = 0` is a build-time
+    /// error. Overrides `OPACUS_GEMM_THREADS`; the default (no call)
+    /// resolves the env var, then `cpus / live data-parallel workers`,
+    /// so intra-op threads compose with [`Self::workers`] without
+    /// oversubscribing the machine.
+    pub fn gemm_threads(mut self, n: usize) -> Self {
+        self.gemm_threads = Some(n);
         self
     }
 
@@ -461,6 +476,9 @@ impl PrivateBuilder {
         if self.pipeline == Some(0) {
             bail!("pipeline depth must be at least 1 (omit .pipeline for sequential execution)");
         }
+        if self.gemm_threads == Some(0) {
+            bail!("gemm_threads must be at least 1 (omit the call for auto resolution)");
+        }
         if self.noise_division == NoiseDivision::PerWorker && !self.parallelism.uses_pool() {
             bail!(
                 "per-worker noise splitting requires a worker pool; \
@@ -534,6 +552,10 @@ impl PrivateBuilder {
         let sys = sys.with_backend(requested)?;
         let engine = PrivacyEngine::try_new(self.engine_config())?;
         let plan = self.plan(sys.train.len())?;
+        // pin the intra-op GEMM thread override after plan() validated it
+        if let Some(n) = self.gemm_threads {
+            crate::runtime::backend::native::gemm::set_gemm_threads(Some(n));
+        }
         let num_layers = sys.model.layer_kinds.len().max(1);
         let pp = PrivacyParams {
             noise_multiplier: plan.sigma,
@@ -639,6 +661,13 @@ mod tests {
             .noise_division(NoiseDivision::PerWorker)
             .plan(100)
             .is_ok());
+    }
+
+    #[test]
+    fn zero_gemm_threads_is_a_typed_plan_error() {
+        let err = PrivateBuilder::new().gemm_threads(0).plan(100).unwrap_err().to_string();
+        assert!(err.contains("gemm_threads"), "{err}");
+        assert!(PrivateBuilder::new().gemm_threads(2).plan(100).is_ok());
     }
 
     #[test]

@@ -12,9 +12,19 @@
 //! followed by the output projection. The backward pass uses the exact
 //! softmax Jacobian product `dS = P ⊙ (dP − rowsum(P ⊙ dP))` — the same
 //! identity flash-attention kernels rearrange around (the `dP·P` row
-//! reduction is their `delta` term); at native sequence lengths the
-//! `[T, T]` probability matrix fits in cache, so we materialize it per
-//! sample instead of tiling.
+//! reduction is their `delta` term).
+//!
+//! **Two attention-core paths.** At short sequence lengths the `[T, T]`
+//! probability matrix fits in cache, so it is materialized per
+//! (sample, head). Once `T ≥` [`FUSED_T_DEFAULT`] (override:
+//! `OPACUS_ATTN_FUSED=off|on|<threshold>`), forward *and* backward
+//! switch to a fused flash-attention-style tiling: scores stream
+//! through `BR×BC` tiles with a running row max / denominator (forward)
+//! and are reconstructed from the saved log-sum-exp statistics
+//! (backward), so the per-(sample, head) footprint drops from `O(T²)`
+//! to `O(T·BC)`. Both paths compute the same math on the same strided
+//! head slices; the fused path is validated against the materialized
+//! one and by finite differences above the threshold.
 //!
 //! Every dense contraction routes through the blocked [`gemm`] engine:
 //! the four projections run as single `[B·T, D] × [D, D]` GEMMs over the
@@ -32,6 +42,8 @@
 //! distributed shard width. All scratch is call-local; the layer itself
 //! is stateless (`Send + Sync`).
 
+use std::sync::OnceLock;
+
 use anyhow::{bail, Result};
 
 use crate::rng::{gaussian, Rng};
@@ -39,6 +51,41 @@ use crate::runtime::tensor::HostTensor;
 
 use super::gemm;
 use super::layers::{GradSampleLayer, GradSink};
+
+/// Default sequence-length threshold at which the attention core stops
+/// materializing the `[T, T]` score matrix and switches to the fused
+/// streaming tiling. Below this, T² floats fit comfortably in L1/L2 and
+/// the materialized path's simpler loop wins.
+pub const FUSED_T_DEFAULT: usize = 64;
+
+/// Streaming-tile query rows (`BR`) and key columns (`BC`).
+const BR: usize = 32;
+const BC: usize = 32;
+
+/// Parse an `OPACUS_ATTN_FUSED` value into a fusing threshold:
+/// `off`/`never`/`0` disables the fused path, `on`/`always` forces it at
+/// every length, an integer sets the threshold, anything else (or
+/// unset) keeps [`FUSED_T_DEFAULT`].
+fn parse_fused_spec(v: Option<&str>) -> usize {
+    match v.map(str::trim) {
+        Some("off") | Some("never") | Some("0") => usize::MAX,
+        Some("on") | Some("always") => 1,
+        Some(s) => s.parse().unwrap_or(FUSED_T_DEFAULT),
+        None => FUSED_T_DEFAULT,
+    }
+}
+
+/// Process-wide fused-attention threshold (`OPACUS_ATTN_FUSED`), read
+/// once.
+fn fused_threshold() -> usize {
+    static T: OnceLock<usize> = OnceLock::new();
+    *T.get_or_init(|| parse_fused_spec(std::env::var("OPACUS_ATTN_FUSED").ok().as_deref()))
+}
+
+/// Whether a sequence of length `t_len` takes the fused streaming path.
+fn fused_at(t_len: usize) -> bool {
+    t_len >= fused_threshold()
+}
 
 /// Multi-head self-attention over `[B, T, D]` sequences.
 ///
@@ -139,6 +186,171 @@ impl MultiHeadAttention {
             gemm::sgemm(t_len, hd, t_len, pm, t_len, &v[off..], d, &mut ctx[off..], d);
         }
     }
+
+    /// Streaming (flash-attention-style) forward core: the same math as
+    /// [`Self::attend`] without materializing `[T, T]` scores. Scores
+    /// stream through `BR×BC` tiles; each query-row block keeps a
+    /// running max `m` and denominator `l`, rescaling its partial
+    /// context row by `exp(m_old − m_new)` whenever a later tile raises
+    /// the max. Fills `ctx[T, D]` and `lse[heads, T]` — the per-row
+    /// log-sum-exp `m + ln(l)` the fused backward reconstructs
+    /// probabilities from. Scratch is `O(T·BC)` per call instead of the
+    /// materialized path's `O(heads·T²)`.
+    fn attend_streaming(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t_len: usize,
+        ctx: &mut [f32],
+        lse: &mut [f32],
+    ) {
+        let d = self.dim;
+        let hd = self.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        ctx.fill(0.0);
+        let mut stile = vec![0f32; BR * BC];
+        let mut m_run = vec![0f32; BR];
+        let mut l_run = vec![0f32; BR];
+        for head in 0..self.heads {
+            let off = head * hd;
+            for i0 in (0..t_len).step_by(BR) {
+                let ib = BR.min(t_len - i0);
+                m_run[..ib].fill(f32::NEG_INFINITY);
+                l_run[..ib].fill(0.0);
+                for j0 in (0..t_len).step_by(BC) {
+                    let jb = BC.min(t_len - j0);
+                    let qi = &q[i0 * d + off..];
+                    let kj = &k[j0 * d + off..];
+                    let vj = &v[j0 * d + off..];
+                    // S_tile = Q_i · K_jᵀ on the strided head slices
+                    stile[..ib * BC].fill(0.0);
+                    gemm::sgemm_nt(ib, jb, hd, qi, d, kj, d, &mut stile, BC);
+                    for r in 0..ib {
+                        let srow = &mut stile[r * BC..r * BC + jb];
+                        let mut tile_max = f32::NEG_INFINITY;
+                        for sv in srow.iter_mut() {
+                            *sv *= scale;
+                            tile_max = tile_max.max(*sv);
+                        }
+                        let m_new = m_run[r].max(tile_max);
+                        // corr = 0 on the first tile (m_old = −inf), so
+                        // the zeroed ctx row and l stay zero before the
+                        // first contribution lands
+                        let corr = if m_run[r] == f32::NEG_INFINITY {
+                            0.0
+                        } else {
+                            (m_run[r] - m_new).exp()
+                        };
+                        if corr != 1.0 {
+                            l_run[r] *= corr;
+                            let o = (i0 + r) * d + off;
+                            for ov in ctx[o..o + hd].iter_mut() {
+                                *ov *= corr;
+                            }
+                        }
+                        let mut rsum = 0.0f32;
+                        for sv in srow.iter_mut() {
+                            *sv = (*sv - m_new).exp();
+                            rsum += *sv;
+                        }
+                        l_run[r] += rsum;
+                        m_run[r] = m_new;
+                    }
+                    // ctx_i += exp(S_tile − m) · V_j
+                    let ci = &mut ctx[i0 * d + off..];
+                    gemm::sgemm(ib, hd, jb, &stile, BC, vj, d, ci, d);
+                }
+                for r in 0..ib {
+                    let inv = 1.0 / l_run[r];
+                    let o = (i0 + r) * d + off;
+                    for ov in ctx[o..o + hd].iter_mut() {
+                        *ov *= inv;
+                    }
+                    lse[head * t_len + i0 + r] = m_run[r] + l_run[r].ln();
+                }
+            }
+        }
+    }
+
+    /// Fused backward core: the exact softmax Jacobian product in
+    /// `BR×BC` tiles, reconstructing each probability tile as
+    /// `exp(s·scale − lse)` from the forward's log-sum-exp statistics
+    /// instead of reading a materialized `[T, T]` matrix. Accumulates
+    /// into this sample's `dq/dk/dv [T, D]` slices (caller zeroes them).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_core_fused(
+        &self,
+        q_s: &[f32],
+        k_s: &[f32],
+        v_s: &[f32],
+        ctx: &[f32],
+        dctx: &[f32],
+        lse: &[f32],
+        t_len: usize,
+        dq_s: &mut [f32],
+        dk_s: &mut [f32],
+        dv_s: &mut [f32],
+    ) {
+        let d = self.dim;
+        let hd = self.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ptile = vec![0f32; BR * BC];
+        let mut dptile = vec![0f32; BR * BC];
+        let mut delta = vec![0f32; BR];
+        for head in 0..self.heads {
+            let off = head * hd;
+            let lse_h = &lse[head * t_len..(head + 1) * t_len];
+            for i0 in (0..t_len).step_by(BR) {
+                let ib = BR.min(t_len - i0);
+                // delta_r = rowsum(dO ⊙ O) over this head's columns —
+                // flash-attention's recomputation of rowsum(P ⊙ dP)
+                for r in 0..ib {
+                    let o = (i0 + r) * d + off;
+                    let mut de = 0.0f32;
+                    for (a, b) in dctx[o..o + hd].iter().zip(ctx[o..o + hd].iter()) {
+                        de += a * b;
+                    }
+                    delta[r] = de;
+                }
+                let qi = &q_s[i0 * d + off..];
+                let di = &dctx[i0 * d + off..];
+                for j0 in (0..t_len).step_by(BC) {
+                    let jb = BC.min(t_len - j0);
+                    let kj = &k_s[j0 * d + off..];
+                    let vj = &v_s[j0 * d + off..];
+                    // P_tile = exp(Q_i · K_jᵀ · scale − lse_i)
+                    ptile[..ib * BC].fill(0.0);
+                    gemm::sgemm_nt(ib, jb, hd, qi, d, kj, d, &mut ptile, BC);
+                    for r in 0..ib {
+                        let ls = lse_h[i0 + r];
+                        for pv in ptile[r * BC..r * BC + jb].iter_mut() {
+                            *pv = (*pv * scale - ls).exp();
+                        }
+                    }
+                    // dV_j += P_tileᵀ · dctx_i
+                    let dvj = &mut dv_s[j0 * d + off..];
+                    gemm::sgemm_tn(jb, hd, ib, &ptile, BC, di, d, dvj, d);
+                    // dP_tile = dctx_i · V_jᵀ
+                    dptile[..ib * BC].fill(0.0);
+                    gemm::sgemm_nt(ib, jb, hd, di, d, vj, d, &mut dptile, BC);
+                    // dS_tile = P ⊙ (dP − delta) · scale, reusing ptile
+                    for r in 0..ib {
+                        let de = delta[r];
+                        let base = r * BC;
+                        for j in 0..jb {
+                            ptile[base + j] *= (dptile[base + j] - de) * scale;
+                        }
+                    }
+                    // dQ_i += dS_tile · K_j ; dK_j += dS_tileᵀ · Q_i
+                    let dqi = &mut dq_s[i0 * d + off..];
+                    gemm::sgemm(ib, hd, jb, &ptile, BC, kj, d, dqi, d);
+                    let dkj = &mut dk_s[j0 * d + off..];
+                    gemm::sgemm_tn(jb, hd, ib, &ptile, BC, qi, d, dkj, d);
+                }
+            }
+        }
+    }
 }
 
 impl GradSampleLayer for MultiHeadAttention {
@@ -179,17 +391,32 @@ impl GradSampleLayer for MultiHeadAttention {
         self.project(params, 2, xs, bt, &mut v);
         // per-sample attention core into the batched context buffer
         let mut ctx = vec![0f32; bt * d];
-        let mut probs = vec![0f32; self.heads * t_len * t_len];
-        for s in 0..b {
-            let span = s * per..(s + 1) * per;
-            self.attend(
-                &q[span.clone()],
-                &k[span.clone()],
-                &v[span.clone()],
-                t_len,
-                &mut probs,
-                &mut ctx[span],
-            );
+        if fused_at(t_len) {
+            let mut lse = vec![0f32; self.heads * t_len];
+            for s in 0..b {
+                let span = s * per..(s + 1) * per;
+                self.attend_streaming(
+                    &q[span.clone()],
+                    &k[span.clone()],
+                    &v[span.clone()],
+                    t_len,
+                    &mut ctx[span],
+                    &mut lse,
+                );
+            }
+        } else {
+            let mut probs = vec![0f32; self.heads * t_len * t_len];
+            for s in 0..b {
+                let span = s * per..(s + 1) * per;
+                self.attend(
+                    &q[span.clone()],
+                    &k[span.clone()],
+                    &v[span.clone()],
+                    t_len,
+                    &mut probs,
+                    &mut ctx[span],
+                );
+            }
         }
         // batched output projection
         let mut y = vec![0f32; bt * d];
@@ -204,6 +431,36 @@ impl GradSampleLayer for MultiHeadAttention {
         dy: &HostTensor,
         gs: &mut GradSink<'_>,
         need_dx: bool,
+    ) -> Result<HostTensor> {
+        self.backward_impl(params, x, dy, gs, need_dx, None)
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let d = self.dim;
+        let scale = (1.0 / d as f64).sqrt() as f32;
+        for p in 0..4 {
+            let (wo, bo) = self.proj_offsets(p);
+            gaussian::fill_standard_normal(rng, &mut params[wo..wo + d * d]);
+            for w in params[wo..wo + d * d].iter_mut() {
+                *w *= scale;
+            }
+            params[bo..bo + d].fill(0.0);
+        }
+    }
+}
+
+impl MultiHeadAttention {
+    /// Backward body shared by both attention-core paths. `force_fused`
+    /// overrides the `fused_at(t_len)` dispatch — tests use it to pin
+    /// the two paths against each other on the same shape.
+    fn backward_impl(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+        force_fused: Option<bool>,
     ) -> Result<HostTensor> {
         let &[b, t_len, d] = x.shape.as_slice() else {
             bail!("mha backward: expected [B, T, D] input, got {:?}", x.shape);
@@ -228,11 +485,14 @@ impl GradSampleLayer for MultiHeadAttention {
         self.project(params, 0, xs, bt, &mut q);
         self.project(params, 1, xs, bt, &mut k);
         self.project(params, 2, xs, bt, &mut v);
-        // per-sample scratch + batched dq/dk/dv accumulators
-        let mut probs = vec![0f32; self.heads * t_len * t_len];
+        // per-sample scratch + batched dq/dk/dv accumulators; the fused
+        // path swaps the O(heads·T²) probs/ds scratch for O(heads·T) lse
+        let fused = force_fused.unwrap_or_else(|| fused_at(t_len));
+        let mut probs = vec![0f32; if fused { 0 } else { self.heads * t_len * t_len }];
+        let mut ds = vec![0f32; if fused { 0 } else { t_len * t_len }];
+        let mut lse = vec![0f32; if fused { self.heads * t_len } else { 0 }];
         let mut ctx = vec![0f32; per];
         let mut dctx = vec![0f32; per];
-        let mut ds = vec![0f32; t_len * t_len];
         let mut dq = vec![0f32; bt * d];
         let mut dk = vec![0f32; bt * d];
         let mut dv = vec![0f32; bt * d];
@@ -242,38 +502,58 @@ impl GradSampleLayer for MultiHeadAttention {
             let v_s = &v[s * per..(s + 1) * per];
             let x_s = &xs[s * per..(s + 1) * per];
             let dy_s = &dys[s * per..(s + 1) * per];
-            self.attend(q_s, k_s, v_s, t_len, &mut probs, &mut ctx);
+            if fused {
+                self.attend_streaming(q_s, k_s, v_s, t_len, &mut ctx, &mut lse);
+            } else {
+                self.attend(q_s, k_s, v_s, t_len, &mut probs, &mut ctx);
+            }
             let g = gs.row(s);
             // output projection: dW_o/db_o, and dctx = dy · W_o
             self.project_param_grads(3, &ctx, dy_s, t_len, g);
             dctx.fill(0.0);
             gemm::sgemm(t_len, d, d, dy_s, d, &params[wo_off..wo_off + d * d], d, &mut dctx, d);
-            // attention core per head: softmax Jacobian, dQ/dK/dV
-            for head in 0..self.heads {
-                let off = head * hd;
-                let pm = &probs[head * t_len * t_len..(head + 1) * t_len * t_len];
-                // dP = dctx_h · V_hᵀ
-                ds.fill(0.0);
-                gemm::sgemm_nt(t_len, t_len, hd, &dctx[off..], d, &v_s[off..], d, &mut ds, t_len);
-                // dS = P ⊙ (dP − delta) · scale, in place (the `delta`
-                // row reduction is flash-attention's recomputation term)
-                for i in 0..t_len {
-                    let prow = &pm[i * t_len..(i + 1) * t_len];
-                    let drow = &mut ds[i * t_len..(i + 1) * t_len];
-                    let mut delta = 0.0f32;
-                    for (pj, dj) in prow.iter().zip(drow.iter()) {
-                        delta += pj * dj;
+            if fused {
+                self.backward_core_fused(
+                    q_s,
+                    k_s,
+                    v_s,
+                    &ctx,
+                    &dctx,
+                    &lse,
+                    t_len,
+                    &mut dq[s * per..(s + 1) * per],
+                    &mut dk[s * per..(s + 1) * per],
+                    &mut dv[s * per..(s + 1) * per],
+                );
+            } else {
+                // attention core per head: softmax Jacobian, dQ/dK/dV
+                for head in 0..self.heads {
+                    let off = head * hd;
+                    let pm = &probs[head * t_len * t_len..(head + 1) * t_len * t_len];
+                    let dc_h = &dctx[off..];
+                    // dP = dctx_h · V_hᵀ
+                    ds.fill(0.0);
+                    gemm::sgemm_nt(t_len, t_len, hd, dc_h, d, &v_s[off..], d, &mut ds, t_len);
+                    // dS = P ⊙ (dP − delta) · scale, in place (the `delta`
+                    // row reduction is flash-attention's recomputation term)
+                    for i in 0..t_len {
+                        let prow = &pm[i * t_len..(i + 1) * t_len];
+                        let drow = &mut ds[i * t_len..(i + 1) * t_len];
+                        let mut delta = 0.0f32;
+                        for (pj, dj) in prow.iter().zip(drow.iter()) {
+                            delta += pj * dj;
+                        }
+                        for (pj, dj) in prow.iter().zip(drow.iter_mut()) {
+                            *dj = pj * (*dj - delta) * scale;
+                        }
                     }
-                    for (pj, dj) in prow.iter().zip(drow.iter_mut()) {
-                        *dj = pj * (*dj - delta) * scale;
-                    }
+                    let dq_h = &mut dq[s * per + off..];
+                    gemm::sgemm(t_len, hd, t_len, &ds, t_len, &k_s[off..], d, dq_h, d);
+                    let dk_h = &mut dk[s * per + off..];
+                    gemm::sgemm_tn(t_len, hd, t_len, &ds, t_len, &q_s[off..], d, dk_h, d);
+                    let dv_h = &mut dv[s * per + off..];
+                    gemm::sgemm_tn(t_len, hd, t_len, pm, t_len, &dctx[off..], d, dv_h, d);
                 }
-                let dq_h = &mut dq[s * per + off..];
-                gemm::sgemm(t_len, hd, t_len, &ds, t_len, &k_s[off..], d, dq_h, d);
-                let dk_h = &mut dk[s * per + off..];
-                gemm::sgemm_tn(t_len, hd, t_len, &ds, t_len, &q_s[off..], d, dk_h, d);
-                let dv_h = &mut dv[s * per + off..];
-                gemm::sgemm_tn(t_len, hd, t_len, pm, t_len, &dctx[off..], d, dv_h, d);
             }
             // input projections: this sample's dW/db from its dq/dk/dv
             self.project_param_grads(0, x_s, &dq[s * per..(s + 1) * per], t_len, g);
@@ -289,19 +569,6 @@ impl GradSampleLayer for MultiHeadAttention {
         gemm::sgemm(bt, d, d, &dk, d, &params[wk_off..wk_off + d * d], d, &mut dx, d);
         gemm::sgemm(bt, d, d, &dv, d, &params[wv_off..wv_off + d * d], d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
-    }
-
-    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
-        let d = self.dim;
-        let scale = (1.0 / d as f64).sqrt() as f32;
-        for p in 0..4 {
-            let (wo, bo) = self.proj_offsets(p);
-            gaussian::fill_standard_normal(rng, &mut params[wo..wo + d * d]);
-            for w in params[wo..wo + d * d].iter_mut() {
-                *w *= scale;
-            }
-            params[bo..bo + d].fill(0.0);
-        }
     }
 }
 
@@ -445,6 +712,154 @@ mod tests {
         let b = run(perturbed);
         assert_eq!(&a[..p], &b[..p], "sample 0 grads changed with sample 1's data");
         assert_ne!(&a[p..], &b[p..], "sample 1 grads must respond to its own data");
+    }
+
+    #[test]
+    fn fused_streaming_forward_matches_materialized() {
+        // T values straddle every tiling regime: partial single tile,
+        // exact one tile, one-and-a-partial, two-and-a-partial
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        let params = init_params(&m, 11);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for &t_len in &[7usize, 32, 40, 70] {
+            let d = 8;
+            let mut xv = vec![0f32; t_len * d];
+            crate::rng::gaussian::fill_standard_normal(&mut rng, &mut xv);
+            let mut q = vec![0f32; t_len * d];
+            let mut k = vec![0f32; t_len * d];
+            let mut v = vec![0f32; t_len * d];
+            m.project(&params, 0, &xv, t_len, &mut q);
+            m.project(&params, 1, &xv, t_len, &mut k);
+            m.project(&params, 2, &xv, t_len, &mut v);
+            let mut ctx_a = vec![0f32; t_len * d];
+            let mut probs = vec![0f32; 2 * t_len * t_len];
+            m.attend(&q, &k, &v, t_len, &mut probs, &mut ctx_a);
+            let mut ctx_b = vec![0f32; t_len * d];
+            let mut lse = vec![0f32; 2 * t_len];
+            m.attend_streaming(&q, &k, &v, t_len, &mut ctx_b, &mut lse);
+            for (i, (a, bv)) in ctx_a.iter().zip(ctx_b.iter()).enumerate() {
+                assert!((a - bv).abs() < 1e-5, "T={t_len} ctx[{i}]: {a} vs {bv}");
+            }
+            assert!(lse.iter().all(|l| l.is_finite()), "T={t_len}: lse not finite");
+        }
+    }
+
+    #[test]
+    fn fused_backward_matches_materialized_grads() {
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        let params = init_params(&m, 13);
+        let p = m.num_params();
+        let b = 2;
+        let t_len = 40; // edge tiles in both block dimensions: 40 = 32 + 8
+        let n = b * t_len * 8;
+        let x = HostTensor::f32(
+            vec![b, t_len, 8],
+            (0..n).map(|i| (i as f32 * 0.13).sin()).collect(),
+        );
+        let dy = HostTensor::f32(
+            vec![b, t_len, 8],
+            (0..n).map(|i| (i as f32 * 0.29).cos() * 0.5).collect(),
+        );
+        let run = |force: bool| {
+            let mut buf = vec![0f32; b * p];
+            let mut gs = GradSink::new(&mut buf, p, 0, p);
+            let dx = m.backward_impl(&params, &x, &dy, &mut gs, true, Some(force)).unwrap();
+            (buf, dx.as_f32().unwrap().to_vec())
+        };
+        let (ga, dxa) = run(false);
+        let (gb, dxb) = run(true);
+        for (i, (a, bv)) in ga.iter().zip(gb.iter()).enumerate() {
+            let tol = 1e-3 * a.abs().max(bv.abs()).max(1.0);
+            assert!((a - bv).abs() < tol, "grad[{i}]: materialized {a} vs fused {bv}");
+        }
+        for (i, (a, bv)) in dxa.iter().zip(dxb.iter()).enumerate() {
+            let tol = 1e-3 * a.abs().max(bv.abs()).max(1.0);
+            assert!((a - bv).abs() < tol, "dx[{i}]: materialized {a} vs fused {bv}");
+        }
+    }
+
+    #[test]
+    fn fused_finite_difference_gradient_check() {
+        // T = 64 ≥ FUSED_T_DEFAULT: the trait path runs the streaming
+        // core in both forward and backward under the default dispatch
+        let m = NativeModel::new(
+            "fd_mha_fused",
+            vec![64, 4],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(MultiHeadAttention::new(4, 2).unwrap())),
+                Op::MeanPool,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let x = HostTensor::f32(
+            vec![1, 64, 4],
+            (0..256).map(|i| (i as f32 * 0.37).sin() * 0.9).collect(),
+        );
+        fd_check(&m, x);
+    }
+
+    #[test]
+    fn fused_per_sample_rows_are_independent() {
+        // the DP prerequisite must hold on the streaming path too
+        let m = MultiHeadAttention::new(4, 2).unwrap();
+        let params = init_params(&m, 21);
+        let p = m.num_params();
+        let t_len = 64;
+        let per = t_len * 4;
+        let base: Vec<f32> = (0..2 * per).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut perturbed = base.clone();
+        for v in perturbed[per..].iter_mut() {
+            *v += 1.5;
+        }
+        let dy = HostTensor::f32(vec![2, t_len, 4], vec![0.3; 2 * per]);
+        let run = |data: Vec<f32>| {
+            let x = HostTensor::f32(vec![2, t_len, 4], data);
+            let mut buf = vec![0f32; 2 * p];
+            let mut gs = GradSink::new(&mut buf, p, 0, p);
+            m.backward_impl(&params, &x, &dy, &mut gs, false, Some(true)).unwrap();
+            buf
+        };
+        let a = run(base);
+        let b = run(perturbed);
+        assert_eq!(&a[..p], &b[..p], "fused: sample 0 grads changed with sample 1's data");
+        assert_ne!(&a[p..], &b[p..], "fused: sample 1 grads must respond to its own data");
+    }
+
+    #[test]
+    fn fused_backward_need_dx_false_keeps_param_grads() {
+        // forced fused on a tiny T exercises single partial tiles
+        let m = MultiHeadAttention::new(4, 2).unwrap();
+        let params = init_params(&m, 5);
+        let p = m.num_params();
+        let x = HostTensor::f32(vec![2, 3, 4], (0..24).map(|i| (i as f32 * 0.17).sin()).collect());
+        let dy = HostTensor::f32(vec![2, 3, 4], vec![0.2; 24]);
+        let mut a = vec![0f32; 2 * p];
+        let mut ga = GradSink::new(&mut a, p, 0, p);
+        let dx = m.backward_impl(&params, &x, &dy, &mut ga, true, Some(true)).unwrap();
+        assert_eq!(dx.shape, vec![2, 3, 4]);
+        let mut b = vec![0f32; 2 * p];
+        let mut gb = GradSink::new(&mut b, p, 0, p);
+        let dx2 = m.backward_impl(&params, &x, &dy, &mut gb, false, Some(true)).unwrap();
+        assert!(dx2.is_empty());
+        assert_eq!(a, b, "param grads must not depend on need_dx");
+        assert!(a.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn fused_spec_parsing() {
+        assert_eq!(parse_fused_spec(None), FUSED_T_DEFAULT);
+        assert_eq!(parse_fused_spec(Some("off")), usize::MAX);
+        assert_eq!(parse_fused_spec(Some("never")), usize::MAX);
+        assert_eq!(parse_fused_spec(Some("0")), usize::MAX);
+        assert_eq!(parse_fused_spec(Some("on")), 1);
+        assert_eq!(parse_fused_spec(Some("always")), 1);
+        assert_eq!(parse_fused_spec(Some("96")), 96);
+        assert_eq!(parse_fused_spec(Some(" 128 ")), 128);
+        assert_eq!(parse_fused_spec(Some("bogus")), FUSED_T_DEFAULT);
     }
 
     #[test]

@@ -19,15 +19,39 @@
 //! panels, with `KC`/`MC` blocking sized to L1/L2 (autodetected from
 //! sysfs, overridable via `OPACUS_BLOCK="MC,KC[,NC]"`). Pack buffers
 //! live in a thread-local [`Scratch`] arena, so steady-state calls do
-//! zero allocation — each distributed worker thread owns its own arena,
-//! keeping every kernel `Send + Sync` with no shared mutable state.
+//! zero allocation — each worker thread owns its own arena, keeping
+//! every kernel `Send + Sync` with no shared mutable state.
 //!
-//! **Determinism contract** (what the DP parity tests rest on): the
-//! value of output row `i` depends only on row `i` of `A`, the whole
-//! `B`, and `(n, k)` — never on `m` or on which other rows ride in the
-//! call. Summation over `k` happens in a fixed order (ascending within
-//! each `KC` chunk, chunks ascending), so per-sample gradients are
-//! bitwise identical whether a sample is computed in a batch of 1, a
+//! Two machine-saturation layers sit on top of the blocked loop nest,
+//! both resolved once per process and overridable per call through
+//! [`GemmOpts`]:
+//!
+//! * **Runtime SIMD dispatch** — on x86-64 machines reporting `avx2` and
+//!   `fma` (`is_x86_feature_detected!`), the register tile and the two
+//!   transpose-shaped pack routines run on explicit AVX2+FMA intrinsics
+//!   ([`TileKind::Avx2`]); everywhere else (or under `OPACUS_SIMD=off`)
+//!   the portable scalar tile is used. The FMA tile contracts each
+//!   multiply-add to one rounding, so across *tiles* results differ in
+//!   the last ulp — never across calls of the same tile (see the
+//!   determinism contract below).
+//! * **Intra-op parallelism** — one `sgemm*` call is split into static,
+//!   tile-aligned row (and, for wide outputs, column) blocks executed on
+//!   a process-wide helper pool
+//!   ([`intra_op_run`](crate::distributed::pool::intra_op_run)). Each
+//!   part runs the *identical* serial loop nest over its block, and
+//!   parts never split the `k` dimension, so the output is bitwise
+//!   identical to the serial path at any thread count. The fan-out is
+//!   `OPACUS_GEMM_THREADS` / [`set_gemm_threads`] when set, else
+//!   `auto`: detected CPUs divided by the live data-parallel worker
+//!   count, so `--workers` sharding composes without oversubscription.
+//!
+//! **Determinism contract** (what the DP parity tests rest on): for a
+//! fixed resolved [`GemmOpts`], the value of output row `i` depends only
+//! on row `i` of `A`, the whole `B`, and `(n, k)` — never on `m`, on
+//! which other rows ride in the call, or on how many intra-op threads
+//! executed it. Summation over `k` happens in a fixed order (ascending
+//! within each `KC` chunk, chunks ascending), so per-sample gradients
+//! are bitwise identical whether a sample is computed in a batch of 1, a
 //! full physical batch, or a distributed shard of any width. Do not add
 //! an `m`-dependent dispatch or a parallel-k reduction here without
 //! revisiting the microbatch-oracle and worker-parity tests.
@@ -36,13 +60,15 @@
 //! path is tested and benchmarked against (`benches/gemm_kernels.rs`).
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Register-tile rows: each micro-kernel call produces an `MR×NR` block
 /// of C held entirely in registers.
 pub const MR: usize = 8;
-/// Register-tile columns (one AVX2 f32 vector wide; the inner loop is
-/// written so LLVM keeps the `MR×NR` accumulator in vector registers).
+/// Register-tile columns (one AVX2 f32 vector wide; the scalar tile is
+/// written so LLVM keeps the `MR×NR` accumulator in vector registers,
+/// the AVX2 tile holds it in eight `ymm` registers explicitly).
 pub const NR: usize = 8;
 
 /// Cache-blocking parameters: `kc` sizes the packed panels for L1,
@@ -138,6 +164,216 @@ fn autodetect() -> BlockSizes {
     BlockSizes { mc, kc, nc: 4096 }
 }
 
+// ---------------------------------------------------------------------
+// SIMD tile dispatch
+// ---------------------------------------------------------------------
+
+/// Which register-tile implementation a GEMM call runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    /// Portable scalar 8×8 tile (LLVM auto-vectorized) — the baseline
+    /// every other tile is tested bitwise against on integer data.
+    Scalar,
+    /// Explicit AVX2+FMA 8×8 tile with SIMD-transposed pack routines.
+    /// Requesting it on a machine without `avx2`/`fma` silently falls
+    /// back to [`TileKind::Scalar`] (the driver re-checks cpuid).
+    Avx2,
+}
+
+impl TileKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TileKind::Scalar => "scalar",
+            TileKind::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when the CPU reports both `avx2` and `fma` at runtime (always
+/// false off x86-64). The result is cached by std's feature detection.
+pub fn cpu_has_avx2_fma() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when `OPACUS_SIMD` force-disables the vector tile.
+fn simd_forced_off(spec: Option<&str>) -> bool {
+    matches!(spec.map(str::trim), Some("off" | "scalar" | "0" | "false" | "no"))
+}
+
+/// The register tile plain `sgemm*` calls dispatch to, resolved once
+/// per process: `OPACUS_SIMD=off` (also `scalar`/`0`/`false`/`no`)
+/// forces the portable tile; otherwise AVX2+FMA when the CPU has it.
+pub fn detected_tile() -> TileKind {
+    static TILE: OnceLock<TileKind> = OnceLock::new();
+    *TILE.get_or_init(|| {
+        let env = std::env::var("OPACUS_SIMD").ok();
+        if simd_forced_off(env.as_deref()) {
+            TileKind::Scalar
+        } else if cpu_has_avx2_fma() {
+            TileKind::Avx2
+        } else {
+            TileKind::Scalar
+        }
+    })
+}
+
+/// One-line CPU feature summary for `opacus inspect`.
+pub fn cpu_feature_summary() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let yn = |b: bool| if b { "yes" } else { "no" };
+        format!(
+            "x86-64 avx2={} fma={}",
+            yn(std::arch::is_x86_feature_detected!("avx2")),
+            yn(std::arch::is_x86_feature_detected!("fma"))
+        )
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        format!("{} (no x86-64 SIMD dispatch)", std::env::consts::ARCH)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Intra-op thread resolution
+// ---------------------------------------------------------------------
+
+/// Hard cap on the intra-op fan-out of one GEMM call.
+pub const MAX_GEMM_THREADS: usize = 64;
+
+/// A part must carry at least this many multiply-adds before a call
+/// fans out — below it (per-sample attention tiles, bias-sized GEMMs)
+/// dispatch overhead beats the parallel win and calls stay serial.
+const PAR_MIN_MACS: usize = 1 << 19;
+
+/// Explicit process-wide override (`.gemm_threads(n)` / CLI); 0 = unset.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Live data-parallel worker threads (maintained by `WorkerPool`).
+static DP_WORKER_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set (`Some(n)`) or clear (`None`) the process-wide intra-op thread
+/// override — the programmatic twin of `OPACUS_GEMM_THREADS`, and the
+/// hook behind the builder's `.gemm_threads(n)` knob. Takes precedence
+/// over the environment; values clamp into `1..=MAX_GEMM_THREADS`.
+pub fn set_gemm_threads(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.unwrap_or(0).min(MAX_GEMM_THREADS), Ordering::Relaxed);
+}
+
+/// Called by `WorkerPool` when a data-parallel pool spawns: `auto`
+/// intra-op sizing divides the machine by the live worker count so the
+/// two parallelism layers compose without oversubscription.
+pub(crate) fn note_dp_workers_spawned(n: usize) {
+    DP_WORKER_THREADS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Called by `WorkerPool::drop` after its threads joined.
+pub(crate) fn note_dp_workers_exited(n: usize) {
+    DP_WORKER_THREADS.fetch_sub(n, Ordering::Relaxed);
+}
+
+/// Parse an `OPACUS_GEMM_THREADS` value: a positive count, with `0`,
+/// `auto` or garbage meaning "auto".
+fn parse_thread_spec(s: &str) -> Option<usize> {
+    match s.trim() {
+        "" | "auto" => None,
+        t => t.parse::<usize>().ok().filter(|&n| n > 0),
+    }
+}
+
+fn env_threads() -> Option<usize> {
+    static T: OnceLock<Option<usize>> = OnceLock::new();
+    *T.get_or_init(|| parse_thread_spec(&std::env::var("OPACUS_GEMM_THREADS").ok()?))
+}
+
+fn detected_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pure `auto` sizing rule: one machine's CPUs divided across the live
+/// data-parallel workers, never below 1.
+fn auto_threads_for(cpus: usize, dp_workers: usize) -> usize {
+    (cpus / dp_workers.max(1)).max(1)
+}
+
+fn auto_gemm_threads() -> usize {
+    auto_threads_for(detected_cpus(), DP_WORKER_THREADS.load(Ordering::Relaxed))
+}
+
+/// The intra-op fan-out a plain `sgemm*` call resolves to right now:
+/// [`set_gemm_threads`] override > `OPACUS_GEMM_THREADS` > `auto`
+/// (CPUs / live data-parallel workers), clamped to
+/// `1..=`[`MAX_GEMM_THREADS`].
+pub fn resolved_gemm_threads() -> usize {
+    let explicit = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    let req = if explicit > 0 {
+        explicit
+    } else if let Some(e) = env_threads() {
+        e
+    } else {
+        auto_gemm_threads()
+    };
+    req.clamp(1, MAX_GEMM_THREADS)
+}
+
+/// Human-readable account of [`resolved_gemm_threads`] for `inspect`.
+pub fn gemm_threads_explain() -> String {
+    let n = resolved_gemm_threads();
+    let explicit = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if explicit > 0 {
+        return format!("{n} (explicit --gemm-threads / .gemm_threads override)");
+    }
+    if env_threads().is_some() {
+        return format!("{n} (OPACUS_GEMM_THREADS)");
+    }
+    let dp = DP_WORKER_THREADS.load(Ordering::Relaxed).max(1);
+    format!(
+        "{n} (auto: {} cpus / {dp} data-parallel worker{})",
+        detected_cpus(),
+        if dp == 1 { "" } else { "s" }
+    )
+}
+
+// ---------------------------------------------------------------------
+// Per-call options
+// ---------------------------------------------------------------------
+
+/// Per-call engine options. Plain [`sgemm`]/[`sgemm_nt`]/[`sgemm_tn`]
+/// use [`GemmOpts::resolved`]; tests and benches pin exact paths via
+/// the `*_with` entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmOpts {
+    pub tile: TileKind,
+    pub threads: usize,
+}
+
+impl GemmOpts {
+    /// The process-wide dispatch: detected tile + resolved fan-out.
+    pub fn resolved() -> GemmOpts {
+        GemmOpts { tile: detected_tile(), threads: resolved_gemm_threads() }
+    }
+
+    /// Serial scalar engine — the bitwise baseline tests compare
+    /// against.
+    pub fn serial_scalar() -> GemmOpts {
+        GemmOpts { tile: TileKind::Scalar, threads: 1 }
+    }
+
+    pub fn with_tile(self, tile: TileKind) -> GemmOpts {
+        GemmOpts { tile, ..self }
+    }
+
+    pub fn with_threads(self, threads: usize) -> GemmOpts {
+        GemmOpts { threads, ..self }
+    }
+}
+
 /// Reusable pack buffers. One arena per thread (see [`with_scratch`]):
 /// buffers grow to the high-water mark of the shapes seen on that
 /// thread and are then reused allocation-free.
@@ -160,6 +396,10 @@ fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
+// ---------------------------------------------------------------------
+// Public kernels
+// ---------------------------------------------------------------------
+
 /// `C[m,n] += A[m,k] · B[k,n]`, all row-major with leading strides
 /// `lda`/`ldb`/`ldc` (≥ the logical row width).
 #[allow(clippy::too_many_arguments)]
@@ -174,7 +414,7 @@ pub fn sgemm(
     c: &mut [f32],
     ldc: usize,
 ) {
-    gemm_driver(m, n, k, a, lda, false, b, ldb, false, c, ldc);
+    gemm_driver(GemmOpts::resolved(), m, n, k, a, lda, false, b, ldb, false, c, ldc);
 }
 
 /// `C[m,n] += A[m,k] · B[n,k]ᵀ` — `b` holds the row-major `[n, k]`
@@ -191,7 +431,7 @@ pub fn sgemm_nt(
     c: &mut [f32],
     ldc: usize,
 ) {
-    gemm_driver(m, n, k, a, lda, false, b, ldb, true, c, ldc);
+    gemm_driver(GemmOpts::resolved(), m, n, k, a, lda, false, b, ldb, true, c, ldc);
 }
 
 /// `C[m,n] += A[k,m]ᵀ · B[k,n]` — `a` holds the row-major `[k, m]`
@@ -209,13 +449,130 @@ pub fn sgemm_tn(
     c: &mut [f32],
     ldc: usize,
 ) {
-    gemm_driver(m, n, k, a, lda, true, b, ldb, false, c, ldc);
+    gemm_driver(GemmOpts::resolved(), m, n, k, a, lda, true, b, ldb, false, c, ldc);
 }
 
-/// The shared blocked driver. `a_trans`: A is stored `[k, m]` and used
-/// as `Aᵀ`; `b_trans`: B is stored `[n, k]` and used as `Bᵀ`.
+/// [`sgemm`] with explicit engine options.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with(
+    opts: GemmOpts,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(opts, m, n, k, a, lda, false, b, ldb, false, c, ldc);
+}
+
+/// [`sgemm_nt`] with explicit engine options.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_nt_with(
+    opts: GemmOpts,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(opts, m, n, k, a, lda, false, b, ldb, true, c, ldc);
+}
+
+/// [`sgemm_tn`] with explicit engine options.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tn_with(
+    opts: GemmOpts,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_driver(opts, m, n, k, a, lda, true, b, ldb, false, c, ldc);
+}
+
+// ---------------------------------------------------------------------
+// Driver: partition + serial blocked loop nest
+// ---------------------------------------------------------------------
+
+/// Static 2-D partition of one GEMM call: `parts()` disjoint row×column
+/// blocks of C, rows in `MR`-aligned contiguous chunks, columns (used
+/// only when the row dimension cannot feed every thread) in
+/// `NR`-aligned chunks. `k` is never split, so each part runs the
+/// exact serial summation for its rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct PartGrid {
+    row_parts: usize,
+    col_parts: usize,
+    row_chunk: usize,
+    col_chunk: usize,
+}
+
+impl PartGrid {
+    const SERIAL: PartGrid =
+        PartGrid { row_parts: 1, col_parts: 1, row_chunk: usize::MAX, col_chunk: usize::MAX };
+
+    fn parts(self) -> usize {
+        self.row_parts * self.col_parts
+    }
+
+    /// Half-open `(r0, r1, c0, c1)` block of part `part`.
+    fn bounds(self, part: usize, m: usize, n: usize) -> (usize, usize, usize, usize) {
+        let pr = part % self.row_parts;
+        let pc = part / self.row_parts;
+        let r0 = (pr * self.row_chunk).min(m);
+        let r1 = (pr + 1).saturating_mul(self.row_chunk).min(m);
+        let c0 = (pc * self.col_chunk).min(n);
+        let c1 = (pc + 1).saturating_mul(self.col_chunk).min(n);
+        (r0, r1, c0, c1)
+    }
+}
+
+/// Choose the static partition for an `m×n×k` call at a requested
+/// fan-out. Calls below [`PAR_MIN_MACS`] multiply-adds stay serial.
+fn plan_parts(m: usize, n: usize, k: usize, threads: usize) -> PartGrid {
+    let t = threads.clamp(1, MAX_GEMM_THREADS);
+    if t <= 1 || m.saturating_mul(n).saturating_mul(k) < PAR_MIN_MACS {
+        return PartGrid::SERIAL;
+    }
+    let row_units = m.div_ceil(MR);
+    let row_chunk = row_units.div_ceil(t.min(row_units)) * MR;
+    let row_parts = m.div_ceil(row_chunk);
+    let spare = t / row_parts;
+    let (col_parts, col_chunk) = if spare >= 2 {
+        let col_units = n.div_ceil(NR);
+        let col_chunk = col_units.div_ceil(spare.min(col_units)) * NR;
+        (n.div_ceil(col_chunk), col_chunk)
+    } else {
+        (1, usize::MAX)
+    };
+    PartGrid { row_parts, col_parts, row_chunk, col_chunk }
+}
+
+/// Raw C base pointer, shared read-write across intra-op parts. Sound
+/// because every part writes a disjoint row×column block and the
+/// dispatch blocks until all parts completed before C is used again.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// The shared driver. `a_trans`: A is stored `[k, m]` and used as
+/// `Aᵀ`; `b_trans`: B is stored `[n, k]` and used as `Bᵀ`.
 #[allow(clippy::too_many_arguments)]
 fn gemm_driver(
+    opts: GemmOpts,
     m: usize,
     n: usize,
     k: usize,
@@ -243,17 +600,92 @@ fn gemm_driver(
     }
     debug_assert!(ldc >= n && c.len() >= (m - 1) * ldc + n, "gemm: C out of bounds");
 
+    // Requesting Avx2 on a machine without it falls back to the scalar
+    // tile — GemmOpts is safe to construct with any fields.
+    let tile = match opts.tile {
+        TileKind::Avx2 if cpu_has_avx2_fma() => TileKind::Avx2,
+        _ => TileKind::Scalar,
+    };
+
+    let grid = plan_parts(m, n, k, opts.threads);
+    if grid.parts() <= 1 {
+        // SAFETY: bounds debug-asserted above; the serial path writes
+        // exactly C[0..m, 0..n] and nothing else aliases it.
+        unsafe {
+            gemm_block(tile, m, n, k, a, lda, a_trans, b, ldb, b_trans, c.as_mut_ptr(), ldc);
+        }
+        return;
+    }
+
+    let cp = SendPtr(c.as_mut_ptr());
+    let body = |part: usize| {
+        let (r0, r1, c0, c1) = grid.bounds(part, m, n);
+        if r0 >= r1 || c0 >= c1 {
+            return;
+        }
+        let pa = if a_trans { &a[r0..] } else { &a[r0 * lda..] };
+        let pb = if b_trans { &b[c0 * ldb..] } else { &b[c0..] };
+        // SAFETY: parts own disjoint row×column blocks of C (PartGrid
+        // tiles [0,m)×[0,n) exactly once); A/B are shared reads; the
+        // dispatch below blocks until every part finished, so no access
+        // outlives the &mut borrow of `c`.
+        unsafe {
+            let pc = cp.0.add(r0 * ldc + c0);
+            gemm_block(tile, r1 - r0, c1 - c0, k, pa, lda, a_trans, pb, ldb, b_trans, pc, ldc);
+        }
+    };
+    crate::distributed::pool::intra_op_run(grid.parts(), &body);
+}
+
+/// One serial blocked GEMM accumulating into `C[0..m, 0..n]` at raw
+/// base `c` with row stride `ldc` — the loop nest every part of every
+/// call runs, bitwise identical regardless of partitioning.
+///
+/// # Safety
+/// `c.add(i * ldc + j)` must be valid for read+write for all `i < m`,
+/// `j < n`, with no concurrent access to those cells. A/B slice bounds
+/// follow the public drivers' (debug-asserted) contract.
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_block(
+    tile: TileKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    a_trans: bool,
+    b: &[f32],
+    ldb: usize,
+    b_trans: bool,
+    c: *mut f32,
+    ldc: usize,
+) {
     let bs = block_sizes();
     with_scratch(|scratch| {
         for jc in (0..n).step_by(bs.nc) {
             let ncb = bs.nc.min(n - jc);
             for pc in (0..k).step_by(bs.kc) {
                 let kcb = bs.kc.min(k - pc);
-                pack_b(&mut scratch.bpack, b, ldb, b_trans, pc, kcb, jc, ncb);
+                pack_b(tile, &mut scratch.bpack, b, ldb, b_trans, pc, kcb, jc, ncb);
                 for ic in (0..m).step_by(bs.mc) {
                     let mcb = bs.mc.min(m - ic);
-                    pack_a(&mut scratch.apack, a, lda, a_trans, ic, mcb, pc, kcb);
-                    macro_kernel(&scratch.apack, &scratch.bpack, mcb, ncb, kcb, ic, jc, c, ldc);
+                    pack_a(tile, &mut scratch.apack, a, lda, a_trans, ic, mcb, pc, kcb);
+                    // SAFETY: (ic, jc) blocks stay inside C[0..m, 0..n],
+                    // which the caller guarantees is exclusively ours.
+                    unsafe {
+                        macro_kernel(
+                            tile,
+                            &scratch.apack,
+                            &scratch.bpack,
+                            mcb,
+                            ncb,
+                            kcb,
+                            ic,
+                            jc,
+                            c,
+                            ldc,
+                        );
+                    }
                 }
             }
         }
@@ -262,8 +694,13 @@ fn gemm_driver(
 
 /// Drive the register tile over one packed `[mcb × kcb] × [kcb × ncb]`
 /// block, accumulating into `C` at origin `(i0, j0)`.
+///
+/// # Safety
+/// Same `c` contract as [`gemm_block`]; `TileKind::Avx2` additionally
+/// requires the cpuid check the driver performed.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(
+unsafe fn macro_kernel(
+    tile: TileKind,
     apack: &[f32],
     bpack: &[f32],
     mcb: usize,
@@ -271,7 +708,7 @@ fn macro_kernel(
     kcb: usize,
     i0: usize,
     j0: usize,
-    c: &mut [f32],
+    c: *mut f32,
     ldc: usize,
 ) {
     let a_panels = mcb.div_ceil(MR);
@@ -283,21 +720,37 @@ fn macro_kernel(
             let mr_eff = MR.min(mcb - ip * MR);
             let ap = &apack[ip * kcb * MR..(ip + 1) * kcb * MR];
             let mut acc = [[0f32; NR]; MR];
-            micro_kernel(ap, bp, &mut acc);
+            match tile {
+                TileKind::Scalar => micro_kernel_scalar(ap, bp, &mut acc),
+                TileKind::Avx2 => {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: the driver only passes Avx2 after cpuid
+                    // confirmed avx2+fma; panels are kcb*MR / kcb*NR.
+                    unsafe {
+                        x86::micro_kernel_avx2(ap, bp, &mut acc);
+                    }
+                    #[cfg(not(target_arch = "x86_64"))]
+                    micro_kernel_scalar(ap, bp, &mut acc);
+                }
+            }
             for (r, arow) in acc.iter().enumerate().take(mr_eff) {
-                let crow = &mut c[(i0 + ip * MR + r) * ldc + j0 + jp * NR..][..nr_eff];
-                for (cv, av) in crow.iter_mut().zip(arow.iter()) {
-                    *cv += *av;
+                // SAFETY: row i0+ip*MR+r < m, cols j0+jp*NR..+nr_eff ≤ n.
+                unsafe {
+                    let crow = c.add((i0 + ip * MR + r) * ldc + j0 + jp * NR);
+                    for (cc, av) in arow.iter().enumerate().take(nr_eff) {
+                        *crow.add(cc) += *av;
+                    }
                 }
             }
         }
     }
 }
 
-/// The register tile: `acc[MR][NR] += ap[kc, MR] ⊗ bp[kc, NR]` with `k`
-/// ascending — the one loop every FLOP of the engine runs through.
+/// The portable register tile: `acc[MR][NR] += ap[kc, MR] ⊗ bp[kc, NR]`
+/// with `k` ascending — written so LLVM keeps the accumulator in vector
+/// registers on any target.
 #[inline]
-fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn micro_kernel_scalar(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
         let av: &[f32; MR] = av.try_into().expect("chunk is MR wide");
         let bv: &[f32; NR] = bv.try_into().expect("chunk is NR wide");
@@ -313,8 +766,11 @@ fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
 
 /// Pack the `[mcb × kcb]` A block at `(i0, p0)` into `[panel][kk][MR]`
 /// layout, zero-padding edge panels so the micro-kernel never branches.
+/// The non-transposed layout is a scatter (transpose-shaped); full 8×8
+/// tiles of it run the AVX2 in-register transpose when available.
 #[allow(clippy::too_many_arguments)]
 fn pack_a(
+    tile: TileKind,
     buf: &mut Vec<f32>,
     a: &[f32],
     lda: usize,
@@ -343,10 +799,15 @@ fn pack_a(
             }
         } else {
             // A stored [m, k]: read each row contiguously, scatter by MR
+            let kk0 = if rows == MR {
+                transpose_pack_prefix(tile, &a[rbase * lda + p0..], lda, dst, kcb)
+            } else {
+                0
+            };
             for r in 0..rows {
-                let src = &a[(rbase + r) * lda + p0..][..kcb];
+                let src = &a[(rbase + r) * lda + p0 + kk0..][..kcb - kk0];
                 for (kk, &v) in src.iter().enumerate() {
-                    dst[kk * MR + r] = v;
+                    dst[(kk0 + kk) * MR + r] = v;
                 }
             }
             for r in rows..MR {
@@ -359,9 +820,12 @@ fn pack_a(
 }
 
 /// Pack the `[kcb × ncb]` B block at `(p0, j0)` into `[panel][kk][NR]`
-/// layout with zero-padded edge panels.
+/// layout with zero-padded edge panels. The transposed layout is a
+/// scatter; full 8×8 tiles of it run the AVX2 in-register transpose
+/// when available.
 #[allow(clippy::too_many_arguments)]
 fn pack_b(
+    tile: TileKind,
     buf: &mut Vec<f32>,
     b: &[f32],
     ldb: usize,
@@ -382,10 +846,15 @@ fn pack_b(
         let dst = &mut buf[jp * kcb * NR..(jp + 1) * kcb * NR];
         if b_trans {
             // B stored [n, k]: read each column's k-run contiguously
+            let kk0 = if cols == NR {
+                transpose_pack_prefix(tile, &b[cbase * ldb + p0..], ldb, dst, kcb)
+            } else {
+                0
+            };
             for cc in 0..cols {
-                let src = &b[(cbase + cc) * ldb + p0..][..kcb];
+                let src = &b[(cbase + cc) * ldb + p0 + kk0..][..kcb - kk0];
                 for (kk, &v) in src.iter().enumerate() {
-                    dst[kk * NR + cc] = v;
+                    dst[(kk0 + kk) * NR + cc] = v;
                 }
             }
             for cc in cols..NR {
@@ -401,6 +870,151 @@ fn pack_b(
                 d[..cols].copy_from_slice(src);
                 d[cols..].fill(0.0);
             }
+        }
+    }
+}
+
+/// Transpose-copy the full 8×8 k-tiles of one pack panel:
+/// `dst[kk*8 + i] = src[i*stride + kk]` for `kk < kcb`, `i < 8`,
+/// returning how many k-slices were handled (a multiple of 8; the
+/// caller scatters the remainder). Runs the AVX2 in-register transpose
+/// under [`TileKind::Avx2`], else handles nothing. `MR == NR == 8` is
+/// baked into the tile shape.
+fn transpose_pack_prefix(
+    tile: TileKind,
+    src: &[f32],
+    stride: usize,
+    dst: &mut [f32],
+    kcb: usize,
+) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if tile != TileKind::Avx2 {
+            return 0;
+        }
+        debug_assert!(src.len() > 7 * stride + kcb.saturating_sub(1), "pack source tile OOB");
+        let mut kk0 = 0;
+        while kk0 + 8 <= kcb {
+            // SAFETY: Avx2 is only dispatched after cpuid confirmed
+            // avx2; the eight source rows `src[i*stride + kk0..+8]` are
+            // in bounds (debug-asserted above, guaranteed by the
+            // driver's A/B contract) and the eight destination rows lie
+            // inside `dst` (kcb·8 elements).
+            unsafe {
+                x86::transpose_8x8(
+                    src.as_ptr().add(kk0),
+                    stride,
+                    dst.as_mut_ptr().add(kk0 * MR),
+                    MR,
+                );
+            }
+            kk0 += 8;
+        }
+        kk0
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (tile, src, stride, dst, kcb);
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2+FMA kernels
+// ---------------------------------------------------------------------
+
+/// Explicit AVX2+FMA implementations of the register tile and the 8×8
+/// pack transpose. Only reachable through [`TileKind::Avx2`], which the
+/// driver hands out strictly after `is_x86_feature_detected!` confirmed
+/// `avx2` and `fma`.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// The FMA register tile: `acc[MR][NR] += ap[kc, MR] ⊗ bp[kc, NR]`,
+    /// `k` ascending, eight `ymm` accumulators, one fused rounding per
+    /// multiply-add.
+    ///
+    /// # Safety
+    /// Requires `avx2` and `fma`. `ap`/`bp` must be whole packed panels
+    /// (`ap.len() == kc·MR`, `bp.len() == kc·NR`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn micro_kernel_avx2(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+        let kc = bp.len() / NR;
+        debug_assert_eq!(ap.len(), kc * MR);
+        // SAFETY (all intrinsics below): unaligned load/store intrinsics
+        // over in-bounds rows of `acc` / elements of `ap`/`bp`.
+        unsafe {
+            let mut cv = [_mm256_setzero_ps(); MR];
+            for (r, row) in acc.iter().enumerate() {
+                cv[r] = _mm256_loadu_ps(row.as_ptr());
+            }
+            let mut ap_ = ap.as_ptr();
+            let mut bp_ = bp.as_ptr();
+            for _ in 0..kc {
+                let bv = _mm256_loadu_ps(bp_);
+                for (r, c) in cv.iter_mut().enumerate() {
+                    *c = _mm256_fmadd_ps(_mm256_set1_ps(*ap_.add(r)), bv, *c);
+                }
+                ap_ = ap_.add(MR);
+                bp_ = bp_.add(NR);
+            }
+            for (r, row) in acc.iter_mut().enumerate() {
+                _mm256_storeu_ps(row.as_mut_ptr(), cv[r]);
+            }
+        }
+    }
+
+    /// In-register 8×8 f32 transpose:
+    /// `dst[j*dst_stride + i] = src[i*src_stride + j]` — pure data
+    /// movement, bitwise identical to the scalar scatter.
+    ///
+    /// # Safety
+    /// Requires `avx2`. For `i, j < 8`, `src.add(i*src_stride) ..+8`
+    /// must be readable and `dst.add(j*dst_stride) ..+8` writable, with
+    /// `src` and `dst` non-overlapping.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn transpose_8x8(
+        src: *const f32,
+        src_stride: usize,
+        dst: *mut f32,
+        dst_stride: usize,
+    ) {
+        // SAFETY: caller guarantees the eight source/destination rows.
+        unsafe {
+            let r0 = _mm256_loadu_ps(src);
+            let r1 = _mm256_loadu_ps(src.add(src_stride));
+            let r2 = _mm256_loadu_ps(src.add(2 * src_stride));
+            let r3 = _mm256_loadu_ps(src.add(3 * src_stride));
+            let r4 = _mm256_loadu_ps(src.add(4 * src_stride));
+            let r5 = _mm256_loadu_ps(src.add(5 * src_stride));
+            let r6 = _mm256_loadu_ps(src.add(6 * src_stride));
+            let r7 = _mm256_loadu_ps(src.add(7 * src_stride));
+            let t0 = _mm256_unpacklo_ps(r0, r1);
+            let t1 = _mm256_unpackhi_ps(r0, r1);
+            let t2 = _mm256_unpacklo_ps(r2, r3);
+            let t3 = _mm256_unpackhi_ps(r2, r3);
+            let t4 = _mm256_unpacklo_ps(r4, r5);
+            let t5 = _mm256_unpackhi_ps(r4, r5);
+            let t6 = _mm256_unpacklo_ps(r6, r7);
+            let t7 = _mm256_unpackhi_ps(r6, r7);
+            let s0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+            let s1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+            let s2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+            let s3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+            let s4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+            let s5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+            let s6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+            let s7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+            _mm256_storeu_ps(dst, _mm256_permute2f128_ps::<0x20>(s0, s4));
+            _mm256_storeu_ps(dst.add(dst_stride), _mm256_permute2f128_ps::<0x20>(s1, s5));
+            _mm256_storeu_ps(dst.add(2 * dst_stride), _mm256_permute2f128_ps::<0x20>(s2, s6));
+            _mm256_storeu_ps(dst.add(3 * dst_stride), _mm256_permute2f128_ps::<0x20>(s3, s7));
+            _mm256_storeu_ps(dst.add(4 * dst_stride), _mm256_permute2f128_ps::<0x31>(s0, s4));
+            _mm256_storeu_ps(dst.add(5 * dst_stride), _mm256_permute2f128_ps::<0x31>(s1, s5));
+            _mm256_storeu_ps(dst.add(6 * dst_stride), _mm256_permute2f128_ps::<0x31>(s2, s6));
+            _mm256_storeu_ps(dst.add(7 * dst_stride), _mm256_permute2f128_ps::<0x31>(s3, s7));
         }
     }
 }
@@ -492,7 +1106,8 @@ mod tests {
 
     /// Integer-valued f32 matrix: every product and partial sum is exact
     /// in f32, so blocked and reference results must match *bitwise*
-    /// regardless of summation order.
+    /// regardless of summation order — and regardless of whether the
+    /// multiply-add rounds once (FMA) or twice (scalar).
     fn int_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         (0..rows * cols).map(|_| rng.gen_range(9) as f32 - 4.0).collect()
@@ -559,6 +1174,208 @@ mod tests {
             reference::sgemm_tn(m, n, k, &a, m, &b, n, &mut c_ref, n);
             assert_eq!(c_blk, c_ref, "tn {m}x{n}x{k}");
         }
+    }
+
+    /// The SIMD acceptance contract: on integer-valued data (exact
+    /// arithmetic — FMA's single rounding cannot differ) the AVX2 tile
+    /// must match the scalar reference exactly on every edge-case shape
+    /// and op form. On machines without avx2+fma the request falls back
+    /// to the scalar tile, which must also match.
+    #[test]
+    fn simd_tile_matches_scalar_reference_exactly() {
+        let opts = GemmOpts { tile: TileKind::Avx2, threads: 1 };
+        for &(m, n, k) in SHAPES {
+            let a = int_matrix(m, k, 101);
+            let b = int_matrix(k, n, 102);
+            let mut c_simd = int_matrix(m, n, 103);
+            let mut c_ref = c_simd.clone();
+            sgemm_with(opts, m, n, k, &a, k, &b, n, &mut c_simd, n);
+            reference::sgemm(m, n, k, &a, k, &b, n, &mut c_ref, n);
+            assert_eq!(c_simd, c_ref, "simd nn {m}x{n}x{k}");
+
+            let bt = int_matrix(n, k, 104);
+            let mut c_simd = int_matrix(m, n, 105);
+            let mut c_ref = c_simd.clone();
+            sgemm_nt_with(opts, m, n, k, &a, k, &bt, k, &mut c_simd, n);
+            reference::sgemm_nt(m, n, k, &a, k, &bt, k, &mut c_ref, n);
+            assert_eq!(c_simd, c_ref, "simd nt {m}x{n}x{k}");
+
+            let at = int_matrix(k, m, 106);
+            let bn = int_matrix(k, n, 107);
+            let mut c_simd = int_matrix(m, n, 108);
+            let mut c_ref = c_simd.clone();
+            sgemm_tn_with(opts, m, n, k, &at, m, &bn, n, &mut c_simd, n);
+            reference::sgemm_tn(m, n, k, &at, m, &bn, n, &mut c_ref, n);
+            assert_eq!(c_simd, c_ref, "simd tn {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn simd_tile_matches_on_strided_views_and_k1() {
+        let opts = GemmOpts { tile: TileKind::Avx2, threads: 1 };
+        // interior window of larger buffers, the way attention slices
+        // one head's columns out of [T, D]
+        let (m, n, k) = (10, 9, 17);
+        let (lda, ldb, ldc) = (k + 4, n + 3, n + 2);
+        let a = int_matrix(m, lda, 110);
+        let b = int_matrix(k, ldb, 111);
+        let mut c_simd = int_matrix(m, ldc, 112);
+        let mut c_ref = c_simd.clone();
+        sgemm_with(opts, m, n, k, &a[2..], lda, &b[1..], ldb, &mut c_simd[1..], ldc);
+        reference::sgemm(m, n, k, &a[2..], lda, &b[1..], ldb, &mut c_ref[1..], ldc);
+        assert_eq!(c_simd, c_ref);
+        // K = 1: a single FMA per output, panels one k-slice deep
+        let a1 = int_matrix(9, 1, 113);
+        let b1 = int_matrix(1, 11, 114);
+        let mut c_simd = int_matrix(9, 11, 115);
+        let mut c_ref = c_simd.clone();
+        sgemm_with(opts, 9, 11, 1, &a1, 1, &b1, 11, &mut c_simd, 11);
+        reference::sgemm(9, 11, 1, &a1, 1, &b1, 11, &mut c_ref, 11);
+        assert_eq!(c_simd, c_ref);
+    }
+
+    /// The AVX2 pack transposes are pure data movement, so they must be
+    /// bitwise identical to the scalar scatter on *real-valued* data
+    /// too (unlike the FMA tile, which is only exact on integers).
+    #[test]
+    fn simd_packs_are_bit_exact_permutations() {
+        if !cpu_has_avx2_fma() {
+            eprintln!("skipping: no avx2+fma on this machine");
+            return;
+        }
+        let (mcb, kcb) = (16, 40);
+        let a = real_matrix(mcb + 3, kcb + 5, 120);
+        let lda = kcb + 5;
+        let mut scalar_buf = Vec::new();
+        let mut simd_buf = Vec::new();
+        pack_a(TileKind::Scalar, &mut scalar_buf, &a, lda, false, 2, mcb, 1, kcb);
+        pack_a(TileKind::Avx2, &mut simd_buf, &a, lda, false, 2, mcb, 1, kcb);
+        assert_eq!(scalar_buf, simd_buf, "pack_a transpose");
+
+        let (ncb, kcb) = (24, 33);
+        let b = real_matrix(ncb + 2, kcb + 4, 121);
+        let ldb = kcb + 4;
+        let mut scalar_buf = Vec::new();
+        let mut simd_buf = Vec::new();
+        pack_b(TileKind::Scalar, &mut scalar_buf, &b, ldb, true, 1, kcb, 2, ncb);
+        pack_b(TileKind::Avx2, &mut simd_buf, &b, ldb, true, 1, kcb, 2, ncb);
+        assert_eq!(scalar_buf, simd_buf, "pack_b transpose");
+    }
+
+    /// The intra-op acceptance contract: real-valued data, the bench
+    /// acceptance shapes (nt — the projection form), bitwise identical
+    /// output at 1/2/4 threads and any tile.
+    #[test]
+    fn intra_op_parallel_is_bitwise_identical_to_serial() {
+        let tile = detected_tile();
+        for &(m, n, k) in &[(4096usize, 128usize, 32usize), (2048, 16, 16)] {
+            let a = real_matrix(m, k, 130);
+            let b = real_matrix(n, k, 131);
+            let mut base = vec![0f32; m * n];
+            sgemm_nt_with(GemmOpts { tile, threads: 1 }, m, n, k, &a, k, &b, k, &mut base, n);
+            for threads in [2, 4] {
+                let mut c = vec![0f32; m * n];
+                sgemm_nt_with(GemmOpts { tile, threads }, m, n, k, &a, k, &b, k, &mut c, n);
+                assert_eq!(c, base, "nt {m}x{n}x{k} at {threads} threads");
+            }
+        }
+    }
+
+    /// Wide-output calls split columns too (rows alone can't feed the
+    /// fan-out); the nn and tn forms must stay bitwise identical, at
+    /// even and uneven thread counts.
+    #[test]
+    fn intra_op_column_split_is_bitwise_identical() {
+        let tile = detected_tile();
+        let (m, n, k) = (16, 2048, 128);
+        let a = real_matrix(m, k, 140);
+        let b = real_matrix(k, n, 141);
+        let mut base = vec![0f32; m * n];
+        sgemm_with(GemmOpts { tile, threads: 1 }, m, n, k, &a, k, &b, n, &mut base, n);
+        for threads in [3, 4, 8] {
+            let mut c = vec![0f32; m * n];
+            sgemm_with(GemmOpts { tile, threads }, m, n, k, &a, k, &b, n, &mut c, n);
+            assert_eq!(c, base, "nn {m}x{n}x{k} at {threads} threads");
+        }
+        let (m, n, k) = (256, 512, 64);
+        let at = real_matrix(k, m, 142);
+        let bn = real_matrix(k, n, 143);
+        let mut base = vec![0f32; m * n];
+        sgemm_tn_with(GemmOpts { tile, threads: 1 }, m, n, k, &at, m, &bn, n, &mut base, n);
+        for threads in [2, 4] {
+            let mut c = vec![0f32; m * n];
+            sgemm_tn_with(GemmOpts { tile, threads }, m, n, k, &at, m, &bn, n, &mut c, n);
+            assert_eq!(c, base, "tn {m}x{n}x{k} at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn part_planning_is_static_aligned_and_covering() {
+        // the largest acceptance shape splits rows only
+        let g = plan_parts(4096, 128, 32, 4);
+        assert_eq!((g.row_parts, g.col_parts), (4, 1));
+        assert_eq!(g.row_chunk % MR, 0);
+        // below the MAC cutoff stays serial at any fan-out
+        assert_eq!(plan_parts(32, 32, 16, 8).parts(), 1);
+        assert_eq!(plan_parts(4096, 128, 32, 1).parts(), 1);
+        // a short-row wide call brings in the column split
+        let g = plan_parts(16, 2048, 128, 8);
+        assert!(g.col_parts > 1, "{g:?}");
+        assert!(g.parts() <= 8, "{g:?}");
+        assert_eq!(g.col_chunk % NR, 0);
+        // parts tile C exactly once, whatever the remainders
+        for &(m, n, k, t) in &[(100usize, 900usize, 200usize, 6usize), (37, 513, 64, 8)] {
+            let g = plan_parts(m, n, k, t);
+            assert!(g.parts() <= t, "{g:?}");
+            let mut covered = vec![0u8; m * n];
+            for part in 0..g.parts() {
+                let (r0, r1, c0, c1) = g.bounds(part, m, n);
+                for row in covered.chunks_mut(n).take(r1).skip(r0) {
+                    for cell in &mut row[c0..c1] {
+                        *cell += 1;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "{m}x{n} t={t} not tiled exactly once");
+        }
+    }
+
+    #[test]
+    fn thread_resolution_override_and_clamps() {
+        assert_eq!(auto_threads_for(8, 2), 4);
+        assert_eq!(auto_threads_for(8, 0), 8);
+        assert_eq!(auto_threads_for(2, 8), 1);
+        assert!(parse_thread_spec("auto").is_none());
+        assert!(parse_thread_spec("0").is_none());
+        assert!(parse_thread_spec("x").is_none());
+        assert_eq!(parse_thread_spec(" 6 "), Some(6));
+        // the explicit override wins over env and auto, and clamps
+        set_gemm_threads(Some(3));
+        assert_eq!(resolved_gemm_threads(), 3);
+        set_gemm_threads(Some(10_000));
+        assert_eq!(resolved_gemm_threads(), MAX_GEMM_THREADS);
+        set_gemm_threads(None);
+        assert!(resolved_gemm_threads() >= 1);
+        assert!(!gemm_threads_explain().is_empty());
+    }
+
+    #[test]
+    fn simd_spec_parsing_and_summary() {
+        assert!(simd_forced_off(Some("off")));
+        assert!(simd_forced_off(Some(" scalar ")));
+        assert!(simd_forced_off(Some("0")));
+        assert!(!simd_forced_off(Some("on")));
+        assert!(!simd_forced_off(Some("avx2")));
+        assert!(!simd_forced_off(None));
+        // the resolved tile is consistent with the machine (or the env)
+        let tile = detected_tile();
+        if tile == TileKind::Avx2 {
+            assert!(cpu_has_avx2_fma());
+        }
+        assert_eq!(tile, detected_tile(), "resolved once");
+        assert!(!cpu_feature_summary().is_empty());
+        assert_eq!(TileKind::Avx2.as_str(), "avx2");
+        assert_eq!(TileKind::Scalar.as_str(), "scalar");
     }
 
     #[test]

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Before/after GEMM bench comparison between two git refs.
+#
+# Usage: scripts/perf_compare.sh BEFORE_REF [AFTER_REF]
+#        ITERS_SCALE=0.2 scripts/perf_compare.sh v0 HEAD   # quicker run
+#
+# Checks each ref out into a temporary git worktree, runs
+# `cargo bench --bench gemm_kernels -- --bench-out ...` in each, and
+# prints a joined per-shape speedup table (after vs before, on the
+# blocked_gflops column both the PR-5 and PR-7 bench schemas emit).
+# AFTER_REF defaults to the current HEAD. No --check: a slow "before"
+# ref must not abort the comparison.
+set -euo pipefail
+
+repo_root="$(git rev-parse --show-toplevel)"
+before_ref="${1:?usage: scripts/perf_compare.sh BEFORE_REF [AFTER_REF]}"
+after_ref="${2:-HEAD}"
+scale="${ITERS_SCALE:-1.0}"
+
+tmp="$(mktemp -d)"
+cleanup() {
+    git -C "$repo_root" worktree remove --force "$tmp/before" >/dev/null 2>&1 || true
+    git -C "$repo_root" worktree remove --force "$tmp/after" >/dev/null 2>&1 || true
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+run_ref() {
+    local ref="$1" dir="$2" out="$3"
+    echo "== benching $ref" >&2
+    git -C "$repo_root" worktree add --detach "$dir" "$ref" >/dev/null
+    (cd "$dir/rust" && cargo bench --bench gemm_kernels -- \
+        --iters-scale "$scale" --bench-out "$out" >&2)
+}
+
+run_ref "$before_ref" "$tmp/before" "$tmp/before.json"
+run_ref "$after_ref" "$tmp/after" "$tmp/after.json"
+
+python3 - "$tmp/before.json" "$tmp/after.json" "$before_ref" "$after_ref" <<'EOF'
+import json
+import sys
+
+before_path, after_path, before_ref, after_ref = sys.argv[1:5]
+with open(before_path) as f:
+    before = json.load(f)["shapes"]
+with open(after_path) as f:
+    after = json.load(f)["shapes"]
+
+rows = [(name, before[name], a) for name, a in after.items() if before.get(name)]
+if not rows:
+    sys.exit("no shapes present in both refs")
+w = max(len(n) for n, _, _ in rows)
+print(f"gemm_kernels: {before_ref} -> {after_ref} (blocked_gflops per shape)")
+print(f"{'shape':<{w}}  {'before GF/s':>12}  {'after GF/s':>11}  speedup")
+for name, b, a in rows:
+    bg, ag = b["blocked_gflops"], a["blocked_gflops"]
+    print(f"{name:<{w}}  {bg:>12.2f}  {ag:>11.2f}  {ag / bg:>6.2f}x")
+missing = sorted(set(before) ^ set(after))
+if missing:
+    print(f"not in both refs (skipped): {', '.join(missing)}")
+EOF
