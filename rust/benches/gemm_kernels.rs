@@ -22,10 +22,18 @@
 //! path diverges bitwise from the serial scalar reference (SIMD is
 //! compared on integer-valued data, where FMA rounding is exact). CI
 //! runs the gate on every push and uploads `BENCH_pr7_ci.json`.
+//!
+//! PR-8 adds a disabled-instrumentation gate: with observability off,
+//! the GEMM probe sites (one span check in the driver, one enabled()
+//! load per macro block) must cost < 3% of the measured blocked time on
+//! every acceptance shape — pricing a dead probe directly and scaling
+//! by the per-call probe count, so a regression that puts allocation or
+//! locking on the disabled path fails loudly.
 
 use anyhow::{bail, Result};
 use std::hint::black_box;
 
+use opacus_rs::obs;
 use opacus_rs::runtime::backend::native::gemm::{self, GemmOpts, TileKind};
 use opacus_rs::util::cli::Args;
 use opacus_rs::util::json::Json;
@@ -174,6 +182,21 @@ fn main() -> Result<()> {
     let simd_opts = GemmOpts::serial_scalar().with_tile(tile);
     let mut rows: Vec<(String, Json)> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
+
+    // price one dead probe: a span site with collection off is a relaxed
+    // atomic load plus a branch, far below the clock resolution, so time
+    // a batch and divide
+    if obs::enabled() {
+        bail!("observability must be off for the disabled-instrumentation gate");
+    }
+    const PROBE_BATCH: usize = 10_000;
+    let t_probe_batch = time_mean(10, 200, || {
+        for _ in 0..PROBE_BATCH {
+            black_box(obs::span("gemm", "dead"));
+        }
+    });
+    let probe_ns = t_probe_batch / PROBE_BATCH as f64 * 1e9;
+    println!("disabled obs probe: {probe_ns:.2} ns per span site (collection off)");
     for s in shapes() {
         let (m, n, k) = (s.m, s.n, s.k);
         let (a, b) = match s.op {
@@ -276,6 +299,29 @@ fn main() -> Result<()> {
                 s.name,
                 tile.as_str()
             ));
+        }
+        if s.acceptance {
+            // worst-case dead probes per call: the driver span plus one
+            // enabled() load per MC×NC macro block
+            let probes = 1 + ((m + bs.mc - 1) / bs.mc) * ((n + bs.nc - 1) / bs.nc);
+            let overhead = probe_ns * 1e-9 * probes as f64;
+            let frac = overhead / t_simd;
+            if frac > 0.03 {
+                failures.push(format!(
+                    "{}: disabled instrumentation costs {:.3}% of the blocked call \
+                     ({probes} probes at {probe_ns:.1} ns vs {:.1} µs) — above the 3% gate",
+                    s.name,
+                    frac * 100.0,
+                    t_simd * 1e6
+                ));
+            } else {
+                println!(
+                    "obs overhead gate: {} ok — {probes} dead probes cost {:.4}% of the \
+                     blocked call",
+                    s.name,
+                    frac * 100.0
+                );
+            }
         }
     }
     table.print();

@@ -27,6 +27,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
+use crate::obs;
 use crate::rng::{gaussian, Rng};
 use crate::runtime::backend::native::gemm;
 use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
@@ -62,6 +63,19 @@ pub(crate) enum Job {
     /// One standard-normal share of length `len` from this worker's
     /// private generator (per-worker noise splitting).
     Noise { len: usize },
+}
+
+impl Job {
+    /// Stable observability tag — the trace span name a worker records
+    /// while executing this job on its lane.
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Job::Grad { .. } => "grad",
+            Job::GradSum { .. } => "grad_sum",
+            Job::Eval { .. } => "eval",
+            Job::Noise { .. } => "noise",
+        }
+    }
 }
 
 /// A job's result, sent back over the step's reply channel.
@@ -284,7 +298,11 @@ impl IntraOpPool {
             for p in 1..parts {
                 let done = done_tx.clone();
                 let task: IntraTask = Box::new(move || {
-                    let ok = catch_unwind(AssertUnwindSafe(|| body_static(p))).is_ok();
+                    let ok = catch_unwind(AssertUnwindSafe(|| {
+                        let _s = obs::span("gemm", "intra_op.part");
+                        body_static(p)
+                    }))
+                    .is_ok();
                     let _ = done.send(ok);
                 });
                 inject.send(task).expect("intra-op queue never closes");
@@ -292,7 +310,10 @@ impl IntraOpPool {
         }
         drop(done_tx);
         // the caller is part 0 — run it inline while helpers work
-        let own = catch_unwind(AssertUnwindSafe(|| body_static(0)));
+        let own = catch_unwind(AssertUnwindSafe(|| {
+            let _s = obs::span("gemm", "intra_op.part");
+            body_static(0)
+        }));
         let mut helpers_ok = true;
         for _ in 1..parts {
             // a recv error would mean a task was dropped unexecuted,
@@ -324,6 +345,7 @@ fn helper_loop(queue: Arc<Mutex<mpsc::Receiver<IntraTask>>>) {
 
 fn worker_loop(model: Arc<NativeModel>, mut rng: Box<dyn Rng>, rx: mpsc::Receiver<Envelope>) {
     while let Ok(env) = rx.recv() {
+        let _s = obs::span("worker", env.job.kind_name());
         let out = match env.job {
             Job::Grad {
                 params,

@@ -25,6 +25,7 @@
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
+use crate::obs;
 use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
 use crate::runtime::backend::native::steps::{noisy_sgd_update, noisy_sgd_update_f64};
 use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
@@ -138,6 +139,7 @@ impl DistributedStep {
         mask: &[f32],
         clip: f32,
     ) -> Result<DpGradPartial> {
+        let _fanout = obs::span("distributed", "shard_fanout+reduce");
         let jobs = self.shard_jobs(params, x, y, mask, Some(clip))?;
         let shards = jobs.len();
         let mut red = IncrementalReduce::new(shards);
@@ -147,6 +149,7 @@ impl DistributedStep {
         self.pool.run_streaming(jobs, |slot, out| match out {
             JobOut::Grad(p) => {
                 stats[slot] = (p.loss_sum, p.snorm_sum, p.real);
+                let _s = obs::span("distributed", "reduce.push");
                 red.push(slot, p.gsum);
                 Ok(())
             }
@@ -173,6 +176,7 @@ impl DistributedStep {
     /// One standard-normal noise vector composed from per-worker σ/√N
     /// shares (every worker contributes, whatever the shard plan).
     fn composed_noise(&self, len: usize) -> Result<Vec<f32>> {
+        let _s = obs::span("distributed", "noise_shares");
         let jobs = (0..self.pool.workers())
             .map(|rank| (rank, Job::Noise { len }))
             .collect();

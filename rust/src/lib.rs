@@ -91,6 +91,25 @@
 //! `Conv2d` for the im2col pattern that lowers windowed ops onto the
 //! same engine.
 //!
+//! Custom layers can opt into the observability layer the same way the
+//! built-ins do: open an [`obs::span`] around each phase of the kernel
+//! and it appears in the `--trace` timeline next to the stock layers,
+//! at zero cost when tracing is off (one relaxed atomic load):
+//!
+//! ```ignore
+//! fn backward(&mut self, ...) {
+//!     let _s = opacus_rs::obs::span("layer", "mylayer.bwd");
+//!     // ... per-sample gradient kernel ...
+//! }
+//! ```
+//!
+//! Keep instrumentation privacy-respecting (record *where time went*,
+//! never per-sample values) and clock-only (no RNG draws, no reordered
+//! arithmetic) — those two rules are what let traces stay enabled in CI
+//! without perturbing ε or the trained parameters. `obs::count` /
+//! `obs::observe` follow the same discipline for counters and
+//! histograms (aggregate magnitudes only, e.g. GEMM pack/kernel time).
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables
 //! * [`rng`] — xoshiro and ChaCha20 (secure mode) generators + Gaussian
@@ -100,6 +119,8 @@
 //!   registry, typed step executables
 //! * [`distributed`] — data-parallel DP-SGD: worker pool, shard planner,
 //!   tree reduction, DPDDP noise division
+//! * [`obs`] — structured tracing + metrics: span timers, counters,
+//!   log-linear histograms, chrome://tracing export, live serve status
 //! * [`trainer`] — DP optimizer (virtual steps), training loop, metrics
 //! * [`serve`] — streaming service: step pipeline config, durable
 //!   checkpoints, multi-job scheduler, graceful shutdown
@@ -118,6 +139,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod distributed;
+pub mod obs;
 pub mod privacy;
 pub mod rng;
 pub mod runtime;

@@ -19,11 +19,12 @@
 //!   opacus calibrate --eps 3 --delta 1e-5 --q 0.01 --steps 5000
 
 use anyhow::{bail, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
 use opacus_rs::distributed::{detected_cpus, NoiseDivision, Parallelism};
+use opacus_rs::obs::{self, logger, LogFormat, ObsConfig};
 use opacus_rs::privacy::validator::validate_model;
 use opacus_rs::privacy::{
     AccountantKind, Backend, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine,
@@ -47,7 +48,8 @@ const STEP_QUANTUM: usize = 8;
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, FLAGS)?;
-    match args.subcommand.as_deref() {
+    obs::set_config(obs_config_from(&args)?);
+    let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("epsilon") => cmd_epsilon(&args),
@@ -59,7 +61,32 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some(other) => bail!("unknown subcommand '{other}' (try `opacus help`)"),
+    };
+    // export after the subcommand returns — its root span has dropped by
+    // then, so the trace covers the whole command. A failed run still
+    // leaves its partial trace behind for post-mortem.
+    if let Some(path) = obs::config().trace_path {
+        obs::trace::export(&path)?;
+        logger::emit("trace", &format!("trace -> {}", path.display()));
     }
+    result
+}
+
+/// `--trace FILE` turns span/counter collection on and sets the export
+/// path; `--log-format text|json` picks the progress-line format.
+fn obs_config_from(args: &Args) -> Result<ObsConfig> {
+    let mut cfg = ObsConfig::default();
+    if let Some(fmt) = args.get("log-format") {
+        cfg.log_format = match LogFormat::parse(fmt) {
+            Some(f) => f,
+            None => bail!("--log-format must be 'text' or 'json' (got '{fmt}')"),
+        };
+    }
+    if let Some(path) = args.get("trace") {
+        cfg.tracing = true;
+        cfg.trace_path = Some(PathBuf::from(path));
+    }
+    Ok(cfg)
 }
 
 const HELP: &str = "\
@@ -75,9 +102,11 @@ SUBCOMMANDS
              [--backend auto|xla|native] [--workers N|auto]
              [--gemm-threads N|auto] [--noise-division root|perworker]
              [--artifacts DIR] [--out metrics.json] [--pipeline N]
-             [--checkpoint DIR] [--resume]
+             [--checkpoint DIR] [--resume] [--trace FILE]
+             [--log-format text|json]
   serve      --jobs spec.json[,spec2.json…] [--out DIR] [--quantum N]
-             [--kill-after STEPS] [--resume]
+             [--kill-after STEPS] [--resume] [--trace FILE]
+             [--log-format text|json]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
   validate   --task T [--backend auto|xla|native] [--artifacts DIR]
@@ -112,9 +141,23 @@ its own (epsilon, delta) budget; a job whose next quantum would exceed
 its budget stops cleanly with a final checkpoint ('exhausted'), and an
 interrupted service resumes every job from its checkpoint with --resume.
 --kill-after N stops the service after N total steps (testing hook).
+
+--trace FILE turns on span collection across the whole step pipeline
+(forward/backward/clip/noise per layer, GEMM pack vs kernel, worker and
+prefetch lanes) and writes a chrome://tracing JSON trace on exit — open
+it at chrome://tracing or https://ui.perfetto.dev. Instrumentation only
+reads clocks: epsilon and the trained parameters are byte-identical
+with tracing on or off, and the probes cost one relaxed atomic load
+when off. --log-format json turns every progress line into one JSON
+object per line (ts_us/event/job/msg) for log collectors; the default
+text output is unchanged. serve additionally rewrites a live
+<out>/<job>.status.json for each job at every quantum boundary (step,
+steps/sec, epsilon vs budget burn-down) — always atomically, so readers
+never see a torn file.
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let _cmd = obs::span("cli", "train");
     let task = args.get_or("task", "mnist").to_string();
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let epochs = args.get_usize("epochs", 5)?;
@@ -145,7 +188,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         (n_train / 8).max(32),
         0,
     )?;
-    println!("backend: {} ({})", sys.backend_name(), sys.backend_description());
+    logger::emit(
+        "backend",
+        &format!("backend: {} ({})", sys.backend_name(), sys.backend_description()),
+    );
 
     // every CLI flag maps onto one typed builder method
     let mut builder = PrivacyEngine::private()
@@ -172,7 +218,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .seed(args.get_u64("seed", 42)?);
     if let Some(eps) = args.get("eps") {
         let eps: f64 = eps.parse()?;
-        println!("calibrating σ for (ε={eps}, δ={delta}) over {epochs} epochs…");
+        logger::emit(
+            "calibrate",
+            &format!("calibrating σ for (ε={eps}, δ={delta}) over {epochs} epochs…"),
+        );
         builder = builder.target_epsilon(eps, delta, epochs);
     }
     if let Some(depth) = args.get("pipeline") {
@@ -193,26 +242,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(dir) = ckpt_dir {
         if args.has_flag("resume") && checkpoint_exists(dir) {
             TrainerCheckpoint::load(dir)?.apply(&mut trainer)?;
-            println!(
-                "resumed from {dir:?} at step {} (epoch {}, ε = {:.4})",
-                trainer.global_step(),
-                trainer.epoch(),
-                trainer.epsilon(delta)?,
+            logger::emit(
+                "resume",
+                &format!(
+                    "resumed from {dir:?} at step {} (epoch {}, ε = {:.4})",
+                    trainer.global_step(),
+                    trainer.epoch(),
+                    trainer.epsilon(delta)?,
+                ),
             );
         }
     }
     shutdown::install();
 
-    println!(
-        "task={task} σ={:.3} C={clip} ({}, eff {:.3}) lr={lr} q={:.4} steps/epoch={} \
-         sampler={:?} workers={} noise-division={noise_division}",
-        trainer.current_sigma(),
-        optimizer.clipping.as_str(),
-        optimizer.effective_clip,
-        loader.sample_rate,
-        loader.steps_per_epoch,
-        loader.sampling,
-        trainer.workers(),
+    logger::emit(
+        "config",
+        &format!(
+            "task={task} σ={:.3} C={clip} ({}, eff {:.3}) lr={lr} q={:.4} steps/epoch={} \
+             sampler={:?} workers={} noise-division={noise_division}",
+            trainer.current_sigma(),
+            optimizer.clipping.as_str(),
+            optimizer.effective_clip,
+            loader.sample_rate,
+            loader.steps_per_epoch,
+            loader.sampling,
+            trainer.workers(),
+        ),
     );
     // the epoch loop runs in step quanta so an interrupt (SIGINT/SIGTERM)
     // lands at a step boundary: metrics are flushed and a final
@@ -239,63 +294,79 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|r| r.loss)
             .filter(|l| l.is_finite())
             .collect();
-        println!(
-            "epoch {epoch:>3}: loss = {:.4}  ε = {:.3}  σ(t) = {:.3}{}",
-            opacus_rs::util::stats::mean(&losses),
-            trainer.epsilon(delta)?,
-            trainer.current_sigma(),
-            if interrupted { "  (interrupted)" } else { "" },
+        logger::emit(
+            "epoch",
+            &format!(
+                "epoch {epoch:>3}: loss = {:.4}  ε = {:.3}  σ(t) = {:.3}{}",
+                opacus_rs::util::stats::mean(&losses),
+                trainer.epsilon(delta)?,
+                trainer.current_sigma(),
+                if interrupted { "  (interrupted)" } else { "" },
+            ),
         );
     }
     if interrupted {
         if let Some(dir) = ckpt_dir {
             TrainerCheckpoint::capture(&trainer).save(dir)?;
-            println!(
-                "interrupted at step {} — checkpoint -> {dir:?} (resume with --resume)",
-                trainer.global_step()
+            logger::emit(
+                "interrupted",
+                &format!(
+                    "interrupted at step {} — checkpoint -> {dir:?} (resume with --resume)",
+                    trainer.global_step()
+                ),
             );
         } else {
-            println!(
-                "interrupted at step {} (no --checkpoint dir; ε ledger is in the metrics)",
-                trainer.global_step()
+            logger::emit(
+                "interrupted",
+                &format!(
+                    "interrupted at step {} (no --checkpoint dir; ε ledger is in the metrics)",
+                    trainer.global_step()
+                ),
             );
         }
         if let Some(out) = args.get("out") {
             trainer.metrics.save(Path::new(out))?;
-            println!("metrics -> {out}");
+            logger::emit("metrics", &format!("metrics -> {out}"));
         }
         return Ok(());
     }
     if let Some(bmm) = trainer.memory_manager() {
-        println!(
-            "virtual steps: {} logical / {} micro ({:.1}x amplification), chunk {} rows \
-             over {} worker(s), peak per-worker shard {} rows",
-            bmm.logical_steps(),
-            bmm.micro_steps(),
-            bmm.amplification(),
-            bmm.chunk_size(),
-            bmm.workers(),
-            bmm.shard_width(),
+        logger::emit(
+            "virtual_steps",
+            &format!(
+                "virtual steps: {} logical / {} micro ({:.1}x amplification), chunk {} rows \
+                 over {} worker(s), peak per-worker shard {} rows",
+                bmm.logical_steps(),
+                bmm.micro_steps(),
+                bmm.amplification(),
+                bmm.chunk_size(),
+                bmm.workers(),
+                bmm.shard_width(),
+            ),
         );
     }
     let (eval_loss, acc) = trainer.evaluate()?;
-    println!(
-        "held-out loss = {eval_loss:.4}, accuracy = {:.1}%, spent ε = {:.3} @ δ = {delta}",
-        acc * 100.0,
-        trainer.epsilon(delta)?
+    logger::emit(
+        "eval",
+        &format!(
+            "held-out loss = {eval_loss:.4}, accuracy = {:.1}%, spent ε = {:.3} @ δ = {delta}",
+            acc * 100.0,
+            trainer.epsilon(delta)?
+        ),
     );
     if let Some(out) = args.get("out") {
         trainer.metrics.save(std::path::Path::new(out))?;
-        println!("metrics -> {out}");
+        logger::emit("metrics", &format!("metrics -> {out}"));
     }
     if let Some(dir) = ckpt_dir {
         TrainerCheckpoint::capture(&trainer).save(dir)?;
-        println!("final checkpoint -> {dir:?}");
+        logger::emit("checkpoint", &format!("final checkpoint -> {dir:?}"));
     }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let _cmd = obs::span("cli", "serve");
     shutdown::install();
     let jobs_arg = args.require("jobs")?;
     let out_dir = args.get_or("out", "serve-out").to_string();
@@ -306,19 +377,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.kill_after = Some(k.parse()?);
     }
     let mut service = Service::new(cfg);
-    for path in jobs_arg.split(',') {
+    for (idx, path) in jobs_arg.split(',').enumerate() {
         let spec = JobSpec::load(Path::new(path.trim()))?;
-        println!(
-            "job {}: task={} σ={} batch={} budget={} δ={} pipeline={:?}",
-            spec.name,
-            spec.task,
-            spec.sigma,
-            spec.batch,
-            spec.epsilon
-                .map(|e| format!("ε≤{e}"))
-                .unwrap_or_else(|| format!("{:?} epochs", spec.max_epochs)),
-            spec.delta,
-            spec.pipeline,
+        logger::emit_job(
+            idx,
+            "job",
+            &format!(
+                "job {}: task={} σ={} batch={} budget={} δ={} pipeline={:?}",
+                spec.name,
+                spec.task,
+                spec.sigma,
+                spec.batch,
+                spec.epsilon
+                    .map(|e| format!("ε≤{e}"))
+                    .unwrap_or_else(|| format!("{:?} epochs", spec.max_epochs)),
+                spec.delta,
+                spec.pipeline,
+            ),
         );
         service.submit(spec)?;
     }
@@ -336,9 +411,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("{:.4}", r.epsilon),
         ]);
     }
-    t.print();
+    logger::emit("table", &t.render());
     if reports.iter().any(|r| r.status == JobStatus::Interrupted) {
-        println!("service interrupted — rerun with --resume to continue from {out_dir}/");
+        logger::emit(
+            "interrupted",
+            &format!("service interrupted — rerun with --resume to continue from {out_dir}/"),
+        );
     }
     Ok(())
 }
@@ -512,6 +590,34 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 bs.nc
             );
             println!("gemm threads  : {}", gemm::gemm_threads_explain());
+        }
+        {
+            let ocfg = obs::config();
+            println!(
+                "obs collection: {}",
+                if obs::enabled() {
+                    "on (spans + counters + histograms)"
+                } else {
+                    "off (probes cost one relaxed atomic load)"
+                }
+            );
+            println!(
+                "obs trace     : {}",
+                match &ocfg.trace_path {
+                    Some(p) => format!("{} (chrome://tracing JSON on exit)", p.display()),
+                    None => "none (--trace FILE on train/serve to export)".to_string(),
+                }
+            );
+            println!("obs log format: {}", ocfg.log_format.as_str());
+            println!(
+                "obs histograms: log-linear, {} sub-buckets/octave over 2^{}..2^{} \
+                 ({} buckets)",
+                obs::HIST_SUB,
+                obs::HIST_MIN_EXP,
+                obs::HIST_MAX_EXP,
+                obs::HIST_BUCKETS
+            );
+            println!("obs status    : serve rewrites <out>/<job>.status.json every quantum");
         }
         let mut t = Table::new(
             "backend auto-selection",

@@ -1,0 +1,512 @@
+//! The instrumentation core: the global enabled flag, named monotonic
+//! counters, and log-linear-bucket histograms, all folded into a
+//! versioned, mergeable [`Snapshot`].
+//!
+//! Cost model: every probe site first loads one relaxed atomic
+//! ([`enabled`]) and branches — the *only* work the hot path pays when
+//! observability is off (gated by the `gemm_kernels --check` overhead
+//! gate). When on, counters and histogram records take one short-lived
+//! mutex each; span events go to per-thread lanes (see
+//! [`super::trace`]), so threads never contend on a shared buffer.
+//!
+//! Privacy: nothing here ever receives a per-sample value. Counters
+//! and histograms record *timings and aggregate shapes* (batch sizes,
+//! stage durations) — the exported snapshot is safe to ship alongside
+//! the (already aggregate-only) metrics file.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Snapshot schema version, written into every exported snapshot.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether instrumentation is collecting. The disabled fast path every
+/// probe site branches on: one relaxed load, no fence, no call.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn collection on or off (process-global). Enabling anchors the
+/// trace clock; see [`super::trace::epoch_micros`].
+pub fn set_enabled(on: bool) {
+    if on {
+        super::trace::anchor_epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+fn counters() -> &'static Mutex<BTreeMap<&'static str, u64>> {
+    static C: OnceLock<Mutex<BTreeMap<&'static str, u64>>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn histograms() -> &'static Mutex<BTreeMap<&'static str, Histogram>> {
+    static H: OnceLock<Mutex<BTreeMap<&'static str, Histogram>>> = OnceLock::new();
+    H.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Add `n` to the named monotonic counter (no-op when disabled).
+#[inline]
+pub fn count(name: &'static str, n: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut c = counters().lock().expect("obs counter lock");
+    *c.entry(name).or_insert(0) += n;
+}
+
+/// Record one value into the named log-linear histogram (no-op when
+/// disabled). Values are typically durations in seconds.
+#[inline]
+pub fn observe(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut h = histograms().lock().expect("obs histogram lock");
+    h.entry(name).or_insert_with(Histogram::new).record(value);
+}
+
+/// Clear all counters and histograms (the lane buffers are cleared by
+/// [`super::reset`], which calls this).
+pub(super) fn clear() {
+    counters().lock().expect("obs counter lock").clear();
+    histograms().lock().expect("obs histogram lock").clear();
+}
+
+// ---------------------------------------------------------------------
+// Log-linear histogram
+// ---------------------------------------------------------------------
+
+/// Sub-buckets per power of two.
+pub const HIST_SUB: usize = 4;
+/// Smallest distinguished binary exponent; anything positive below
+/// 2^MIN (including subnormals) lands in the underflow bucket.
+pub const HIST_MIN_EXP: i32 = -64;
+/// One past the largest distinguished exponent; anything at or above
+/// 2^MAX (including +inf) lands in the overflow bucket.
+pub const HIST_MAX_EXP: i32 = 64;
+/// Bucket count: zero bucket + SUB per octave over the clamped range
+/// + one overflow bucket. Positive values below the range clamp into
+/// bucket 1 (whose lower bound is therefore 0); values at or above
+/// 2^[`HIST_MAX_EXP`] land in the last bucket.
+pub const HIST_BUCKETS: usize = 2 + (HIST_MAX_EXP - HIST_MIN_EXP) as usize * HIST_SUB;
+
+/// A log-linear-bucket histogram over non-negative f64 values: a
+/// dedicated zero bucket, then [`HIST_SUB`] linear sub-buckets per
+/// power of two between 2^[`HIST_MIN_EXP`] and 2^[`HIST_MAX_EXP`]
+/// (clamped at both ends, so 0, subnormals and +inf are all total —
+/// nothing is dropped). Negative and NaN inputs are counted as
+/// `invalid` and excluded from the statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    /// Valid (finite-or-inf, non-negative) samples recorded.
+    pub count: u64,
+    /// Σ of valid samples.
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// NaN or negative inputs (recorded nowhere else).
+    pub invalid: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            invalid: 0,
+        }
+    }
+
+    /// The bucket a value falls into (total over all f64 bit patterns).
+    pub fn bucket_index(v: f64) -> usize {
+        if v.is_nan() || v < 0.0 {
+            // callers count these as invalid; index 0 is never used for
+            // them (record() filters first) but keep the function total
+            return 0;
+        }
+        if v == 0.0 {
+            return 0;
+        }
+        // unbiased binary exponent from the bit pattern; subnormals
+        // (biased exponent 0) sit below MIN_EXP and clamp to underflow
+        let biased = ((v.to_bits() >> 52) & 0x7ff) as i32;
+        let e = biased - 1023;
+        if biased == 0 || e < HIST_MIN_EXP {
+            return 1; // below-range values clamp into the first bucket
+        }
+        if e >= HIST_MAX_EXP {
+            return HIST_BUCKETS - 1; // overflow bucket (incl. +inf)
+        }
+        // top log2(HIST_SUB) = 2 mantissa bits pick the linear sub-bucket
+        let sub = ((v.to_bits() >> 50) & 0x3) as usize;
+        1 + (e - HIST_MIN_EXP) as usize * HIST_SUB + sub
+    }
+
+    /// Inclusive-exclusive value bounds of bucket `i` (the zero bucket
+    /// returns (0, 0); the overflow bucket's upper bound is +inf).
+    pub fn bucket_bounds(i: usize) -> (f64, f64) {
+        if i == 0 {
+            return (0.0, 0.0);
+        }
+        if i >= HIST_BUCKETS - 1 {
+            return ((2f64).powi(HIST_MAX_EXP), f64::INFINITY);
+        }
+        let slot = i - 1;
+        let e = HIST_MIN_EXP + (slot / HIST_SUB) as i32;
+        let sub = slot % HIST_SUB;
+        let base = (2f64).powi(e);
+        let step = base / HIST_SUB as f64;
+        // the first regular bucket's lower bound is 0: positive values
+        // below 2^MIN_EXP (subnormals included) clamp into it
+        let lo = if i == 1 { 0.0 } else { base + sub as f64 * step };
+        (lo, base + (sub + 1) as f64 * step)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() || v < 0.0 {
+            self.invalid += 1;
+            return;
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Bucket-wise fold of `other` into `self`. Merging is commutative
+    /// and associative (counts add, min/max lattice-join), which is what
+    /// lets per-run snapshots combine in any grouping.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.invalid += other.invalid;
+    }
+
+    /// Sparse export: only occupied buckets, as `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let occupied: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::num(i as f64), Json::num(c as f64)]))
+            .collect();
+        let mut fields = vec![
+            ("sub", Json::num(HIST_SUB as f64)),
+            ("min_exp", Json::num(HIST_MIN_EXP as f64)),
+            ("max_exp", Json::num(HIST_MAX_EXP as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("invalid", Json::num(self.invalid as f64)),
+            ("buckets", Json::Arr(occupied)),
+        ];
+        if self.count > 0 {
+            // min/max only when defined — ±inf sentinels have no JSON form
+            fields.push(("min", Json::num(self.min)));
+            fields.push(("max", Json::num(self.max)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Histogram> {
+        let mut h = Histogram::new();
+        h.count = j.get("count").as_f64().unwrap_or(0.0) as u64;
+        h.sum = j.get("sum").as_f64().unwrap_or(0.0);
+        h.invalid = j.get("invalid").as_f64().unwrap_or(0.0) as u64;
+        h.min = j.get("min").as_f64().unwrap_or(f64::INFINITY);
+        h.max = j.get("max").as_f64().unwrap_or(f64::NEG_INFINITY);
+        for pair in j.get("buckets").as_arr().unwrap_or(&[]) {
+            let p = pair
+                .as_arr()
+                .ok_or_else(|| anyhow!("histogram json: bucket entry is not a pair"))?;
+            let (i, c) = match p {
+                [i, c] => (
+                    i.as_usize()
+                        .ok_or_else(|| anyhow!("histogram json: non-numeric bucket index"))?,
+                    c.as_f64()
+                        .ok_or_else(|| anyhow!("histogram json: non-numeric bucket count"))?
+                        as u64,
+                ),
+                _ => return Err(anyhow!("histogram json: bucket entry is not a pair")),
+            };
+            if i >= HIST_BUCKETS {
+                return Err(anyhow!("histogram json: bucket index {i} out of range"));
+            }
+            h.buckets[i] = c;
+        }
+        Ok(h)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot
+// ---------------------------------------------------------------------
+
+/// A versioned, mergeable export of every counter and histogram —
+/// what `--trace` runs merge into the metrics file under `"obs"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub version: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Snapshot {
+    pub fn empty() -> Snapshot {
+        Snapshot {
+            version: SNAPSHOT_VERSION,
+            counters: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        }
+    }
+
+    /// Copy the live global state.
+    pub fn capture() -> Snapshot {
+        let counters = counters()
+            .lock()
+            .expect("obs counter lock")
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect();
+        let histograms = histograms()
+            .lock()
+            .expect("obs histogram lock")
+            .iter()
+            .map(|(&k, v)| (k.to_string(), v.clone()))
+            .collect();
+        Snapshot {
+            version: SNAPSHOT_VERSION,
+            counters,
+            histograms,
+        }
+    }
+
+    /// Fold `other` into `self`: counters add, histograms merge
+    /// bucket-wise. Associative and commutative, so snapshots from
+    /// separate runs (or a resumed run's halves) combine in any order.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.histograms {
+            self.histograms
+                .entry(k.clone())
+                .or_insert_with(Histogram::new)
+                .merge(v);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .histograms
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("counters", Json::Obj(counters)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot> {
+        let version = j
+            .get("version")
+            .as_f64()
+            .ok_or_else(|| anyhow!("obs snapshot: missing version"))? as u64;
+        if version != SNAPSHOT_VERSION {
+            return Err(anyhow!(
+                "obs snapshot: version {version} unsupported (reader expects {SNAPSHOT_VERSION})"
+            ));
+        }
+        let mut out = Snapshot::empty();
+        if let Some(c) = j.get("counters").as_obj() {
+            for (k, v) in c {
+                out.counters.insert(
+                    k.clone(),
+                    v.as_f64()
+                        .ok_or_else(|| anyhow!("obs snapshot: counter '{k}' is not numeric"))?
+                        as u64,
+                );
+            }
+        }
+        if let Some(h) = j.get("histograms").as_obj() {
+            for (k, v) in h {
+                out.histograms.insert(k.clone(), Histogram::from_json(v)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_edge_cases_are_total() {
+        let mut h = Histogram::new();
+        h.record(0.0); // zero bucket
+        h.record(1e-320); // subnormal → underflow bucket
+        h.record(f64::MIN_POSITIVE / 4.0); // subnormal
+        h.record(1e300); // huge → overflow bucket
+        h.record(f64::INFINITY); // overflow bucket
+        h.record(1.0);
+        h.record(f64::NAN); // invalid
+        h.record(-3.0); // invalid
+        assert_eq!(h.count, 6);
+        assert_eq!(h.invalid, 2);
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(1e-320), 1);
+        assert_eq!(
+            Histogram::bucket_index(f64::INFINITY),
+            HIST_BUCKETS - 1
+        );
+        assert_eq!(Histogram::bucket_index(1e300), HIST_BUCKETS - 1);
+        // the bucket totals equal the valid count
+        let total: u64 = (0..HIST_BUCKETS)
+            .map(|i| h.buckets[i])
+            .sum();
+        assert_eq!(total, h.count);
+        assert_eq!(h.min, 0.0);
+        assert_eq!(h.max, f64::INFINITY);
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_bounding() {
+        // indices must be non-decreasing over increasing values, and
+        // every in-range value must fall inside its bucket's bounds
+        let mut prev = 0;
+        let mut v = (2f64).powi(HIST_MIN_EXP) * 1.01;
+        while v < (2f64).powi(HIST_MAX_EXP - 1) {
+            let i = Histogram::bucket_index(v);
+            assert!(i >= prev, "bucket index decreased at {v}");
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert!(lo <= v && v < hi, "value {v} outside bucket {i} [{lo}, {hi})");
+            prev = i;
+            v *= 1.37;
+        }
+    }
+
+    #[test]
+    fn histogram_same_octave_sub_buckets_split() {
+        // 1.0, 1.3, 1.6, 1.9 land in the four sub-buckets of octave 0
+        let idx: Vec<usize> = [1.0, 1.3, 1.6, 1.9]
+            .iter()
+            .map(|&v| Histogram::bucket_index(v))
+            .collect();
+        assert_eq!(idx[1], idx[0] + 1);
+        assert_eq!(idx[2], idx[0] + 2);
+        assert_eq!(idx[3], idx[0] + 3);
+        assert_eq!(Histogram::bucket_index(2.0), idx[0] + HIST_SUB);
+    }
+
+    #[test]
+    fn histogram_json_round_trip() {
+        let mut h = Histogram::new();
+        for v in [0.0, 0.25, 1.5, 7.0, 1e300, f64::NAN] {
+            h.record(v);
+        }
+        let back = Histogram::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, h);
+        // an empty histogram round-trips without min/max fields
+        let e = Histogram::new();
+        let back = Histogram::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    fn sample_snapshot(seed: u64) -> Snapshot {
+        let mut s = Snapshot::empty();
+        s.counters.insert("a".into(), seed);
+        s.counters.insert(format!("k{seed}"), 2 * seed);
+        let mut h = Histogram::new();
+        // powers of two: f64 sums are exact, so merge order cannot
+        // perturb a single bit and equality below is honest
+        h.record(0.5 * seed as f64);
+        h.record(2.0);
+        h.record(0.0);
+        s.histograms.insert("h".into(), h);
+        let mut h2 = Histogram::new();
+        h2.record(4.0 * seed as f64);
+        s.histograms.insert(format!("h{seed}"), h2);
+        s
+    }
+
+    #[test]
+    fn snapshot_merge_is_associative() {
+        let (a, b, c) = (sample_snapshot(1), sample_snapshot(2), sample_snapshot(4));
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left.to_json().to_string(), right.to_json().to_string());
+        // and commutative
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn snapshot_json_round_trip_and_version_gate() {
+        let s = sample_snapshot(3);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(Snapshot::from_json(&parsed).unwrap(), s);
+        let future = r#"{"version": 2, "counters": {}, "histograms": {}}"#;
+        assert!(Snapshot::from_json(&Json::parse(future).unwrap()).is_err());
+    }
+
+    #[test]
+    fn disabled_probes_are_no_ops() {
+        // counters/histograms only collect while enabled; the default
+        // state is off, so these must leave no trace even if another
+        // test enabled and reset collection earlier
+        if enabled() {
+            return; // a concurrent test owns the global flag; skip
+        }
+        count("core_test_disabled_counter", 7);
+        observe("core_test_disabled_hist", 1.0);
+        let snap = Snapshot::capture();
+        assert!(!snap.counters.contains_key("core_test_disabled_counter"));
+        assert!(!snap.histograms.contains_key("core_test_disabled_hist"));
+    }
+}

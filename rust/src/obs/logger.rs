@@ -1,0 +1,101 @@
+//! Structured progress logging for `train` and `serve`.
+//!
+//! Every user-facing progress line goes through [`emit`] (or
+//! [`emit_job`] for serve jobs). In the default `text` format the
+//! message prints verbatim — byte-for-byte what the bare `println!`
+//! used to produce, so shell pipelines and CI greps keep working. With
+//! `--log-format json` each line becomes a single-line JSON object
+//! (`ts_us`, `event`, optional `job`, `msg`) that a collector can
+//! ingest without parsing free text.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::json::Json;
+
+/// Output format for progress lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogFormat {
+    /// Plain lines, identical to the historical `println!` output.
+    Text,
+    /// One JSON object per line.
+    Json,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Option<LogFormat> {
+        match s {
+            "text" => Some(LogFormat::Text),
+            "json" => Some(LogFormat::Json),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LogFormat::Text => "text",
+            LogFormat::Json => "json",
+        }
+    }
+}
+
+static FORMAT: AtomicU8 = AtomicU8::new(0); // 0 = text, 1 = json
+
+/// Set the process-wide log format (from `--log-format`).
+pub fn set_format(f: LogFormat) {
+    FORMAT.store(matches!(f, LogFormat::Json) as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide log format.
+pub fn format() -> LogFormat {
+    if FORMAT.load(Ordering::Relaxed) == 0 {
+        LogFormat::Text
+    } else {
+        LogFormat::Json
+    }
+}
+
+fn emit_inner(event: &str, job: Option<usize>, msg: &str) {
+    match format() {
+        LogFormat::Text => println!("{msg}"),
+        LogFormat::Json => {
+            // multi-line messages (tables) become one object per line so
+            // stdout stays strictly line-delimited JSON
+            for line in msg.split('\n') {
+                let mut fields = vec![
+                    ("ts_us", Json::num(super::trace::epoch_micros() as f64)),
+                    ("event", Json::str(event)),
+                ];
+                if let Some(j) = job {
+                    fields.push(("job", Json::num(j as f64)));
+                }
+                fields.push(("msg", Json::str(line)));
+                println!("{}", Json::obj(fields));
+            }
+        }
+    }
+}
+
+/// Emit one progress line. `event` is a stable machine-readable tag
+/// (`"epoch"`, `"metrics"`, ...); `msg` is the human-readable line.
+pub fn emit(event: &str, msg: &str) {
+    emit_inner(event, None, msg);
+}
+
+/// Emit one progress line tagged with a serve job index.
+pub fn emit_job(job: usize, event: &str, msg: &str) {
+    emit_inner(event, Some(job), msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_format_parses_and_round_trips() {
+        assert_eq!(LogFormat::parse("text"), Some(LogFormat::Text));
+        assert_eq!(LogFormat::parse("json"), Some(LogFormat::Json));
+        assert_eq!(LogFormat::parse("yaml"), None);
+        assert_eq!(LogFormat::Text.as_str(), "text");
+        assert_eq!(LogFormat::Json.as_str(), "json");
+    }
+}

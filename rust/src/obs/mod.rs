@@ -1,0 +1,102 @@
+//! Observability: structured tracing, metrics, and live status.
+//!
+//! The subsystem has one switch — [`set_enabled`] — and four parts:
+//!
+//! - [`core`]: counters and log-linear histograms behind a global
+//!   enabled flag. Every probe site in the hot path costs exactly one
+//!   relaxed atomic load plus a predictable branch when off.
+//! - [`trace`]: RAII [`span`] timers collected into per-thread lanes
+//!   and exported as chrome://tracing trace-event JSON (`--trace FILE`
+//!   on `train`/`serve`).
+//! - [`logger`]: the structured progress logger behind `--log-format
+//!   text|json`; text mode is byte-identical to the historical
+//!   `println!` lines.
+//! - [`status`]: atomically rewritten per-job `status.json` files that
+//!   make a running `opacus serve` observable from outside the process.
+//!
+//! Two invariants hold everywhere instrumentation touches the trainer:
+//!
+//! 1. **Privacy-respecting** — spans, counters, and histograms record
+//!    *where time went* and aggregate magnitudes only; no per-sample
+//!    value ever reaches an exporter.
+//! 2. **Determinism-preserving** — instrumentation only reads clocks.
+//!    It never touches RNG state or reorders arithmetic, so ε and the
+//!    final parameters are byte-identical with tracing on or off
+//!    (pinned by `tests/obs.rs`).
+//!
+//! ```no_run
+//! opacus_rs::obs::set_enabled(true);
+//! {
+//!     let _step = opacus_rs::obs::span("trainer", "step");
+//!     // ... work ...
+//! } // span recorded on drop
+//! opacus_rs::obs::trace::export(std::path::Path::new("trace.json")).unwrap();
+//! ```
+
+pub mod core;
+pub mod logger;
+pub mod status;
+pub mod trace;
+
+pub use core::{
+    count, enabled, observe, set_enabled, Histogram, Snapshot, HIST_BUCKETS, HIST_MAX_EXP,
+    HIST_MIN_EXP, HIST_SUB, SNAPSHOT_VERSION,
+};
+pub use logger::LogFormat;
+pub use status::StatusReport;
+pub use trace::{span, span_dyn, Span};
+
+/// Process-wide observability configuration, as chosen on the command
+/// line. Stored so `opacus inspect` and exporters can report it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Span/counter/histogram collection is on.
+    pub tracing: bool,
+    /// Where the chrome://tracing export goes, if requested.
+    pub trace_path: Option<std::path::PathBuf>,
+    /// Progress-line format.
+    pub log_format: LogFormat,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            tracing: false,
+            trace_path: None,
+            log_format: LogFormat::Text,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Make this the process-wide configuration: flips the collection
+    /// flag and the logger format.
+    pub fn install(&self) {
+        logger::set_format(self.log_format);
+        set_enabled(self.tracing);
+    }
+}
+
+static CURRENT: std::sync::Mutex<Option<ObsConfig>> = std::sync::Mutex::new(None);
+
+/// Record the installed configuration (for `opacus inspect` and tests).
+pub fn set_config(cfg: ObsConfig) {
+    cfg.install();
+    *CURRENT.lock().expect("obs config lock") = Some(cfg);
+}
+
+/// The installed configuration, defaulting to everything-off.
+pub fn config() -> ObsConfig {
+    CURRENT
+        .lock()
+        .expect("obs config lock")
+        .clone()
+        .unwrap_or_default()
+}
+
+/// Drop all collected spans, counters, and histograms (the enabled
+/// flag and lane identities survive). Used between runs in tests.
+pub fn reset() {
+    core::clear();
+    trace::clear();
+}

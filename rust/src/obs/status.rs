@@ -1,0 +1,160 @@
+//! Live per-job status files for `opacus serve`.
+//!
+//! The service rewrites `status_job{N}.json` atomically at every
+//! quantum boundary, so an operator (or the CI validator) can watch a
+//! running job from outside the process with nothing fancier than
+//! `cat`. The ε field is produced by the same shortest-round-trip f64
+//! writer as the metrics ledger, so it matches the engine's reported ε
+//! bit for bit.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::fsio::write_atomic;
+use crate::util::json::Json;
+
+/// Identifies the producer of a status file.
+pub const STATUS_FORMAT: &str = "opacus-rs/status";
+/// Status schema version (see `scripts/validate_obs.py`).
+pub const STATUS_VERSION: u64 = 1;
+
+/// One job's externally visible state at a quantum boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusReport {
+    pub job: usize,
+    pub task: String,
+    /// `running` | `completed` | `budget-exhausted` | `interrupted`
+    pub state: String,
+    pub step: u64,
+    pub epoch: usize,
+    pub steps_per_sec: f64,
+    /// Privacy spent so far (ε at the job's δ), bit-exact vs the engine.
+    pub epsilon: f64,
+    pub epsilon_budget: f64,
+    /// Fraction of the ε budget consumed, clamped to [0, 1].
+    pub budget_burn: f64,
+    pub sigma: f64,
+    /// Aggregate pipeline stage occupancy (compute seconds so far).
+    pub compute_secs: f64,
+    /// Aggregate noise/reduce stage seconds so far.
+    pub reduce_secs: f64,
+}
+
+impl StatusReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STATUS_FORMAT)),
+            ("version", Json::num(STATUS_VERSION as f64)),
+            ("job", Json::num(self.job as f64)),
+            ("task", Json::str(&self.task)),
+            ("state", Json::str(&self.state)),
+            ("step", Json::num(self.step as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("epsilon_budget", Json::num(self.epsilon_budget)),
+            ("budget_burn", Json::num(self.budget_burn)),
+            ("sigma", Json::num(self.sigma)),
+            ("compute_secs", Json::num(self.compute_secs)),
+            ("reduce_secs", Json::num(self.reduce_secs)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<StatusReport> {
+        let version = j
+            .get("version")
+            .as_f64()
+            .context("status: missing version")? as u64;
+        if version != STATUS_VERSION {
+            anyhow::bail!("status: unsupported version {version}");
+        }
+        let f = |k: &str| -> Result<f64> {
+            j.get(k).as_f64().with_context(|| format!("status: missing {k}"))
+        };
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .as_str()
+                .with_context(|| format!("status: missing {k}"))?
+                .to_string())
+        };
+        Ok(StatusReport {
+            job: f("job")? as usize,
+            task: s("task")?,
+            state: s("state")?,
+            step: f("step")? as u64,
+            epoch: f("epoch")? as usize,
+            steps_per_sec: f("steps_per_sec")?,
+            epsilon: f("epsilon")?,
+            epsilon_budget: f("epsilon_budget")?,
+            budget_burn: f("budget_burn")?,
+            sigma: f("sigma")?,
+            compute_secs: f("compute_secs")?,
+            reduce_secs: f("reduce_secs")?,
+        })
+    }
+
+    /// Atomically rewrite `path` (tmp + rename) — a reader never sees a
+    /// torn file, only the previous or the new quantum's state.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        write_atomic(path, self.to_json().to_string().as_bytes())
+            .with_context(|| format!("writing status file {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatusReport {
+        StatusReport {
+            job: 2,
+            task: "mnist".into(),
+            state: "running".into(),
+            step: 144,
+            epoch: 3,
+            steps_per_sec: 17.25,
+            epsilon: 1.234_567_890_123_456_7,
+            epsilon_budget: 8.0,
+            budget_burn: 1.234_567_890_123_456_7 / 8.0,
+            sigma: 1.1,
+            compute_secs: 12.5,
+            reduce_secs: 0.75,
+        }
+    }
+
+    #[test]
+    fn status_json_round_trips_bitwise() {
+        let s = sample();
+        let parsed =
+            StatusReport::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, s);
+        // ε must survive serialization with its bits intact
+        assert_eq!(parsed.epsilon.to_bits(), s.epsilon.to_bits());
+    }
+
+    #[test]
+    fn status_write_is_atomic_and_parseable() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("opacus_obs_status_test_{}.json", std::process::id()));
+        sample().write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("format").as_str(), Some(STATUS_FORMAT));
+        assert!(StatusReport::from_json(&doc).is_ok());
+        // no stray tmp file left behind
+        assert!(!dir
+            .join(format!("opacus_obs_status_test_{}.json.tmp", std::process::id()))
+            .exists());
+    }
+
+    #[test]
+    fn status_version_gate_rejects_future() {
+        let mut j = sample().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("version".into(), Json::num(99.0));
+        }
+        assert!(StatusReport::from_json(&j).is_err());
+    }
+}

@@ -279,6 +279,7 @@ pub struct PrivateBuilder {
     target: Option<EpsilonTarget>,
     pipeline: Option<usize>,
     gemm_threads: Option<usize>,
+    tracing: bool,
 }
 
 impl Default for PrivateBuilder {
@@ -300,6 +301,7 @@ impl Default for PrivateBuilder {
             target: None,
             pipeline: None,
             gemm_threads: None,
+            tracing: false,
         }
     }
 }
@@ -443,6 +445,17 @@ impl PrivateBuilder {
         self
     }
 
+    /// Turn on observability collection ([`crate::obs`]) at build time:
+    /// span timers, counters, and histograms across the step pipeline
+    /// (the `--trace` CLI flag calls this). Collection is process-global
+    /// and determinism-preserving — instrumentation only reads clocks,
+    /// so ε and the trained parameters are byte-identical either way.
+    /// The default (no call) leaves the process-global flag untouched.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
     /// Calibrate σ at build time so training `epochs` epochs spends at
     /// most (ε, δ) — the `make_private_with_epsilon` path.
     pub fn target_epsilon(mut self, epsilon: f64, delta: f64, epochs: usize) -> Self {
@@ -550,6 +563,9 @@ impl PrivateBuilder {
             self.backend
         };
         let sys = sys.with_backend(requested)?;
+        if self.tracing {
+            crate::obs::set_enabled(true);
+        }
         let engine = PrivacyEngine::try_new(self.engine_config())?;
         let plan = self.plan(sys.train.len())?;
         // pin the intra-op GEMM thread override after plan() validated it

@@ -205,6 +205,7 @@ impl MultiHeadAttention {
         ctx: &mut [f32],
         lse: &mut [f32],
     ) {
+        let _s = crate::obs::span("attn", "fused_fwd");
         let d = self.dim;
         let hd = self.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();
@@ -292,6 +293,7 @@ impl MultiHeadAttention {
         dk_s: &mut [f32],
         dv_s: &mut [f32],
     ) {
+        let _s = crate::obs::span("attn", "fused_bwd");
         let d = self.dim;
         let hd = self.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();

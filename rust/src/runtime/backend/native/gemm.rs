@@ -62,6 +62,15 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::obs;
+
+/// Calls below this many multiply-adds don't open a driver-level trace
+/// span — small GEMMs are numerous enough to flood a trace with
+/// sub-microsecond events (their time still lands in the enclosing
+/// layer span and the pack/kernel counters).
+const SPAN_MIN_MACS: usize = 1 << 20;
 
 /// Register-tile rows: each micro-kernel call produces an `MR×NR` block
 /// of C held entirely in registers.
@@ -588,6 +597,12 @@ fn gemm_driver(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    // span only the calls big enough to be individually visible
+    let _span = if m.saturating_mul(n).saturating_mul(k) >= SPAN_MIN_MACS {
+        Some(obs::span("gemm", "gemm"))
+    } else {
+        None
+    };
     if a_trans {
         debug_assert!(lda >= m && a.len() >= (k - 1) * lda + m, "gemm: A out of bounds");
     } else {
@@ -661,15 +676,30 @@ unsafe fn gemm_block(
     ldc: usize,
 ) {
     let bs = block_sizes();
+    // one enabled() check per call; pack/kernel time accumulates in
+    // locals and flushes to the global counters once at the end, so the
+    // blocked loop nest itself carries no per-iteration probe cost
+    let timing = obs::enabled();
+    let mut pack_ns: u64 = 0;
+    let mut kernel_ns: u64 = 0;
     with_scratch(|scratch| {
         for jc in (0..n).step_by(bs.nc) {
             let ncb = bs.nc.min(n - jc);
             for pc in (0..k).step_by(bs.kc) {
                 let kcb = bs.kc.min(k - pc);
+                let t0 = if timing { Some(Instant::now()) } else { None };
                 pack_b(tile, &mut scratch.bpack, b, ldb, b_trans, pc, kcb, jc, ncb);
+                if let Some(t) = t0 {
+                    pack_ns += t.elapsed().as_nanos() as u64;
+                }
                 for ic in (0..m).step_by(bs.mc) {
                     let mcb = bs.mc.min(m - ic);
+                    let t0 = if timing { Some(Instant::now()) } else { None };
                     pack_a(tile, &mut scratch.apack, a, lda, a_trans, ic, mcb, pc, kcb);
+                    if let Some(t) = t0 {
+                        pack_ns += t.elapsed().as_nanos() as u64;
+                    }
+                    let t0 = if timing { Some(Instant::now()) } else { None };
                     // SAFETY: (ic, jc) blocks stay inside C[0..m, 0..n],
                     // which the caller guarantees is exclusively ours.
                     unsafe {
@@ -686,10 +716,18 @@ unsafe fn gemm_block(
                             ldc,
                         );
                     }
+                    if let Some(t) = t0 {
+                        kernel_ns += t.elapsed().as_nanos() as u64;
+                    }
                 }
             }
         }
     });
+    if timing {
+        obs::count("gemm.blocks", 1);
+        obs::count("gemm.pack_ns", pack_ns);
+        obs::count("gemm.kernel_ns", kernel_ns);
+    }
 }
 
 /// Drive the register tile over one packed `[mcb × kcb] × [kcb × ncb]`

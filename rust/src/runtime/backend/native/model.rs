@@ -14,10 +14,22 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs;
 use crate::rng::pcg::Xoshiro256pp;
 use crate::runtime::tensor::HostTensor;
 
 use super::layers::{GradSampleLayer, GradSink};
+
+/// The observability name of an op (layer kind or structural-op tag) —
+/// one trace span per op per direction uses these.
+fn op_obs_name(op: &Op) -> &'static str {
+    match op {
+        Op::Layer(l) => l.kind(),
+        Op::Relu => "relu",
+        Op::Flatten => "flatten",
+        Op::MeanPool => "meanpool",
+    }
+}
 
 /// One stage of the model: a parameterized layer or a structural op.
 pub enum Op {
@@ -178,6 +190,7 @@ impl NativeModel {
         trace.push(x.clone());
         for (op, span) in self.ops.iter().zip(&self.param_spans) {
             let cur = trace.last().expect("trace is never empty");
+            let _s = obs::span("fwd", op_obs_name(op));
             let next = match (op, span) {
                 (Op::Layer(l), Some((off, len))) => l.forward(&params[*off..*off + *len], cur)?,
                 (Op::Relu, _) => relu_forward(cur)?,
@@ -224,11 +237,15 @@ impl NativeModel {
         }
         let trace = self.forward_trace(params, x)?;
         let logits = trace.last().expect("trace is never empty");
-        let (losses, dlogits) = softmax_ce_backward(logits, y, mask, self.num_classes)?;
+        let (losses, dlogits) = {
+            let _s = obs::span("bwd", "softmax_ce");
+            softmax_ce_backward(logits, y, mask, self.num_classes)?
+        };
 
         let mut dy = dlogits;
         for (i, op) in self.ops.iter().enumerate().rev() {
             let op_in = &trace[i];
+            let _s = obs::span("bwd", op_obs_name(op));
             dy = match (op, &self.param_spans[i]) {
                 (Op::Layer(l), Some((off, len))) => {
                     let mut sink = GradSink::new(buf, stride, *off, *len);
@@ -300,6 +317,7 @@ impl NativeModel {
         clip: f32,
     ) -> Result<DpGradPartial> {
         let ps = self.per_sample_grads(params, x, y, mask)?;
+        let _s = obs::span("clip", "norm+clip+sum");
         let b = mask.len();
         let p = ps.num_params;
         let mut gsum = vec![0f64; p];

@@ -45,6 +45,7 @@ pub(crate) fn noisy_sgd_update(
     noise: &[f32],
     hp: HyperParams,
 ) -> Vec<f32> {
+    let _s = crate::obs::span("update", "noisy_sgd");
     let scale = hp.sigma * hp.clip;
     let inv_denom = 1.0 / hp.denom;
     params
@@ -63,6 +64,7 @@ pub(crate) fn noisy_sgd_update_f64(
     noise: &[f32],
     hp: HyperParams,
 ) -> Vec<f32> {
+    let _s = crate::obs::span("update", "noisy_sgd_f64");
     let scale = hp.sigma as f64 * hp.clip as f64;
     let inv_denom = 1.0 / hp.denom as f64;
     let lr = hp.lr as f64;

@@ -22,6 +22,8 @@ use std::path::PathBuf;
 use super::checkpoint::{checkpoint_exists, TrainerCheckpoint};
 use super::job::JobSpec;
 use super::shutdown;
+use crate::obs;
+use crate::obs::logger;
 use crate::trainer::PrivateTrainer;
 
 /// Scheduler configuration (CLI flags of `opacus serve`).
@@ -128,13 +130,17 @@ impl Service {
                 .apply(&mut trainer)
                 .with_context(|| format!("resuming job '{}' from {dir:?}", spec.name))?;
             resumed = true;
-            println!(
-                "job {}: resumed at step {} (epoch {}, ε = {:.4} @ δ = {})",
-                spec.name,
-                trainer.global_step(),
-                trainer.epoch(),
-                trainer.epsilon(spec.delta)?,
-                spec.delta
+            logger::emit_job(
+                self.jobs.len(),
+                "resume",
+                &format!(
+                    "job {}: resumed at step {} (epoch {}, ε = {:.4} @ δ = {})",
+                    spec.name,
+                    trainer.global_step(),
+                    trainer.epoch(),
+                    trainer.epsilon(spec.delta)?,
+                    spec.delta
+                ),
             );
         }
         self.jobs.push(JobState {
@@ -153,6 +159,49 @@ impl Service {
             .with_context(|| format!("checkpointing job '{}'", job.spec.name))
     }
 
+    /// The live status file of job `idx`: `<out_dir>/<name>.status.json`
+    /// (next to, not inside, the checkpoint directory — checkpoint saves
+    /// replace that directory wholesale). Atomically rewritten at every
+    /// quantum boundary, so `cat` from outside the process always sees a
+    /// complete, current report. The ε field goes through the same
+    /// shortest-round-trip f64 writer as the engine's ledger, so it
+    /// matches the engine's reported ε bit for bit.
+    fn status_path(&self, idx: usize) -> PathBuf {
+        self.cfg
+            .out_dir
+            .join(format!("{}.status.json", self.jobs[idx].spec.name))
+    }
+
+    fn write_status(&self, idx: usize) -> Result<()> {
+        let job = &self.jobs[idx];
+        let t = &job.trainer;
+        let p = t.metrics.pipeline.unwrap_or_default();
+        let epsilon = t.epsilon(job.spec.delta)?;
+        // 0.0 = unbudgeted (ε targets are strictly positive)
+        let budget = job.spec.epsilon.unwrap_or(0.0);
+        let burn = if budget > 0.0 {
+            (epsilon / budget).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        obs::StatusReport {
+            job: idx,
+            task: job.spec.task.clone(),
+            state: job.status.as_str().to_string(),
+            step: t.global_step(),
+            epoch: t.epoch(),
+            steps_per_sec: p.steps_per_sec(),
+            epsilon,
+            epsilon_budget: budget,
+            budget_burn: burn,
+            sigma: t.current_sigma(),
+            compute_secs: p.compute_busy_secs,
+            reduce_secs: p.reduce_busy_secs,
+        }
+        .write(&self.status_path(idx))
+        .with_context(|| format!("writing status for job '{}'", job.spec.name))
+    }
+
     /// Whether a shutdown condition holds (signal flag or the
     /// `kill_after` step-count hook).
     fn shutdown_due(&self) -> bool {
@@ -166,6 +215,14 @@ impl Service {
     /// One scheduling turn for job `idx`. Returns the number of steps
     /// run (0 when the job reached a terminal state this turn).
     fn turn(&mut self, idx: usize) -> Result<u64> {
+        let _s = obs::span_dyn(
+            "serve",
+            if obs::enabled() {
+                format!("turn.{}", self.jobs[idx].spec.name)
+            } else {
+                String::new()
+            },
+        );
         let quantum = self.cfg.quantum;
         let job = &mut self.jobs[idx];
         let mut k = quantum;
@@ -176,7 +233,12 @@ impl Service {
                 let (name, eps) = (job.spec.name.clone(), job.trainer.epsilon(job.spec.delta)?);
                 job.status = JobStatus::Completed;
                 self.save_checkpoint(idx)?;
-                println!("job {name}: completed (epoch cap), ε = {eps:.4}");
+                self.write_status(idx)?;
+                logger::emit_job(
+                    idx,
+                    "completed",
+                    &format!("job {name}: completed (epoch cap), ε = {eps:.4}"),
+                );
                 return Ok(0);
             }
             if job.trainer.epoch() + 1 == me {
@@ -204,10 +266,15 @@ impl Service {
                 let steps = job.trainer.global_step();
                 job.status = JobStatus::Exhausted;
                 self.save_checkpoint(idx)?;
-                println!(
-                    "job {name}: budget exhausted after {steps} steps — \
-                     ε = {eps:.4} of target {target} @ δ = {} (final checkpoint written)",
-                    self.jobs[idx].spec.delta
+                self.write_status(idx)?;
+                logger::emit_job(
+                    idx,
+                    "exhausted",
+                    &format!(
+                        "job {name}: budget exhausted after {steps} steps — \
+                         ε = {eps:.4} of target {target} @ δ = {} (final checkpoint written)",
+                        self.jobs[idx].spec.delta
+                    ),
                 );
                 return Ok(0);
             }
@@ -216,6 +283,7 @@ impl Service {
         let ran = job.trainer.train_steps(k)? as u64;
         self.total_steps += ran;
         self.save_checkpoint(idx)?;
+        self.write_status(idx)?;
         Ok(ran)
     }
 
@@ -242,11 +310,17 @@ impl Service {
                     self.save_checkpoint(idx)?;
                     let job = &mut self.jobs[idx];
                     job.status = JobStatus::Interrupted;
-                    println!(
-                        "job {}: interrupted at step {} — checkpoint written, \
-                         resume with --resume",
-                        job.spec.name,
-                        job.trainer.global_step()
+                    self.write_status(idx)?;
+                    let job = &self.jobs[idx];
+                    logger::emit_job(
+                        idx,
+                        "interrupted",
+                        &format!(
+                            "job {}: interrupted at step {} — checkpoint written, \
+                             resume with --resume",
+                            job.spec.name,
+                            job.trainer.global_step()
+                        ),
                     );
                 }
             }

@@ -236,9 +236,19 @@ impl MetricsLog {
         Ok(out)
     }
 
+    /// Write the ledger atomically (tmp + rename, the checkpoint
+    /// discipline) — a SIGTERM mid-flush leaves the previous complete
+    /// file, never a torn prefix. When observability is collecting, the
+    /// live counter/histogram snapshot is merged in under `"obs"`
+    /// (`from_json` ignores unknown keys, so old readers still parse).
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())?;
-        Ok(())
+        let mut doc = self.to_json();
+        if crate::obs::enabled() {
+            if let Json::Obj(map) = &mut doc {
+                map.insert("obs".to_string(), crate::obs::Snapshot::capture().to_json());
+            }
+        }
+        crate::util::fsio::write_atomic(path, doc.to_string().as_bytes())
     }
 }
 
@@ -352,6 +362,28 @@ mod tests {
         m.save(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.contains("records"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn save_is_atomic_and_always_parses() {
+        // overwrite an existing file and re-parse: the rename discipline
+        // means a reader can never observe a torn prefix, and the saved
+        // bytes must always round-trip through from_json
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("opacus_rs_metrics_atomic_{}.json", std::process::id()));
+        let mut m = MetricsLog::new();
+        for i in 0..32 {
+            m.push(rec(i, 0, i as f64));
+            m.save(&p).unwrap();
+            let parsed = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+            let back = MetricsLog::from_json(&parsed).unwrap();
+            assert_eq!(back.records.len(), (i + 1) as usize);
+        }
+        // no stray tmp file left behind
+        assert!(!dir
+            .join(format!("opacus_rs_metrics_atomic_{}.json.tmp", std::process::id()))
+            .exists());
         let _ = std::fs::remove_file(&p);
     }
 }

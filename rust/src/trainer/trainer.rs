@@ -44,6 +44,7 @@ use crate::data::{
     prefetch_batch, Dataset, LogicalBatch, PoissonLoader, PrefetchedBatch, UniformLoader,
 };
 use crate::distributed::NoiseDivision;
+use crate::obs;
 use crate::privacy::engine::{PrivacyEngine, PrivacyParams};
 use crate::privacy::scheduler::NoiseScheduler;
 use crate::runtime::backend::BackendKind;
@@ -126,6 +127,7 @@ impl StepCtx<'_> {
     /// path: sequential and pipelined runs differ solely in where the
     /// gather happened, which is what makes them byte-identical.
     fn exec(&mut self, pre: PrefetchedBatch) -> Result<(f64, f64)> {
+        let _step_span = obs::span("trainer", "step");
         let PrefetchedBatch { lb, chunks, .. } = pre;
         let (loss, snorm, logical, compute_secs, reduce_secs) = match self.mode {
             Mode::Fused => {
@@ -139,11 +141,15 @@ impl StepCtx<'_> {
                 // skip the O(P) generation (the buffer is still passed
                 // for its length check; stale contents are never read)
                 let t = Instant::now();
-                if self.pp.noise_division == NoiseDivision::Root {
-                    self.engine.sample_noise(self.noise_buf);
+                {
+                    let _s = obs::span("trainer", "noise");
+                    if self.pp.noise_division == NoiseDivision::Root {
+                        self.engine.sample_noise(self.noise_buf);
+                    }
                 }
                 let reduce_secs = t.elapsed().as_secs_f64();
                 let t = Instant::now();
+                let _s = obs::span("trainer", "dp_step");
                 let out = step.dp_step(
                     self.params,
                     batch.x,
@@ -152,6 +158,7 @@ impl StepCtx<'_> {
                     self.noise_buf,
                     self.hp,
                 )?;
+                drop(_s);
                 let compute_secs = t.elapsed().as_secs_f64();
                 *self.params = out.params;
                 (
@@ -177,15 +184,18 @@ impl StepCtx<'_> {
                 }
                 let mut opt = DpOptimizer::with_clipping(self.num_params, self.pp.clipping);
                 let t = Instant::now();
-                for batch in chunks {
-                    let out = accum.run(
-                        self.params,
-                        batch.x,
-                        &batch.y,
-                        &batch.mask,
-                        self.hp.clip,
-                    )?;
-                    opt.add(&out, batch.logical_size);
+                {
+                    let _s = obs::span("trainer", "accum");
+                    for batch in chunks {
+                        let out = accum.run(
+                            self.params,
+                            batch.x,
+                            &batch.y,
+                            &batch.mask,
+                            self.hp.clip,
+                        )?;
+                        opt.add(&out, batch.logical_size);
+                    }
                 }
                 let compute_secs = t.elapsed().as_secs_f64();
                 let loss = opt.mean_loss();
@@ -194,10 +204,12 @@ impl StepCtx<'_> {
                 let gsum = opt.take();
                 // see the fused branch: no root draw under PerWorker
                 let t = Instant::now();
+                let _s = obs::span("trainer", "noise+apply");
                 if self.pp.noise_division == NoiseDivision::Root {
                     self.engine.sample_noise(self.noise_buf);
                 }
                 let new_params = apply.run(self.params, &gsum, self.noise_buf, self.hp)?;
+                drop(_s);
                 let reduce_secs = t.elapsed().as_secs_f64();
                 *self.params = new_params;
                 (loss, snorm, samples, compute_secs, reduce_secs)
@@ -484,36 +496,52 @@ impl PrivateTrainer {
         match depth {
             None => {
                 for lb in batches {
-                    let pre = prefetch_batch(train, lb, chunk_size, padded)?;
+                    let pre = {
+                        let _s = obs::span("pipeline", "prefetch");
+                        prefetch_batch(train, lb, chunk_size, padded)?
+                    };
                     prefetch_busy += pre.gather_secs;
+                    obs::observe("pipeline.prefetch_secs", pre.gather_secs);
                     let (c, r) = ctx.exec(pre)?;
                     compute_busy += c;
                     reduce_busy += r;
+                    obs::observe("pipeline.compute_secs", c);
+                    obs::observe("pipeline.reduce_secs", r);
                 }
             }
             Some(depth) => {
                 let (tx, rx) = mpsc::sync_channel::<Result<PrefetchedBatch>>(depth);
                 std::thread::scope(|scope| -> Result<()> {
-                    let producer = scope.spawn(move || {
-                        for lb in batches {
-                            let out = prefetch_batch(train, lb, chunk_size, padded);
-                            let failed = out.is_err();
-                            // a closed channel means the consumer bailed:
-                            // stop prefetching and let it report its error
-                            if tx.send(out).is_err() || failed {
-                                break;
+                    // named so the trace viewer shows the prefetch stage
+                    // as its own lane
+                    let producer = std::thread::Builder::new()
+                        .name("opacus-prefetch".to_string())
+                        .spawn_scoped(scope, move || {
+                            for lb in batches {
+                                let _s = obs::span("pipeline", "prefetch");
+                                let out = prefetch_batch(train, lb, chunk_size, padded);
+                                drop(_s);
+                                let failed = out.is_err();
+                                // a closed channel means the consumer bailed:
+                                // stop prefetching and let it report its error
+                                if tx.send(out).is_err() || failed {
+                                    break;
+                                }
                             }
-                        }
-                    });
+                        })
+                        .expect("spawn prefetch thread");
                     let mut result = Ok(());
                     for _ in 0..n {
                         match rx.recv() {
                             Ok(Ok(pre)) => {
                                 prefetch_busy += pre.gather_secs;
+                                obs::observe("pipeline.prefetch_secs", pre.gather_secs);
                                 match ctx.exec(pre) {
                                     Ok((c, r)) => {
                                         compute_busy += c;
                                         reduce_busy += r;
+                                        obs::observe("pipeline.compute_secs", c);
+                                        obs::observe("pipeline.reduce_secs", r);
                                     }
                                     Err(e) => {
                                         result = Err(e);

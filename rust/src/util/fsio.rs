@@ -1,0 +1,47 @@
+//! Atomic file writes.
+//!
+//! The same tmp-then-rename discipline `serve/checkpoint.rs` uses for
+//! checkpoint directories, for single files: a reader (or a crash mid
+//! write) sees either the previous contents or the new contents, never
+//! a torn prefix.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Write `bytes` to `path` atomically: write a sibling `.tmp` file,
+/// then rename over the target. The tmp file lives in the same
+/// directory so the rename never crosses a filesystem boundary.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp: PathBuf = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(".tmp");
+            path.with_file_name(n)
+        }
+        None => anyhow::bail!("write_atomic: {path:?} has no file name"),
+    };
+    fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("opacus_fsio_test_{}.txt", std::process::id()));
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second");
+        assert!(!dir
+            .join(format!("opacus_fsio_test_{}.txt.tmp", std::process::id()))
+            .exists());
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -2,6 +2,7 @@
 //! building these in-tree is part of the reproduction scope).
 
 pub mod cli;
+pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod npy;

@@ -1,0 +1,166 @@
+//! Observability integration tests — the PR-8 acceptance criteria:
+//!
+//! * determinism: with span/counter collection ON, training spends the
+//!   byte-identical ε and lands on bitwise-identical parameters as with
+//!   collection OFF — at 1 and 4 workers and through the prefetch
+//!   pipeline (instrumentation only reads clocks);
+//! * the exported chrome://tracing JSON parses and carries both span
+//!   (`ph: "X"`) and lane-naming metadata (`ph: "M"`) events;
+//! * `opacus serve` rewrites a per-job `status.json` whose ε field
+//!   matches the engine's reported ε bit for bit.
+
+use std::path::PathBuf;
+
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::obs;
+use opacus_rs::privacy::{Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use opacus_rs::serve::{JobSpec, JobStatus, ServeConfig, Service};
+use opacus_rs::util::json::Json;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("opacus_obs_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Train 2 epochs of mnist under the deterministic noise source and
+/// return (ε, parameter bits). The observability flag is whatever the
+/// caller set — that is the point.
+fn run(workers: usize, pipeline: Option<usize>) -> (f64, Vec<u32>) {
+    let sys = Opacus::load_with_backend(
+        "artifacts_that_do_not_exist",
+        "mnist",
+        Backend::Native,
+        192,
+        32,
+        11,
+    )
+    .unwrap();
+    let mut builder = PrivacyEngine::private()
+        .backend(Backend::Native)
+        .noise(NoiseSource::Deterministic)
+        .workers(workers)
+        .sampling(SamplingMode::Uniform)
+        .noise_multiplier(0.8)
+        .max_grad_norm(1.0)
+        .lr(0.2)
+        .logical_batch(32)
+        .physical_batch(32)
+        .seed(17);
+    if let Some(d) = pipeline {
+        builder = builder.pipeline(d);
+    }
+    let mut private = builder.build(sys).unwrap();
+    private.train_epochs(2).unwrap();
+    let eps = private.epsilon(1e-5).unwrap();
+    let (trainer, _, _) = private.into_parts();
+    (eps, trainer.params.iter().map(|p| p.to_bits()).collect())
+}
+
+/// The determinism contract, end to end: collection off → collection on
+/// over the same recipes (1 worker, 4 workers, pipelined) must agree on
+/// every ε bit and every parameter bit. The enabled flag is process
+/// global, so this single test owns both transitions — no other test in
+/// this binary touches the flag. While collection is on, the recorded
+/// spans are exported and the trace-event JSON schema is checked.
+#[test]
+fn tracing_changes_no_epsilon_or_parameter_bits() {
+    let cases = [(1, None), (4, None), (1, Some(2)), (4, Some(2))];
+    let off: Vec<(f64, Vec<u32>)> = cases.iter().map(|&(w, p)| run(w, p)).collect();
+
+    obs::set_enabled(true);
+    let on: Vec<(f64, Vec<u32>)> = cases.iter().map(|&(w, p)| run(w, p)).collect();
+    assert!(
+        obs::trace::event_count() > 0,
+        "collection was on: spans must have been recorded"
+    );
+    let dir = tmpdir("trace");
+    let path = dir.join("trace.json");
+    obs::trace::export(&path).unwrap();
+    obs::set_enabled(false);
+    obs::reset();
+
+    for (i, (o, n)) in off.iter().zip(on.iter()).enumerate() {
+        let (workers, pipeline) = cases[i];
+        assert_eq!(
+            o.0.to_bits(),
+            n.0.to_bits(),
+            "workers={workers} pipeline={pipeline:?}: ε must be byte-identical with tracing on"
+        );
+        assert_eq!(
+            o.1, n.1,
+            "workers={workers} pipeline={pipeline:?}: params must be bitwise identical"
+        );
+    }
+
+    // the exported trace is valid chrome://tracing JSON: span events on
+    // named lanes (worker threads included — the 4-worker case ran)
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    let spans = events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("X"))
+        .count();
+    let lanes: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .filter_map(|e| e.get("args").get("name").as_str())
+        .collect();
+    assert!(spans > 0, "trace must contain span events");
+    assert!(!lanes.is_empty(), "trace must name its lanes");
+    assert!(
+        lanes.iter().any(|n| n.starts_with("opacus-worker-")),
+        "worker threads get their own lanes, got {lanes:?}"
+    );
+    assert_eq!(
+        doc.get("otherData").get("format").as_str(),
+        Some(obs::trace::TRACE_FORMAT)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// serve writes `<out>/<name>.status.json` at every quantum boundary;
+/// after a run to graceful exhaustion the file must parse, report the
+/// terminal state, and carry the engine's ε bit for bit.
+#[test]
+fn serve_status_file_matches_engine_epsilon_exactly() {
+    let out = tmpdir("status");
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 4;
+    let mut svc = Service::new(cfg);
+    let spec = JobSpec::from_json(
+        &Json::parse(
+            r#"{"name":"budgeted","task":"mnist","backend":"native","epsilon":5.0,
+                "delta":1e-5,"sigma":1.0,"batch":32,"train":192,"lr":0.2,"seed":17}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    svc.submit(spec).unwrap();
+    let reports = svc.run().unwrap();
+    assert_eq!(reports[0].status, JobStatus::Exhausted);
+
+    let text = std::fs::read_to_string(out.join("budgeted.status.json")).unwrap();
+    let status = obs::StatusReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(status.state, "exhausted");
+    assert_eq!(status.step, reports[0].steps);
+    assert_eq!(status.task, "mnist");
+
+    let engine_eps = svc.trainer("budgeted").unwrap().epsilon(1e-5).unwrap();
+    assert_eq!(
+        status.epsilon.to_bits(),
+        engine_eps.to_bits(),
+        "status.json ε must match the engine ε bit for bit ({} vs {engine_eps})",
+        status.epsilon
+    );
+    assert_eq!(status.epsilon_budget, 5.0);
+    assert!(
+        status.budget_burn > 0.0 && status.budget_burn <= 1.0,
+        "burn-down must be a fraction of budget, got {}",
+        status.budget_burn
+    );
+    // atomic writer: no .tmp sibling survives
+    assert!(!out.join("budgeted.status.json.tmp").exists());
+    let _ = std::fs::remove_dir_all(&out);
+}

@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Schema validator for the opacus-rs observability artifacts.
+
+Usage:
+    validate_obs.py trace FILE     chrome://tracing export from --trace
+    validate_obs.py metrics FILE   metrics JSON written by --out
+    validate_obs.py status FILE    per-job status.json written by serve
+
+Checks structure only (stdlib json, no dependencies) so CI can gate on
+the exported files without loading them into a UI. Exits non-zero with
+a one-line reason on the first violation.
+"""
+
+import json
+import sys
+
+TRACE_FORMAT = "opacus-rs/trace"
+STATUS_FORMAT = "opacus-rs/status"
+
+
+def is_count(v):
+    """Counters go through the f64 JSON writer; accept integral floats."""
+    return isinstance(v, (int, float)) and v >= 0 and float(v).is_integer()
+
+
+def fail(msg):
+    print(f"validate_obs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require(cond, msg):
+    if not cond:
+        fail(msg)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+
+
+def check_trace(path):
+    doc = load(path)
+    require(isinstance(doc, dict), "trace root must be an object")
+    other = doc.get("otherData", {})
+    require(other.get("format") == TRACE_FORMAT,
+            f"otherData.format must be {TRACE_FORMAT!r}, got {other.get('format')!r}")
+    require(is_count(other.get("version")), "otherData.version must be an integer")
+    require(doc.get("displayTimeUnit") == "ms", "displayTimeUnit must be 'ms'")
+
+    events = doc.get("traceEvents")
+    require(isinstance(events, list) and events, "traceEvents must be a non-empty array")
+
+    named_lanes = set()      # (pid, tid) with a thread_name metadata event
+    span_lanes = set()       # (pid, tid) carrying at least one span
+    spans = []
+    for i, e in enumerate(events):
+        require(isinstance(e, dict), f"event {i} must be an object")
+        ph = e.get("ph")
+        require(ph in ("X", "M"), f"event {i}: unknown phase {ph!r}")
+        require(is_count(e.get("pid")) and is_count(e.get("tid")),
+                f"event {i}: pid/tid must be integers")
+        key = (e["pid"], e["tid"])
+        if ph == "M":
+            require(e.get("name") == "thread_name",
+                    f"event {i}: only thread_name metadata is emitted")
+            name = e.get("args", {}).get("name")
+            require(isinstance(name, str) and name, f"event {i}: lane name must be a string")
+            named_lanes.add(key)
+        else:
+            for field in ("ts", "dur"):
+                v = e.get(field)
+                require(isinstance(v, (int, float)) and v >= 0,
+                        f"event {i}: {field} must be a non-negative number")
+            require(isinstance(e.get("name"), str) and e["name"], f"event {i}: span needs a name")
+            require(isinstance(e.get("cat"), str) and e["cat"], f"event {i}: span needs a category")
+            span_lanes.add(key)
+            spans.append(e)
+
+    require(spans, "trace carries no spans")
+    require(span_lanes <= named_lanes,
+            f"every lane with spans needs a thread_name event; unnamed: {span_lanes - named_lanes}")
+
+    # coverage: the root cli span must cover >=95% of the trace's span extent
+    roots = [e for e in spans if e["cat"] == "cli"]
+    if roots:
+        root = max(roots, key=lambda e: e["dur"])
+        lo = min(e["ts"] for e in spans)
+        hi = max(e["ts"] + e["dur"] for e in spans)
+        extent = hi - lo
+        require(extent > 0, "trace extent must be positive")
+        cover = root["dur"] / extent
+        require(cover >= 0.95,
+                f"root '{root['name']}' span covers {cover:.1%} of the trace extent (< 95%)")
+
+    print(f"validate_obs: trace OK — {len(spans)} spans on {len(span_lanes)} named lane(s), "
+          f"{other.get('dropped_events', 0)} dropped")
+
+
+def check_hist(name, h):
+    require(isinstance(h, dict), f"histogram {name} must be an object")
+    count = h.get("count")
+    require(is_count(count), f"histogram {name}: bad count")
+    require(isinstance(h.get("sum"), (int, float)), f"histogram {name}: bad sum")
+    buckets = h.get("buckets")
+    require(isinstance(buckets, list), f"histogram {name}: buckets must be an array")
+    total = 0
+    for b in buckets:
+        require(isinstance(b, list) and len(b) == 2, f"histogram {name}: bucket must be [idx, n]")
+        total += b[1]
+    require(total == count, f"histogram {name}: bucket counts {total} != count {count}")
+    if count > 0:
+        require(isinstance(h.get("min"), (int, float)) and isinstance(h.get("max"), (int, float)),
+                f"histogram {name}: min/max required when count > 0")
+
+
+def check_obs_snapshot(obs):
+    require(is_count(obs.get("version")), "obs.version must be an integer")
+    counters = obs.get("counters", {})
+    require(isinstance(counters, dict), "obs.counters must be an object")
+    for k, v in counters.items():
+        require(is_count(v), f"counter {k} must be a non-negative integer")
+    hists = obs.get("histograms", {})
+    require(isinstance(hists, dict), "obs.histograms must be an object")
+    for k, h in hists.items():
+        check_hist(k, h)
+    return len(counters), len(hists)
+
+
+def check_metrics(path):
+    doc = load(path)
+    require(isinstance(doc, dict), "metrics root must be an object")
+    require(isinstance(doc.get("records"), list), "metrics.records must be an array")
+    if "obs" in doc:
+        nc, nh = check_obs_snapshot(doc["obs"])
+        print(f"validate_obs: metrics OK — {len(doc['records'])} records, "
+              f"obs snapshot with {nc} counter(s), {nh} histogram(s)")
+    else:
+        print(f"validate_obs: metrics OK — {len(doc['records'])} records (no obs snapshot)")
+
+
+def check_status(path):
+    doc = load(path)
+    require(isinstance(doc, dict), "status root must be an object")
+    require(doc.get("format") == STATUS_FORMAT,
+            f"format must be {STATUS_FORMAT!r}, got {doc.get('format')!r}")
+    require(is_count(doc.get("version")), "version must be an integer")
+    require(doc.get("state") in ("running", "exhausted", "completed", "interrupted"),
+            f"unknown state {doc.get('state')!r}")
+    require(isinstance(doc.get("task"), str) and doc["task"], "task must be a string")
+    for field in ("job", "step", "epoch"):
+        require(is_count(doc.get(field)),
+                f"{field} must be a non-negative integer, got {doc.get(field)!r}")
+    for field in ("steps_per_sec", "epsilon", "epsilon_budget", "budget_burn",
+                  "sigma", "compute_secs", "reduce_secs"):
+        v = doc.get(field)
+        require(isinstance(v, (int, float)) and v >= 0, f"{field} must be a non-negative number")
+    require(doc["budget_burn"] <= 1.0, "budget_burn must be <= 1.0")
+    if doc["epsilon_budget"] > 0:
+        require(doc["epsilon"] <= doc["epsilon_budget"] + 1e-12,
+                "ε must not exceed a positive budget")
+    print(f"validate_obs: status OK — job {doc['job']} ({doc['task']}) {doc['state']} "
+          f"at step {doc['step']}, ε = {doc['epsilon']}")
+
+
+def main():
+    if len(sys.argv) != 3 or sys.argv[1] not in ("trace", "metrics", "status"):
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    {"trace": check_trace, "metrics": check_metrics, "status": check_status}[sys.argv[1]](
+        sys.argv[2]
+    )
+
+
+if __name__ == "__main__":
+    main()
