@@ -23,6 +23,10 @@
 //! compared on integer-valued data, where FMA rounding is exact). CI
 //! runs the gate on every push and uploads `BENCH_pr7_ci.json`.
 //!
+//! PR-9 adds pack-arena accounting: the per-thread scratch high-water
+//! mark (`gemm::peak_scratch_bytes`) is printed, recorded in the
+//! `--bench-out` JSON, and gated non-zero under `--check`.
+//!
 //! PR-8 adds a disabled-instrumentation gate: with observability off,
 //! the GEMM probe sites (one span check in the driver, one enabled()
 //! load per macro block) must cost < 3% of the measured blocked time on
@@ -325,6 +329,14 @@ fn main() -> Result<()> {
         }
     }
     table.print();
+    let peak_scratch = gemm::peak_scratch_bytes();
+    println!(
+        "peak pack scratch: {peak_scratch} bytes per thread high-water mark \
+         (gemm::peak_scratch_bytes)"
+    );
+    if check && peak_scratch == 0 {
+        failures.push("peak scratch bytes reads 0 after real GEMMs — tracking broken".into());
+    }
     if tile != TileKind::Avx2 {
         println!(
             "simd gates: skipped (detected tile is '{}'; no avx2+fma on this machine \
@@ -420,6 +432,7 @@ fn main() -> Result<()> {
             ("block_kc", Json::num(bs.kc as f64)),
             ("block_nc", Json::num(bs.nc as f64)),
             ("status", Json::str("recorded")),
+            ("peak_scratch_bytes", Json::num(gemm::peak_scratch_bytes() as f64)),
             ("shapes", Json::Obj(rows.into_iter().collect())),
             ("parallel", Json::Obj(par_rows.into_iter().collect())),
         ]);

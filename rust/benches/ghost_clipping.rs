@@ -1,0 +1,237 @@
+//! Ghost clipping bench — the PR-9 memory-vs-speed trade, measured.
+//!
+//! For each task the bench builds the same DP step twice: once with the
+//! materializing clipper (per-sample gradients laid out as `[B, P]`,
+//! the `--clipping flat` path) and once with the two-pass norm-only
+//! pipeline (`--clipping ghost`). Each variant is timed over real
+//! optimizer steps and annotated with its clipping-memory footprint:
+//! the materializing path stores `B·P` f32 gradients, ghost stores `B`
+//! f64 squared norms plus the pack scratch of one extra backward. The
+//! GEMM pack-arena high-water mark (`gemm::peak_scratch_bytes`) is
+//! reset between variants so each reports its own scratch.
+//!
+//! On the `transformer` task (~10M params) the materializing step
+//! cannot be built at the default batch — `[32, 10.5M]` f32 is over the
+//! 1 GiB `OPACUS_MATERIALIZE_CAP` — so its flat cells print "-" while
+//! the ghost cells train. That missing row *is* the result.
+//!
+//! Usage: cargo bench --bench ghost_clipping [-- --tasks attn,transformer
+//!        --batch 32 --steps 8 --check --bench-out BENCH_pr9.json]
+//!
+//! `--check` gates two things: ghost must build and train every
+//! requested task, and wherever both variants run, the parameters after
+//! an identical step sequence (same data, same noise stream) must agree
+//! within 1e-6 — the parity that makes the memory trade free in ε.
+
+use anyhow::{anyhow, bail, Result};
+
+use opacus_rs::data::synth;
+use opacus_rs::distributed::ExecSpec;
+use opacus_rs::rng::{gaussian, pcg::Xoshiro256pp};
+use opacus_rs::runtime::backend::native::{gemm, NativeBackend};
+use opacus_rs::runtime::backend::ExecutionBackend;
+use opacus_rs::runtime::step::HyperParams;
+use opacus_rs::util::cli::Args;
+use opacus_rs::util::json::Json;
+use opacus_rs::util::table::Table;
+
+struct VariantRun {
+    steps_per_sec: f64,
+    /// Bytes the clipper itself holds live during one step.
+    clip_bytes: u64,
+    /// GEMM pack-arena high-water mark during this variant's steps.
+    peak_scratch: usize,
+    /// Parameters after the timed sequence (for the parity gate).
+    params: Vec<f32>,
+}
+
+/// Run `steps` DP steps with a deterministic data order and noise
+/// stream; both variants of a task see byte-identical inputs.
+fn run_variant(
+    backend: &NativeBackend,
+    ghost: bool,
+    batch: usize,
+    steps: usize,
+) -> Result<VariantRun> {
+    let exec = ExecSpec { ghost, seed: 7, ..Default::default() };
+    let trainer_steps = backend.trainer_steps_parallel(batch, &exec)?;
+    let step = trainer_steps
+        .fused_dp
+        .ok_or_else(|| anyhow!("native backend produced no fused step"))?;
+    let meta = backend.model_meta();
+    let p = meta.num_params;
+    let n_data = (batch * steps).max(64);
+    let data = synth::for_task(&meta.task, n_data, 42, &meta.input_shape, meta.vocab)?;
+    let mut params = backend.init_params()?;
+    let mut noise = vec![0f32; p];
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let hp = HyperParams { lr: 0.05, clip: 1.0, sigma: 1.1, denom: batch as f32 };
+    gemm::reset_peak_scratch();
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let idx: Vec<usize> = (0..batch).map(|i| (s * batch + i) % data.len()).collect();
+        let b = data.gather(&idx, batch)?;
+        gaussian::fill_standard_normal(&mut rng, &mut noise);
+        let out = step.dp_step(&params, b.x, &b.y, &b.mask, &noise, hp)?;
+        params = out.params;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let clip_bytes = if ghost {
+        // per-sample squared norms (f64) + per-sample clip coefficients
+        (batch * (8 + 4)) as u64
+    } else {
+        // the materialized per-sample gradient matrix [B, P] f32
+        batch as u64 * p as u64 * 4
+    };
+    Ok(VariantRun {
+        steps_per_sec: if secs > 0.0 { steps as f64 / secs } else { 0.0 },
+        clip_bytes,
+        peak_scratch: gemm::peak_scratch_bytes(),
+        params,
+    })
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench", "check"])?; // cargo bench passes --bench
+    let check = args.has_flag("check");
+    let batch = args.get_usize("batch", 32)?;
+    let steps = args.get_usize("steps", 8)?;
+    let tasks: Vec<String> = args
+        .get_or("tasks", "attn,transformer")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    let mut table = Table::new(
+        &format!("ghost vs materializing clipping (batch {batch}, {steps} steps)"),
+        Table::header_from(&[
+            "task",
+            "params",
+            "flat steps/s",
+            "ghost steps/s",
+            "flat clip mem",
+            "ghost clip mem",
+            "flat scratch",
+            "ghost scratch",
+            "param parity",
+        ]),
+    );
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows: Vec<(String, Json)> = Vec::new();
+
+    for task in &tasks {
+        let backend = NativeBackend::for_task(task)?;
+        let p = backend.model_meta().num_params;
+        // the materializing variant may legitimately refuse to build
+        // (the cap) — that is the memory story, not a bench failure
+        let flat = match run_variant(&backend, false, batch, steps) {
+            Ok(v) => Some(v),
+            Err(e) if e.to_string().contains("OPACUS_MATERIALIZE_CAP") => None,
+            Err(e) => return Err(e),
+        };
+        let ghost = match run_variant(&backend, true, batch, steps) {
+            Ok(v) => v,
+            Err(e) => {
+                failures.push(format!("{task}: ghost variant failed: {e}"));
+                continue;
+            }
+        };
+        let parity = match &flat {
+            Some(f) => {
+                let max_diff = f
+                    .params
+                    .iter()
+                    .zip(&ghost.params)
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .fold(0.0f64, f64::max);
+                if max_diff > 1e-6 {
+                    failures.push(format!(
+                        "{task}: ghost and materializing params diverge (max |Δ| = {max_diff:.3e})"
+                    ));
+                }
+                format!("max|Δ|={max_diff:.1e}")
+            }
+            None => "flat over cap".to_string(),
+        };
+        let dash = || "-".to_string();
+        table.add_row(vec![
+            task.clone(),
+            p.to_string(),
+            flat.as_ref().map_or_else(dash, |f| format!("{:.2}", f.steps_per_sec)),
+            format!("{:.2}", ghost.steps_per_sec),
+            flat.as_ref().map_or_else(dash, |f| fmt_bytes(f.clip_bytes)),
+            fmt_bytes(ghost.clip_bytes),
+            flat.as_ref().map_or_else(dash, |f| fmt_bytes(f.peak_scratch as u64)),
+            fmt_bytes(ghost.peak_scratch as u64),
+            parity,
+        ]);
+        rows.push((
+            task.clone(),
+            Json::obj(vec![
+                ("num_params", Json::num(p as f64)),
+                (
+                    "flat_steps_per_sec",
+                    flat.as_ref().map(|f| Json::num(f.steps_per_sec)).unwrap_or(Json::Null),
+                ),
+                ("ghost_steps_per_sec", Json::num(ghost.steps_per_sec)),
+                (
+                    "flat_clip_bytes",
+                    flat.as_ref().map(|f| Json::num(f.clip_bytes as f64)).unwrap_or(Json::Null),
+                ),
+                ("ghost_clip_bytes", Json::num(ghost.clip_bytes as f64)),
+                (
+                    "flat_peak_scratch_bytes",
+                    flat.as_ref().map(|f| Json::num(f.peak_scratch as f64)).unwrap_or(Json::Null),
+                ),
+                ("ghost_peak_scratch_bytes", Json::num(ghost.peak_scratch as f64)),
+                ("flat_over_materialize_cap", Json::Bool(flat.is_none())),
+            ]),
+        ));
+    }
+    table.print();
+
+    if let Some(bench_out) = args.get("bench-out") {
+        let task_list = tasks.join(",");
+        let command = format!(
+            "cd rust && cargo bench --bench ghost_clipping -- --tasks {task_list} \
+             --batch {batch} --steps {steps} --check --bench-out {bench_out}"
+        );
+        let j = Json::obj(vec![
+            ("bench", Json::str("rust/benches/ghost_clipping.rs")),
+            (
+                "metric",
+                Json::str(
+                    "steps/sec and clipping-memory bytes of the materializing (flat) vs \
+                     norm-only (ghost) DP step per task; flat cells are null where [B, P] \
+                     exceeds OPACUS_MATERIALIZE_CAP",
+                ),
+            ),
+            ("command", Json::str(&command)),
+            ("batch", Json::num(batch as f64)),
+            ("steps", Json::num(steps as f64)),
+            ("status", Json::str("recorded")),
+            ("tasks", Json::Obj(rows.into_iter().collect())),
+        ]);
+        std::fs::write(bench_out, j.to_string())?;
+        println!("ghost baseline -> {bench_out}");
+    }
+
+    if check && !failures.is_empty() {
+        for f in &failures {
+            eprintln!("ghost_clipping check failed: {f}");
+        }
+        bail!("{} ghost-clipping gate(s) failed", failures.len());
+    }
+    Ok(())
+}

@@ -240,12 +240,27 @@ pub(crate) fn build_with_engine(
     pp: PrivacyParams,
 ) -> Result<PrivateTrainer> {
     engine.validate(&sys.model)?;
+    let ghost = pp.clipping == crate::privacy::builder::ClippingStrategy::Ghost;
+    if ghost {
+        // ghost needs the norm-only protocol on every layer — fail at
+        // wrap time with the full list, not mid-training
+        let errs = crate::privacy::validator::validate_ghost(&sys.model);
+        if !errs.is_empty() {
+            let lines: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+            bail!(
+                "ghost clipping is unsupported for task '{}':\n  {}",
+                sys.model.task,
+                lines.join("\n  ")
+            );
+        }
+    }
     let exec = ExecSpec {
         parallelism: pp.parallelism,
         noise_division: pp.noise_division,
         secure_mode: engine.config.secure_mode,
         seed: engine.config.seed,
         deterministic: engine.config.deterministic,
+        ghost,
     };
     let steps = sys.steps_for(&pp, &exec)?;
     PrivateTrainer::new(

@@ -14,9 +14,9 @@ use crate::rng::{gaussian, pcg::Xoshiro256pp, Rng};
 use super::dataset::Dataset;
 
 /// Tasks with a synthetic-corpus generator (one per paper benchmark;
-/// `embed`, `lstm` and `attn` share the IMDb-shaped token generator and
-/// differ in the model stack that consumes them).
-pub const VALID_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn"];
+/// `embed`, `lstm`, `attn` and `transformer` share the IMDb-shaped token
+/// generator and differ in the model stack that consumes them).
+pub const VALID_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn", "transformer"];
 
 /// MNIST-shaped: [28, 28, 1] f32, 10 classes.
 ///
@@ -129,7 +129,7 @@ pub fn for_task(
     match task {
         "mnist" => Ok(synth_mnist(n, seed)),
         "cifar" => Ok(synth_cifar(n, seed)),
-        "embed" | "lstm" | "attn" => {
+        "embed" | "lstm" | "attn" | "transformer" => {
             let seq = *input_shape.first().ok_or_else(|| {
                 anyhow!("task '{task}': empty input shape (expected [seq_len])")
             })?;

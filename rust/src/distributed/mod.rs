@@ -146,6 +146,10 @@ pub struct ExecSpec {
     /// Seed the secure generator too (tests / replay) instead of OS
     /// entropy.
     pub deterministic: bool,
+    /// Clip with the two-pass norm-only (ghost) pipeline instead of
+    /// materializing per-sample weight gradients. Orthogonal to the
+    /// worker count: each shard runs the same two passes on its rows.
+    pub ghost: bool,
 }
 
 impl Default for ExecSpec {
@@ -156,6 +160,7 @@ impl Default for ExecSpec {
             secure_mode: false,
             seed: 0,
             deterministic: true,
+            ghost: false,
         }
     }
 }

@@ -38,13 +38,16 @@ use super::ExecSpec;
 
 /// One unit of worker work (a shard of a step, or a noise share).
 pub(crate) enum Job {
-    /// Clipped per-sample-gradient partial of one shard.
+    /// Clipped per-sample-gradient partial of one shard. `ghost` selects
+    /// the two-pass norm-only clipping pipeline over the materializing
+    /// one (same partial out either way).
     Grad {
         params: Arc<Vec<f32>>,
         x: HostTensor,
         y: Vec<i32>,
         mask: Vec<f32>,
         clip: f32,
+        ghost: bool,
     },
     /// Plain summed-gradient partial of one shard (the no-DP baseline).
     GradSum {
@@ -353,9 +356,15 @@ fn worker_loop(model: Arc<NativeModel>, mut rng: Box<dyn Rng>, rx: mpsc::Receive
                 y,
                 mask,
                 clip,
-            } => model
-                .dp_grad_partial(&params, &x, &y, &mask, clip)
-                .map(JobOut::Grad),
+                ghost,
+            } => {
+                let g = if ghost {
+                    model.dp_grad_partial_ghost(&params, &x, &y, &mask, clip)
+                } else {
+                    model.dp_grad_partial(&params, &x, &y, &mask, clip)
+                };
+                g.map(JobOut::Grad)
+            }
             Job::GradSum { params, x, y, mask } => model
                 .grad_sum(&params, &x, &y, &mask)
                 .map(|(gsum, loss_sum, real)| JobOut::GradSum {
@@ -429,6 +438,7 @@ mod tests {
                     y: y[..1].to_vec(),
                     mask: mask[..1].to_vec(),
                     clip: 1.0,
+                    ghost: false,
                 },
             ),
             (
@@ -439,6 +449,7 @@ mod tests {
                     y: y[1..].to_vec(),
                     mask: mask[1..].to_vec(),
                     clip: 1.0,
+                    ghost: false,
                 },
             ),
         ];
@@ -460,6 +471,41 @@ mod tests {
     }
 
     #[test]
+    fn ghost_grad_jobs_match_materializing_jobs() {
+        let model = tiny_model();
+        let pool = WorkerPool::spawn(model.clone(), &spec_n(1)).unwrap();
+        let params = Arc::new(model.init_params(3));
+        let (x, y, mask) = batch();
+        let run = |ghost: bool| {
+            let outs = pool
+                .run(vec![(
+                    0,
+                    Job::Grad {
+                        params: params.clone(),
+                        x: x.clone(),
+                        y: y.clone(),
+                        mask: mask.clone(),
+                        clip: 0.7,
+                        ghost,
+                    },
+                )])
+                .unwrap();
+            let JobOut::Grad(p) = outs.into_iter().next().unwrap() else {
+                panic!("expected grad output")
+            };
+            p
+        };
+        let mat = run(false);
+        let gho = run(true);
+        assert_eq!(mat.real, gho.real);
+        assert!((mat.loss_sum - gho.loss_sum).abs() < 1e-12);
+        assert!((mat.snorm_sum - gho.snorm_sum).abs() < 1e-9 * mat.snorm_sum.abs().max(1.0));
+        for (a, b) in mat.gsum.iter().zip(gho.gsum.iter()) {
+            assert!((a - b).abs() < 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
     fn job_errors_propagate() {
         let model = tiny_model();
         let pool = WorkerPool::spawn(model.clone(), &spec_n(1)).unwrap();
@@ -474,6 +520,7 @@ mod tests {
                     y,
                     mask,
                     clip: 1.0,
+                    ghost: false,
                 },
             )])
             .unwrap_err()

@@ -47,6 +47,9 @@ pub struct DistributedStep {
     pool: Arc<WorkerPool>,
     batch: usize,
     noise_division: NoiseDivision,
+    /// Workers clip with the two-pass norm-only pipeline instead of
+    /// materializing each shard's per-sample gradients.
+    ghost: bool,
 }
 
 impl DistributedStep {
@@ -65,6 +68,7 @@ impl DistributedStep {
             pool,
             batch,
             noise_division: spec.noise_division,
+            ghost: spec.ghost,
         })
     }
 
@@ -112,6 +116,7 @@ impl DistributedStep {
                     y: shard_y,
                     mask: shard_mask,
                     clip,
+                    ghost: self.ghost,
                 },
                 None => Job::GradSum {
                     params: params.clone(),
@@ -511,6 +516,44 @@ mod tests {
             with_shares.params, without.params,
             "per-worker shares must inject noise the root draw did not"
         );
+    }
+
+    #[test]
+    fn ghost_shards_match_materializing_shards() {
+        // same step, same noise: ghost workers must land on the same
+        // parameters (and identical loss/real accounting) as
+        // materializing workers, across worker counts
+        let (model, params, x, y, mask) = mnist_setup(8);
+        let noise = vec![0.02f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.2,
+            clip: 0.6,
+            sigma: 0.5,
+            denom: 8.0,
+        };
+        let run = |workers: usize, ghost: bool| {
+            let mut s = spec(workers, 7);
+            s.ghost = ghost;
+            let dist = DistributedStep::launch(model.clone(), 8, &s).unwrap();
+            dist.dp_step(&params, x.clone(), &y, &mask, &noise, hp).unwrap()
+        };
+        for workers in [1usize, 4] {
+            let mat = run(workers, false);
+            let gho = run(workers, true);
+            assert!((mat.loss - gho.loss).abs() < 1e-12, "workers={workers}");
+            assert!(
+                (mat.snorm_mean - gho.snorm_mean).abs()
+                    < 1e-9 * mat.snorm_mean.abs().max(1.0),
+                "workers={workers}: snorm {} vs {}",
+                mat.snorm_mean,
+                gho.snorm_mean
+            );
+            let mut worst = 0.0f64;
+            for (a, b) in mat.params.iter().zip(gho.params.iter()) {
+                worst = worst.max((*a as f64 - *b as f64).abs());
+            }
+            assert!(worst < 1e-6, "workers={workers}: params differ by {worst:.3e}");
+        }
     }
 
     #[test]

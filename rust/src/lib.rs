@@ -91,6 +91,35 @@
 //! `Conv2d` for the im2col pattern that lowers windowed ops onto the
 //! same engine.
 //!
+//! ### The norm-only (ghost) clipping protocol
+//!
+//! [`privacy::ClippingStrategy::Ghost`] clips without ever
+//! materializing the `[B, P]` per-sample gradient matrix: pass 1 runs
+//! a norm-only backward that folds each sample's *squared* gradient
+//! norm into a `[B]` accumulator, pass 2 re-runs the backward with the
+//! per-sample clip coefficients folded in, writing the clipped *sum*
+//! straight into one `[P]` buffer (a stride-0
+//! [`runtime::backend::native::GradSink`]). A custom layer joins the
+//! protocol with two methods on `GradSampleLayer`:
+//!
+//! * `per_sample_sq_norm(params, x, dy, sqn, need_dx)` — fold
+//!   `‖∂loss_b/∂θ‖²` into `sqn[b]` and return `dx` exactly as
+//!   `backward` would. Use a closed form where one exists (`Linear`:
+//!   `‖dy_b‖²·(‖x_b‖² + 1)`, because `dW_b = dy_b ⊗ x_b` is rank-1) or
+//!   an `O(P_layer)` scratch reused across samples — never `O(B·P)`
+//!   memory. `test_util::fd_sq_norm_check` pins implementations by
+//!   finite differences of the forward pass alone;
+//! * `supports_ghost()` — return `true` to register for the protocol.
+//!   Kinds that leave it `false` make `ClippingStrategy::Ghost` fail
+//!   with a typed error naming the kind (no silent fallback to
+//!   materialization), and `opacus inspect` reports them.
+//!
+//! `backward_weighted` (pass 2) has an exact default — every backward
+//! in this engine is linear in `dy` given the cached activations, so
+//! it scales a copy of `dy` row-wise and delegates to `backward`;
+//! override it only as an optimization (e.g. `Linear` lowers the
+//! weighted sum to a single stride-0 TN GEMM).
+//!
 //! Custom layers can opt into the observability layer the same way the
 //! built-ins do: open an [`obs::span`] around each phase of the kernel
 //! and it appears in the `--trace` timeline next to the stock layers,

@@ -25,7 +25,7 @@ use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccou
 use opacus_rs::coordinator::Opacus;
 use opacus_rs::distributed::{detected_cpus, NoiseDivision, Parallelism};
 use opacus_rs::obs::{self, logger, LogFormat, ObsConfig};
-use opacus_rs::privacy::validator::validate_model;
+use opacus_rs::privacy::validator::{clipping_supported, validate_model};
 use opacus_rs::privacy::{
     AccountantKind, Backend, ClippingStrategy, NoiseScheduler, NoiseSource, PrivacyEngine,
     SamplingMode,
@@ -95,10 +95,12 @@ opacus-rs: differentially private training (Opacus reproduction)
 USAGE: opacus <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS
-  train      --task mnist|cifar|embed|lstm|attn [--epochs N] [--sigma S | --eps E]
+  train      --task mnist|cifar|embed|lstm|attn|transformer [--epochs N]
+             [--sigma S | --eps E]
              [--clip C] [--lr L] [--batch B] [--physical B] [--train N]
              [--delta D] [--schedule constant|exp:G|step:N:G] [--secure]
-             [--uniform] [--accountant rdp|gdp] [--clipping flat|perlayer]
+             [--uniform] [--accountant rdp|gdp]
+             [--clipping flat|perlayer|ghost]
              [--backend auto|xla|native] [--workers N|auto]
              [--gemm-threads N|auto] [--noise-division root|perworker]
              [--artifacts DIR] [--out metrics.json] [--pipeline N]
@@ -116,7 +118,18 @@ The default --backend auto runs on AOT XLA artifacts when `make
 artifacts` output exists for the task, and otherwise on the pure-Rust
 native per-sample-gradient engine (no artifacts needed). The lstm task
 runs a true time-unrolled LSTM (per-sample BPTT); attn is sequence
-classification through multi-head self-attention — both native.
+classification through multi-head self-attention — both native. The
+transformer task (embedding → two MHA blocks → linear, ~10M params) is
+sized so that materializing per-sample gradients at batch 32 would
+need >1 GiB; it exists to exercise --clipping ghost.
+
+--clipping ghost clips without ever materializing per-sample weight
+gradients: a norm-only backward computes each sample's gradient norm
+in closed form from the saved activations, then a second weighted
+backward emits the clipped *sum* directly — O(batch) clipping memory
+instead of O(batch × params), with ε and the noise stream unchanged
+bit-for-bit. Native backend only (auto resolves it); `opacus inspect
+[--task T]` prints which strategies each task's layers support.
 
 --workers shards every step across N worker threads (native backend;
 `auto` sizes the pool from the CPU count). Noise is added once at the
@@ -493,6 +506,21 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Which clipping strategies a model's layer inventory supports — the
+/// per-task table `opacus inspect` prints so a ghost rejection is
+/// diagnosable before a job is ever submitted.
+fn clipping_support_summary(m: &opacus_rs::runtime::artifact::ModelMeta) -> String {
+    let supported: Vec<&str> = ["flat", "perlayer", "ghost"]
+        .into_iter()
+        .filter(|s| clipping_supported(m, s))
+        .collect();
+    if supported.is_empty() {
+        "none (fails DP validation)".to_string()
+    } else {
+        supported.join(" ")
+    }
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let backend = args.get_or("backend", "auto").parse::<Backend>()?;
@@ -507,6 +535,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         println!("classes       : {}", m.num_classes);
         println!("layers        : {:?}", m.layer_kinds);
         println!("vocab         : {:?}", m.vocab);
+        println!("clipping      : {}", clipping_support_summary(m));
         if let Some(reg) = resolved.registry() {
             let mut t = Table::new(
                 "artifacts",
@@ -621,11 +650,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         }
         let mut t = Table::new(
             "backend auto-selection",
-            Table::header_from(&["task", "active backend"]),
+            Table::header_from(&["task", "active backend", "clipping"]),
         );
         for &task in opacus_rs::runtime::backend::native::NATIVE_TASKS {
             let kind = opacus_rs::runtime::backend::auto_backend_kind(Path::new(artifacts), task);
-            t.add_row(vec![task.to_string(), kind.to_string()]);
+            let resolved =
+                opacus_rs::runtime::backend::resolve(Path::new(artifacts), task, Backend::Auto);
+            let strategies = match resolved {
+                Ok(r) => clipping_support_summary(r.model_meta()),
+                Err(_) => "-".to_string(),
+            };
+            t.add_row(vec![task.to_string(), kind.to_string(), strategies]);
         }
         t.print();
     }

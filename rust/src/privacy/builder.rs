@@ -110,6 +110,17 @@ pub enum ClippingStrategy {
     /// condition for every per-layer constraint; accounting is unchanged
     /// because noise scales with the same effective clip.
     PerLayer,
+    /// Ghost (norm-only two-pass) clipping, after Lee & Kifer: pass one
+    /// computes every sample's gradient norm in closed form from saved
+    /// activations and output-grads — no `[B, P]` per-sample gradient
+    /// matrix is ever materialized — and pass two re-runs the backward
+    /// with per-sample clip coefficients folded in, producing the
+    /// clipped *summed* gradient directly. Same threshold C as `Flat`
+    /// (clip-then-sum is mathematically identical, so sensitivity and ε
+    /// accounting are unchanged), but per-step memory drops from
+    /// O(B·P) to O(B·L) norms. Native backend only; every layer kind in
+    /// the model must implement the norm-only protocol.
+    Ghost,
 }
 
 impl ClippingStrategy {
@@ -117,14 +128,17 @@ impl ClippingStrategy {
         match self {
             ClippingStrategy::Flat => "flat",
             ClippingStrategy::PerLayer => "perlayer",
+            ClippingStrategy::Ghost => "ghost",
         }
     }
 
     /// The scalar clip handed to the compiled step for a model with
-    /// `num_layers` trainable layers.
+    /// `num_layers` trainable layers. Ghost clipping enforces the same
+    /// global bound as flat — the strategies differ in *how* the clip is
+    /// applied, never in the sensitivity the accountant sees.
     pub fn effective_clip(self, max_grad_norm: f64, num_layers: usize) -> f64 {
         match self {
-            ClippingStrategy::Flat => max_grad_norm,
+            ClippingStrategy::Flat | ClippingStrategy::Ghost => max_grad_norm,
             ClippingStrategy::PerLayer => max_grad_norm / (num_layers.max(1) as f64).sqrt(),
         }
     }
@@ -137,7 +151,8 @@ impl FromStr for ClippingStrategy {
         match s {
             "flat" => Ok(ClippingStrategy::Flat),
             "perlayer" | "per_layer" => Ok(ClippingStrategy::PerLayer),
-            other => bail!("unknown clipping strategy '{other}' (valid: flat, perlayer)"),
+            "ghost" => Ok(ClippingStrategy::Ghost),
+            other => bail!("unknown clipping strategy '{other}' (valid: flat, perlayer, ghost)"),
         }
     }
 }
@@ -552,12 +567,15 @@ impl PrivateBuilder {
     /// resolve the plan, build step executables, and return the
     /// three-object bundle.
     pub fn build(self, sys: Opacus) -> Result<Private<PrivateTrainer>> {
-        // worker pools are a native-engine capability: under Auto, a
-        // pool request must not strand on the XLA path (which would
-        // reject it), so Auto + workers resolves to the native backend.
-        // An explicit .backend(Backend::Xla) + workers stays a typed
-        // error from the XLA backend itself.
-        let requested = if self.backend == Backend::Auto && self.parallelism.uses_pool() {
+        // worker pools and ghost clipping are native-engine capabilities:
+        // under Auto, such a request must not strand on the XLA path
+        // (which would reject it), so Auto + workers / Auto + ghost
+        // resolves to the native backend. An explicit
+        // .backend(Backend::Xla) + workers/ghost stays a typed error
+        // from the XLA backend itself.
+        let requested = if self.backend == Backend::Auto
+            && (self.parallelism.uses_pool() || self.clipping == ClippingStrategy::Ghost)
+        {
             Backend::Native
         } else {
             self.backend
@@ -626,6 +644,34 @@ mod tests {
         let err = "prv".parse::<AccountantKind>().unwrap_err().to_string();
         assert!(err.contains("prv"));
         assert!(err.contains("rdp") && err.contains("gdp"), "{err}");
+    }
+
+    #[test]
+    fn clipping_strategy_parses_and_round_trips() {
+        for s in [
+            ClippingStrategy::Flat,
+            ClippingStrategy::PerLayer,
+            ClippingStrategy::Ghost,
+        ] {
+            assert_eq!(s.as_str().parse::<ClippingStrategy>().unwrap(), s);
+        }
+        let err = "fancy".parse::<ClippingStrategy>().unwrap_err().to_string();
+        assert!(
+            err.contains("flat") && err.contains("perlayer") && err.contains("ghost"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn ghost_clipping_keeps_flat_sensitivity() {
+        // ε depends only on (σ, q, steps) scaled by the effective clip:
+        // ghost must hand the accountant exactly the flat threshold
+        for layers in [1usize, 4, 9] {
+            assert_eq!(
+                ClippingStrategy::Ghost.effective_clip(1.5, layers),
+                ClippingStrategy::Flat.effective_clip(1.5, layers)
+            );
+        }
     }
 
     #[test]

@@ -43,6 +43,23 @@ pub const SUPPORTED: &[&str] = &[
     "lstm",
 ];
 
+/// Layer kinds whose native kernels implement the norm-only (ghost)
+/// clipping protocol — `per_sample_sq_norm` + `backward_weighted` on
+/// [`GradSampleLayer`](crate::runtime::backend::native::GradSampleLayer).
+/// A strict subset of [`SUPPORTED`]: groupnorm/instancenorm have
+/// per-sample gradient rules in the XLA artifacts but no native
+/// norm-only kernel yet.
+pub const GHOST_SUPPORTED: &[&str] = &[
+    "linear",
+    "conv2d",
+    "embedding",
+    "layernorm",
+    "mha",
+    "rnn",
+    "gru",
+    "lstm",
+];
+
 /// Layer kinds that are fundamentally DP-incompatible.
 pub const FORBIDDEN: &[(&str, &str)] = &[
     (
@@ -93,6 +110,41 @@ pub fn validate_model_with_custom(meta: &ModelMeta, custom: &[&str]) -> Vec<Vali
     errors.retain(|e| !custom.contains(&e.layer_kind.as_str())
         || FORBIDDEN.iter().any(|(k, _)| *k == e.layer_kind));
     errors
+}
+
+/// Validate a model for ghost (norm-only) clipping: every layer kind
+/// must carry a native `per_sample_sq_norm` kernel, on top of the
+/// ordinary per-sample-gradient rules. Violations list each offending
+/// layer so the fix (`--clipping flat`, or implementing the protocol)
+/// is obvious.
+pub fn validate_ghost(meta: &ModelMeta) -> Vec<ValidationError> {
+    let mut errors = validate_model(meta);
+    for (i, kind) in meta.layer_kinds.iter().enumerate() {
+        let already = errors.iter().any(|e| e.layer_index == i);
+        if !already && !GHOST_SUPPORTED.contains(&kind.as_str()) {
+            errors.push(ValidationError {
+                layer_index: i,
+                layer_kind: kind.clone(),
+                reason: "no norm-only (ghost) clipping kernel for this kind; \
+                         implement per_sample_sq_norm on the custom layer or \
+                         train with --clipping flat"
+                    .to_string(),
+            });
+        }
+    }
+    errors.sort_by_key(|e| e.layer_index);
+    errors
+}
+
+/// Whether every layer kind of `meta` supports a clipping strategy named
+/// by its `as_str()` tag — the per-task support table `opacus inspect`
+/// prints. Unknown custom kinds fail `ghost` but pass the materializing
+/// strategies only if registered.
+pub fn clipping_supported(meta: &ModelMeta, strategy: &str) -> bool {
+    match strategy {
+        "ghost" => validate_ghost(meta).is_empty(),
+        _ => validate_model(meta).is_empty(),
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +206,29 @@ mod tests {
         // but custom registration can NOT whitelist a forbidden layer
         let bn = meta(&["batchnorm"]);
         assert_eq!(validate_model_with_custom(&bn, &["batchnorm"]).len(), 1);
+    }
+
+    #[test]
+    fn ghost_validation_is_stricter_than_materializing() {
+        // every native-kernel model passes both
+        let m = meta(&["embedding", "mha", "mha", "linear"]);
+        assert!(validate_model(&m).is_empty());
+        assert!(validate_ghost(&m).is_empty());
+        // groupnorm materializes fine but has no norm-only kernel
+        let g = meta(&["conv2d", "groupnorm", "linear"]);
+        assert!(validate_model(&g).is_empty());
+        let errs = validate_ghost(&g);
+        assert_eq!(errs.len(), 1);
+        assert_eq!(errs[0].layer_kind, "groupnorm");
+        assert!(errs[0].reason.contains("--clipping flat"), "{}", errs[0].reason);
+        // the support table mirrors that
+        assert!(clipping_supported(&m, "ghost"));
+        assert!(clipping_supported(&g, "flat"));
+        assert!(clipping_supported(&g, "perlayer"));
+        assert!(!clipping_supported(&g, "ghost"));
+        // a forbidden layer fails ghost exactly once, not twice
+        let bn = meta(&["batchnorm"]);
+        assert_eq!(validate_ghost(&bn).len(), 1);
     }
 
     #[test]

@@ -216,6 +216,14 @@ pub trait ExecutionBackend {
                 self.name()
             );
         }
+        if exec.ghost {
+            bail!(
+                "backend '{}' does not implement ghost clipping; the norm-only two-pass \
+                 pipeline requires the native backend (`--backend native` / \
+                 `.backend(Backend::Native)`)",
+                self.name()
+            );
+        }
         self.trainer_steps(physical_batch)
     }
 

@@ -50,7 +50,7 @@ use crate::rng::{gaussian, Rng};
 use crate::runtime::tensor::HostTensor;
 
 use super::gemm;
-use super::layers::{GradSampleLayer, GradSink};
+use super::layers::{GradSampleLayer, GradSink, ParamSink};
 
 /// Default sequence-length threshold at which the attention core stops
 /// materializing the `[T, T]` score matrix and switches to the fused
@@ -434,7 +434,27 @@ impl GradSampleLayer for MultiHeadAttention {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
-        self.backward_impl(params, x, dy, gs, need_dx, None)
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx, None)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
+        };
+        self.backward_core(params, x, dy, &mut sink, need_dx, None)
     }
 
     fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
@@ -452,15 +472,33 @@ impl GradSampleLayer for MultiHeadAttention {
 }
 
 impl MultiHeadAttention {
-    /// Backward body shared by both attention-core paths. `force_fused`
-    /// overrides the `fused_at(t_len)` dispatch — tests use it to pin
-    /// the two paths against each other on the same shape.
+    /// Test shim: the old [`GradSink`] entry point with the
+    /// `force_fused` override, used to pin the two attention-core paths
+    /// against each other on the same shape.
+    #[cfg(test)]
     fn backward_impl(
         &self,
         params: &[f32],
         x: &HostTensor,
         dy: &HostTensor,
         gs: &mut GradSink<'_>,
+        need_dx: bool,
+        force_fused: Option<bool>,
+    ) -> Result<HostTensor> {
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx, force_fused)
+    }
+
+    /// Backward body shared by both attention-core paths and both
+    /// [`ParamSink`] modes — the norm-only (ghost) protocol folds each
+    /// sample's four projection gradients into its squared norm from the
+    /// same code path the materializing backward writes rows through.
+    /// `force_fused` overrides the `fused_at(t_len)` dispatch.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
         need_dx: bool,
         force_fused: Option<bool>,
     ) -> Result<HostTensor> {
@@ -509,9 +547,7 @@ impl MultiHeadAttention {
             } else {
                 self.attend(q_s, k_s, v_s, t_len, &mut probs, &mut ctx);
             }
-            let g = gs.row(s);
-            // output projection: dW_o/db_o, and dctx = dy · W_o
-            self.project_param_grads(3, &ctx, dy_s, t_len, g);
+            // dctx = dy · W_o (the output-projection input gradient)
             dctx.fill(0.0);
             gemm::sgemm(t_len, d, d, dy_s, d, &params[wo_off..wo_off + d * d], d, &mut dctx, d);
             if fused {
@@ -557,10 +593,18 @@ impl MultiHeadAttention {
                     gemm::sgemm_tn(t_len, hd, t_len, pm, t_len, &dctx[off..], d, dv_h, d);
                 }
             }
-            // input projections: this sample's dW/db from its dq/dk/dv
-            self.project_param_grads(0, x_s, &dq[s * per..(s + 1) * per], t_len, g);
-            self.project_param_grads(1, x_s, &dk[s * per..(s + 1) * per], t_len, g);
-            self.project_param_grads(2, x_s, &dv[s * per..(s + 1) * per], t_len, g);
+            // all four projections' dW/db for this sample land in one
+            // sink visit: disjoint `proj_offsets` regions of the same
+            // gradient slice (or norm scratch)
+            let dq_s = &dq[s * per..(s + 1) * per];
+            let dk_s = &dk[s * per..(s + 1) * per];
+            let dv_s = &dv[s * per..(s + 1) * per];
+            sink.with_sample(s, |g| {
+                self.project_param_grads(3, &ctx, dy_s, t_len, g);
+                self.project_param_grads(0, x_s, dq_s, t_len, g);
+                self.project_param_grads(1, x_s, dk_s, t_len, g);
+                self.project_param_grads(2, x_s, dv_s, t_len, g);
+            });
         }
         if !need_dx {
             return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
@@ -849,6 +893,26 @@ mod tests {
         assert!(dx2.is_empty());
         assert_eq!(a, b, "param grads must not depend on need_dx");
         assert!(a.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn ghost_protocol_matches_materialized_per_sample_norms() {
+        // T = 5 exercises the materialized attention core, T = 64 the
+        // fused streaming one — the norm-only protocol must agree with
+        // materialized per-sample rows on both paths
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        let params = init_params(&m, 17);
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        for &t_len in &[5usize, 64] {
+            let n = 3 * t_len * 8;
+            let mut xv = vec![0f32; n];
+            let mut dyv = vec![0f32; n];
+            crate::rng::gaussian::fill_standard_normal(&mut rng, &mut xv);
+            crate::rng::gaussian::fill_standard_normal(&mut rng, &mut dyv);
+            let x = HostTensor::f32(vec![3, t_len, 8], xv);
+            let dy = HostTensor::f32(vec![3, t_len, 8], dyv);
+            super::super::test_util::ghost_check(&m, &params, &x, &dy);
+        }
     }
 
     #[test]

@@ -401,8 +401,32 @@ thread_local! {
     static SCRATCH: RefCell<Scratch> = const { RefCell::new(Scratch::empty()) };
 }
 
+/// Process-wide high-water mark of any single thread's pack-buffer
+/// bytes. Ghost clipping's pitch is a *memory* trade, so the bench and
+/// MetricsLog report this alongside wall-clock numbers.
+static PEAK_SCRATCH_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Largest per-thread pack-arena footprint (bytes) observed since the
+/// last [`reset_peak_scratch`]. Monotone within a window; cheap enough
+/// (one relaxed `fetch_max` per GEMM) to leave always-on.
+pub fn peak_scratch_bytes() -> usize {
+    PEAK_SCRATCH_BYTES.load(Ordering::Relaxed)
+}
+
+/// Restart the peak-scratch window (benches call this between variants
+/// so each reports its own footprint).
+pub fn reset_peak_scratch() {
+    PEAK_SCRATCH_BYTES.store(0, Ordering::Relaxed);
+}
+
 fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
-    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let r = f(&mut s);
+        let bytes = (s.apack.len() + s.bpack.len()) * std::mem::size_of::<f32>();
+        PEAK_SCRATCH_BYTES.fetch_max(bytes, Ordering::Relaxed);
+        r
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -1493,6 +1517,24 @@ mod tests {
         let mut c2 = vec![0f32; m * n];
         sgemm(m, n, k, &a, k, &b, n, &mut c2, n);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn peak_scratch_tracks_pack_high_water_mark() {
+        let (m, n, k) = (33, 29, 160);
+        let a = real_matrix(m, k, 40);
+        let b = real_matrix(k, n, 41);
+        let mut c = vec![0f32; m * n];
+        sgemm(m, n, k, &a, k, &b, n, &mut c, n);
+        let peak = peak_scratch_bytes();
+        assert!(peak > 0, "a real GEMM must register pack scratch");
+        // a tiny call afterwards must not lower the recorded peak
+        let mut tiny = vec![0f32; 1];
+        sgemm(1, 1, 1, &a, 1, &b, 1, &mut tiny, 1);
+        assert!(peak_scratch_bytes() >= peak);
+        // reset restarts the window (concurrent test threads may record
+        // new GEMMs immediately, so only the monotone part is asserted)
+        reset_peak_scratch();
     }
 
     #[test]

@@ -8,6 +8,16 @@
 //! the paper's vectorized-computation design (einsum-style, after Lee &
 //! Kifer 2020) and is what per-sample clipping consumes.
 //!
+//! The trait additionally carries the **norm-only (ghost clipping)
+//! protocol** (Lee & Kifer 2020): [`GradSampleLayer::per_sample_sq_norm`]
+//! folds each sample's squared parameter-gradient norm into a `[B]`
+//! accumulator without ever materializing the `[B, P]` matrix, and
+//! [`GradSampleLayer::backward_weighted`] replays the backward with
+//! per-sample clip coefficients so the clipped *summed* gradient comes
+//! out of a stride-0 [`GradSink`] in O(P) memory. Both are provided
+//! methods: custom layers that skip them stay source-compatible but are
+//! rejected with a typed error under `ClippingStrategy::Ghost`.
+//!
 //! This trait is also the **user-defined-layer extension point**: to add
 //! a custom layer kind, implement `GradSampleLayer`, include it in a
 //! [`NativeModel`](super::model::NativeModel) stack, and register the
@@ -73,6 +83,62 @@ impl<'a> GradSink<'a> {
     }
 }
 
+/// Where a backward kernel sends each sample's parameter gradient:
+/// either a [`GradSink`] row (the materializing / summed paths), or a
+/// reused O(P_layer) scratch buffer whose squared sum is folded into the
+/// sample's norm accumulator right after the kernel writes it — the
+/// ghost-clipping norm pass. The heavyweight kernels (conv2d, layernorm,
+/// the recurrent family, attention) route their one backward body
+/// through this, so `backward` and `per_sample_sq_norm` cannot drift
+/// apart.
+pub(super) enum ParamSink<'a, 'b> {
+    /// Write into the per-sample gradient matrix (or its shared row).
+    Grad(&'b mut GradSink<'a>),
+    /// Stage each sample's gradient in `scratch` (length = the layer's
+    /// `num_params()`), then accumulate `Σ g²` into `out[b]`.
+    SqNorm {
+        scratch: &'b mut [f32],
+        out: &'b mut [f64],
+    },
+}
+
+impl ParamSink<'_, '_> {
+    /// Run `f` on sample `s`'s gradient slice. In `SqNorm` mode the
+    /// scratch is zeroed first and its squared sum folded into `out[s]`
+    /// after `f` returns, so the kernel body is identical either way.
+    pub(super) fn with_sample(&mut self, s: usize, f: impl FnOnce(&mut [f32])) {
+        match self {
+            ParamSink::Grad(gs) => f(gs.row(s)),
+            ParamSink::SqNorm { scratch, out } => {
+                scratch.fill(0.0);
+                f(scratch);
+                out[s] += scratch.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
+            }
+        }
+    }
+}
+
+/// `dy` with every row of sample `b` scaled by `coeffs[b]` — the default
+/// lowering of [`GradSampleLayer::backward_weighted`].
+fn scale_rows(dy: &HostTensor, coeffs: &[f32]) -> Result<HostTensor> {
+    let b = batch_of(dy);
+    if coeffs.len() != b {
+        bail!(
+            "backward_weighted: {} clip coefficients for a batch of {b}",
+            coeffs.len()
+        );
+    }
+    let per = per_sample_elems(dy);
+    let mut v = dy.as_f32()?.to_vec();
+    for s in 0..b {
+        let c = coeffs[s];
+        for e in v[s * per..(s + 1) * per].iter_mut() {
+            *e *= c;
+        }
+    }
+    Ok(HostTensor::f32(dy.shape.clone(), v))
+}
+
 /// A layer with a batched per-sample gradient rule.
 ///
 /// `Send + Sync` is part of the contract: the distributed subsystem
@@ -110,6 +176,62 @@ pub trait GradSampleLayer: Send + Sync {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor>;
+
+    /// True when this layer implements the norm-only (ghost) clipping
+    /// protocol — [`Self::per_sample_sq_norm`] plus (directly or through
+    /// the provided default) [`Self::backward_weighted`]. Defaults to
+    /// `false`: `ClippingStrategy::Ghost` rejects such kinds with a
+    /// typed error instead of silently falling back to materialization.
+    fn supports_ghost(&self) -> bool {
+        false
+    }
+
+    /// Norm-only backward — ghost clipping pass 1. Folds each sample's
+    /// *squared* parameter-gradient L2 norm into `sqn[b]` without
+    /// materializing the `[B, P]` matrix, and returns `dx` exactly as
+    /// [`Self::backward`] would (so the pass still propagates upstream
+    /// gradients). Implementations use closed forms (linear:
+    /// ‖dy_b‖²·(‖x_b‖² + 1)) or an O(P_layer) scratch reused across
+    /// samples — never O(B·P) memory.
+    fn per_sample_sq_norm(
+        &self,
+        _params: &[f32],
+        _x: &HostTensor,
+        _dy: &HostTensor,
+        _sqn: &mut [f64],
+        _need_dx: bool,
+    ) -> Result<HostTensor> {
+        bail!(
+            "layer kind '{}' does not implement the norm-only (ghost) clipping \
+             protocol: implement per_sample_sq_norm (and return true from \
+             supports_ghost) on the custom GradSampleLayer, or train with \
+             --clipping flat",
+            self.kind()
+        )
+    }
+
+    /// Weighted backward — ghost clipping pass 2. Like [`Self::backward`]
+    /// but with sample `b`'s entire contribution (parameter gradients
+    /// *and* its `dx` rows) scaled by `coeffs[b]`. Driven with a
+    /// stride-0 shared sink this produces the clipped *summed* gradient
+    /// directly in O(P) memory — for `Linear`, one stride-0 TN GEMM.
+    ///
+    /// Every backward in this engine is linear in `dy` given the cached
+    /// activations, so the provided default — scale a copy of `dy`
+    /// row-wise, then delegate to [`Self::backward`] — is exact; custom
+    /// layers only need to override it as an optimization.
+    fn backward_weighted(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        coeffs: &[f32],
+        gs: &mut GradSink<'_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let dyw = scale_rows(dy, coeffs)?;
+        self.backward(params, x, &dyw, gs, need_dx)
+    }
 
     /// Deterministic parameter initialization into this layer's slice.
     fn init(&self, params: &mut [f32], rng: &mut dyn Rng);
@@ -247,6 +369,46 @@ impl GradSampleLayer for Linear {
         Ok(HostTensor::f32(shape, dx))
     }
 
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (ind, outd) = (self.in_dim, self.out_dim);
+        // dW_b = dy_b ⊗ x_b is rank-1, so ‖dW_b‖² = ‖dy_b‖²·‖x_b‖² and
+        // ‖db_b‖² = ‖dy_b‖² — O(B·(in + out)) instead of O(B·P).
+        for s in 0..b {
+            let x2: f64 = xs[s * ind..(s + 1) * ind]
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum();
+            let dy2: f64 = dys[s * outd..(s + 1) * outd]
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum();
+            sqn[s] += dy2 * (x2 + 1.0);
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
+        }
+        let w = &params[..outd * ind];
+        let mut dx = vec![0f32; b * ind];
+        gemm::sgemm(b, ind, outd, dys, outd, w, ind, &mut dx, ind);
+        let mut shape = vec![b];
+        shape.extend_from_slice(&x.shape[1..]);
+        Ok(HostTensor::f32(shape, dx))
+    }
+
     fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
         let nw = self.out_dim * self.in_dim;
         gaussian::fill_standard_normal(rng, &mut params[..nw]);
@@ -355,6 +517,66 @@ impl Conv2d {
             }
         }
     }
+
+    /// One backward body for both the materializing and norm-only paths:
+    /// the per-sample `dW/db` write lands wherever `sink` points.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let &[h, w, _] = &x.shape[1..] else {
+            bail!("conv2d backward: bad input shape {:?}", x.shape);
+        };
+        let (oh, ow) = self.out_hw(h, w)?;
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let (ic, oc) = (self.in_c, self.out_c);
+        let cw = self.col_width();
+        let wts = &params[..oc * cw];
+        let nw = oc * cw;
+        let mut dx = if need_dx {
+            vec![0f32; b * h * w * ic]
+        } else {
+            Vec::new()
+        };
+        let mut col = vec![0f32; oh * ow * cw];
+        let mut dcol = if need_dx {
+            vec![0f32; oh * ow * cw]
+        } else {
+            Vec::new()
+        };
+        for smp in 0..b {
+            let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
+            let dyr = &dys[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
+            self.im2col(xr, h, w, oh, ow, &mut col);
+            sink.with_sample(smp, |g| {
+                // dW[oc, cw] += dyᵀ[oc, oh·ow] · col[oh·ow, cw]
+                gemm::sgemm_tn(oc, cw, oh * ow, dyr, oc, &col, cw, &mut g[..nw], cw);
+                for pos in 0..oh * ow {
+                    for o in 0..oc {
+                        g[nw + o] += dyr[pos * oc + o];
+                    }
+                }
+            });
+            if need_dx {
+                // dcol[oh·ow, cw] = dy[oh·ow, oc] · W[oc, cw], then the
+                // col2im scatter-add back to image space
+                dcol.fill(0.0);
+                gemm::sgemm(oh * ow, cw, oc, dyr, oc, wts, cw, &mut dcol, cw);
+                let dxr = &mut dx[smp * h * w * ic..(smp + 1) * h * w * ic];
+                self.col2im(&dcol, h, w, oh, ow, dxr);
+            }
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(vec![b, h, w, ic], dx))
+    }
 }
 
 impl GradSampleLayer for Conv2d {
@@ -411,53 +633,27 @@ impl GradSampleLayer for Conv2d {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
-        let b = batch_of(x);
-        let &[h, w, _] = &x.shape[1..] else {
-            bail!("conv2d backward: bad input shape {:?}", x.shape);
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
         };
-        let (oh, ow) = self.out_hw(h, w)?;
-        let xs = x.as_f32()?;
-        let dys = dy.as_f32()?;
-        let (ic, oc) = (self.in_c, self.out_c);
-        let cw = self.col_width();
-        let wts = &params[..oc * cw];
-        let nw = oc * cw;
-        let mut dx = if need_dx {
-            vec![0f32; b * h * w * ic]
-        } else {
-            Vec::new()
-        };
-        let mut col = vec![0f32; oh * ow * cw];
-        let mut dcol = if need_dx {
-            vec![0f32; oh * ow * cw]
-        } else {
-            Vec::new()
-        };
-        for smp in 0..b {
-            let xr = &xs[smp * h * w * ic..(smp + 1) * h * w * ic];
-            let dyr = &dys[smp * oh * ow * oc..(smp + 1) * oh * ow * oc];
-            self.im2col(xr, h, w, oh, ow, &mut col);
-            let g = gs.row(smp);
-            // dW[oc, cw] += dyᵀ[oc, oh·ow] · col[oh·ow, cw]
-            gemm::sgemm_tn(oc, cw, oh * ow, dyr, oc, &col, cw, &mut g[..nw], cw);
-            for pos in 0..oh * ow {
-                for o in 0..oc {
-                    g[nw + o] += dyr[pos * oc + o];
-                }
-            }
-            if need_dx {
-                // dcol[oh·ow, cw] = dy[oh·ow, oc] · W[oc, cw], then the
-                // col2im scatter-add back to image space
-                dcol.fill(0.0);
-                gemm::sgemm(oh * ow, cw, oc, dyr, oc, wts, cw, &mut dcol, cw);
-                let dxr = &mut dx[smp * h * w * ic..(smp + 1) * h * w * ic];
-                self.col2im(&dcol, h, w, oh, ow, dxr);
-            }
-        }
-        if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
-        }
-        Ok(HostTensor::f32(vec![b, h, w, ic], dx))
+        self.backward_core(params, x, dy, &mut sink, need_dx)
     }
 
     fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
@@ -546,6 +742,55 @@ impl GradSampleLayer for Embedding {
         Ok(HostTensor::f32(vec![b, 0], Vec::new()))
     }
 
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        _params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        _need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let t = per_sample_elems(x);
+        let toks = x.as_i32()?;
+        let dys = dy.as_f32()?;
+        let d = self.dim;
+        // A sample touches ≤ T of the V vocab rows, so its gradient lives
+        // in a [T, d] scratch keyed by distinct token: accumulate repeats
+        // in position order (exactly as `backward` does into the full
+        // row), then square — O(B·T·d) memory-free of the vocab size.
+        let mut acc = vec![0f32; t * d];
+        let mut seen: Vec<i32> = Vec::with_capacity(t);
+        for smp in 0..b {
+            seen.clear();
+            for pos in 0..t {
+                let tok = toks[smp * t + pos];
+                let dyr = &dys[(smp * t + pos) * d..(smp * t + pos + 1) * d];
+                match seen.iter().position(|&s| s == tok) {
+                    Some(i) => {
+                        let ar = &mut acc[i * d..(i + 1) * d];
+                        for j in 0..d {
+                            ar[j] += dyr[j];
+                        }
+                    }
+                    None => {
+                        acc[seen.len() * d..(seen.len() + 1) * d].copy_from_slice(dyr);
+                        seen.push(tok);
+                    }
+                }
+            }
+            sqn[smp] += acc[..seen.len() * d]
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum::<f64>();
+        }
+        Ok(HostTensor::f32(vec![b, 0], Vec::new()))
+    }
+
     fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
         gaussian::fill_standard_normal(rng, params);
         for p in params.iter_mut() {
@@ -566,6 +811,63 @@ pub struct LayerNorm {
 impl LayerNorm {
     pub fn new(dim: usize) -> Self {
         LayerNorm { dim, eps: 1e-5 }
+    }
+
+    /// One backward body for both the materializing and norm-only paths.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let b = batch_of(x);
+        let xs = x.as_f32()?;
+        let dys = dy.as_f32()?;
+        let d = self.dim;
+        let rows_per_sample = per_sample_elems(x) / d;
+        let gamma = &params[..d];
+        let mut dx = if need_dx {
+            vec![0f32; xs.len()]
+        } else {
+            Vec::new()
+        };
+        for smp in 0..b {
+            sink.with_sample(smp, |g| {
+                for rr in 0..rows_per_sample {
+                    let r = smp * rows_per_sample + rr;
+                    let xr = &xs[r * d..(r + 1) * d];
+                    let dyr = &dys[r * d..(r + 1) * d];
+                    let (mu, inv) = row_stats(xr, self.eps);
+                    let mut m1 = 0.0f64; // mean(dxhat)
+                    let mut m2 = 0.0f64; // mean(dxhat * xhat)
+                    for j in 0..d {
+                        let xhat = (xr[j] as f64 - mu) * inv;
+                        let dxhat = dyr[j] as f64 * gamma[j] as f64;
+                        m1 += dxhat;
+                        m2 += dxhat * xhat;
+                        // per-sample parameter grads: dgamma then dbeta
+                        g[j] += (dyr[j] as f64 * xhat) as f32;
+                        g[d + j] += dyr[j];
+                    }
+                    if need_dx {
+                        m1 /= d as f64;
+                        m2 /= d as f64;
+                        let dxr = &mut dx[r * d..(r + 1) * d];
+                        for j in 0..d {
+                            let xhat = (xr[j] as f64 - mu) * inv;
+                            let dxhat = dyr[j] as f64 * gamma[j] as f64;
+                            dxr[j] = (inv * (dxhat - m1 - xhat * m2)) as f32;
+                        }
+                    }
+                }
+            });
+        }
+        if !need_dx {
+            return Ok(HostTensor::f32(vec![b, 0], dx));
+        }
+        Ok(HostTensor::f32(x.shape.clone(), dx))
     }
 }
 
@@ -615,51 +917,27 @@ impl GradSampleLayer for LayerNorm {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
-        let b = batch_of(x);
-        let xs = x.as_f32()?;
-        let dys = dy.as_f32()?;
-        let d = self.dim;
-        let rows_per_sample = per_sample_elems(x) / d;
-        let gamma = &params[..d];
-        let mut dx = if need_dx {
-            vec![0f32; xs.len()]
-        } else {
-            Vec::new()
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
         };
-        for smp in 0..b {
-            let g = gs.row(smp);
-            for rr in 0..rows_per_sample {
-                let r = smp * rows_per_sample + rr;
-                let xr = &xs[r * d..(r + 1) * d];
-                let dyr = &dys[r * d..(r + 1) * d];
-                let (mu, inv) = row_stats(xr, self.eps);
-                let mut m1 = 0.0f64; // mean(dxhat)
-                let mut m2 = 0.0f64; // mean(dxhat * xhat)
-                for j in 0..d {
-                    let xhat = (xr[j] as f64 - mu) * inv;
-                    let dxhat = dyr[j] as f64 * gamma[j] as f64;
-                    m1 += dxhat;
-                    m2 += dxhat * xhat;
-                    // per-sample parameter grads: dgamma then dbeta
-                    g[j] += (dyr[j] as f64 * xhat) as f32;
-                    g[d + j] += dyr[j];
-                }
-                if need_dx {
-                    m1 /= d as f64;
-                    m2 /= d as f64;
-                    let dxr = &mut dx[r * d..(r + 1) * d];
-                    for j in 0..d {
-                        let xhat = (xr[j] as f64 - mu) * inv;
-                        let dxhat = dyr[j] as f64 * gamma[j] as f64;
-                        dxr[j] = (inv * (dxhat - m1 - xhat * m2)) as f32;
-                    }
-                }
-            }
-        }
-        if !need_dx {
-            return Ok(HostTensor::f32(vec![b, 0], dx));
-        }
-        Ok(HostTensor::f32(x.shape.clone(), dx))
+        self.backward_core(params, x, dy, &mut sink, need_dx)
     }
 
     fn init(&self, params: &mut [f32], _rng: &mut dyn Rng) {
@@ -791,6 +1069,62 @@ mod tests {
         assert!(s.abs() < 1e-5, "Σdx = {s}");
         // dbeta = dy
         assert_eq!(&buf[4..], dy.as_f32().unwrap());
+    }
+
+    #[test]
+    fn ghost_protocol_matches_materialized_per_sample_norms() {
+        use crate::rng::gaussian::fill_standard_normal;
+        use crate::rng::pcg::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let mut gauss = |n: usize| {
+            let mut v = vec![0f32; n];
+            fill_standard_normal(&mut rng, &mut v);
+            v
+        };
+        // linear: closed-form rank-1 norms vs materialized rows
+        let l = Linear::new(3, 2);
+        let params = init_params(&l, 1);
+        let x = HostTensor::f32(vec![4, 3], gauss(12));
+        let dy = HostTensor::f32(vec![4, 2], gauss(8));
+        super::super::test_util::ghost_check(&l, &params, &x, &dy);
+        // conv2d: scratch-reuse of the im2col backward body
+        let c = Conv2d::new(2, 3, 3, 1, 1);
+        let params = init_params(&c, 2);
+        let x = HostTensor::f32(vec![4, 5, 5, 2], gauss(4 * 5 * 5 * 2));
+        let dy = HostTensor::f32(vec![4, 5, 5, 3], gauss(4 * 5 * 5 * 3));
+        super::super::test_util::ghost_check(&c, &params, &x, &dy);
+        // embedding: distinct-token accumulation (tokens 1 and 3 repeat)
+        let e = Embedding::new(10, 4);
+        let params = init_params(&e, 3);
+        let x = HostTensor::i32(vec![4, 6], vec![
+            1, 3, 1, 0, 9, 3, //
+            2, 2, 2, 2, 2, 2, //
+            5, 6, 7, 8, 9, 0, //
+            3, 1, 3, 1, 3, 1,
+        ]);
+        let dy = HostTensor::f32(vec![4, 6, 4], gauss(4 * 6 * 4));
+        super::super::test_util::ghost_check(&e, &params, &x, &dy);
+        // layernorm: per-row gamma/beta grads through the shared body
+        let ln = LayerNorm::new(6);
+        let params = init_params(&ln, 4);
+        let x = HostTensor::f32(vec![4, 6], gauss(24));
+        let dy = HostTensor::f32(vec![4, 6], gauss(24));
+        super::super::test_util::ghost_check(&ln, &params, &x, &dy);
+    }
+
+    #[test]
+    fn ghost_rejects_mismatched_coefficient_counts() {
+        let l = Linear::new(2, 2);
+        let params = init_params(&l, 5);
+        let x = HostTensor::f32(vec![3, 2], vec![0.5; 6]);
+        let dy = HostTensor::f32(vec![3, 2], vec![0.1; 6]);
+        let mut buf = vec![0f32; 6];
+        let mut gs = GradSink::new(&mut buf, 0, 0, 6);
+        let err = l
+            .backward_weighted(&params, &x, &dy, &[1.0, 1.0], &mut gs, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("clip coefficients"), "{err}");
     }
 
     #[test]

@@ -21,13 +21,17 @@
 //! * [`model`] — sequential stacks + softmax-CE head + clipping pipeline
 //! * [`steps`] — the step-family adapters the trainer consumes
 //!
-//! Tasks served natively: `mnist`, `cifar`, `embed`, `lstm`, `attn`.
-//! The `lstm` task runs a *true* time-unrolled recurrent model
-//! (embedding → LSTM → meanpool → linear); the `attn` task runs
-//! embedding → multi-head attention → meanpool → linear. Every paper
-//! layer row (linear, conv, embedding, layernorm, LSTM, GRU, generic
-//! RNN, MHA) now has a native per-sample-gradient kernel — the XLA
-//! artifacts are a performance path, not a coverage one.
+//! Tasks served natively: `mnist`, `cifar`, `embed`, `lstm`, `attn`,
+//! `transformer`. The `lstm` task runs a *true* time-unrolled recurrent
+//! model (embedding → LSTM → meanpool → linear); the `attn` task runs
+//! embedding → multi-head attention → meanpool → linear; `transformer`
+//! scales that to ~10M params (embedding → MHA ×2 → meanpool → linear)
+//! — big enough that materializing `[B, P]` per-sample gradients blows
+//! the default memory cap and ghost clipping (`--clipping ghost`) is
+//! the intended path. Every paper layer row (linear, conv, embedding,
+//! layernorm, LSTM, GRU, generic RNN, MHA) now has a native
+//! per-sample-gradient kernel — the XLA artifacts are a performance
+//! path, not a coverage one.
 
 pub mod attention;
 pub mod gemm;
@@ -52,7 +56,7 @@ pub use self::layers::{GradSampleLayer, GradSink};
 pub use self::recurrent::{Gru, Lstm, Rnn};
 
 /// Tasks the native backend can serve (matches `data::synth::VALID_TASKS`).
-pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn"];
+pub const NATIVE_TASKS: &[&str] = &["mnist", "cifar", "embed", "lstm", "attn", "transformer"];
 
 /// Per-task deterministic parameter-init seed (stable across runs so
 /// checkpoints and parity tests are reproducible).
@@ -136,6 +140,24 @@ pub fn model_for_task(task: &str) -> Result<NativeModel> {
                 Op::Layer(Box::new(Linear::new(16, 2))),
             ],
         ),
+        // transformer-scale sequence classification: ~10.5M params, so a
+        // batch of 32 materialized per-sample gradients is 32 × 10.5M ×
+        // 4 B ≈ 1.34 GB — past the 1 GiB default materialization cap.
+        // Ghost clipping keeps the same batch at O(B·L) norm memory.
+        "transformer" => NativeModel::new(
+            task,
+            vec![64],
+            "i32",
+            2,
+            Some(38912),
+            vec![
+                Op::Layer(Box::new(Embedding::new(38912, 256))), // [64,256]
+                Op::Layer(Box::new(MultiHeadAttention::new(256, 4)?)), // [64,256]
+                Op::Layer(Box::new(MultiHeadAttention::new(256, 4)?)), // [64,256]
+                Op::MeanPool,                                    // [256]
+                Op::Layer(Box::new(Linear::new(256, 2))),
+            ],
+        ),
         other => Err(anyhow!(
             "no native model for task '{other}' (native tasks: {})",
             NATIVE_TASKS.join(", ")
@@ -170,6 +192,37 @@ impl NativeBackend {
     pub fn model(&self) -> &Arc<NativeModel> {
         &self.model
     }
+
+    /// The single-process step family. `ghost` selects the two-pass
+    /// norm-only clipping pipeline over the materializing one in both
+    /// the fused and accumulating (BatchMemoryManager) step variants.
+    fn steps_single(&self, physical_batch: usize, ghost: bool) -> Result<TrainerSteps> {
+        if physical_batch == 0 {
+            return Err(anyhow!("native backend: physical batch must be positive"));
+        }
+        let (fused, accum) = if ghost {
+            (
+                NativeFusedStep::new_ghost(self.model.clone(), physical_batch),
+                NativeAccumStep::new_ghost(self.model.clone(), physical_batch),
+            )
+        } else {
+            (
+                NativeFusedStep::new(self.model.clone(), physical_batch),
+                NativeAccumStep::new(self.model.clone(), physical_batch),
+            )
+        };
+        Ok(TrainerSteps {
+            backend: BackendKind::Native,
+            workers: 1,
+            fused_dp: Some(Box::new(fused)),
+            accum: Some(Box::new(accum)),
+            apply: Some(Box::new(NativeApplyStep::new(self.model.num_params()))),
+            eval: Some(Box::new(NativeEvalStep::new(
+                self.model.clone(),
+                physical_batch,
+            ))),
+        })
+    }
 }
 
 impl ExecutionBackend for NativeBackend {
@@ -190,26 +243,7 @@ impl ExecutionBackend for NativeBackend {
     }
 
     fn trainer_steps(&self, physical_batch: usize) -> Result<TrainerSteps> {
-        if physical_batch == 0 {
-            return Err(anyhow!("native backend: physical batch must be positive"));
-        }
-        Ok(TrainerSteps {
-            backend: BackendKind::Native,
-            workers: 1,
-            fused_dp: Some(Box::new(NativeFusedStep::new(
-                self.model.clone(),
-                physical_batch,
-            ))),
-            accum: Some(Box::new(NativeAccumStep::new(
-                self.model.clone(),
-                physical_batch,
-            ))),
-            apply: Some(Box::new(NativeApplyStep::new(self.model.num_params()))),
-            eval: Some(Box::new(NativeEvalStep::new(
-                self.model.clone(),
-                physical_batch,
-            ))),
-        })
+        self.steps_single(physical_batch, false)
     }
 
     /// The native backend is the distributed execution engine: any pool
@@ -221,6 +255,11 @@ impl ExecutionBackend for NativeBackend {
         physical_batch: usize,
         exec: &ExecSpec,
     ) -> Result<TrainerSteps> {
+        if exec.ghost {
+            // fail at build time, not mid-step, when a layer kind lacks
+            // the norm-only protocol
+            self.model.check_ghost_support()?;
+        }
         if !exec.parallelism.uses_pool() {
             if exec.noise_division == crate::distributed::NoiseDivision::PerWorker {
                 return Err(anyhow!(
@@ -228,10 +267,20 @@ impl ExecutionBackend for NativeBackend {
                      set workers > 1 or auto (noise would silently fall back to the root draw)"
                 ));
             }
-            return self.trainer_steps(physical_batch);
+            if !exec.ghost {
+                self.model.check_materialize_cap(physical_batch)?;
+            }
+            return self.steps_single(physical_batch, exec.ghost);
         }
         if physical_batch == 0 {
             return Err(anyhow!("native backend: physical batch must be positive"));
+        }
+        if !exec.ghost {
+            // sharding divides the materialization: cap-check the widest
+            // shard a worker will ever hold, not the logical batch
+            let workers = exec.parallelism.worker_threads()?;
+            self.model
+                .check_materialize_cap(physical_batch.div_ceil(workers))?;
         }
         let dist = DistributedStep::launch(self.model.clone(), physical_batch, exec)?;
         Ok(TrainerSteps {
@@ -255,7 +304,7 @@ impl ExecutionBackend for NativeBackend {
 /// Test-only helpers shared by the kernel modules' unit tests.
 #[cfg(test)]
 pub(super) mod test_util {
-    use super::layers::GradSampleLayer;
+    use super::layers::{GradSampleLayer, GradSink};
     use super::model::NativeModel;
     use crate::rng::pcg::Xoshiro256pp;
     use crate::runtime::tensor::HostTensor;
@@ -266,6 +315,86 @@ pub(super) mod test_util {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         layer.init(&mut p, &mut rng);
         p
+    }
+
+    /// One driver for every kernel's ghost-protocol test: checks the
+    /// norm-only path of `layer` against its materializing backward on
+    /// the same `(params, x, dy)`.
+    ///
+    /// 1. `per_sample_sq_norm` must match each materialized row's Σg²;
+    /// 2. its `dx` must be bitwise identical to `backward`'s;
+    /// 3. `backward_weighted` into a stride-0 sink must match the
+    ///    f64 coefficient-weighted sum of materialized rows, and its
+    ///    `dx` rows must be the unweighted rows scaled by `coeffs[s]`.
+    pub(crate) fn ghost_check(
+        layer: &dyn GradSampleLayer,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+    ) {
+        assert!(layer.supports_ghost(), "{}: supports_ghost", layer.kind());
+        let kind = layer.kind();
+        let b = x.shape[0];
+        let p = layer.num_params();
+        // materialized reference rows + dx
+        let mut rows = vec![0f32; b * p];
+        let mut gs = GradSink::new(&mut rows, p, 0, p);
+        let dx_ref = layer.backward(params, x, dy, &mut gs, true).unwrap();
+        // 1) per-sample squared norms
+        let mut sqn = vec![0f64; b];
+        let dx_norm = layer
+            .per_sample_sq_norm(params, x, dy, &mut sqn, true)
+            .unwrap();
+        for s in 0..b {
+            let want: f64 = rows[s * p..(s + 1) * p]
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum();
+            assert!(
+                (sqn[s] - want).abs() < 1e-5 * want.max(1.0),
+                "{kind}: sqn[{s}] = {} vs materialized {want}",
+                sqn[s]
+            );
+        }
+        // 2) the norm pass's dx is the same backward dx
+        assert_eq!(dx_norm.shape, dx_ref.shape, "{kind}: norm-pass dx shape");
+        assert_eq!(
+            dx_norm.as_f32().unwrap(),
+            dx_ref.as_f32().unwrap(),
+            "{kind}: norm-pass dx must be bitwise identical to backward's"
+        );
+        // 3) weighted backward into a shared (stride-0) sink
+        let coeffs: Vec<f32> = (0..b).map(|s| 0.25 + 0.5 * s as f32).collect();
+        let mut summed = vec![0f32; p];
+        let mut gsw = GradSink::new(&mut summed, 0, 0, p);
+        let dxw = layer
+            .backward_weighted(params, x, dy, &coeffs, &mut gsw, true)
+            .unwrap();
+        for i in 0..p {
+            let want: f64 = (0..b)
+                .map(|s| coeffs[s] as f64 * rows[s * p + i] as f64)
+                .sum();
+            let got = summed[i] as f64;
+            assert!(
+                (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                "{kind}: weighted grad[{i}] = {got} vs {want}"
+            );
+        }
+        if !dxw.is_empty() {
+            let dxr = dx_ref.as_f32().unwrap();
+            let dxws = dxw.as_f32().unwrap();
+            let per = dxr.len() / b;
+            for s in 0..b {
+                for i in 0..per {
+                    let want = coeffs[s] * dxr[s * per + i];
+                    let got = dxws[s * per + i];
+                    assert!(
+                        (got - want).abs() < 1e-5 * want.abs().max(1.0),
+                        "{kind}: weighted dx[{s},{i}] = {got} vs {want}"
+                    );
+                }
+            }
+        }
     }
 
     /// Central-difference gradient check: analytic per-sample gradients
@@ -298,6 +427,63 @@ pub(super) mod test_util {
             );
         }
     }
+
+    /// Finite-difference pin of the norm-only (ghost) protocol itself,
+    /// independent of any backward code. The surrogate per-sample loss
+    /// ℓ_s(θ) = Σ_j dy[s,j]·y_s(θ)[j] has ∂ℓ_s/∂θ equal to exactly the
+    /// per-sample gradient `backward` accumulates for upstream `dy`, so
+    /// central differences of the *forward* pass over every parameter
+    /// rebuild each sample's squared gradient norm from first
+    /// principles — and `per_sample_sq_norm` must agree.
+    pub(crate) fn fd_sq_norm_check(
+        layer: &dyn GradSampleLayer,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+    ) {
+        let kind = layer.kind();
+        let b = x.shape[0];
+        let dyv: Vec<f64> = dy.as_f32().unwrap().iter().map(|&v| v as f64).collect();
+        let per = dyv.len() / b;
+        let losses = |p: &[f32]| -> Vec<f64> {
+            let y = layer.forward(p, x).unwrap();
+            let yv = y.as_f32().unwrap();
+            (0..b)
+                .map(|s| {
+                    (0..per)
+                        .map(|j| yv[s * per + j] as f64 * dyv[s * per + j])
+                        .sum::<f64>()
+                })
+                .collect()
+        };
+        let h = 2e-3f32;
+        let mut p = params.to_vec();
+        let mut fd_sqn = vec![0f64; b];
+        for k in 0..params.len() {
+            let orig = p[k];
+            p[k] = orig + h;
+            let up = losses(&p);
+            p[k] = orig - h;
+            let dn = losses(&p);
+            p[k] = orig;
+            for s in 0..b {
+                let g = (up[s] - dn[s]) / (2.0 * h as f64);
+                fd_sqn[s] += g * g;
+            }
+        }
+        let mut sqn = vec![0f64; b];
+        layer
+            .per_sample_sq_norm(params, x, dy, &mut sqn, false)
+            .unwrap();
+        for s in 0..b {
+            assert!(
+                (sqn[s] - fd_sqn[s]).abs() < 5e-2 * fd_sqn[s].max(1.0),
+                "{kind}: sqn[{s}] = {} vs finite-difference {}",
+                sqn[s],
+                fd_sqn[s]
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -316,6 +502,64 @@ mod tests {
             let params = b.init_params().unwrap();
             assert_eq!(params.len(), meta.num_params);
             assert_eq!(params, b.init_params().unwrap(), "init must be deterministic");
+        }
+    }
+
+    /// Every layer kind's `per_sample_sq_norm` pinned by finite
+    /// differences of the forward pass alone (see
+    /// `test_util::fd_sq_norm_check`) — the one check the closed-form
+    /// norm derivations cannot share a bug with.
+    #[test]
+    fn ghost_norms_pinned_by_finite_differences() {
+        use super::test_util::{fd_sq_norm_check, init_layer_params};
+        use crate::rng::{gaussian, pcg::Xoshiro256pp};
+        use crate::runtime::tensor::HostTensor;
+        let mut rng = Xoshiro256pp::seed_from_u64(53);
+        let mut gauss = |n: usize| {
+            let mut v = vec![0f32; n];
+            gaussian::fill_standard_normal(&mut rng, &mut v);
+            v
+        };
+        // linear: rank-1 closed form ‖dy_b‖²·(‖x_b‖² + 1)
+        let l = Linear::new(3, 2);
+        let params = init_layer_params(&l, 61);
+        let x = HostTensor::f32(vec![3, 3], gauss(9));
+        let dy = HostTensor::f32(vec![3, 2], gauss(6));
+        fd_sq_norm_check(&l, &params, &x, &dy);
+        // conv2d: im2col scratch reuse (stride 1, pad 1 keeps 4×4)
+        let c = Conv2d::new(1, 2, 3, 1, 1);
+        let params = init_layer_params(&c, 62);
+        let x = HostTensor::f32(vec![2, 4, 4, 1], gauss(32));
+        let dy = HostTensor::f32(vec![2, 4, 4, 2], gauss(64));
+        fd_sq_norm_check(&c, &params, &x, &dy);
+        // embedding: distinct-token accumulation (token 2 repeats)
+        let e = Embedding::new(7, 3);
+        let params = init_layer_params(&e, 63);
+        let x = HostTensor::i32(vec![2, 4], vec![1, 2, 2, 0, 5, 6, 5, 2]);
+        let dy = HostTensor::f32(vec![2, 4, 3], gauss(24));
+        fd_sq_norm_check(&e, &params, &x, &dy);
+        // layernorm: per-row gamma/beta norms
+        let ln = layers::LayerNorm::new(5);
+        let params = init_layer_params(&ln, 64);
+        let x = HostTensor::f32(vec![3, 5], gauss(15));
+        let dy = HostTensor::f32(vec![3, 5], gauss(15));
+        fd_sq_norm_check(&ln, &params, &x, &dy);
+        // attention: per-head accumulation through softmax
+        let m = MultiHeadAttention::new(8, 2).unwrap();
+        let params = init_layer_params(&m, 65);
+        let x = HostTensor::f32(vec![2, 4, 8], gauss(64));
+        let dy = HostTensor::f32(vec![2, 4, 8], gauss(64));
+        fd_sq_norm_check(&m, &params, &x, &dy);
+        // recurrent family: per-timestep accumulation through the gates
+        for layer in [
+            Box::new(Lstm::new(3, 4)) as Box<dyn GradSampleLayer>,
+            Box::new(Gru::new(3, 4)),
+            Box::new(Rnn::new(3, 4)),
+        ] {
+            let params = init_layer_params(layer.as_ref(), 66);
+            let x = HostTensor::f32(vec![2, 4, 3], gauss(24));
+            let dy = HostTensor::f32(vec![2, 4, 4], gauss(32));
+            fd_sq_norm_check(layer.as_ref(), &params, &x, &dy);
         }
     }
 
@@ -366,6 +610,62 @@ mod tests {
         };
         let err = b.trainer_steps_parallel(16, &bad).unwrap_err().to_string();
         assert!(err.contains("worker pool"), "{err}");
+    }
+
+    #[test]
+    fn transformer_task_shape_and_params() {
+        let b = NativeBackend::for_task("transformer").unwrap();
+        let meta = b.model_meta();
+        assert_eq!(
+            meta.layer_kinds,
+            vec!["embedding", "mha", "mha", "linear"]
+        );
+        // embedding 38912×256 + 2 × (4·(256² + 256)) + linear 256×2+2
+        assert_eq!(meta.num_params, 10_488_322);
+        assert_eq!(meta.input_shape, vec![64]);
+        assert_eq!(meta.vocab, Some(38912));
+    }
+
+    #[test]
+    fn ghost_exec_spec_builds_single_and_pooled_steps() {
+        use crate::distributed::Parallelism;
+        let b = NativeBackend::for_task("embed").unwrap();
+        let single = ExecSpec {
+            ghost: true,
+            ..Default::default()
+        };
+        let steps = b.trainer_steps_parallel(16, &single).unwrap();
+        assert_eq!(steps.workers, 1);
+        assert!(steps.fused_dp.is_some() && steps.accum.is_some());
+        let pooled = ExecSpec {
+            parallelism: Parallelism::Workers(2),
+            ghost: true,
+            ..Default::default()
+        };
+        let steps = b.trainer_steps_parallel(16, &pooled).unwrap();
+        assert_eq!(steps.workers, 2);
+        assert!(steps.fused_dp.is_some() && steps.eval.is_some());
+    }
+
+    #[test]
+    fn transformer_materializing_blows_the_cap_but_ghost_fits() {
+        // the headline trade: 32 × 10.5M × 4 B ≈ 1.34 GB of per-sample
+        // gradients exceeds the 1 GiB default cap, so the materializing
+        // path must refuse — and point at ghost clipping — while the
+        // ghost path builds the same step family without complaint
+        let b = NativeBackend::for_task("transformer").unwrap();
+        let err = b
+            .trainer_steps_parallel(32, &ExecSpec::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--clipping ghost"), "{err}");
+        assert!(err.contains("OPACUS_MATERIALIZE_CAP"), "{err}");
+        let ghost = ExecSpec {
+            ghost: true,
+            ..Default::default()
+        };
+        let steps = b.trainer_steps_parallel(32, &ghost).unwrap();
+        assert!(steps.fused_dp.is_some());
     }
 
     #[test]

@@ -346,6 +346,190 @@ impl NativeModel {
         })
     }
 
+    /// Every parameterized layer must implement the norm-only protocol
+    /// before ghost clipping can run; typed error naming the offending
+    /// kind(s) otherwise — never a silent fall back to materialization.
+    pub fn check_ghost_support(&self) -> Result<()> {
+        let missing: Vec<&str> = self
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Layer(l) if !l.supports_ghost() => Some(l.kind()),
+                _ => None,
+            })
+            .collect();
+        if !missing.is_empty() {
+            bail!(
+                "{}: ghost clipping requires the norm-only protocol on every layer; \
+                 unsupported kind(s): {} — implement per_sample_sq_norm (and return \
+                 true from supports_ghost), or train with --clipping flat",
+                self.task,
+                missing.join(", ")
+            );
+        }
+        Ok(())
+    }
+
+    /// Bytes the materializing path's `[B, P]` per-sample gradient
+    /// matrix would occupy for a physical batch of `batch`.
+    pub fn materialize_bytes(&self, batch: usize) -> u64 {
+        batch as u64 * self.num_params as u64 * 4
+    }
+
+    /// Refuse to allocate a `[B, P]` materialization larger than the cap
+    /// (`OPACUS_MATERIALIZE_CAP` bytes, default 1 GiB) — the typed
+    /// "this model/batch needs ghost clipping" error, instead of an OOM
+    /// kill mid-training.
+    pub fn check_materialize_cap(&self, batch: usize) -> Result<()> {
+        let cap: u64 = std::env::var("OPACUS_MATERIALIZE_CAP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1 << 30);
+        let need = self.materialize_bytes(batch);
+        if need > cap {
+            bail!(
+                "{}: materializing per-sample gradients needs {need} bytes \
+                 (batch {batch} × {} params × 4) over the {cap}-byte cap \
+                 (OPACUS_MATERIALIZE_CAP); lower the physical batch or train \
+                 with --clipping ghost",
+                self.task,
+                self.num_params
+            );
+        }
+        Ok(())
+    }
+
+    /// Ghost (norm-only) DP gradient of one physical batch: the f32 cast
+    /// of [`dp_grad_partial_ghost`](Self::dp_grad_partial_ghost), exactly
+    /// as [`dp_grad`](Self::dp_grad) is of `dp_grad_partial`.
+    pub fn dp_grad_ghost(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<DpGrad> {
+        let p = self.dp_grad_partial_ghost(params, x, y, mask, clip)?;
+        Ok(DpGrad {
+            gsum: p.gsum.iter().map(|&g| g as f32).collect(),
+            loss_sum: p.loss_sum,
+            snorm_sum: p.snorm_sum,
+            real: p.real,
+        })
+    }
+
+    /// The ghost-clipping shard partial (Lee & Kifer 2020): one forward,
+    /// then two backward passes over the cached trace. Pass 1
+    /// (`clip/ghost_norms` span) folds per-sample squared gradient norms
+    /// layer by layer through
+    /// [`per_sample_sq_norm`](GradSampleLayer::per_sample_sq_norm) —
+    /// O(B) norm state, never the `[B, P]` matrix. Pass 2
+    /// (`clip/ghost_weighted_bwd` span) replays the backward with the
+    /// per-sample clip coefficients applied at the op nearest the loss
+    /// (every backward is linear in `dy`, so its scaled `dx` carries the
+    /// coefficients to all layers below) into a stride-0 [`GradSink`]:
+    /// the clipped *summed* gradient lands in one `[P]` buffer — for the
+    /// final `Linear`, a single stride-0 TN GEMM.
+    ///
+    /// Clipping semantics (`clip_factor`, masked samples contributing
+    /// nothing) are identical to [`dp_grad_partial`](Self::dp_grad_partial);
+    /// the summed gradient differs only by f32 GEMM accumulation in pass
+    /// 2 versus the materializing path's per-row f64 loop.
+    pub fn dp_grad_partial_ghost(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &[i32],
+        mask: &[f32],
+        clip: f32,
+    ) -> Result<DpGradPartial> {
+        self.check_ghost_support()?;
+        let b = *x.shape.first().unwrap_or(&0);
+        if y.len() != b || mask.len() != b {
+            bail!(
+                "{}: batch {} but {} labels / {} mask entries",
+                self.task,
+                b,
+                y.len(),
+                mask.len()
+            );
+        }
+        let trace = self.forward_trace(params, x)?;
+        let logits = trace.last().expect("trace is never empty");
+        let (losses, dlogits) = {
+            let _s = obs::span("bwd", "softmax_ce");
+            softmax_ce_backward(logits, y, mask, self.num_classes)?
+        };
+
+        // pass 1: per-sample squared norms, no parameter-grad memory
+        let mut sqn = vec![0f64; b];
+        {
+            let _s = obs::span("clip", "ghost_norms");
+            let mut dy = dlogits.clone();
+            for (i, op) in self.ops.iter().enumerate().rev() {
+                let op_in = &trace[i];
+                dy = match (op, &self.param_spans[i]) {
+                    (Op::Layer(l), Some((off, len))) => {
+                        let pslice = &params[*off..*off + *len];
+                        l.per_sample_sq_norm(pslice, op_in, &dy, &mut sqn, i != 0)?
+                    }
+                    (Op::Relu, _) => relu_backward(op_in, &dy)?,
+                    (Op::Flatten, _) => reshape_like(dy, op_in),
+                    (Op::MeanPool, _) => meanpool_backward(op_in, &dy)?,
+                    (Op::Layer(_), None) => unreachable!("layer without param span"),
+                };
+            }
+        }
+        // masked samples' dlogits rows are zero, so they contribute
+        // nothing to sqn or to pass 2 whatever their coefficient
+        let coeffs: Vec<f32> = sqn.iter().map(|&q| clip_factor(q.sqrt(), clip)).collect();
+
+        // pass 2: weighted backward into a stride-0 summed sink
+        let mut gsum32 = vec![0f32; self.num_params];
+        {
+            let _s = obs::span("clip", "ghost_weighted_bwd");
+            let last_layer = self.ops.iter().rposition(|op| matches!(op, Op::Layer(_)));
+            let mut dy = dlogits;
+            for (i, op) in self.ops.iter().enumerate().rev() {
+                let op_in = &trace[i];
+                dy = match (op, &self.param_spans[i]) {
+                    (Op::Layer(l), Some((off, len))) => {
+                        let mut sink = GradSink::new(&mut gsum32, 0, *off, *len);
+                        let pslice = &params[*off..*off + *len];
+                        if Some(i) == last_layer {
+                            l.backward_weighted(pslice, op_in, &dy, &coeffs, &mut sink, i != 0)?
+                        } else {
+                            l.backward(pslice, op_in, &dy, &mut sink, i != 0)?
+                        }
+                    }
+                    (Op::Relu, _) => relu_backward(op_in, &dy)?,
+                    (Op::Flatten, _) => reshape_like(dy, op_in),
+                    (Op::MeanPool, _) => meanpool_backward(op_in, &dy)?,
+                    (Op::Layer(_), None) => unreachable!("layer without param span"),
+                };
+            }
+        }
+
+        let mut loss_sum = 0.0;
+        let mut snorm_sum = 0.0;
+        let mut real = 0;
+        for s in 0..b {
+            if mask[s] == 0.0 {
+                continue;
+            }
+            real += 1;
+            loss_sum += losses[s];
+            snorm_sum += sqn[s].sqrt();
+        }
+        Ok(DpGradPartial {
+            gsum: gsum32.iter().map(|&g| g as f64).collect(),
+            loss_sum,
+            snorm_sum,
+            real,
+        })
+    }
+
     /// Plain (non-DP) summed gradient + summed loss over real samples —
     /// the no-DP baseline the benches time. Uses a stride-0 (shared-row)
     /// [`GradSink`], so gradients are accumulated directly into one
@@ -702,6 +886,116 @@ mod tests {
         }
         assert_eq!(real, 2);
         assert!((loss_sum - (ps.losses[0] + ps.losses[2])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ghost_grad_matches_materializing() {
+        // two-pass norm-only clipping vs the [B, P] materializing path:
+        // same clipping rule, so the partials must agree to f32 GEMM
+        // accumulation — through linear + layernorm + relu + linear,
+        // with a masked sample and a clip tight enough to actually bite
+        let m = NativeModel::new(
+            "ghostpar",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(Linear::new(3, 4))),
+                Op::Layer(Box::new(LayerNorm::new(4))),
+                Op::Relu,
+                Op::Layer(Box::new(Linear::new(4, 2))),
+            ],
+        )
+        .unwrap();
+        let params = m.init_params(17);
+        let x = HostTensor::f32(vec![3, 3], vec![0.4, -1.0, 0.2, 0.9, 0.1, -0.3, 0.0, 0.5, 1.1]);
+        let y = [1, 0, 0];
+        let mask = [1.0, 0.0, 1.0];
+        let mat = m.dp_grad_partial(&params, &x, &y, &mask, 0.5).unwrap();
+        let gho = m.dp_grad_partial_ghost(&params, &x, &y, &mask, 0.5).unwrap();
+        assert_eq!(mat.real, gho.real);
+        assert_eq!(mat.loss_sum, gho.loss_sum);
+        assert!(
+            (mat.snorm_sum - gho.snorm_sum).abs() < 1e-9 * mat.snorm_sum.max(1.0),
+            "snorm {} vs {}",
+            mat.snorm_sum,
+            gho.snorm_sum
+        );
+        for (j, (&a, &b)) in mat.gsum.iter().zip(gho.gsum.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5 * a.abs().max(1.0),
+                "param {j}: materializing {a} vs ghost {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn ghost_rejects_unsupported_layer_kinds() {
+        // a custom kind that skips the norm-only protocol must be a
+        // typed error naming the kind, never a silent materialization
+        struct NoGhost;
+        impl GradSampleLayer for NoGhost {
+            fn kind(&self) -> &'static str {
+                "customnog"
+            }
+            fn num_params(&self) -> usize {
+                0
+            }
+            fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+                Ok(in_shape.to_vec())
+            }
+            fn forward(&self, _p: &[f32], x: &HostTensor) -> Result<HostTensor> {
+                Ok(x.clone())
+            }
+            fn backward(
+                &self,
+                _p: &[f32],
+                _x: &HostTensor,
+                dy: &HostTensor,
+                _gs: &mut GradSink<'_>,
+                _need_dx: bool,
+            ) -> Result<HostTensor> {
+                Ok(dy.clone())
+            }
+            fn init(&self, _p: &mut [f32], _rng: &mut dyn crate::rng::Rng) {}
+        }
+        let m = NativeModel::new(
+            "custom",
+            vec![3],
+            "f32",
+            2,
+            None,
+            vec![
+                Op::Layer(Box::new(NoGhost)),
+                Op::Layer(Box::new(Linear::new(3, 2))),
+            ],
+        )
+        .unwrap();
+        let err = m.check_ghost_support().unwrap_err().to_string();
+        assert!(err.contains("customnog"), "{err}");
+        assert!(err.contains("--clipping flat"), "{err}");
+        let x = HostTensor::f32(vec![1, 3], vec![0.1, 0.2, 0.3]);
+        assert!(m
+            .dp_grad_partial_ghost(&m.init_params(1), &x, &[0], &[1.0], 1.0)
+            .is_err());
+        // the direct trait default bails the same way
+        let sink_err = NoGhost
+            .per_sample_sq_norm(&[], &x, &x, &mut [0.0], true)
+            .unwrap_err()
+            .to_string();
+        assert!(sink_err.contains("customnog"), "{sink_err}");
+    }
+
+    #[test]
+    fn materialize_cap_is_a_typed_error() {
+        let m = tiny_model();
+        // tiny P, huge B: 10M × 22 params × 4 B ≈ 0.88 GiB is under the
+        // default cap; 100M blows past it
+        assert!(m.check_materialize_cap(32).is_ok());
+        let err = m.check_materialize_cap(100_000_000).unwrap_err().to_string();
+        assert!(err.contains("--clipping ghost"), "{err}");
+        assert!(err.contains("OPACUS_MATERIALIZE_CAP"), "{err}");
     }
 
     #[test]

@@ -47,7 +47,7 @@ use crate::rng::{gaussian, Rng};
 use crate::runtime::tensor::HostTensor;
 
 use super::gemm;
-use super::layers::{GradSampleLayer, GradSink};
+use super::layers::{GradSampleLayer, GradSink, ParamSink};
 
 #[inline]
 fn sigmoid(x: f32) -> f32 {
@@ -229,6 +229,56 @@ impl GradSampleLayer for Lstm {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
+        };
+        self.backward_core(params, x, dy, &mut sink, need_dx)
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+        // forget-gate bias at 1: the standard trick for gradient flow
+        // through early training (Jozefowicz et al. 2015)
+        let h = self.hidden;
+        params[nw + h..nw + 2 * h].fill(1.0);
+    }
+}
+
+impl Lstm {
+    /// One BPTT body for both the materializing and norm-only paths —
+    /// only the per-sample parameter-gradient tail routes through `sink`;
+    /// the batched reverse sweep is identical.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
         let (b, t_len) = seq_dims("lstm backward", x, self.in_dim)?;
         let xs = x.as_f32()?;
         let dys = dy.as_f32()?;
@@ -278,16 +328,29 @@ impl GradSampleLayer for Lstm {
         }
         // per-sample parameter gradients from the [B, T, 4H] buffer
         for s in 0..b {
-            let g = gs.row(s);
             let da_s = &da_all[s * t_len * 4 * h..(s + 1) * t_len * 4 * h];
             let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
             let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
-            accumulate_param_grads(g, da_s, da_s, x_s, hs_s, t_len, 4 * h, d, h, wx_off, wh_off);
-            for t in 0..t_len {
-                for j in 0..4 * h {
-                    g[b_off + j] += da_s[t * 4 * h + j];
+            sink.with_sample(s, |g| {
+                accumulate_param_grads(
+                    g,
+                    da_s,
+                    da_s,
+                    x_s,
+                    hs_s,
+                    t_len,
+                    4 * h,
+                    d,
+                    h,
+                    wx_off,
+                    wh_off,
+                );
+                for t in 0..t_len {
+                    for j in 0..4 * h {
+                        g[b_off + j] += da_s[t * 4 * h + j];
+                    }
                 }
-            }
+            });
         }
         if !need_dx {
             return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
@@ -296,20 +359,6 @@ impl GradSampleLayer for Lstm {
         let mut dx = vec![0f32; b * t_len * d];
         gemm::sgemm(b * t_len, d, 4 * h, &da_all, 4 * h, wx, d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
-    }
-
-    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
-        let nw = self.wx_len() + self.wh_len();
-        gaussian::fill_standard_normal(rng, &mut params[..nw]);
-        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
-        for p in params[..nw].iter_mut() {
-            *p *= scale;
-        }
-        params[nw..].fill(0.0);
-        // forget-gate bias at 1: the standard trick for gradient flow
-        // through early training (Jozefowicz et al. 2015)
-        let h = self.hidden;
-        params[nw + h..nw + 2 * h].fill(1.0);
     }
 }
 
@@ -431,6 +480,50 @@ impl GradSampleLayer for Gru {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
+        };
+        self.backward_core(params, x, dy, &mut sink, need_dx)
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+impl Gru {
+    /// One BPTT body for both the materializing and norm-only paths.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
         let (b, t_len) = seq_dims("gru backward", x, self.in_dim)?;
         let xs = x.as_f32()?;
         let dys = dy.as_f32()?;
@@ -485,18 +578,31 @@ impl GradSampleLayer for Gru {
             }
         }
         for s in 0..b {
-            let g = gs.row(s);
             let dax_s = &dax_all[s * t_len * 3 * h..(s + 1) * t_len * 3 * h];
             let du_s = &du_all[s * t_len * 3 * h..(s + 1) * t_len * 3 * h];
             let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
             let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
-            accumulate_param_grads(g, dax_s, du_s, x_s, hs_s, t_len, 3 * h, d, h, wx_off, wh_off);
-            for t in 0..t_len {
-                for j in 0..3 * h {
-                    g[bx_off + j] += dax_s[t * 3 * h + j];
-                    g[bh_off + j] += du_s[t * 3 * h + j];
+            sink.with_sample(s, |g| {
+                accumulate_param_grads(
+                    g,
+                    dax_s,
+                    du_s,
+                    x_s,
+                    hs_s,
+                    t_len,
+                    3 * h,
+                    d,
+                    h,
+                    wx_off,
+                    wh_off,
+                );
+                for t in 0..t_len {
+                    for j in 0..3 * h {
+                        g[bx_off + j] += dax_s[t * 3 * h + j];
+                        g[bh_off + j] += du_s[t * 3 * h + j];
+                    }
                 }
-            }
+            });
         }
         if !need_dx {
             return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
@@ -504,16 +610,6 @@ impl GradSampleLayer for Gru {
         let mut dx = vec![0f32; b * t_len * d];
         gemm::sgemm(b * t_len, d, 3 * h, &dax_all, 3 * h, wx, d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
-    }
-
-    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
-        let nw = self.wx_len() + self.wh_len();
-        gaussian::fill_standard_normal(rng, &mut params[..nw]);
-        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
-        for p in params[..nw].iter_mut() {
-            *p *= scale;
-        }
-        params[nw..].fill(0.0);
     }
 }
 
@@ -603,6 +699,50 @@ impl GradSampleLayer for Rnn {
         gs: &mut GradSink<'_>,
         need_dx: bool,
     ) -> Result<HostTensor> {
+        self.backward_core(params, x, dy, &mut ParamSink::Grad(gs), need_dx)
+    }
+
+    fn supports_ghost(&self) -> bool {
+        true
+    }
+
+    fn per_sample_sq_norm(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sqn: &mut [f64],
+        need_dx: bool,
+    ) -> Result<HostTensor> {
+        let mut scratch = vec![0f32; self.num_params()];
+        let mut sink = ParamSink::SqNorm {
+            scratch: &mut scratch,
+            out: sqn,
+        };
+        self.backward_core(params, x, dy, &mut sink, need_dx)
+    }
+
+    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
+        let nw = self.wx_len() + self.wh_len();
+        gaussian::fill_standard_normal(rng, &mut params[..nw]);
+        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
+        for p in params[..nw].iter_mut() {
+            *p *= scale;
+        }
+        params[nw..].fill(0.0);
+    }
+}
+
+impl Rnn {
+    /// One BPTT body for both the materializing and norm-only paths.
+    fn backward_core(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        dy: &HostTensor,
+        sink: &mut ParamSink<'_, '_>,
+        need_dx: bool,
+    ) -> Result<HostTensor> {
         let (b, t_len) = seq_dims("rnn backward", x, self.in_dim)?;
         let xs = x.as_f32()?;
         let dys = dy.as_f32()?;
@@ -631,16 +771,17 @@ impl GradSampleLayer for Rnn {
             }
         }
         for s in 0..b {
-            let g = gs.row(s);
             let da_s = &da_all[s * t_len * h..(s + 1) * t_len * h];
             let x_s = &xs[s * t_len * d..(s + 1) * t_len * d];
             let hs_s = &hs[s * t_len * h..(s + 1) * t_len * h];
-            accumulate_param_grads(g, da_s, da_s, x_s, hs_s, t_len, h, d, h, wx_off, wh_off);
-            for t in 0..t_len {
-                for j in 0..h {
-                    g[b_off + j] += da_s[t * h + j];
+            sink.with_sample(s, |g| {
+                accumulate_param_grads(g, da_s, da_s, x_s, hs_s, t_len, h, d, h, wx_off, wh_off);
+                for t in 0..t_len {
+                    for j in 0..h {
+                        g[b_off + j] += da_s[t * h + j];
+                    }
                 }
-            }
+            });
         }
         if !need_dx {
             return Ok(HostTensor::f32(vec![b, 0], Vec::new()));
@@ -648,16 +789,6 @@ impl GradSampleLayer for Rnn {
         let mut dx = vec![0f32; b * t_len * d];
         gemm::sgemm(b * t_len, d, h, &da_all, h, wx, d, &mut dx, d);
         Ok(HostTensor::f32(x.shape.clone(), dx))
-    }
-
-    fn init(&self, params: &mut [f32], rng: &mut dyn Rng) {
-        let nw = self.wx_len() + self.wh_len();
-        gaussian::fill_standard_normal(rng, &mut params[..nw]);
-        let scale = (1.0 / self.hidden as f64).sqrt() as f32;
-        for p in params[..nw].iter_mut() {
-            *p *= scale;
-        }
-        params[nw..].fill(0.0);
     }
 }
 
@@ -900,6 +1031,34 @@ mod tests {
                     layer.kind()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn ghost_protocol_matches_materialized_per_sample_norms() {
+        // per_sample_sq_norm / backward_weighted vs the materialized
+        // [B, P] rows (which the FD suites above pin to the analytic
+        // gradient) — shared driver in test_util
+        use crate::rng::{gaussian, pcg::Xoshiro256pp};
+        for layer in [
+            Box::new(Lstm::new(3, 4)) as Box<dyn GradSampleLayer>,
+            Box::new(Gru::new(3, 4)),
+            Box::new(Rnn::new(3, 4)),
+        ] {
+            let params = init_params(layer.as_ref(), 29);
+            let (b, t, d) = (3, 5, 3);
+            let hdim = layer.out_shape(&[t, d]).unwrap()[1];
+            let mut rng = Xoshiro256pp::seed_from_u64(31);
+            let mut xv = vec![0f32; b * t * d];
+            gaussian::fill_standard_normal(&mut rng, &mut xv);
+            let mut dyv = vec![0f32; b * t * hdim];
+            gaussian::fill_standard_normal(&mut rng, &mut dyv);
+            super::super::test_util::ghost_check(
+                layer.as_ref(),
+                &params,
+                &HostTensor::f32(vec![b, t, d], xv),
+                &HostTensor::f32(vec![b, t, hdim], dyv),
+            );
         }
     }
 

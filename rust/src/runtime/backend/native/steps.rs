@@ -75,15 +75,30 @@ pub(crate) fn noisy_sgd_update_f64(
         .collect()
 }
 
-/// Fused DP train step (and the plain-SGD baseline variant).
+/// Fused DP train step (and the plain-SGD baseline variant). With
+/// `ghost` set, the DP gradient runs the two-pass norm-only pipeline
+/// ([`NativeModel::dp_grad_ghost`]) instead of materializing `[B, P]`.
 pub struct NativeFusedStep {
     model: Arc<NativeModel>,
     batch: usize,
+    ghost: bool,
 }
 
 impl NativeFusedStep {
     pub fn new(model: Arc<NativeModel>, batch: usize) -> Self {
-        NativeFusedStep { model, batch }
+        NativeFusedStep {
+            model,
+            batch,
+            ghost: false,
+        }
+    }
+
+    pub fn new_ghost(model: Arc<NativeModel>, batch: usize) -> Self {
+        NativeFusedStep {
+            model,
+            batch,
+            ghost: true,
+        }
     }
 }
 
@@ -109,7 +124,11 @@ impl FusedStep for NativeFusedStep {
                 params.len()
             );
         }
-        let g = self.model.dp_grad(params, &x, y, mask, hp.clip)?;
+        let g = if self.ghost {
+            self.model.dp_grad_ghost(params, &x, y, mask, hp.clip)?
+        } else {
+            self.model.dp_grad(params, &x, y, mask, hp.clip)?
+        };
         let new_params = noisy_sgd_update(params, &g.gsum, noise, hp);
         let (loss, snorm_mean) = if g.real > 0 {
             (g.loss_sum / g.real as f64, g.snorm_sum / g.real as f64)
@@ -149,15 +168,31 @@ impl FusedStep for NativeFusedStep {
     }
 }
 
-/// Clipped-gradient accumulation over one physical chunk.
+/// Clipped-gradient accumulation over one physical chunk. With `ghost`
+/// set, each chunk's clipped sum comes from the two-pass norm-only
+/// pipeline — so `BatchMemoryManager` virtual steps compose with ghost
+/// clipping.
 pub struct NativeAccumStep {
     model: Arc<NativeModel>,
     batch: usize,
+    ghost: bool,
 }
 
 impl NativeAccumStep {
     pub fn new(model: Arc<NativeModel>, batch: usize) -> Self {
-        NativeAccumStep { model, batch }
+        NativeAccumStep {
+            model,
+            batch,
+            ghost: false,
+        }
+    }
+
+    pub fn new_ghost(model: Arc<NativeModel>, batch: usize) -> Self {
+        NativeAccumStep {
+            model,
+            batch,
+            ghost: true,
+        }
     }
 }
 
@@ -175,7 +210,11 @@ impl AccumExec for NativeAccumStep {
         clip: f32,
     ) -> Result<AccumOut> {
         check_batch("accum", &x, y, mask, self.batch)?;
-        let g = self.model.dp_grad(params, &x, y, mask, clip)?;
+        let g = if self.ghost {
+            self.model.dp_grad_ghost(params, &x, y, mask, clip)?
+        } else {
+            self.model.dp_grad(params, &x, y, mask, clip)?
+        };
         Ok(AccumOut {
             gsum: g.gsum,
             loss_sum: g.loss_sum,
@@ -468,6 +507,41 @@ mod tests {
             .dp_step(&params, batch.x, &batch.y, &batch.mask, &noise, hp)
             .unwrap();
         assert_eq!(out.params, params);
+    }
+
+    #[test]
+    fn ghost_fused_step_matches_materializing() {
+        // same data, same deterministic (zero) noise: the ghost step
+        // family must land on the materializing family's params to f32
+        // GEMM accumulation, with identical loss
+        let backend = NativeBackend::for_task("attn").unwrap();
+        let model = backend.model().clone();
+        let params = backend.init_params().unwrap();
+        let ds = crate::data::synth::synth_imdb(4, 9, 2000, 32);
+        let batch = ds.gather(&[0, 1, 2, 3], 4).unwrap();
+        let noise = vec![0f32; params.len()];
+        let hp = || HyperParams {
+            lr: 0.5,
+            clip: 0.8,
+            sigma: 0.0,
+            denom: 4.0,
+        };
+        let mat = NativeFusedStep::new(model.clone(), 4)
+            .dp_step(&params, batch.x.clone(), &batch.y, &batch.mask, &noise, hp())
+            .unwrap();
+        let gho = NativeFusedStep::new_ghost(model, 4)
+            .dp_step(&params, batch.x, &batch.y, &batch.mask, &noise, hp())
+            .unwrap();
+        assert_eq!(mat.loss, gho.loss);
+        assert!(
+            (mat.snorm_mean - gho.snorm_mean).abs() < 1e-9 * mat.snorm_mean.max(1.0),
+            "snorm {} vs {}",
+            mat.snorm_mean,
+            gho.snorm_mean
+        );
+        for (j, (a, b)) in mat.params.iter().zip(gho.params.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-6, "param {j}: {a} vs {b}");
+        }
     }
 
     #[test]

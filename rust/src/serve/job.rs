@@ -22,7 +22,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 use crate::coordinator::Opacus;
-use crate::privacy::{AccountantKind, Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use crate::privacy::{
+    AccountantKind, Backend, ClippingStrategy, NoiseSource, PrivacyEngine, SamplingMode,
+};
 use crate::trainer::PrivateTrainer;
 use crate::util::json::Json;
 
@@ -37,6 +39,10 @@ pub struct JobSpec {
     pub delta: f64,
     pub sigma: f64,
     pub clip: f64,
+    /// Per-sample clipping strategy (`"flat"`, `"perlayer"`, `"ghost"`).
+    /// Ghost runs the two-pass norm-only pipeline on the native backend,
+    /// trading a second backward for O(B·L) clipping memory.
+    pub clipping: ClippingStrategy,
     pub lr: f64,
     pub batch: usize,
     pub physical: usize,
@@ -127,6 +133,11 @@ impl JobSpec {
             delta: f64_or("delta", 1e-5)?,
             sigma: f64_or("sigma", 1.1)?,
             clip: f64_or("clip", 1.0)?,
+            clipping: j
+                .get("clipping")
+                .as_str()
+                .unwrap_or("flat")
+                .parse::<ClippingStrategy>()?,
             lr: f64_or("lr", 0.25)?,
             batch,
             // serve defaults to the fused path (physical == logical)
@@ -200,6 +211,7 @@ impl JobSpec {
             })
             .noise_multiplier(self.sigma)
             .max_grad_norm(self.clip)
+            .clipping(self.clipping)
             .lr(self.lr)
             .logical_batch(self.batch)
             .physical_batch(self.physical)
@@ -236,6 +248,17 @@ mod tests {
         assert!(!s.secure);
         assert_eq!(s.pipeline, None);
         assert_eq!(s.max_epochs, None);
+        assert_eq!(s.clipping, ClippingStrategy::Flat);
+    }
+
+    #[test]
+    fn clipping_strategy_parses_from_spec() {
+        let s = parse(r#"{"name":"a","task":"attn","epsilon":2.0,"clipping":"ghost"}"#).unwrap();
+        assert_eq!(s.clipping, ClippingStrategy::Ghost);
+        let err = parse(r#"{"name":"a","task":"attn","epsilon":2.0,"clipping":"soft"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ghost"), "{err}");
     }
 
     #[test]

@@ -241,10 +241,15 @@ impl MetricsLog {
     /// file, never a torn prefix. When observability is collecting, the
     /// live counter/histogram snapshot is merged in under `"obs"`
     /// (`from_json` ignores unknown keys, so old readers still parse).
+    /// The GEMM pack-arena high-water mark rides along under
+    /// `"peak_scratch_bytes"` so the ghost-vs-materializing memory
+    /// trade shows up in every saved run, not just the bench.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut doc = self.to_json();
-        if crate::obs::enabled() {
-            if let Json::Obj(map) = &mut doc {
+        if let Json::Obj(map) = &mut doc {
+            let peak = crate::runtime::backend::native::gemm::peak_scratch_bytes();
+            map.insert("peak_scratch_bytes".to_string(), Json::num(peak as f64));
+            if crate::obs::enabled() {
                 map.insert("obs".to_string(), crate::obs::Snapshot::capture().to_json());
             }
         }
@@ -362,6 +367,7 @@ mod tests {
         m.save(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.contains("records"));
+        assert!(text.contains("peak_scratch_bytes"), "{text}");
         let _ = std::fs::remove_file(&p);
     }
 
