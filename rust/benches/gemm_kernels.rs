@@ -32,11 +32,14 @@
 //! load per macro block) must cost < 3% of the measured blocked time on
 //! every acceptance shape — pricing a dead probe directly and scaling
 //! by the per-call probe count, so a regression that puts allocation or
-//! locking on the disabled path fails loudly.
+//! locking on the disabled path fails loudly. PR-10 folds the fault
+//! injection check (one relaxed load when no plan is armed) into the
+//! same gate.
 
 use anyhow::{bail, Result};
 use std::hint::black_box;
 
+use opacus_rs::faults;
 use opacus_rs::obs;
 use opacus_rs::runtime::backend::native::gemm::{self, GemmOpts, TileKind};
 use opacus_rs::util::cli::Args;
@@ -201,6 +204,20 @@ fn main() -> Result<()> {
     });
     let probe_ns = t_probe_batch / PROBE_BATCH as f64 * 1e9;
     println!("disabled obs probe: {probe_ns:.2} ns per span site (collection off)");
+    // the faults gate (PR 10) is the same discipline: with no plan armed
+    // the per-step injection check is one relaxed load, priced here so a
+    // regression that puts plan parsing or locking on the disabled path
+    // fails the same 3% gate
+    if faults::enabled() {
+        bail!("a fault plan must not be armed for the disabled-instrumentation gate");
+    }
+    let t_faults_batch = time_mean(10, 200, || {
+        for _ in 0..PROBE_BATCH {
+            black_box(faults::enabled());
+        }
+    });
+    let faults_ns = t_faults_batch / PROBE_BATCH as f64 * 1e9;
+    println!("disabled faults probe: {faults_ns:.2} ns per injection check (no plan armed)");
     for s in shapes() {
         let (m, n, k) = (s.m, s.n, s.k);
         let (a, b) = match s.op {
@@ -306,9 +323,10 @@ fn main() -> Result<()> {
         }
         if s.acceptance {
             // worst-case dead probes per call: the driver span plus one
-            // enabled() load per MC×NC macro block
+            // enabled() load per MC×NC macro block, plus the one faults
+            // injection check the dispatching step pays per shard
             let probes = 1 + ((m + bs.mc - 1) / bs.mc) * ((n + bs.nc - 1) / bs.nc);
-            let overhead = probe_ns * 1e-9 * probes as f64;
+            let overhead = probe_ns * 1e-9 * probes as f64 + faults_ns * 1e-9;
             let frac = overhead / t_simd;
             if frac > 0.03 {
                 failures.push(format!(
@@ -432,6 +450,8 @@ fn main() -> Result<()> {
             ("block_kc", Json::num(bs.kc as f64)),
             ("block_nc", Json::num(bs.nc as f64)),
             ("status", Json::str("recorded")),
+            ("obs_probe_ns", Json::num(probe_ns)),
+            ("faults_probe_ns", Json::num(faults_ns)),
             ("peak_scratch_bytes", Json::num(gemm::peak_scratch_bytes() as f64)),
             ("shapes", Json::Obj(rows.into_iter().collect())),
             ("parallel", Json::Obj(par_rows.into_iter().collect())),

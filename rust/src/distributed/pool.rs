@@ -1,4 +1,5 @@
-//! The persistent worker pool — N threads serving shard-scoped jobs.
+//! The persistent, **supervised** worker pool — N threads serving
+//! shard-scoped jobs under a respawn-on-panic contract.
 //!
 //! Each worker owns a clone of the shared read-only
 //! [`NativeModel`](NativeModel) handle plus a private noise generator,
@@ -8,6 +9,18 @@
 //! worker. All gradient scratch (activation traces, `[shard, P]`
 //! per-sample matrices) lives inside the job execution, so nothing
 //! mutable is ever shared between threads.
+//!
+//! **Supervision.** Every job runs under `catch_unwind`. A panicking
+//! worker fails stop: it reports the panic (carrying the still-unserved
+//! job back to the dispatcher) and exits, and [`WorkerPool::run_streaming`]
+//! respawns the rank with a *fresh* generator derived from the same
+//! `(seed, rank)` pair, fast-forwarded by replaying the lengths of
+//! every noise fill the dead worker completed. Because gradient jobs
+//! are pure functions of `(params, shard)` and noise jobs are pure
+//! functions of generator position, deterministic re-execution of the
+//! failed shard produces byte-identical results — a run with injected
+//! panics matches a fault-free run bit for bit (pinned by
+//! `tests/faults.rs`).
 //!
 //! The pool is deliberately dumb: it knows nothing about DP semantics.
 //! Sharding, reduction and noise placement live in
@@ -24,9 +37,10 @@
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::thread;
 
+use crate::faults::{self, FaultInject};
 use crate::obs;
 use crate::rng::{gaussian, Rng};
 use crate::runtime::backend::native::gemm;
@@ -36,11 +50,17 @@ use crate::runtime::tensor::HostTensor;
 use super::noise::worker_rng;
 use super::ExecSpec;
 
+/// Panic-respawns tolerated within one dispatch before the pool gives
+/// up — a shard whose *deterministic re-execution* keeps panicking is a
+/// kernel bug, not a transient fault.
+const MAX_RESPAWNS: usize = 8;
+
 /// One unit of worker work (a shard of a step, or a noise share).
 pub(crate) enum Job {
     /// Clipped per-sample-gradient partial of one shard. `ghost` selects
     /// the two-pass norm-only clipping pipeline over the materializing
-    /// one (same partial out either way).
+    /// one (same partial out either way). `inject` carries a scripted
+    /// fault decided at dispatch time (default: none).
     Grad {
         params: Arc<Vec<f32>>,
         x: HostTensor,
@@ -48,6 +68,7 @@ pub(crate) enum Job {
         mask: Vec<f32>,
         clip: f32,
         ghost: bool,
+        inject: FaultInject,
     },
     /// Plain summed-gradient partial of one shard (the no-DP baseline).
     GradSum {
@@ -102,14 +123,89 @@ struct Envelope {
     reply: mpsc::Sender<(usize, Result<JobOut>)>,
 }
 
-/// N persistent worker threads with per-worker job channels. Dropping
-/// the pool closes the channels and joins every thread.
-pub struct WorkerPool {
+/// The typed panic report a supervised worker sends before it exits:
+/// the rank, the panic message, and the job it was executing (returned
+/// to the dispatcher so the respawned rank can re-execute it).
+struct WorkerPanic {
+    rank: usize,
+    msg: String,
+    job: Option<Job>,
+}
+
+impl std::fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} panicked: {}", self.rank, self.msg)
+    }
+}
+
+impl std::fmt::Debug for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPanic")
+            .field("rank", &self.rank)
+            .field("msg", &self.msg)
+            .field("job", &self.job.as_ref().map(|j| j.kind_name()))
+            .finish()
+    }
+}
+
+impl std::error::Error for WorkerPanic {}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The mutable half of the pool, behind one mutex: per-rank channels,
+/// join handles, and the noise-replay script for respawns.
+struct PoolState {
     senders: Vec<mpsc::Sender<Envelope>>,
     handles: Vec<thread::JoinHandle<()>>,
-    /// Worker count reported to the GEMM engine's `auto` intra-op
-    /// sizing (0 until spawn completed; subtracted back on drop).
-    noted_workers: usize,
+    /// Lengths of every noise fill each rank has *completed*, in order.
+    /// A respawned rank's fresh generator replays these to land on the
+    /// exact stream position the dead worker held, so noise after a
+    /// respawn is byte-identical to an unfaulted run.
+    noise_fills: Vec<Vec<usize>>,
+}
+
+/// N persistent, supervised worker threads with per-worker job
+/// channels. Dropping the pool closes the channels and joins every
+/// thread.
+pub struct WorkerPool {
+    model: Arc<NativeModel>,
+    spec: ExecSpec,
+    state: Mutex<PoolState>,
+    /// Worker count (also what was reported to the GEMM engine's `auto`
+    /// intra-op sizing; subtracted back on drop).
+    worker_count: usize,
+}
+
+/// Spawn one worker thread for `rank`, its generator fast-forwarded by
+/// replaying `replay_fills` (empty for a first spawn).
+fn spawn_worker(
+    model: Arc<NativeModel>,
+    spec: &ExecSpec,
+    rank: usize,
+    replay_fills: &[usize],
+) -> Result<(mpsc::Sender<Envelope>, thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Envelope>();
+    let mut rng = worker_rng(spec, rank);
+    let mut scratch = Vec::new();
+    for &len in replay_fills {
+        scratch.clear();
+        scratch.resize(len, 0f32);
+        gaussian::fill_standard_normal(rng.as_mut(), &mut scratch);
+    }
+    let handle = thread::Builder::new()
+        .name(format!("opacus-worker-{rank}"))
+        .spawn(move || worker_loop(rank, model, rng, rx))
+        .map_err(|e| anyhow!("spawning worker thread {rank}: {e}"))?;
+    Ok((tx, handle))
 }
 
 impl WorkerPool {
@@ -117,35 +213,79 @@ impl WorkerPool {
     /// with per-rank noise generators derived from `spec` (see
     /// [`worker_rng`](super::noise::worker_rng)). The spec is the single
     /// source of truth for the worker count; spawn failures (OS thread
-    /// exhaustion) surface as errors, and any threads already started
-    /// shut down when the partial pool is dropped.
+    /// exhaustion) surface as errors after the partial pool shut down.
     pub fn spawn(model: Arc<NativeModel>, spec: &ExecSpec) -> Result<WorkerPool> {
         let workers = spec.parallelism.worker_threads()?;
-        let mut pool = WorkerPool {
-            senders: Vec::with_capacity(workers),
-            handles: Vec::with_capacity(workers),
-            noted_workers: 0,
-        };
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles: Vec<thread::JoinHandle<()>> = Vec::with_capacity(workers);
         for rank in 0..workers {
-            let (tx, rx) = mpsc::channel::<Envelope>();
-            let model = model.clone();
-            let rng = worker_rng(spec, rank);
-            let handle = thread::Builder::new()
-                .name(format!("opacus-worker-{rank}"))
-                .spawn(move || worker_loop(model, rng, rx))
-                .map_err(|e| anyhow!("spawning worker thread {rank}/{workers}: {e}"))?;
-            pool.handles.push(handle);
-            pool.senders.push(tx);
+            match spawn_worker(model.clone(), spec, rank, &[]) {
+                Ok((tx, h)) => {
+                    senders.push(tx);
+                    handles.push(h);
+                }
+                Err(e) => {
+                    senders.clear(); // closes the channels already open
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e.context(format!("spawning worker pool of {workers}")));
+                }
+            }
         }
         // tell the GEMM engine how many data-parallel threads are now
         // live so its `auto` intra-op fan-out divides the machine
         gemm::note_dp_workers_spawned(workers);
-        pool.noted_workers = workers;
-        Ok(pool)
+        Ok(WorkerPool {
+            model,
+            spec: *spec,
+            state: Mutex::new(PoolState {
+                senders,
+                handles,
+                noise_fills: vec![Vec::new(); workers],
+            }),
+            worker_count: workers,
+        })
     }
 
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.worker_count
+    }
+
+    /// The pool's mutable state. Poisoning is recovered, not propagated:
+    /// the state is a set of channel ends and replay lengths, each
+    /// update of which is atomic at the Rust level — there is no
+    /// half-written invariant a panicking thread could leave behind.
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Replace `rank`'s dead worker with a fresh one whose generator is
+    /// fast-forwarded to the dead worker's exact stream position.
+    fn respawn(&self, rank: usize) -> Result<()> {
+        let mut st = self.lock_state();
+        let fills = st.noise_fills[rank].clone();
+        let (tx, handle) = spawn_worker(self.model.clone(), &self.spec, rank, &fills)?;
+        st.senders[rank] = tx; // closes the dead worker's channel
+        let old = std::mem::replace(&mut st.handles[rank], handle);
+        drop(st);
+        let _ = old.join(); // the dead thread has already returned
+        faults::note_respawn();
+        Ok(())
+    }
+
+    /// Send one envelope to `rank`, respawning the rank once if its
+    /// channel is already closed (a panic whose error the caller chose
+    /// to survive leaves the rank dead until its next use).
+    fn dispatch(&self, rank: usize, env: Envelope) -> Result<()> {
+        let res = self.lock_state().senders[rank].send(env);
+        if let Err(mpsc::SendError(env)) = res {
+            self.respawn(rank)?;
+            self.lock_state().senders[rank]
+                .send(env)
+                .map_err(|_| anyhow!("worker {rank} terminated before accepting work"))?;
+        }
+        Ok(())
     }
 
     /// Dispatch `(rank, job)` pairs and collect results in dispatch
@@ -166,34 +306,101 @@ impl WorkerPool {
     /// Dispatch `(rank, job)` pairs and hand each reply to `on_reply` in
     /// *arrival* order (slots identify dispatch position) — the
     /// overlapped-reduce entry point: the caller can start folding early
-    /// replies while slower shards are still computing. Fails fast if
-    /// any job errors, a worker thread died, or `on_reply` errors.
+    /// replies while slower shards are still computing.
+    ///
+    /// A panicking worker is respawned (bounded by [`MAX_RESPAWNS`] per
+    /// dispatch) and its job re-executed deterministically, so arrival
+    /// order — never result content — is all a fault can perturb. Fails
+    /// fast if a job returns an error, the respawn budget runs out, or
+    /// `on_reply` errors.
     pub(crate) fn run_streaming(
         &self,
         jobs: Vec<(usize, Job)>,
         mut on_reply: impl FnMut(usize, JobOut) -> Result<()>,
     ) -> Result<()> {
         let total = jobs.len();
+        let workers = self.workers();
         let (tx, rx) = mpsc::channel();
+        let mut slot_rank = Vec::with_capacity(total);
+        let mut slot_noise_len = Vec::with_capacity(total);
+        let mut outstanding = vec![0usize; workers];
         for (slot, (rank, job)) in jobs.into_iter().enumerate() {
-            if rank >= self.senders.len() {
-                return Err(anyhow!("rank {rank} out of range ({} workers)", self.workers()));
+            if rank >= workers {
+                return Err(anyhow!("rank {rank} out of range ({workers} workers)"));
             }
-            let env = Envelope {
-                slot,
-                job,
-                reply: tx.clone(),
-            };
-            self.senders[rank]
-                .send(env)
-                .map_err(|_| anyhow!("worker {rank} terminated before accepting work"))?;
+            slot_rank.push(rank);
+            slot_noise_len.push(match &job {
+                Job::Noise { len } => Some(*len),
+                _ => None,
+            });
+            outstanding[rank] += 1;
+            self.dispatch(
+                rank,
+                Envelope {
+                    slot,
+                    job,
+                    reply: tx.clone(),
+                },
+            )?;
         }
-        drop(tx);
-        for _ in 0..total {
+        let mut respawns_left = MAX_RESPAWNS;
+        let mut received = 0usize;
+        while received < total {
             let (slot, res) = rx
                 .recv()
                 .map_err(|_| anyhow!("a worker terminated before replying"))?;
-            on_reply(slot, res?)?;
+            let rank = slot_rank[slot];
+            match res {
+                Ok(out) => {
+                    received += 1;
+                    outstanding[rank] -= 1;
+                    if let Some(len) = slot_noise_len[slot] {
+                        self.lock_state().noise_fills[rank].push(len);
+                    }
+                    on_reply(slot, out)?;
+                }
+                Err(e) => match e.downcast::<WorkerPanic>() {
+                    Ok(p) => {
+                        outstanding[rank] -= 1; // the panicked slot itself
+                        if outstanding[rank] > 0 {
+                            return Err(anyhow!(
+                                "worker {rank} panicked with {} queued job(s) lost \
+                                 (queued work on a dead rank is not recoverable): {}",
+                                outstanding[rank],
+                                p.msg
+                            ));
+                        }
+                        if respawns_left == 0 {
+                            return Err(anyhow!(
+                                "worker {rank} panicked and the respawn budget \
+                                 ({MAX_RESPAWNS}) is exhausted — the shard fails \
+                                 deterministically: {}",
+                                p.msg
+                            ));
+                        }
+                        respawns_left -= 1;
+                        let mut job = p.job.ok_or_else(|| {
+                            anyhow!("worker {rank} panic report lost its job: {}", p.msg)
+                        })?;
+                        // the injected fault (if any) fired and was
+                        // consumed — re-execute the job clean
+                        if let Job::Grad { inject, .. } = &mut job {
+                            *inject = FaultInject::default();
+                        }
+                        self.respawn(rank)?;
+                        outstanding[rank] += 1;
+                        self.dispatch(
+                            rank,
+                            Envelope {
+                                slot,
+                                job,
+                                reply: tx.clone(),
+                            },
+                        )?;
+                    }
+                    Err(other) => return Err(other),
+                },
+            }
         }
         Ok(())
     }
@@ -201,12 +408,15 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.senders.clear(); // closes every job channel
-        for h in self.handles.drain(..) {
+        let mut st = self.lock_state();
+        st.senders.clear(); // closes every job channel
+        let handles = std::mem::take(&mut st.handles);
+        drop(st);
+        for h in handles {
             let _ = h.join();
         }
-        if self.noted_workers > 0 {
-            gemm::note_dp_workers_exited(self.noted_workers);
+        if self.worker_count > 0 {
+            gemm::note_dp_workers_exited(self.worker_count);
         }
     }
 }
@@ -263,9 +473,10 @@ pub fn intra_op_run(parts: usize, body: &(dyn Fn(usize) + Sync)) {
 impl IntraOpPool {
     /// Grow the detached helper set to at least `want` threads. Spawn
     /// failures are tolerated — `run` falls back to serial when no
-    /// helper exists at all.
+    /// helper exists at all. Lock poisoning is recovered: the count is
+    /// a plain integer, never left half-updated by an unwinding thread.
     fn ensure_helpers(&self, want: usize) -> usize {
-        let mut n = self.helpers.lock().expect("intra-op helper count lock");
+        let mut n = self.helpers.lock().unwrap_or_else(|e| e.into_inner());
         while *n < want.min(gemm::MAX_GEMM_THREADS) {
             let queue = self.queue.clone();
             let idx = *n;
@@ -297,7 +508,7 @@ impl IntraOpPool {
         };
         let (done_tx, done_rx) = mpsc::channel::<bool>();
         {
-            let inject = self.inject.lock().expect("intra-op injector lock");
+            let inject = self.inject.lock().unwrap_or_else(|e| e.into_inner());
             for p in 1..parts {
                 let done = done_tx.clone();
                 let task: IntraTask = Box::new(move || {
@@ -308,7 +519,12 @@ impl IntraOpPool {
                     .is_ok();
                     let _ = done.send(ok);
                 });
-                inject.send(task).expect("intra-op queue never closes");
+                // a closed queue means the helper side is shutting down
+                // (process teardown) — run the part inline instead of
+                // panicking; the closure signals `done` either way
+                if let Err(mpsc::SendError(task)) = inject.send(task) {
+                    task();
+                }
             }
         }
         drop(done_tx);
@@ -332,11 +548,12 @@ impl IntraOpPool {
 
 /// Helper thread body: pull one task at a time off the shared queue.
 /// Holding the queue lock only around `recv` serializes task *pickup*,
-/// never execution.
+/// never execution. A poisoned lock is recovered (the receiver has no
+/// invariant to corrupt); a closed queue means process teardown.
 fn helper_loop(queue: Arc<Mutex<mpsc::Receiver<IntraTask>>>) {
     loop {
         let task = {
-            let rx = queue.lock().expect("intra-op queue lock");
+            let rx = queue.lock().unwrap_or_else(|e| e.into_inner());
             rx.recv()
         };
         match task {
@@ -346,43 +563,84 @@ fn helper_loop(queue: Arc<Mutex<mpsc::Receiver<IntraTask>>>) {
     }
 }
 
-fn worker_loop(model: Arc<NativeModel>, mut rng: Box<dyn Rng>, rx: mpsc::Receiver<Envelope>) {
-    while let Ok(env) = rx.recv() {
-        let _s = obs::span("worker", env.job.kind_name());
-        let out = match env.job {
-            Job::Grad {
-                params,
-                x,
-                y,
-                mask,
-                clip,
-                ghost,
-            } => {
-                let g = if ghost {
-                    model.dp_grad_partial_ghost(&params, &x, &y, &mask, clip)
-                } else {
-                    model.dp_grad_partial(&params, &x, &y, &mask, clip)
-                };
-                g.map(JobOut::Grad)
-            }
-            Job::GradSum { params, x, y, mask } => model
-                .grad_sum(&params, &x, &y, &mask)
+/// Execute one job against the shared model, *by reference* — on a
+/// panic the envelope still owns the job, so the supervisor can carry
+/// it back to the dispatcher for deterministic re-execution.
+fn execute_job(model: &NativeModel, rng: &mut dyn Rng, job: &Job) -> Result<JobOut> {
+    match job {
+        Job::Grad {
+            params,
+            x,
+            y,
+            mask,
+            clip,
+            ghost,
+            inject: _,
+        } => {
+            let g = if *ghost {
+                model.dp_grad_partial_ghost(params, x, y, mask, *clip)
+            } else {
+                model.dp_grad_partial(params, x, y, mask, *clip)
+            };
+            g.map(JobOut::Grad)
+        }
+        Job::GradSum { params, x, y, mask } => {
+            model
+                .grad_sum(params, x, y, mask)
                 .map(|(gsum, loss_sum, real)| JobOut::GradSum {
                     gsum: gsum.iter().map(|&g| g as f64).collect(),
                     loss_sum,
                     real,
-                }),
-            Job::Eval { params, x, y, mask } => model
-                .eval(&params, &x, &y, &mask)
-                .map(|(loss_sum, correct)| JobOut::Eval { loss_sum, correct }),
-            Job::Noise { len } => {
-                let mut v = vec![0f32; len];
-                gaussian::fill_standard_normal(rng.as_mut(), &mut v);
-                Ok(JobOut::Noise(v))
+                })
+        }
+        Job::Eval { params, x, y, mask } => model
+            .eval(params, x, y, mask)
+            .map(|(loss_sum, correct)| JobOut::Eval { loss_sum, correct }),
+        Job::Noise { len } => {
+            let mut v = vec![0f32; *len];
+            gaussian::fill_standard_normal(rng, &mut v);
+            Ok(JobOut::Noise(v))
+        }
+    }
+}
+
+fn worker_loop(
+    rank: usize,
+    model: Arc<NativeModel>,
+    mut rng: Box<dyn Rng>,
+    rx: mpsc::Receiver<Envelope>,
+) {
+    while let Ok(env) = rx.recv() {
+        let _s = obs::span("worker", env.job.kind_name());
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            if let Job::Grad { inject, .. } = &env.job {
+                inject.apply(rank);
             }
-        };
-        // a dropped reply channel means the step bailed early; keep serving
-        let _ = env.reply.send((env.slot, out));
+            execute_job(&model, rng.as_mut(), &env.job)
+        }));
+        match res {
+            Ok(out) => {
+                // a dropped reply channel means the step bailed early;
+                // keep serving
+                let _ = env.reply.send((env.slot, out));
+            }
+            Err(panic) => {
+                // fail stop: a panicked worker's state is suspect, so
+                // report (returning the job for re-execution) and exit —
+                // the dispatcher respawns this rank from scratch
+                let msg = panic_message(panic.as_ref());
+                let Envelope { slot, job, reply } = env;
+                let _ = reply.send((
+                    slot,
+                    Err(anyhow::Error::new(WorkerPanic {
+                        rank,
+                        msg,
+                        job: Some(job),
+                    })),
+                ));
+                return;
+            }
+        }
     }
 }
 
@@ -439,6 +697,7 @@ mod tests {
                     mask: mask[..1].to_vec(),
                     clip: 1.0,
                     ghost: false,
+                    inject: FaultInject::default(),
                 },
             ),
             (
@@ -450,6 +709,7 @@ mod tests {
                     mask: mask[1..].to_vec(),
                     clip: 1.0,
                     ghost: false,
+                    inject: FaultInject::default(),
                 },
             ),
         ];
@@ -487,6 +747,7 @@ mod tests {
                         mask: mask.clone(),
                         clip: 0.7,
                         ghost,
+                        inject: FaultInject::default(),
                     },
                 )])
                 .unwrap();
@@ -521,6 +782,7 @@ mod tests {
                     mask,
                     clip: 1.0,
                     ghost: false,
+                    inject: FaultInject::default(),
                 },
             )])
             .unwrap_err()
@@ -529,6 +791,112 @@ mod tests {
         // the pool survives a failed job
         let outs = pool.run(vec![(0, Job::Noise { len: 4 })]).unwrap();
         assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn injected_panic_respawns_and_reproduces_results() {
+        let model = tiny_model();
+        let pool = WorkerPool::spawn(model.clone(), &spec_n(2)).unwrap();
+        let params = Arc::new(model.init_params(3));
+        let (x, y, mask) = batch();
+        let job = |rank: usize, lo: usize, hi: usize, inject: FaultInject| {
+            (
+                rank,
+                Job::Grad {
+                    params: params.clone(),
+                    x: x.slice_rows(lo, hi).unwrap(),
+                    y: y[lo..hi].to_vec(),
+                    mask: mask[lo..hi].to_vec(),
+                    clip: 1.0,
+                    ghost: false,
+                    inject,
+                },
+            )
+        };
+        let bits = |outs: Vec<JobOut>| -> Vec<u64> {
+            outs.iter()
+                .flat_map(|o| {
+                    let JobOut::Grad(p) = o else { panic!("expected grad output") };
+                    p.gsum.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+                })
+                .collect()
+        };
+        let none = FaultInject::default();
+        let clean = bits(pool.run(vec![job(0, 0, 1, none), job(1, 1, 2, none)]).unwrap());
+        let before = faults::respawns();
+        // rank 1 panics (and is respawned), rank 0 is artificially slow:
+        // the dispatch must still produce byte-identical partials
+        let faulty = bits(
+            pool.run(vec![
+                job(
+                    0,
+                    0,
+                    1,
+                    FaultInject {
+                        panic: false,
+                        slow_millis: 3,
+                    },
+                ),
+                job(
+                    1,
+                    1,
+                    2,
+                    FaultInject {
+                        panic: true,
+                        slow_millis: 0,
+                    },
+                ),
+            ])
+            .unwrap(),
+        );
+        assert_eq!(faults::respawns(), before + 1, "exactly one respawn");
+        assert_eq!(clean, faulty, "re-executed shard is bit-identical");
+        // and the pool is fully serviceable afterwards
+        let again = bits(pool.run(vec![job(0, 0, 1, none), job(1, 1, 2, none)]).unwrap());
+        assert_eq!(clean, again);
+    }
+
+    #[test]
+    fn respawned_rank_resumes_its_exact_noise_stream() {
+        let model = tiny_model();
+        let spec = ExecSpec {
+            seed: 21,
+            ..spec_n(2)
+        };
+        let draw = |pool: &WorkerPool, rank: usize, len: usize| -> Vec<f32> {
+            let out = pool.run(vec![(rank, Job::Noise { len })]).unwrap();
+            match out.into_iter().next().unwrap() {
+                JobOut::Noise(v) => v,
+                _ => panic!("expected noise"),
+            }
+        };
+        // reference: an unfaulted pool's rank-0 stream
+        let fresh = WorkerPool::spawn(model.clone(), &spec).unwrap();
+        let expected = [draw(&fresh, 0, 6), draw(&fresh, 0, 5)].concat();
+        // faulted: draw, kill rank 0 via an injected panic, draw again —
+        // the respawned worker must resume the stream mid-flight
+        let pool = WorkerPool::spawn(model.clone(), &spec).unwrap();
+        let first = draw(&pool, 0, 6);
+        let params = Arc::new(model.init_params(3));
+        let (x, y, mask) = batch();
+        pool.run(vec![(
+            0,
+            Job::Grad {
+                params,
+                x,
+                y,
+                mask,
+                clip: 1.0,
+                ghost: false,
+                inject: FaultInject {
+                    panic: true,
+                    slow_millis: 0,
+                },
+            },
+        )])
+        .unwrap();
+        let second = draw(&pool, 0, 5);
+        assert_eq!([first, second].concat(), expected);
     }
 
     #[test]

@@ -25,9 +25,12 @@
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
+use crate::faults;
 use crate::obs;
 use crate::runtime::backend::native::model::{DpGradPartial, NativeModel};
-use crate::runtime::backend::native::steps::{noisy_sgd_update, noisy_sgd_update_f64};
+use crate::runtime::backend::native::steps::{
+    check_step_finite, inject_nonfinite, noisy_sgd_update, noisy_sgd_update_f64,
+};
 use crate::runtime::backend::{AccumExec, ApplyExec, EvalExec, FusedStep};
 use crate::runtime::step::{AccumOut, DpStepOut, HyperParams};
 use crate::runtime::tensor::HostTensor;
@@ -117,6 +120,10 @@ impl DistributedStep {
                     mask: shard_mask,
                     clip,
                     ghost: self.ghost,
+                    // scripted fault for (current step, rank), if any —
+                    // decided here, deterministically, and carried into
+                    // the worker inside the job
+                    inject: faults::shard_injection(rank),
                 },
                 None => Job::GradSum {
                     params: params.clone(),
@@ -233,7 +240,11 @@ impl FusedStep for DistributedStep {
             );
         }
         let snapshot = Arc::new(params.to_vec());
-        let g = self.reduced_grad(&snapshot, &x, y, mask, hp.clip)?;
+        let mut g = self.reduced_grad(&snapshot, &x, y, mask, hp.clip)?;
+        inject_nonfinite(&mut g.gsum, &mut g.loss_sum, f64::INFINITY);
+        check_step_finite(&g.gsum, g.loss_sum, g.real, "distributed fused dp step", |i| {
+            self.model.param_layer_name(i)
+        })?;
         let noise = self.select_noise(noise)?;
         let new_params = noisy_sgd_update_f64(params, &g.gsum, &noise, hp);
         let (loss, snorm_mean) = if g.real > 0 {
@@ -339,6 +350,9 @@ impl ApplyExec for DistributedStep {
                 noise.len()
             );
         }
+        check_step_finite(gsum, 0.0, 0, "distributed apply step", |i| {
+            self.model.param_layer_name(i)
+        })?;
         let noise = self.select_noise(noise)?;
         Ok(noisy_sgd_update(params, gsum, &noise, hp))
     }
@@ -566,5 +580,72 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("expected batch 8"), "{err}");
+    }
+
+    #[test]
+    fn injected_worker_faults_do_not_change_the_step() {
+        let _guard = crate::faults::test_lock();
+        let (model, params, x, y, mask) = mnist_setup(8);
+        let noise = vec![0.01f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.1,
+            clip: 1.0,
+            sigma: 0.7,
+            denom: 8.0,
+        };
+        let dist = DistributedStep::launch(model, 8, &spec(4, 11)).unwrap();
+        let clean = dist
+            .dp_step(&params, x.clone(), &y, &mask, &noise, hp)
+            .unwrap();
+        // a panicking rank and a slow rank in the same step: the pool
+        // respawns the dead worker and re-executes its shard, so the
+        // result must be byte-identical to the clean step
+        let plan = crate::faults::FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"worker_panic","step":1,"rank":2},
+                {"kind":"slow_shard","step":1,"rank":0,"millis":3}
+            ]}"#,
+        )
+        .unwrap();
+        crate::faults::install(plan);
+        crate::faults::begin_step();
+        let faulted = dist.dp_step(&params, x, &y, &mask, &noise, hp).unwrap();
+        crate::faults::clear();
+        assert_eq!(clean.loss.to_bits(), faulted.loss.to_bits());
+        assert_eq!(clean.real, faulted.real);
+        for (a, b) in clean.params.iter().zip(faulted.params.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "params must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn distributed_nonfinite_injection_is_a_typed_error() {
+        let _guard = crate::faults::test_lock();
+        let (model, params, x, y, mask) = mnist_setup(4);
+        let noise = vec![0f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.1,
+            clip: 1.0,
+            sigma: 0.0,
+            denom: 4.0,
+        };
+        let dist = DistributedStep::launch(model, 4, &spec(2, 13)).unwrap();
+        let plan = crate::faults::FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"non_finite_grad","step":1}
+            ]}"#,
+        )
+        .unwrap();
+        crate::faults::install(plan);
+        crate::faults::begin_step();
+        let err = dist
+            .dp_step(&params, x.clone(), &y, &mask, &noise, hp)
+            .unwrap_err()
+            .to_string();
+        crate::faults::clear();
+        assert!(err.contains("non-finite gradient"), "{err}");
+        assert!(err.contains("(op #"), "error must name the layer: {err}");
+        // the plan is consumed: the same step succeeds afterwards
+        dist.dp_step(&params, x, &y, &mask, &noise, hp).unwrap();
     }
 }

@@ -1,0 +1,568 @@
+//! Deterministic fault injection — the chaos harness behind the
+//! fault-tolerance layer.
+//!
+//! A *fault plan* is a small JSON document naming exactly where a run
+//! should break: a worker panic at (step, rank), an artificially slow
+//! shard, a checkpoint IO failure (write failure, torn write, bit-flip
+//! corruption) at the N-th save, or a non-finite loss/gradient at a
+//! step. Plans come in on the CLI (`--faults plan.json`, or inline
+//! JSON) or the `OPACUS_FAULTS` environment variable:
+//!
+//! ```json
+//! {
+//!   "format": "opacus-rs/faults", "version": 1,
+//!   "faults": [
+//!     {"kind": "worker_panic", "step": 3, "rank": 1},
+//!     {"kind": "slow_shard",   "step": 5, "rank": 0, "millis": 20},
+//!     {"kind": "checkpoint_write_fail", "save": 2},
+//!     {"kind": "checkpoint_torn_write", "save": 4},
+//!     {"kind": "checkpoint_bit_flip",   "save": 5},
+//!     {"kind": "non_finite_loss", "step": 7}
+//!   ]
+//! }
+//! ```
+//!
+//! Every fault is **one-shot**: it fires at its named point, is
+//! consumed, and the recovery machinery (supervised worker respawn,
+//! checkpoint retry/rollback, the non-finite guard) takes over. The
+//! whole point is that the injection is deterministic — `tests/faults.rs`
+//! pins that a faulted run produces byte-identical ε and parameters to
+//! a fault-free run.
+//!
+//! Cost model follows [`crate::obs`]: every probe site pays one relaxed
+//! atomic load ([`enabled`]) and a predictable branch when no plan is
+//! installed — gated by the `gemm_kernels --check` overhead gate
+//! alongside the observability probes.
+//!
+//! Threading: the plan is **thread-confined**. [`install`] arms the
+//! calling thread, which must be the thread that drives training steps
+//! and checkpoint saves (the CLI trains and serves on the main thread;
+//! the pipelined prefetch thread and the DP workers never consult the
+//! plan — injection decisions are made at dispatch and carried into the
+//! worker inside the job). The global [`enabled`] flag is only the
+//! fast-path gate. The recovery *counters* ([`respawns`],
+//! [`ckpt_retries`], [`rollbacks`]) are process-global and always on —
+//! they count real faults too, not just injected ones.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Fault-plan document format marker.
+pub const FAULTS_FORMAT: &str = "opacus-rs/faults";
+/// Fault-plan schema version this reader understands.
+pub const FAULTS_VERSION: u64 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether a fault plan is armed anywhere in the process. The disabled
+/// fast path every probe site branches on: one relaxed load, no fence,
+/// no call.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// The plan
+// ---------------------------------------------------------------------
+
+/// One scripted fault. Steps and saves are 1-based: `step: 3` means the
+/// third logical optimizer step the armed thread executes, `save: 2`
+/// the second checkpoint save.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside worker `rank`'s job execution at `step`.
+    WorkerPanic { step: u64, rank: usize },
+    /// Delay worker `rank`'s shard by `millis` at `step` (stresses
+    /// arrival-order independence of the reduction).
+    SlowShard { step: u64, rank: usize, millis: u64 },
+    /// Fail the first write attempt of the N-th checkpoint save.
+    CkptWriteFail { save: u64 },
+    /// Truncate a payload file of the N-th save after it publishes.
+    CkptTornWrite { save: u64 },
+    /// Flip one bit in a payload file of the N-th save after it
+    /// publishes.
+    CkptBitFlip { save: u64 },
+    /// Poison the reported loss with NaN at `step`.
+    NonFiniteLoss { step: u64 },
+    /// Poison the reduced gradient with +inf at `step`.
+    NonFiniteGrad { step: u64 },
+}
+
+/// A parsed fault plan: the ordered list of one-shot faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from its JSON document (format/version gated).
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        match j.get("format").as_str() {
+            Some(f) if f == FAULTS_FORMAT => {}
+            other => bail!("fault plan: format must be {FAULTS_FORMAT:?}, got {other:?}"),
+        }
+        let version = j
+            .get("version")
+            .as_f64()
+            .ok_or_else(|| anyhow!("fault plan: missing numeric 'version'"))?
+            as u64;
+        if version != FAULTS_VERSION {
+            bail!("fault plan: version {version} unsupported (reader expects {FAULTS_VERSION})");
+        }
+        let entries = j
+            .get("faults")
+            .as_arr()
+            .ok_or_else(|| anyhow!("fault plan: 'faults' must be an array"))?;
+        let mut faults = Vec::with_capacity(entries.len());
+        for (i, f) in entries.iter().enumerate() {
+            let kind = f
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| anyhow!("fault plan: entry {i} needs a string 'kind'"))?;
+            let num = |key: &str| -> Result<u64> {
+                f.get(key)
+                    .as_f64()
+                    .map(|v| v as u64)
+                    .ok_or_else(|| anyhow!("fault plan: '{kind}' entry {i} needs numeric '{key}'"))
+            };
+            faults.push(match kind {
+                "worker_panic" => Fault::WorkerPanic {
+                    step: num("step")?,
+                    rank: num("rank")? as usize,
+                },
+                "slow_shard" => Fault::SlowShard {
+                    step: num("step")?,
+                    rank: num("rank")? as usize,
+                    millis: f.get("millis").as_f64().unwrap_or(10.0) as u64,
+                },
+                "checkpoint_write_fail" => Fault::CkptWriteFail { save: num("save")? },
+                "checkpoint_torn_write" => Fault::CkptTornWrite { save: num("save")? },
+                "checkpoint_bit_flip" => Fault::CkptBitFlip { save: num("save")? },
+                "non_finite_loss" => Fault::NonFiniteLoss { step: num("step")? },
+                "non_finite_grad" => Fault::NonFiniteGrad { step: num("step")? },
+                other => bail!(
+                    "fault plan: unknown kind '{other}' (valid: worker_panic, slow_shard, \
+                     checkpoint_write_fail, checkpoint_torn_write, checkpoint_bit_flip, \
+                     non_finite_loss, non_finite_grad)"
+                ),
+            });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Parse a plan from JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let j = Json::parse(text).map_err(|e| anyhow!("fault plan: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Resolve a CLI/env value: inline JSON if it starts with `{`,
+    /// otherwise a path to a plan file.
+    pub fn load_arg(arg: &str) -> Result<FaultPlan> {
+        if arg.trim_start().starts_with('{') {
+            Self::parse(arg)
+        } else {
+            let text = std::fs::read_to_string(arg)
+                .with_context(|| format!("reading fault plan {arg}"))?;
+            Self::parse(&text).with_context(|| format!("in fault plan {arg}"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Armed state (thread-confined)
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct State {
+    plan: Vec<Fault>,
+    /// Logical steps begun on this thread since [`install`].
+    step: u64,
+    /// Checkpoint saves begun on this thread since [`install`].
+    saves: u64,
+}
+
+thread_local! {
+    static STATE: RefCell<State> = RefCell::new(State::default());
+}
+
+/// Arm the calling thread with a fault plan (and flip the process-wide
+/// fast-path gate on). Resets the thread's step and save counters so
+/// plan coordinates are relative to this installation.
+pub fn install(plan: FaultPlan) {
+    STATE.with(|s| {
+        *s.borrow_mut() = State {
+            plan: plan.faults,
+            step: 0,
+            saves: 0,
+        };
+    });
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm: drop the calling thread's plan and turn the fast-path gate
+/// off.
+pub fn clear() {
+    STATE.with(|s| *s.borrow_mut() = State::default());
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Faults installed on this thread that have not fired yet.
+pub fn pending() -> usize {
+    if !enabled() {
+        return 0;
+    }
+    STATE.with(|s| s.borrow().plan.len())
+}
+
+/// Mark the start of a logical optimizer step on the armed thread and
+/// return its 1-based number (0 when no plan is armed). The trainer
+/// calls this exactly once per step, so plan `step` coordinates line up
+/// with the accountant's step count.
+pub fn begin_step() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        st.step += 1;
+        st.step
+    })
+}
+
+// ---------------------------------------------------------------------
+// Probe points
+// ---------------------------------------------------------------------
+
+/// What a dispatched shard job should do to itself, decided at dispatch
+/// time on the armed thread and carried into the worker inside the job.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultInject {
+    /// Panic inside the worker after any delay.
+    pub panic: bool,
+    /// Sleep this long before executing (0 = no delay).
+    pub slow_millis: u64,
+}
+
+impl FaultInject {
+    /// True when nothing is injected (the always-taken branch in
+    /// fault-free runs).
+    pub fn is_none(self) -> bool {
+        !self.panic && self.slow_millis == 0
+    }
+
+    /// Execute the injection inside worker `rank` — sleep, then panic.
+    pub fn apply(self, rank: usize) {
+        if self.slow_millis > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.slow_millis));
+        }
+        if self.panic {
+            panic!("injected fault: worker {rank} panic");
+        }
+    }
+}
+
+/// Consume any worker fault targeting (current step, `rank`). Called by
+/// the shard planner when it builds a gradient job for `rank`.
+pub fn shard_injection(rank: usize) -> FaultInject {
+    if !enabled() {
+        return FaultInject::default();
+    }
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        let step = st.step;
+        let mut out = FaultInject::default();
+        st.plan.retain(|f| match *f {
+            Fault::WorkerPanic { step: fs, rank: fr } if fs == step && fr == rank => {
+                out.panic = true;
+                false
+            }
+            Fault::SlowShard {
+                step: fs,
+                rank: fr,
+                millis,
+            } if fs == step && fr == rank => {
+                out.slow_millis = millis;
+                false
+            }
+            _ => true,
+        });
+        out
+    })
+}
+
+/// Checkpoint IO fault kinds, as seen by `TrainerCheckpoint::save`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptFault {
+    /// Fail the first write attempt (the retry loop should recover).
+    WriteFail,
+    /// Truncate a payload file after the save publishes.
+    TornWrite,
+    /// Flip one bit in a payload file after the save publishes.
+    BitFlip,
+}
+
+/// Mark the start of a checkpoint save on the armed thread and consume
+/// any fault targeting it (at most one fault per save).
+pub fn next_save_fault() -> Option<CkptFault> {
+    if !enabled() {
+        return None;
+    }
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        st.saves += 1;
+        let n = st.saves;
+        let mut out = None;
+        st.plan.retain(|f| match *f {
+            Fault::CkptWriteFail { save } if save == n && out.is_none() => {
+                out = Some(CkptFault::WriteFail);
+                false
+            }
+            Fault::CkptTornWrite { save } if save == n && out.is_none() => {
+                out = Some(CkptFault::TornWrite);
+                false
+            }
+            Fault::CkptBitFlip { save } if save == n && out.is_none() => {
+                out = Some(CkptFault::BitFlip);
+                false
+            }
+            _ => true,
+        });
+        out
+    })
+}
+
+/// Non-finite poisoning targets for the step path's guard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NonFinite {
+    /// Replace the step's loss with NaN.
+    Loss,
+    /// Replace the first reduced-gradient component with +inf.
+    Grad,
+}
+
+/// Consume any non-finite injection targeting the current step. Called
+/// by the step executors between the gradient reduction and the guard.
+pub fn nonfinite_injection() -> Option<NonFinite> {
+    if !enabled() {
+        return None;
+    }
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        let step = st.step;
+        let mut out = None;
+        st.plan.retain(|f| match *f {
+            Fault::NonFiniteLoss { step: fs } if fs == step && out.is_none() => {
+                out = Some(NonFinite::Loss);
+                false
+            }
+            Fault::NonFiniteGrad { step: fs } if fs == step && out.is_none() => {
+                out = Some(NonFinite::Grad);
+                false
+            }
+            _ => true,
+        });
+        out
+    })
+}
+
+// ---------------------------------------------------------------------
+// Recovery counters (process-global, always on)
+// ---------------------------------------------------------------------
+
+static RESPAWNS: AtomicU64 = AtomicU64::new(0);
+static CKPT_RETRIES: AtomicU64 = AtomicU64::new(0);
+static ROLLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one supervised-pool worker respawn.
+pub fn note_respawn() {
+    RESPAWNS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::count("pool.worker_respawns", 1);
+}
+
+/// Worker respawns since process start.
+pub fn respawns() -> u64 {
+    RESPAWNS.load(Ordering::Relaxed)
+}
+
+/// Record one retried checkpoint write attempt.
+pub fn note_ckpt_retry() {
+    CKPT_RETRIES.fetch_add(1, Ordering::Relaxed);
+    crate::obs::count("checkpoint.write_retries", 1);
+}
+
+/// Checkpoint write retries since process start.
+pub fn ckpt_retries() -> u64 {
+    CKPT_RETRIES.load(Ordering::Relaxed)
+}
+
+/// Record one checkpoint generation rollback on load.
+pub fn note_rollback() {
+    ROLLBACKS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::count("checkpoint.rollbacks", 1);
+}
+
+/// Checkpoint generation rollbacks since process start.
+pub fn rollbacks() -> u64 {
+    ROLLBACKS.load(Ordering::Relaxed)
+}
+
+/// Serialize tests that arm the global fast-path gate — the plan itself
+/// is thread-confined, but a concurrent `clear` would disarm a test
+/// mid-flight.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN: &str = r#"{
+        "format": "opacus-rs/faults", "version": 1,
+        "faults": [
+            {"kind": "worker_panic", "step": 2, "rank": 1},
+            {"kind": "slow_shard", "step": 3, "rank": 0, "millis": 5},
+            {"kind": "checkpoint_write_fail", "save": 1},
+            {"kind": "checkpoint_bit_flip", "save": 2},
+            {"kind": "non_finite_loss", "step": 4}
+        ]
+    }"#;
+
+    #[test]
+    fn plan_parses_and_gates_format() {
+        let p = FaultPlan::parse(PLAN).unwrap();
+        assert_eq!(p.faults.len(), 5);
+        assert_eq!(p.faults[0], Fault::WorkerPanic { step: 2, rank: 1 });
+        assert_eq!(
+            p.faults[1],
+            Fault::SlowShard {
+                step: 3,
+                rank: 0,
+                millis: 5
+            }
+        );
+        let err = FaultPlan::parse(r#"{"faults": []}"#).unwrap_err().to_string();
+        assert!(err.contains("format"), "{err}");
+        let err = FaultPlan::parse(r#"{"format": "opacus-rs/faults", "version": 9, "faults": []}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("version 9"), "{err}");
+        let err = FaultPlan::parse(
+            r#"{"format": "opacus-rs/faults", "version": 1,
+                "faults": [{"kind": "meteor_strike"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("meteor_strike") && err.contains("worker_panic"), "{err}");
+        let err = FaultPlan::parse(
+            r#"{"format": "opacus-rs/faults", "version": 1,
+                "faults": [{"kind": "worker_panic", "rank": 0}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("'step'"), "{err}");
+    }
+
+    #[test]
+    fn load_arg_accepts_inline_json_and_files() {
+        let _g = test_lock();
+        let inline = FaultPlan::load_arg(PLAN).unwrap();
+        assert_eq!(inline.faults.len(), 5);
+        let path = std::env::temp_dir().join(format!(
+            "opacus_faults_plan_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, PLAN).unwrap();
+        let from_file = FaultPlan::load_arg(path.to_str().unwrap()).unwrap();
+        assert_eq!(from_file, inline);
+        std::fs::remove_file(&path).unwrap();
+        let err = FaultPlan::load_arg("/nonexistent/plan.json").unwrap_err().to_string();
+        assert!(err.contains("plan"), "{err}");
+    }
+
+    #[test]
+    fn disabled_probes_are_no_ops() {
+        let _g = test_lock();
+        clear();
+        assert!(!enabled());
+        assert_eq!(begin_step(), 0);
+        assert_eq!(shard_injection(0), FaultInject::default());
+        assert_eq!(next_save_fault(), None);
+        assert_eq!(nonfinite_injection(), None);
+        assert_eq!(pending(), 0);
+    }
+
+    #[test]
+    fn faults_fire_once_at_their_coordinates() {
+        let _g = test_lock();
+        install(FaultPlan::parse(PLAN).unwrap());
+        assert!(enabled());
+        assert_eq!(pending(), 5);
+
+        // step 1: nothing scheduled
+        assert_eq!(begin_step(), 1);
+        assert!(shard_injection(0).is_none());
+        assert!(shard_injection(1).is_none());
+        assert_eq!(nonfinite_injection(), None);
+
+        // step 2: rank 1 panics, exactly once
+        assert_eq!(begin_step(), 2);
+        assert!(shard_injection(0).is_none());
+        let inj = shard_injection(1);
+        assert!(inj.panic && inj.slow_millis == 0);
+        assert!(shard_injection(1).is_none(), "one-shot");
+
+        // step 3: rank 0 is slow
+        assert_eq!(begin_step(), 3);
+        assert_eq!(shard_injection(0).slow_millis, 5);
+
+        // step 4: loss poisoning, exactly once
+        assert_eq!(begin_step(), 4);
+        assert_eq!(nonfinite_injection(), Some(NonFinite::Loss));
+        assert_eq!(nonfinite_injection(), None);
+
+        // saves 1 and 2 carry their IO faults, later saves are clean
+        assert_eq!(next_save_fault(), Some(CkptFault::WriteFail));
+        assert_eq!(next_save_fault(), Some(CkptFault::BitFlip));
+        assert_eq!(next_save_fault(), None);
+
+        assert_eq!(pending(), 0, "every fault consumed");
+        clear();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn recovery_counters_are_monotonic() {
+        let before = (respawns(), ckpt_retries(), rollbacks());
+        note_respawn();
+        note_ckpt_retry();
+        note_rollback();
+        assert!(respawns() >= before.0 + 1);
+        assert!(ckpt_retries() >= before.1 + 1);
+        assert!(rollbacks() >= before.2 + 1);
+    }
+
+    #[test]
+    fn inject_apply_delays_and_panics() {
+        let quiet = FaultInject {
+            panic: false,
+            slow_millis: 1,
+        };
+        quiet.apply(0); // returns after the delay
+        let boom = FaultInject {
+            panic: true,
+            slow_millis: 0,
+        };
+        let err = std::panic::catch_unwind(|| boom.apply(3)).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("worker 3"), "{msg}");
+    }
+}

@@ -139,6 +139,22 @@
 //! `obs::observe` follow the same discipline for counters and
 //! histograms (aggregate magnitudes only, e.g. GEMM pack/kernel time).
 //!
+//! ### The supervised-pool contract for custom layers
+//!
+//! The distributed worker pool runs every job under `catch_unwind`: if
+//! a custom [`runtime::backend::native::GradSampleLayer`] panics inside
+//! a shard, the pool respawns the dead rank with its exact rank-derived
+//! RNG and re-executes the shard deterministically — the run either
+//! completes with parameters and ε byte-identical to a panic-free run,
+//! or fails with a typed error naming the rank once the respawn budget
+//! is exhausted (a kernel that panics *every* time it sees a shard is a
+//! bug, not a transient fault). Two rules keep a custom layer inside
+//! that contract: the backward must be a pure function of (params,
+//! shard) — no interior mutability that survives a panic — and it must
+//! never consume worker RNG state (noise generation is the pool's job;
+//! see [`faults`] for the injection harness that pins this recovery
+//! path in CI).
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`] — hand-rolled substrates: JSON, CLI, .npy, stats, tables
 //! * [`rng`] — xoshiro and ChaCha20 (secure mode) generators + Gaussian
@@ -146,10 +162,12 @@
 //! * [`privacy`] — `PrivacyEngine`, module validator, schedulers
 //! * [`runtime`] — execution backends (XLA/PJRT + native), artifact
 //!   registry, typed step executables
-//! * [`distributed`] — data-parallel DP-SGD: worker pool, shard planner,
-//!   tree reduction, DPDDP noise division
+//! * [`distributed`] — data-parallel DP-SGD: supervised worker pool,
+//!   shard planner, tree reduction, DPDDP noise division
 //! * [`obs`] — structured tracing + metrics: span timers, counters,
 //!   log-linear histograms, chrome://tracing export, live serve status
+//! * [`faults`] — deterministic fault injection: scripted worker
+//!   panics, checkpoint IO errors, slow shards, non-finite poisoning
 //! * [`trainer`] — DP optimizer (virtual steps), training loop, metrics
 //! * [`serve`] — streaming service: step pipeline config, durable
 //!   checkpoints, multi-job scheduler, graceful shutdown
@@ -168,6 +186,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod distributed;
+pub mod faults;
 pub mod obs;
 pub mod privacy;
 pub mod rng;

@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 use opacus_rs::accounting::{self, Accountant, CalibKind, GdpAccountant, RdpAccountant};
 use opacus_rs::coordinator::Opacus;
 use opacus_rs::distributed::{detected_cpus, NoiseDivision, Parallelism};
+use opacus_rs::faults;
 use opacus_rs::obs::{self, logger, LogFormat, ObsConfig};
 use opacus_rs::privacy::validator::{clipping_supported, validate_model};
 use opacus_rs::privacy::{
@@ -49,6 +50,19 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, FLAGS)?;
     obs::set_config(obs_config_from(&args)?);
+    // --faults PLAN (a file path or inline JSON; env: OPACUS_FAULTS)
+    // arms the deterministic fault-injection plan for this process
+    let faults_arg = args
+        .get("faults")
+        .map(str::to_string)
+        .or_else(|| std::env::var("OPACUS_FAULTS").ok());
+    if let Some(arg) = faults_arg {
+        faults::install(faults::FaultPlan::load_arg(&arg)?);
+        logger::emit(
+            "faults",
+            &format!("fault plan armed: {} scripted fault(s)", faults::pending()),
+        );
+    }
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
@@ -105,10 +119,10 @@ SUBCOMMANDS
              [--gemm-threads N|auto] [--noise-division root|perworker]
              [--artifacts DIR] [--out metrics.json] [--pipeline N]
              [--checkpoint DIR] [--resume] [--trace FILE]
-             [--log-format text|json]
+             [--log-format text|json] [--faults PLAN]
   serve      --jobs spec.json[,spec2.json…] [--out DIR] [--quantum N]
              [--kill-after STEPS] [--resume] [--trace FILE]
-             [--log-format text|json]
+             [--log-format text|json] [--faults PLAN]
   epsilon    --q Q --sigma S --steps T [--delta D] [--compare]
   calibrate  --eps E --delta D --q Q --steps T [--accountant rdp|gdp]
   validate   --task T [--backend auto|xla|native] [--artifacts DIR]
@@ -167,6 +181,18 @@ text output is unchanged. serve additionally rewrites a live
 <out>/<job>.status.json for each job at every quantum boundary (step,
 steps/sec, epsilon vs budget burn-down) — always atomically, so readers
 never see a torn file.
+
+--faults PLAN (a JSON file path or inline JSON; env: OPACUS_FAULTS)
+arms deterministic fault injection: scripted worker panics, slow
+shards, checkpoint write failures / torn writes / bit flips, and
+non-finite loss/gradient poisoning at named (step, rank) points. The
+recovery machinery is always on — supervised workers respawn dead
+ranks and re-execute their shard deterministically (epsilon and params
+stay byte-identical), checkpoint saves retry transient IO and keep a
+generation ring that load rolls back through, and serve quarantines a
+job that fails unrecoverably ('failed' status with the error) instead
+of tearing down its siblings. With no plan the probes cost one relaxed
+atomic load.
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -429,6 +455,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         logger::emit(
             "interrupted",
             &format!("service interrupted — rerun with --resume to continue from {out_dir}/"),
+        );
+    }
+    let failed: Vec<&str> = reports
+        .iter()
+        .filter(|r| r.status == JobStatus::Failed)
+        .map(|r| r.name.as_str())
+        .collect();
+    if !failed.is_empty() {
+        logger::emit(
+            "failed",
+            &format!(
+                "{} job(s) quarantined ({}) — see <out>/<job>.status.json for the error",
+                failed.len(),
+                failed.join(", ")
+            ),
         );
     }
     Ok(())

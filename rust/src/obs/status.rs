@@ -24,7 +24,7 @@ pub const STATUS_VERSION: u64 = 1;
 pub struct StatusReport {
     pub job: usize,
     pub task: String,
-    /// `running` | `completed` | `budget-exhausted` | `interrupted`
+    /// `running` | `completed` | `exhausted` | `interrupted` | `failed`
     pub state: String,
     pub step: u64,
     pub epoch: usize,
@@ -39,11 +39,19 @@ pub struct StatusReport {
     pub compute_secs: f64,
     /// Aggregate noise/reduce stage seconds so far.
     pub reduce_secs: f64,
+    /// Fault-recovery odometers (process-wide, monotonic): dead worker
+    /// ranks respawned, checkpoint save attempts retried, checkpoint
+    /// generations rolled back. All zero on a healthy run.
+    pub worker_respawns: u64,
+    pub checkpoint_retries: u64,
+    pub checkpoint_rollbacks: u64,
+    /// Terminal error message — present only when `state` is `failed`.
+    pub error: Option<String>,
 }
 
 impl StatusReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::str(STATUS_FORMAT)),
             ("version", Json::num(STATUS_VERSION as f64)),
             ("job", Json::num(self.job as f64)),
@@ -58,7 +66,14 @@ impl StatusReport {
             ("sigma", Json::num(self.sigma)),
             ("compute_secs", Json::num(self.compute_secs)),
             ("reduce_secs", Json::num(self.reduce_secs)),
-        ])
+            ("worker_respawns", Json::num(self.worker_respawns as f64)),
+            ("checkpoint_retries", Json::num(self.checkpoint_retries as f64)),
+            ("checkpoint_rollbacks", Json::num(self.checkpoint_rollbacks as f64)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<StatusReport> {
@@ -91,6 +106,12 @@ impl StatusReport {
             sigma: f("sigma")?,
             compute_secs: f("compute_secs")?,
             reduce_secs: f("reduce_secs")?,
+            // recovery odometers are additive fields within version 1:
+            // absent (older writer) reads as zero
+            worker_respawns: j.get("worker_respawns").as_f64().unwrap_or(0.0) as u64,
+            checkpoint_retries: j.get("checkpoint_retries").as_f64().unwrap_or(0.0) as u64,
+            checkpoint_rollbacks: j.get("checkpoint_rollbacks").as_f64().unwrap_or(0.0) as u64,
+            error: j.get("error").as_str().map(str::to_string),
         })
     }
 
@@ -120,6 +141,10 @@ mod tests {
             sigma: 1.1,
             compute_secs: 12.5,
             reduce_secs: 0.75,
+            worker_respawns: 1,
+            checkpoint_retries: 2,
+            checkpoint_rollbacks: 0,
+            error: Some("worker 3 panicked".into()),
         }
     }
 

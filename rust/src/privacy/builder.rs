@@ -295,6 +295,7 @@ pub struct PrivateBuilder {
     pipeline: Option<usize>,
     gemm_threads: Option<usize>,
     tracing: bool,
+    faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for PrivateBuilder {
@@ -317,6 +318,7 @@ impl Default for PrivateBuilder {
             pipeline: None,
             gemm_threads: None,
             tracing: false,
+            faults: None,
         }
     }
 }
@@ -471,6 +473,20 @@ impl PrivateBuilder {
         self
     }
 
+    /// Install a deterministic fault-injection plan ([`crate::faults`])
+    /// at build time (the `--faults` CLI flag / `OPACUS_FAULTS` env call
+    /// this). The plan scripts worker panics, checkpoint IO errors, slow
+    /// shards and non-finite poisoning at named (step, rank) points;
+    /// recovery is exercised on the real code paths and the run's ε and
+    /// parameters stay byte-identical to a fault-free run (or fail with
+    /// a typed error — never silently). The default (no call) leaves the
+    /// process-global plan untouched; injection probes then cost one
+    /// relaxed atomic load.
+    pub fn faults(mut self, plan: crate::faults::FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Calibrate σ at build time so training `epochs` epochs spends at
     /// most (ε, δ) — the `make_private_with_epsilon` path.
     pub fn target_epsilon(mut self, epsilon: f64, delta: f64, epochs: usize) -> Self {
@@ -583,6 +599,9 @@ impl PrivateBuilder {
         let sys = sys.with_backend(requested)?;
         if self.tracing {
             crate::obs::set_enabled(true);
+        }
+        if let Some(plan) = &self.faults {
+            crate::faults::install(plan.clone());
         }
         let engine = PrivacyEngine::try_new(self.engine_config())?;
         let plan = self.plan(sys.train.len())?;

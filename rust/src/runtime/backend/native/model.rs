@@ -163,6 +163,19 @@ impl NativeModel {
             .collect()
     }
 
+    /// The layer a flat parameter index belongs to, as `"kind (op #i)"`
+    /// — what the non-finite step guard names in its error.
+    pub fn param_layer_name(&self, index: usize) -> String {
+        for (i, (op, span)) in self.ops.iter().zip(&self.param_spans).enumerate() {
+            if let (Op::Layer(l), Some((off, len))) = (op, span) {
+                if index >= *off && index < off + len {
+                    return format!("{} (op #{i})", l.kind());
+                }
+            }
+        }
+        format!("index {index} out of range ({} params)", self.num_params)
+    }
+
     /// Deterministic flat parameter init.
     pub fn init_params(&self, seed: u64) -> Vec<f32> {
         let mut params = vec![0f32; self.num_params];

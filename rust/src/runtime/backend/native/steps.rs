@@ -35,6 +35,67 @@ fn check_batch(kind: &str, x: &HostTensor, y: &[i32], mask: &[f32], batch: usize
     Ok(())
 }
 
+/// The non-finite guard every optimizer-update path runs *before* it
+/// writes new parameters: a NaN/Inf gradient component or loss means
+/// the step is poisoned, and the update must not happen (the trainer
+/// only records budget spend after a successful step, so a guarded
+/// step never burns ε either). `loss_sum` is only checked when
+/// `real > 0` — an all-padded batch legitimately reports a NaN loss.
+///
+/// Fast path: one summing pass over the gradient (any non-finite
+/// component makes the sum non-finite); the per-component scan naming
+/// the offender only runs on failure. `layer_name` maps the offending
+/// flat parameter index to a human label (the model's layer kind where
+/// one is known).
+pub(crate) fn check_step_finite<T: Copy + Into<f64>>(
+    gsum: &[T],
+    loss_sum: f64,
+    real: usize,
+    what: &str,
+    layer_name: impl Fn(usize) -> String,
+) -> Result<()> {
+    let total: f64 = gsum.iter().map(|&g| g.into()).sum();
+    if !total.is_finite() {
+        let at = gsum.iter().position(|&g| {
+            let v: f64 = g.into();
+            !v.is_finite()
+        });
+        match at {
+            Some(i) => bail!(
+                "{what}: non-finite gradient at parameter {i} ({}) — \
+                 refusing the optimizer update",
+                layer_name(i)
+            ),
+            None => bail!(
+                "{what}: gradient sum overflows f64 — refusing the optimizer update"
+            ),
+        }
+    }
+    if real > 0 && !loss_sum.is_finite() {
+        bail!("{what}: non-finite loss ({loss_sum}) — refusing the optimizer update");
+    }
+    Ok(())
+}
+
+/// Apply any scripted non-finite poisoning to a step's reduced
+/// gradient + loss (no-op — one relaxed load — without a fault plan).
+/// Injection happens *before* [`check_step_finite`] so the guard, not
+/// the injection site, is what the fault exercises.
+pub(crate) fn inject_nonfinite<T: Copy>(gsum: &mut [T], loss_sum: &mut f64, poison: T) {
+    if !crate::faults::enabled() {
+        return;
+    }
+    match crate::faults::nonfinite_injection() {
+        Some(crate::faults::NonFinite::Loss) => *loss_sum = f64::NAN,
+        Some(crate::faults::NonFinite::Grad) => {
+            if let Some(v) = gsum.first_mut() {
+                *v = poison;
+            }
+        }
+        None => {}
+    }
+}
+
 /// The noisy SGD update both the fused step and the apply step perform:
 /// `p' = p − lr · (Σ clip_C(g_b) + σ·C·noise) / denom`. One definition so
 /// fused and virtual execution cannot drift apart. `pub(crate)` because
@@ -124,11 +185,15 @@ impl FusedStep for NativeFusedStep {
                 params.len()
             );
         }
-        let g = if self.ghost {
+        let mut g = if self.ghost {
             self.model.dp_grad_ghost(params, &x, y, mask, hp.clip)?
         } else {
             self.model.dp_grad(params, &x, y, mask, hp.clip)?
         };
+        inject_nonfinite(&mut g.gsum, &mut g.loss_sum, f32::INFINITY);
+        check_step_finite(&g.gsum, g.loss_sum, g.real, "native fused dp step", |i| {
+            self.model.param_layer_name(i)
+        })?;
         let new_params = noisy_sgd_update(params, &g.gsum, noise, hp);
         let (loss, snorm_mean) = if g.real > 0 {
             (g.loss_sum / g.real as f64, g.snorm_sum / g.real as f64)
@@ -254,6 +319,9 @@ impl ApplyExec for NativeApplyStep {
                 self.num_params
             );
         }
+        check_step_finite(gsum, 0.0, 0, "native apply step", |_| {
+            "accumulated clipped sum".to_string()
+        })?;
         Ok(noisy_sgd_update(params, gsum, noise, hp))
     }
 }
@@ -542,6 +610,55 @@ mod tests {
         for (j, (a, b)) in mat.params.iter().zip(gho.params.iter()).enumerate() {
             assert!((a - b).abs() < 1e-6, "param {j}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn nonfinite_injection_is_a_typed_error_without_an_update() {
+        let _g = crate::faults::test_lock();
+        let backend = NativeBackend::for_task("mnist").unwrap();
+        let steps = backend.trainer_steps(4).unwrap();
+        let fused = steps.fused_dp.unwrap();
+        let params = backend.init_params().unwrap();
+        let (x, y, mask) = mnist_batch(4, 7);
+        let noise = vec![0f32; params.len()];
+        let hp = HyperParams {
+            lr: 0.1,
+            clip: 1.0,
+            sigma: 0.0,
+            denom: 4.0,
+        };
+        crate::faults::install(
+            crate::faults::FaultPlan::parse(
+                r#"{"format": "opacus-rs/faults", "version": 1, "faults": [
+                    {"kind": "non_finite_grad", "step": 1},
+                    {"kind": "non_finite_loss", "step": 2}]}"#,
+            )
+            .unwrap(),
+        );
+        crate::faults::begin_step();
+        let err = fused
+            .dp_step(&params, x.clone(), &y, &mask, &noise, hp)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("non-finite gradient") && err.contains("(op #"),
+            "error must name the layer: {err}"
+        );
+        crate::faults::begin_step();
+        let err = fused
+            .dp_step(&params, x.clone(), &y, &mask, &noise, hp)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite loss"), "{err}");
+        crate::faults::clear();
+        // faults disarmed: the very same step succeeds
+        fused.dp_step(&params, x, &y, &mask, &noise, hp).unwrap();
+        // and a genuinely poisoned accumulated sum is refused by apply
+        let apply = NativeApplyStep::new(params.len());
+        let mut gsum = vec![0f32; params.len()];
+        gsum[3] = f32::NAN;
+        let err = apply.run(&params, &gsum, &noise, hp).unwrap_err().to_string();
+        assert!(err.contains("non-finite gradient"), "{err}");
     }
 
     #[test]

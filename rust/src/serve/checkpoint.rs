@@ -16,6 +16,15 @@
 //! payload file carries its byte length and CRC-32 in the manifest;
 //! `load` verifies both before parsing anything.
 //!
+//! Saves keep a **generation ring**: before a new checkpoint replaces
+//! `dir`, the previous one is renamed to the sibling `<dir>.gen{N:06}`
+//! (N is its manifest `generation`), and the oldest siblings beyond the
+//! retention depth (default [`DEFAULT_RETAIN`], so live + 2 ancestors)
+//! are pruned. [`load_ring`] falls back through the ring when the live
+//! checkpoint fails CRC verification — a torn or bit-flipped write
+//! costs at most one generation of progress, never the run. Transient
+//! save failures are retried with a short bounded backoff.
+//!
 //! Resume guarantees:
 //! * **ε is byte-identical**: the accountant history round-trips as
 //!   plain f64 JSON numbers (the in-tree writer prints shortest
@@ -34,9 +43,11 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use crate::accounting::accountant::HistoryEntry;
 use crate::data::LogicalBatch;
+use crate::faults::{self, CkptFault};
 use crate::trainer::{MetricsLog, PrivateTrainer};
 use crate::util::hash::{crc32, u64_from_hex, u64_to_hex};
 use crate::util::json::Json;
@@ -47,10 +58,17 @@ pub const CHECKPOINT_FORMAT: &str = "opacus-rs/checkpoint";
 /// Current format version. Readers reject other versions with a typed
 /// error naming both (no silent best-effort parsing of future layouts).
 pub const CHECKPOINT_VERSION: u64 = 1;
+/// Default ring depth: the live checkpoint plus two ancestor
+/// generations survive on disk.
+pub const DEFAULT_RETAIN: usize = 3;
 
 const PARAMS_FILE: &str = "params.npy";
 const STATE_FILE: &str = "state.json";
 const METRICS_FILE: &str = "metrics.json";
+/// Save retry policy: transient IO failures get this many attempts
+/// total, sleeping 10ms then 20ms between them.
+const SAVE_ATTEMPTS: usize = 3;
+const BACKOFF_MS: u64 = 10;
 
 /// A complete training snapshot (see module docs for what "complete"
 /// guarantees on resume).
@@ -271,13 +289,91 @@ impl TrainerCheckpoint {
         })
     }
 
-    /// Write the checkpoint to `dir`, atomically: everything lands in
-    /// `<dir>.tmp` first, which then replaces `dir` in one rename.
+    /// Write the checkpoint to `dir` with the default ring depth
+    /// ([`DEFAULT_RETAIN`]). See [`TrainerCheckpoint::save_with_retain`].
     pub fn save(&self, dir: &Path) -> Result<()> {
+        self.save_with_retain(dir, DEFAULT_RETAIN)
+    }
+
+    /// Write the checkpoint to `dir`, atomically: everything lands in
+    /// `<dir>.tmp` first, which then replaces `dir` in one rename. The
+    /// previous checkpoint is preserved as the ring sibling
+    /// `<dir>.gen{N:06}`; siblings beyond `retain - 1` are pruned.
+    /// Transient IO failures are retried ([`SAVE_ATTEMPTS`] attempts,
+    /// bounded backoff) before the error propagates.
+    pub fn save_with_retain(&self, dir: &Path, retain: usize) -> Result<()> {
+        let retain = retain.max(1);
+        // one scripted fault decision per *logical* save, not per attempt
+        let fault = faults::next_save_fault();
+        let prior_gen = if checkpoint_exists(dir) {
+            // a live checkpoint whose manifest no longer parses still
+            // gets a ring slot — above every existing suffix
+            Some(dir_generation(dir).unwrap_or_else(|| {
+                ring_generations(dir).iter().map(|&(g, _)| g).max().unwrap_or(0) + 1
+            }))
+        } else {
+            None
+        };
+        let generation = prior_gen.map_or(1, |g| g + 1);
+
+        let mut last_err = None;
+        for attempt in 1..=SAVE_ATTEMPTS {
+            if attempt > 1 {
+                faults::note_ckpt_retry();
+                std::thread::sleep(Duration::from_millis(BACKOFF_MS << (attempt - 2)));
+            }
+            let result = if attempt == 1 && matches!(fault, Some(CkptFault::WriteFail)) {
+                Err(anyhow!("injected fault: checkpoint write failed"))
+            } else {
+                self.save_once(dir, generation, prior_gen)
+            };
+            match result {
+                Ok(()) => {
+                    last_err = None;
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if let Some(e) = last_err {
+            return Err(
+                e.context(format!("checkpoint save failed after {SAVE_ATTEMPTS} attempts"))
+            );
+        }
+        prune_ring(dir, retain)?;
+
+        // scripted storage corruption lands *after* the atomic publish:
+        // the save reports success (as a real torn write or flipped bit
+        // would) and the damage surfaces at the next CRC-verified load
+        match fault {
+            Some(CkptFault::TornWrite) => {
+                let p = dir.join(PARAMS_FILE);
+                let bytes = std::fs::read(&p).context("injecting torn checkpoint write")?;
+                std::fs::write(&p, &bytes[..bytes.len() / 2])
+                    .context("injecting torn checkpoint write")?;
+            }
+            Some(CkptFault::BitFlip) => {
+                let p = dir.join(PARAMS_FILE);
+                let mut bytes = std::fs::read(&p).context("injecting checkpoint bit flip")?;
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0x01;
+                std::fs::write(&p, bytes).context("injecting checkpoint bit flip")?;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn save_once(&self, dir: &Path, generation: u64, prior_gen: Option<u64>) -> Result<()> {
         let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
-        if tmp.exists() {
+        // a crash (or external tooling) can leave the tmp path behind as
+        // a directory *or* a plain file — clear either form
+        if tmp.is_dir() {
             std::fs::remove_dir_all(&tmp)
                 .with_context(|| format!("clearing stale checkpoint tmp {tmp:?}"))?;
+        } else if tmp.symlink_metadata().is_ok() {
+            std::fs::remove_file(&tmp)
+                .with_context(|| format!("clearing stale checkpoint tmp file {tmp:?}"))?;
         }
         std::fs::create_dir_all(&tmp)
             .with_context(|| format!("creating checkpoint dir {tmp:?}"))?;
@@ -301,20 +397,40 @@ impl TrainerCheckpoint {
                 ("crc32", Json::str(&format!("{:08x}", crc32(bytes)))),
             ]));
         }
-        let manifest = Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::str(CHECKPOINT_FORMAT)),
             ("version", Json::num(CHECKPOINT_VERSION as f64)),
             ("task", Json::str(&self.task)),
             ("global_step", Json::num(self.global_step as f64)),
-            ("mechanism", Json::str(&self.mechanism)),
-            ("files", Json::Arr(entries)),
-        ]);
+            ("generation", Json::num(generation as f64)),
+        ];
+        if let Some(parent) = prior_gen {
+            fields.push(("parent", Json::num(parent as f64)));
+        }
+        fields.push(("mechanism", Json::str(&self.mechanism)));
+        fields.push(("files", Json::Arr(entries)));
+        let manifest = Json::obj(fields);
         std::fs::write(tmp.join("manifest.json"), manifest.to_string())
             .with_context(|| "writing checkpoint manifest")?;
 
+        // publish: the previous generation becomes a ring sibling
+        // instead of being destroyed
         if dir.exists() {
-            std::fs::remove_dir_all(dir)
-                .with_context(|| format!("replacing old checkpoint {dir:?}"))?;
+            match prior_gen {
+                Some(g) => {
+                    let slot = ring_slot(dir, g);
+                    if slot.exists() {
+                        std::fs::remove_dir_all(&slot)
+                            .with_context(|| format!("clearing ring slot {slot:?}"))?;
+                    }
+                    std::fs::rename(dir, &slot)
+                        .with_context(|| format!("rotating checkpoint into {slot:?}"))?;
+                }
+                // a dir with no readable manifest holds nothing worth
+                // keeping in the ring
+                None => std::fs::remove_dir_all(dir)
+                    .with_context(|| format!("replacing old checkpoint {dir:?}"))?,
+            }
         }
         std::fs::rename(&tmp, dir)
             .with_context(|| format!("publishing checkpoint {dir:?}"))?;
@@ -380,6 +496,78 @@ pub fn checkpoint_exists(dir: &Path) -> bool {
     dir.join("manifest.json").is_file()
 }
 
+/// The ring sibling path for generation `g` of the checkpoint at `dir`.
+fn ring_slot(dir: &Path, g: u64) -> PathBuf {
+    PathBuf::from(format!("{}.gen{g:06}", dir.display()))
+}
+
+/// The `generation` recorded in the manifest of the checkpoint at
+/// `dir`, if the manifest parses.
+fn dir_generation(dir: &Path) -> Option<u64> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+    let j = Json::parse(&text).ok()?;
+    j.get("generation").as_f64().map(|g| g as u64)
+}
+
+/// Every `<dir>.gen*` ring sibling on disk, as (generation, path),
+/// unordered.
+fn ring_generations(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Some(stem) = dir.file_name().and_then(|n| n.to_str()) else {
+        return Vec::new();
+    };
+    let parent = match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let prefix = format!("{stem}.gen");
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(parent) {
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(suffix) = name.strip_prefix(&prefix) {
+                if let Ok(g) = suffix.parse::<u64>() {
+                    out.push((g, e.path()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Remove ring siblings beyond the retention depth (`retain` includes
+/// the live checkpoint, so `retain - 1` siblings survive).
+fn prune_ring(dir: &Path, retain: usize) -> Result<()> {
+    let mut gens = ring_generations(dir);
+    gens.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, p) in gens.into_iter().skip(retain.saturating_sub(1)) {
+        std::fs::remove_dir_all(&p)
+            .with_context(|| format!("pruning checkpoint generation {p:?}"))?;
+    }
+    Ok(())
+}
+
+/// Load the checkpoint at `dir`, rolling back through the generation
+/// ring when the live copy fails verification. Returns the checkpoint
+/// and, when a rollback happened, the generation it landed on. Every
+/// candidate is fully CRC-verified before it wins; if no generation
+/// verifies, the live checkpoint's error propagates.
+pub fn load_ring(dir: &Path) -> Result<(TrainerCheckpoint, Option<u64>)> {
+    let primary = match TrainerCheckpoint::load(dir) {
+        Ok(ck) => return Ok((ck, None)),
+        Err(e) => e,
+    };
+    let mut gens = ring_generations(dir);
+    gens.sort_by(|a, b| b.0.cmp(&a.0));
+    for (g, p) in gens {
+        if let Ok(ck) = TrainerCheckpoint::load(&p) {
+            faults::note_rollback();
+            return Ok((ck, Some(g)));
+        }
+    }
+    Err(primary.context("no checkpoint generation in the ring verifies"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,8 +605,19 @@ mod tests {
 
     fn tmpdir(name: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("opacus_ckpt_{name}_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&d);
+        rm_ring(&d);
         d
+    }
+
+    /// Remove a checkpoint, its tmp, and every ring sibling.
+    fn rm_ring(dir: &Path) {
+        let _ = std::fs::remove_dir_all(dir);
+        let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let _ = std::fs::remove_file(&tmp);
+        for (_, p) in ring_generations(dir) {
+            let _ = std::fs::remove_dir_all(&p);
+        }
     }
 
     #[test]
@@ -442,7 +641,7 @@ mod tests {
             back.history[0].noise_multiplier.to_bits(),
             ck.history[0].noise_multiplier.to_bits()
         );
-        let _ = std::fs::remove_dir_all(&dir);
+        rm_ring(&dir);
     }
 
     #[test]
@@ -455,7 +654,7 @@ mod tests {
         let back = TrainerCheckpoint::load(&dir).unwrap();
         assert_eq!(back.global_step, 99);
         assert!(!PathBuf::from(format!("{}.tmp", dir.display())).exists());
-        let _ = std::fs::remove_dir_all(&dir);
+        rm_ring(&dir);
     }
 
     #[test]
@@ -470,7 +669,7 @@ mod tests {
         std::fs::write(&p, bytes).unwrap();
         let err = TrainerCheckpoint::load(&dir).unwrap_err().to_string();
         assert!(err.contains("corrupt"), "{err}");
-        let _ = std::fs::remove_dir_all(&dir);
+        rm_ring(&dir);
     }
 
     #[test]
@@ -485,7 +684,7 @@ mod tests {
         let text = std::fs::read_to_string(&m).unwrap();
         std::fs::write(&m, text.replace(CHECKPOINT_FORMAT, "something/else")).unwrap();
         assert!(TrainerCheckpoint::load(&dir).is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+        rm_ring(&dir);
     }
 
     #[test]
@@ -494,6 +693,123 @@ mod tests {
         sample().save(&dir).unwrap();
         std::fs::remove_file(dir.join(METRICS_FILE)).unwrap();
         assert!(TrainerCheckpoint::load(&dir).is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_survivors_are_cleared() {
+        // a crash can leave `<dir>.tmp` behind as a directory...
+        let dir = tmpdir("staletmp");
+        let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("junk"), b"leftover").unwrap();
+        sample().save(&dir).unwrap();
+        assert!(TrainerCheckpoint::load(&dir).is_ok());
+        assert!(!tmp.exists());
+        // ...or, via external tooling, as a plain file
+        rm_ring(&dir);
+        std::fs::write(&tmp, b"not a directory").unwrap();
+        sample().save(&dir).unwrap();
+        assert!(TrainerCheckpoint::load(&dir).is_ok());
+        assert!(!tmp.exists());
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn ring_keeps_the_last_generations() {
+        let dir = tmpdir("ring");
+        let mut ck = sample();
+        for step in 1..=5u64 {
+            ck.global_step = step;
+            ck.save(&dir).unwrap();
+        }
+        // live = generation 5; with retain 3, only generations 4 and 3
+        // survive as siblings
+        assert_eq!(dir_generation(&dir), Some(5));
+        let mut gens: Vec<u64> = ring_generations(&dir).iter().map(|&(g, _)| g).collect();
+        gens.sort();
+        assert_eq!(gens, vec![3, 4]);
+        let back = TrainerCheckpoint::load(&ring_slot(&dir, 4)).unwrap();
+        assert_eq!(back.global_step, 4);
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn load_ring_rolls_back_past_a_corrupt_live_checkpoint() {
+        let dir = tmpdir("rollback");
+        let mut ck = sample();
+        ck.global_step = 1;
+        ck.save(&dir).unwrap();
+        ck.global_step = 2;
+        ck.save(&dir).unwrap();
+        // corrupt the live generation's params payload
+        let p = dir.join(PARAMS_FILE);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(TrainerCheckpoint::load(&dir).is_err());
+        let before = crate::faults::rollbacks();
+        let (back, rolled) = load_ring(&dir).unwrap();
+        assert_eq!(back.global_step, 1);
+        assert_eq!(rolled, Some(1));
+        assert!(crate::faults::rollbacks() > before);
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn load_ring_fails_when_nothing_verifies() {
+        let dir = tmpdir("allbad");
+        sample().save(&dir).unwrap();
+        let p = dir.join(PARAMS_FILE);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&p, bytes).unwrap();
+        let err = load_ring(&dir).unwrap_err().to_string();
+        assert!(err.contains("no checkpoint generation"), "{err}");
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn injected_write_failure_is_retried_to_success() {
+        let _guard = crate::faults::test_lock();
+        let dir = tmpdir("writefail");
+        let plan = crate::faults::FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"checkpoint_write_fail","save":1}
+            ]}"#,
+        )
+        .unwrap();
+        crate::faults::install(plan);
+        let before = crate::faults::ckpt_retries();
+        sample().save(&dir).unwrap();
+        crate::faults::clear();
+        assert!(crate::faults::ckpt_retries() > before);
+        assert!(TrainerCheckpoint::load(&dir).is_ok());
+        rm_ring(&dir);
+    }
+
+    #[test]
+    fn injected_torn_write_surfaces_at_load_and_rolls_back() {
+        let _guard = crate::faults::test_lock();
+        let dir = tmpdir("torn");
+        let plan = crate::faults::FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"checkpoint_torn_write","save":2}
+            ]}"#,
+        )
+        .unwrap();
+        crate::faults::install(plan);
+        let mut ck = sample();
+        ck.global_step = 1;
+        ck.save(&dir).unwrap();
+        ck.global_step = 2;
+        ck.save(&dir).unwrap(); // reports success; the tear is latent
+        crate::faults::clear();
+        assert!(TrainerCheckpoint::load(&dir).is_err(), "torn write must fail CRC");
+        let (back, rolled) = load_ring(&dir).unwrap();
+        assert_eq!(back.global_step, 1);
+        assert_eq!(rolled, Some(1));
+        rm_ring(&dir);
     }
 }

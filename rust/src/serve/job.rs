@@ -57,6 +57,9 @@ pub struct JobSpec {
     pub pipeline: Option<usize>,
     pub max_epochs: Option<usize>,
     pub artifacts: String,
+    /// Checkpoint ring depth: the live checkpoint plus `retain - 1`
+    /// ancestor generations survive on disk for rollback.
+    pub retain: usize,
 }
 
 impl JobSpec {
@@ -164,10 +167,17 @@ impl JobSpec {
                 .as_str()
                 .unwrap_or("artifacts")
                 .to_string(),
+            retain: usize_or("retain", super::checkpoint::DEFAULT_RETAIN)?,
         };
         if spec.pipeline == Some(0) {
             bail!(
                 "job spec '{}': pipeline depth must be at least 1 (omit it for sequential)",
+                spec.name
+            );
+        }
+        if spec.retain == 0 {
+            bail!(
+                "job spec '{}': retain must be at least 1 (the live checkpoint itself)",
                 spec.name
             );
         }
@@ -249,6 +259,17 @@ mod tests {
         assert_eq!(s.pipeline, None);
         assert_eq!(s.max_epochs, None);
         assert_eq!(s.clipping, ClippingStrategy::Flat);
+        assert_eq!(s.retain, super::super::checkpoint::DEFAULT_RETAIN);
+    }
+
+    #[test]
+    fn retain_parses_and_rejects_zero() {
+        let s = parse(r#"{"name":"a","task":"mnist","epsilon":1.0,"retain":5}"#).unwrap();
+        assert_eq!(s.retain, 5);
+        let err = parse(r#"{"name":"a","task":"mnist","epsilon":1.0,"retain":0}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("retain"), "{err}");
     }
 
     #[test]

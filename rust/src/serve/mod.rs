@@ -20,12 +20,23 @@
 //! * [`shutdown`] — SIGINT/SIGTERM → a polled flag, so an interrupted
 //!   `opacus train`/`serve` flushes metrics and writes a final
 //!   checkpoint instead of dropping the ledger.
+//!
+//! Fault tolerance (PR 10): checkpoint saves keep a generation ring
+//! ([`checkpoint::load_ring`] rolls back past a corrupt latest
+//! generation, retry with bounded backoff absorbs transient IO), and
+//! the scheduler quarantines a job that fails unrecoverably
+//! ([`JobStatus::Failed`], terminal status file with the error) instead
+//! of tearing down its siblings. The [`crate::faults`] plan drives all
+//! of it deterministically in tests and CI.
 
 pub mod checkpoint;
 pub mod job;
 pub mod service;
 pub mod shutdown;
 
-pub use checkpoint::{checkpoint_exists, TrainerCheckpoint, CHECKPOINT_FORMAT, CHECKPOINT_VERSION};
+pub use checkpoint::{
+    checkpoint_exists, load_ring, TrainerCheckpoint, CHECKPOINT_FORMAT, CHECKPOINT_VERSION,
+    DEFAULT_RETAIN,
+};
 pub use job::JobSpec;
 pub use service::{JobReport, JobStatus, ServeConfig, Service};

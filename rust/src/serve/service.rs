@@ -19,9 +19,10 @@
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
-use super::checkpoint::{checkpoint_exists, TrainerCheckpoint};
+use super::checkpoint::{checkpoint_exists, load_ring, TrainerCheckpoint};
 use super::job::JobSpec;
 use super::shutdown;
+use crate::faults;
 use crate::obs;
 use crate::obs::logger;
 use crate::trainer::PrivateTrainer;
@@ -62,6 +63,11 @@ pub enum JobStatus {
     Completed,
     /// Stopped by shutdown request; resumable from its checkpoint.
     Interrupted,
+    /// Quarantined after an unrecoverable error (exhausted worker
+    /// respawn budget, non-finite step, checkpoint IO failure after
+    /// retries). The job's last durable checkpoint and a terminal
+    /// status file with the error survive; sibling jobs keep running.
+    Failed,
 }
 
 impl JobStatus {
@@ -71,6 +77,7 @@ impl JobStatus {
             JobStatus::Exhausted => "exhausted",
             JobStatus::Completed => "completed",
             JobStatus::Interrupted => "interrupted",
+            JobStatus::Failed => "failed",
         }
     }
 }
@@ -93,6 +100,8 @@ struct JobState {
     trainer: PrivateTrainer,
     status: JobStatus,
     resumed: bool,
+    /// Terminal error message once the job is quarantined.
+    error: Option<String>,
 }
 
 /// The multi-job training service behind `opacus serve`.
@@ -126,8 +135,20 @@ impl Service {
         let dir = self.checkpoint_dir(&spec.name);
         let mut resumed = false;
         if self.cfg.resume && checkpoint_exists(&dir) {
-            TrainerCheckpoint::load(&dir)?
-                .apply(&mut trainer)
+            let (ckpt, rolled_back) = load_ring(&dir)
+                .with_context(|| format!("resuming job '{}' from {dir:?}", spec.name))?;
+            if let Some(generation) = rolled_back {
+                logger::emit_job(
+                    self.jobs.len(),
+                    "rollback",
+                    &format!(
+                        "job {}: latest checkpoint failed verification — \
+                         rolled back to generation {generation}",
+                        spec.name
+                    ),
+                );
+            }
+            ckpt.apply(&mut trainer)
                 .with_context(|| format!("resuming job '{}' from {dir:?}", spec.name))?;
             resumed = true;
             logger::emit_job(
@@ -148,6 +169,7 @@ impl Service {
             trainer,
             status: JobStatus::Running,
             resumed,
+            error: None,
         });
         Ok(())
     }
@@ -155,7 +177,7 @@ impl Service {
     fn save_checkpoint(&self, idx: usize) -> Result<()> {
         let job = &self.jobs[idx];
         TrainerCheckpoint::capture(&job.trainer)
-            .save(&self.checkpoint_dir(&job.spec.name))
+            .save_with_retain(&self.checkpoint_dir(&job.spec.name), job.spec.retain)
             .with_context(|| format!("checkpointing job '{}'", job.spec.name))
     }
 
@@ -197,6 +219,10 @@ impl Service {
             sigma: t.current_sigma(),
             compute_secs: p.compute_busy_secs,
             reduce_secs: p.reduce_busy_secs,
+            worker_respawns: faults::respawns(),
+            checkpoint_retries: faults::ckpt_retries(),
+            checkpoint_rollbacks: faults::rollbacks(),
+            error: job.error.clone(),
         }
         .write(&self.status_path(idx))
         .with_context(|| format!("writing status for job '{}'", job.spec.name))
@@ -287,6 +313,41 @@ impl Service {
         Ok(ran)
     }
 
+    /// Quarantine job `idx` after an unrecoverable turn error: mark it
+    /// `Failed`, write a best-effort final checkpoint and a terminal
+    /// status file carrying the error, and keep serving the siblings.
+    /// The error is contained here, never propagated — one faulting job
+    /// must not tear down the service.
+    fn quarantine(&mut self, idx: usize, err: anyhow::Error) {
+        let name = self.jobs[idx].spec.name.clone();
+        self.jobs[idx].status = JobStatus::Failed;
+        self.jobs[idx].error = Some(format!("{err:#}"));
+        // best-effort: the checkpoint or status write may be the very
+        // thing that failed, and quarantine must still complete
+        if let Err(e) = self.save_checkpoint(idx) {
+            logger::emit_job(
+                idx,
+                "failed",
+                &format!("job {name}: final checkpoint during quarantine failed: {e:#}"),
+            );
+        }
+        if let Err(e) = self.write_status(idx) {
+            logger::emit_job(
+                idx,
+                "failed",
+                &format!("job {name}: status write during quarantine failed: {e:#}"),
+            );
+        }
+        logger::emit_job(
+            idx,
+            "failed",
+            &format!(
+                "job {name}: quarantined after unrecoverable error — {err:#} \
+                 (terminal status written; sibling jobs continue)"
+            ),
+        );
+    }
+
     /// Drive all submitted jobs to a terminal state (or to shutdown).
     /// Every exit path leaves every job with a fresh durable checkpoint.
     pub fn run(&mut self) -> Result<Vec<JobReport>> {
@@ -301,7 +362,9 @@ impl Service {
                 if self.shutdown_due() {
                     break;
                 }
-                self.turn(idx)?;
+                if let Err(e) = self.turn(idx) {
+                    self.quarantine(idx, e);
+                }
             }
         }
         if self.shutdown_due() {

@@ -35,7 +35,7 @@
 //! (crate::privacy::NoiseSource)) the parameters cannot depend on the
 //! pipeline depth. Pinned by the `serve` integration tests.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -128,6 +128,9 @@ impl StepCtx<'_> {
     /// gather happened, which is what makes them byte-identical.
     fn exec(&mut self, pre: PrefetchedBatch) -> Result<(f64, f64)> {
         let _step_span = obs::span("trainer", "step");
+        // advance the fault clock exactly once per logical step, before
+        // any shard is dispatched (no-op unless a plan is installed)
+        crate::faults::begin_step();
         let PrefetchedBatch { lb, chunks, .. } = pre;
         let (loss, snorm, logical, compute_secs, reduce_secs) = match self.mode {
             Mode::Fused => {
@@ -502,7 +505,10 @@ impl PrivateTrainer {
                     };
                     prefetch_busy += pre.gather_secs;
                     obs::observe("pipeline.prefetch_secs", pre.gather_secs);
-                    let (c, r) = ctx.exec(pre)?;
+                    let step = *ctx.global_step + 1;
+                    let (c, r) = ctx
+                        .exec(pre)
+                        .with_context(|| format!("at step {step}"))?;
                     compute_busy += c;
                     reduce_busy += r;
                     obs::observe("pipeline.compute_secs", c);
@@ -536,7 +542,8 @@ impl PrivateTrainer {
                             Ok(Ok(pre)) => {
                                 prefetch_busy += pre.gather_secs;
                                 obs::observe("pipeline.prefetch_secs", pre.gather_secs);
-                                match ctx.exec(pre) {
+                                let step = *ctx.global_step + 1;
+                                match ctx.exec(pre).with_context(|| format!("at step {step}")) {
                                     Ok((c, r)) => {
                                         compute_busy += c;
                                         reduce_busy += r;

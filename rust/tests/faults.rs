@@ -1,0 +1,320 @@
+//! Fault-tolerance integration tests — the PR-10 acceptance criteria,
+//! on the always-on native backend:
+//!
+//! * determinism under faults: a training run with scripted worker
+//!   panics, slow shards and checkpoint write failures produces ε and
+//!   parameters byte-identical to a fault-free run, across worker
+//!   counts and pipeline depths;
+//! * checkpoint rollback: when the *latest* checkpoint generation is
+//!   corrupted, `serve --resume` rolls back to the newest generation
+//!   that verifies and finishes with byte-identical ε;
+//! * non-finite containment: a poisoned loss/gradient is a typed error
+//!   naming the step — no parameter update, no budget spend;
+//! * quarantine: a job that fails unrecoverably is marked `failed` with
+//!   a terminal status file while sibling jobs run to completion.
+//!
+//! The fault plan's step/save clocks are thread-confined and the
+//! enable gate is process-global, so every test here serializes on one
+//! mutex and clears the plan on entry.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use opacus_rs::coordinator::Opacus;
+use opacus_rs::faults::{self, FaultPlan};
+use opacus_rs::obs::StatusReport;
+use opacus_rs::privacy::{Backend, NoiseSource, PrivacyEngine, SamplingMode};
+use opacus_rs::serve::{JobSpec, JobStatus, ServeConfig, Service, TrainerCheckpoint};
+use opacus_rs::trainer::PrivateTrainer;
+use opacus_rs::util::json::Json;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("opacus_faults_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+/// A small deterministic fused-path trainer on the worker pool, with an
+/// optional prefetch pipeline and an optional fault plan.
+fn build(workers: usize, pipeline: Option<usize>, plan: Option<&str>) -> PrivateTrainer {
+    let sys = Opacus::load_with_backend(
+        "artifacts_that_do_not_exist",
+        "mnist",
+        Backend::Native,
+        192,
+        32,
+        11,
+    )
+    .unwrap();
+    let mut builder = PrivacyEngine::private()
+        .backend(Backend::Native)
+        .noise(NoiseSource::Deterministic)
+        .sampling(SamplingMode::Uniform)
+        .noise_multiplier(0.8)
+        .max_grad_norm(1.0)
+        .lr(0.2)
+        .logical_batch(32)
+        .physical_batch(32)
+        .seed(17)
+        .workers(workers);
+    if let Some(d) = pipeline {
+        builder = builder.pipeline(d);
+    }
+    if let Some(text) = plan {
+        builder = builder.faults(FaultPlan::parse(text).unwrap());
+    }
+    builder.build(sys).unwrap().into_trainer()
+}
+
+/// Train `quanta` quanta of `quantum` steps, checkpointing after each —
+/// the serve cadence, so the fault plan's save clock advances too.
+fn run_quanta(
+    t: &mut PrivateTrainer,
+    quanta: usize,
+    quantum: usize,
+    ckpt: &Path,
+) -> (f64, Vec<u32>) {
+    for _ in 0..quanta {
+        t.train_steps(quantum).unwrap();
+        TrainerCheckpoint::capture(t).save(ckpt).unwrap();
+    }
+    (t.epsilon(1e-5).unwrap(), bits(&t.params))
+}
+
+/// The headline invariant: scripted worker panics, slow shards and a
+/// checkpoint write failure change *nothing* about the result — ε bits
+/// and parameter bits match a fault-free run, for 1 and 4 workers, with
+/// and without the prefetch pipeline.
+#[test]
+fn faulted_training_is_byte_identical_to_clean() {
+    let _guard = lock();
+    faults::clear();
+    let dir = tmpdir("identity");
+    let configs: [(usize, Option<usize>); 4] = [(1, None), (1, Some(2)), (4, None), (4, Some(2))];
+    for (i, (workers, pipeline)) in configs.into_iter().enumerate() {
+        let mut clean = build(workers, pipeline, None);
+        let (eps_clean, params_clean) = run_quanta(&mut clean, 3, 2, &dir.join(format!("c{i}")));
+
+        let plan = format!(
+            r#"{{"format":"opacus-rs/faults","version":1,"faults":[
+                {{"kind":"worker_panic","step":2,"rank":{}}},
+                {{"kind":"slow_shard","step":1,"rank":0,"millis":2}},
+                {{"kind":"checkpoint_write_fail","save":1}}
+            ]}}"#,
+            workers - 1
+        );
+        let respawns_before = faults::respawns();
+        let retries_before = faults::ckpt_retries();
+        let mut faulted = build(workers, pipeline, Some(&plan));
+        let (eps_faulted, params_faulted) =
+            run_quanta(&mut faulted, 3, 2, &dir.join(format!("f{i}")));
+        assert_eq!(
+            faults::pending(),
+            0,
+            "workers={workers} pipeline={pipeline:?}: every scripted fault must fire"
+        );
+        faults::clear();
+        assert!(faults::respawns() > respawns_before, "the panic was recovered");
+        assert!(faults::ckpt_retries() > retries_before, "the write fail was retried");
+        assert_eq!(
+            eps_clean.to_bits(),
+            eps_faulted.to_bits(),
+            "workers={workers} pipeline={pipeline:?}: ε must be byte-identical \
+             ({eps_clean} vs {eps_faulted})"
+        );
+        assert_eq!(
+            params_clean, params_faulted,
+            "workers={workers} pipeline={pipeline:?}: params must be bit-identical"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn tight_spec(name: &str, epsilon: f64) -> JobSpec {
+    let json = format!(
+        r#"{{"name":"{name}","task":"mnist","backend":"native","epsilon":{epsilon},
+            "delta":1e-5,"sigma":1.0,"batch":32,"train":192,"lr":0.2,"seed":17}}"#
+    );
+    JobSpec::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+/// Corrupt the params payload of the checkpoint at `dir`.
+fn corrupt(dir: &Path) {
+    let p = dir.join("params.npy");
+    let mut bytes = std::fs::read(&p).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&p, bytes).unwrap();
+}
+
+/// Kill a served job, corrupt its latest checkpoint generation(s), and
+/// resume: the service rolls back to the newest generation whose CRCs
+/// verify, replays forward, and lands on ε byte-identical to a service
+/// that was never killed.
+#[test]
+fn corrupt_latest_generation_rolls_back_with_exact_epsilon() {
+    let _guard = lock();
+    faults::clear();
+
+    // reference service: never killed
+    let ref_out = tmpdir("roll_ref");
+    let mut cfg = ServeConfig::new(&ref_out);
+    cfg.quantum = 2;
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 6.0)).unwrap();
+    let reference = svc.run().unwrap();
+    assert_eq!(reference[0].status, JobStatus::Exhausted);
+
+    // killed service: two quanta plus the interrupt save → generations
+    // 1 (step 2), 2 (step 4) and the live dir (step 4)
+    let out = tmpdir("roll_killed");
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 2;
+    cfg.kill_after = Some(4);
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 6.0)).unwrap();
+    let killed = svc.run().unwrap();
+    assert_eq!(killed[0].status, JobStatus::Interrupted);
+
+    // corrupt the live checkpoint AND the newest ring sibling — the
+    // resume must walk back to the oldest surviving generation (step 2)
+    corrupt(&out.join("job"));
+    let newest_sibling = {
+        let mut gens: Vec<PathBuf> = std::fs::read_dir(&out)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("job.gen"))
+            })
+            .collect();
+        gens.sort();
+        assert!(!gens.is_empty(), "the ring must hold at least one sibling");
+        gens.pop().unwrap()
+    };
+    corrupt(&newest_sibling);
+
+    let rollbacks_before = faults::rollbacks();
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 2;
+    cfg.resume = true;
+    let mut svc = Service::new(cfg);
+    svc.submit(tight_spec("job", 6.0)).unwrap();
+    let resumed = svc.run().unwrap();
+    assert_eq!(resumed[0].status, JobStatus::Exhausted);
+    assert!(resumed[0].resumed);
+    assert!(faults::rollbacks() > rollbacks_before, "a rollback must be recorded");
+
+    assert_eq!(
+        reference[0].epsilon.to_bits(),
+        resumed[0].epsilon.to_bits(),
+        "rollback + replay must reproduce ε byte-identically ({} vs {})",
+        reference[0].epsilon,
+        resumed[0].epsilon
+    );
+    assert_eq!(reference[0].steps, resumed[0].steps);
+
+    // the status file carries the rollback odometer
+    let status = StatusReport::from_json(
+        &Json::parse(&std::fs::read_to_string(out.join("job.status.json")).unwrap()).unwrap(),
+    )
+    .unwrap();
+    assert!(status.checkpoint_rollbacks >= 1);
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_dir_all(&ref_out);
+}
+
+/// A poisoned loss is a typed error naming the step — the optimizer
+/// never applies the update and the accountant never records the step.
+#[test]
+fn non_finite_injection_is_typed_and_spends_nothing() {
+    let _guard = lock();
+    faults::clear();
+    let mut t = build(2, None, None);
+    let params_before = bits(&t.params);
+    faults::install(
+        FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"non_finite_loss","step":1}
+            ]}"#,
+        )
+        .unwrap(),
+    );
+    let err = t.train_steps(2).unwrap_err();
+    faults::clear();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("at step 1"), "{msg}");
+    assert!(msg.contains("non-finite loss"), "{msg}");
+    assert_eq!(t.global_step(), 0, "the poisoned step must not be recorded");
+    assert_eq!(bits(&t.params), params_before, "no parameter update from poison");
+}
+
+/// One job poisoned, one healthy: the scheduler quarantines the
+/// poisoned job (`failed` status file with the error) and the healthy
+/// sibling still runs to graceful exhaustion.
+#[test]
+fn serve_quarantines_a_poisoned_job_and_siblings_finish() {
+    let _guard = lock();
+    faults::clear();
+    let out = tmpdir("quarantine");
+    faults::install(
+        FaultPlan::parse(
+            r#"{"format":"opacus-rs/faults","version":1,"faults":[
+                {"kind":"non_finite_grad","step":1}
+            ]}"#,
+        )
+        .unwrap(),
+    );
+    let mut cfg = ServeConfig::new(&out);
+    cfg.quantum = 2;
+    let mut svc = Service::new(cfg);
+    // job 0 runs first, so the global step clock poisons its first step
+    svc.submit(tight_spec("bad", 6.0)).unwrap();
+    svc.submit(tight_spec("good", 6.0)).unwrap();
+    let reports = svc.run().unwrap();
+    faults::clear();
+
+    assert_eq!(reports[0].status, JobStatus::Failed);
+    assert_eq!(reports[1].status, JobStatus::Exhausted, "siblings keep running");
+
+    let status = StatusReport::from_json(
+        &Json::parse(&std::fs::read_to_string(out.join("bad.status.json")).unwrap()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(status.state, "failed");
+    let error = status.error.expect("failed status carries the error");
+    assert!(error.contains("non-finite"), "{error}");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// With no plan installed the harness is inert, and malformed plans are
+/// typed errors.
+#[test]
+fn faults_are_off_by_default_and_plans_are_validated() {
+    let _guard = lock();
+    faults::clear();
+    assert!(!faults::enabled());
+    assert_eq!(faults::pending(), 0);
+    let err = FaultPlan::parse(
+        r#"{"format":"opacus-rs/faults","version":1,"faults":[{"kind":"meteor","step":1}]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("meteor"), "{err}");
+    assert!(
+        FaultPlan::parse(r#"{"format":"something/else","version":1,"faults":[]}"#).is_err()
+    );
+}

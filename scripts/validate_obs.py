@@ -147,7 +147,7 @@ def check_status(path):
     require(doc.get("format") == STATUS_FORMAT,
             f"format must be {STATUS_FORMAT!r}, got {doc.get('format')!r}")
     require(is_count(doc.get("version")), "version must be an integer")
-    require(doc.get("state") in ("running", "exhausted", "completed", "interrupted"),
+    require(doc.get("state") in ("running", "exhausted", "completed", "interrupted", "failed"),
             f"unknown state {doc.get('state')!r}")
     require(isinstance(doc.get("task"), str) and doc["task"], "task must be a string")
     for field in ("job", "step", "epoch"):
@@ -161,8 +161,18 @@ def check_status(path):
     if doc["epsilon_budget"] > 0:
         require(doc["epsilon"] <= doc["epsilon_budget"] + 1e-12,
                 "ε must not exceed a positive budget")
+    for field in ("worker_respawns", "checkpoint_retries", "checkpoint_rollbacks"):
+        require(is_count(doc.get(field)),
+                f"{field} must be a non-negative integer, got {doc.get(field)!r}")
+    if doc["state"] == "failed":
+        require(isinstance(doc.get("error"), str) and doc["error"],
+                "a failed status must carry a non-empty error string")
+    else:
+        require("error" not in doc, "error is only valid when state is 'failed'")
     print(f"validate_obs: status OK — job {doc['job']} ({doc['task']}) {doc['state']} "
-          f"at step {doc['step']}, ε = {doc['epsilon']}")
+          f"at step {doc['step']}, ε = {doc['epsilon']}, "
+          f"recovery: {doc['worker_respawns']} respawn(s), "
+          f"{doc['checkpoint_retries']} retry(ies), {doc['checkpoint_rollbacks']} rollback(s)")
 
 
 def main():
